@@ -1,0 +1,77 @@
+//! Bench: ablations — k, ℓ, AW policy and Ritz-end sweeps.
+//!
+//! The design-choice benchmarks DESIGN.md calls out: how the recycled
+//! dimension k and storage depth ℓ trade iteration savings against O(nk)
+//! per-iteration overhead, and what the AW staleness policy costs.
+
+use krr::experiments::common::{ExpOpts, Workload};
+use krr::solvers::recycle::{AwPolicy, RecycleConfig};
+use krr::solvers::ritz::RitzSelect;
+use krr::gp::laplace::SolverBackend;
+use krr::util::bench::{BenchConfig, BenchGroup};
+
+fn main() {
+    let o = ExpOpts {
+        n: 192,
+        seed: 6,
+        amplitude: 1.0,
+        lengthscale: 10.0,
+        tol: 1e-5,
+        k: 8,
+        l: 12,
+        max_newton: 8,
+        backend: "native".into(),
+        fast: false,
+    };
+    let w = Workload::build(&o);
+
+    let mut g = BenchGroup::new("ablation — def-CG(k, l) parameter sweeps")
+        .with_config(BenchConfig { warmup: 1, iters: 4, max_seconds: 150.0 });
+
+    g.bench("k=0 (plain cg)", || {
+        std::hint::black_box(w.fit(SolverBackend::Cg, &o));
+    });
+    for k in [2usize, 4, 8, 16] {
+        g.bench(&format!("k={k} l=12"), || {
+            std::hint::black_box(w.fit(
+                SolverBackend::DefCg(RecycleConfig { k, l: 12, ..Default::default() }),
+                &o,
+            ));
+        });
+    }
+    for l in [6usize, 12, 24] {
+        g.bench(&format!("k=8 l={l}"), || {
+            std::hint::black_box(w.fit(
+                SolverBackend::DefCg(RecycleConfig { k: 8, l, ..Default::default() }),
+                &o,
+            ));
+        });
+    }
+    for (pol, name) in [(AwPolicy::Refresh, "refresh"), (AwPolicy::Reuse, "reuse")] {
+        g.bench(&format!("aw={name}"), || {
+            std::hint::black_box(w.fit(
+                SolverBackend::DefCg(RecycleConfig {
+                    k: 8,
+                    l: 12,
+                    aw_policy: pol,
+                    ..Default::default()
+                }),
+                &o,
+            ));
+        });
+    }
+    for (sel, name) in [(RitzSelect::Largest, "largest"), (RitzSelect::Smallest, "smallest")] {
+        g.bench(&format!("ritz={name}"), || {
+            std::hint::black_box(w.fit(
+                SolverBackend::DefCg(RecycleConfig {
+                    k: 8,
+                    l: 12,
+                    select: sel,
+                    ..Default::default()
+                }),
+                &o,
+            ));
+        });
+    }
+    g.report();
+}

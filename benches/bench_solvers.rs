@@ -1,0 +1,103 @@
+//! Bench: solver layer — CG iteration cost, deflation overhead, recycling
+//! pipeline, and (when artifacts exist) the XLA engine matvec path.
+
+use krr::linalg::mat::Mat;
+use krr::runtime::engine::{Engine, Tensor};
+use krr::runtime::ops::EngineKernel;
+use krr::solvers::cg::{self, CgConfig};
+use krr::solvers::defcg;
+use krr::solvers::recycle::{RecycleConfig, RecycleManager};
+use krr::solvers::ritz::{extract, RitzConfig, RitzSelect};
+use krr::solvers::DenseOp;
+use krr::util::bench::{BenchConfig, BenchGroup};
+use krr::util::rng::Rng;
+use std::sync::Arc;
+
+fn main() {
+    let mut rng = Rng::new(2);
+    let n = 512;
+    let a = Mat::rand_spd(n, 1e5, &mut rng);
+    let b: Vec<f64> = (0..n).map(|i| 1.0 + (i % 7) as f64).collect();
+    let op = DenseOp::new(&a);
+
+    // Recycled basis for the def-CG cases.
+    let run = cg::solve(&op, &b, None, &CgConfig { tol: 1e-8, max_iters: 0, store_l: 12, ..Default::default() });
+    let (defl, _) = extract(
+        None,
+        &run.stored,
+        n,
+        &RitzConfig { k: 8, select: RitzSelect::Largest, min_col_norm: 1e-12 },
+    )
+    .expect("ritz");
+
+    let mut g = BenchGroup::new("solvers — single-system costs (n = 512)")
+        .with_config(BenchConfig { warmup: 1, iters: 8, max_seconds: 90.0 });
+    g.bench("cg tol=1e-6", || {
+        std::hint::black_box(cg::solve(&op, &b, None, &CgConfig::with_tol(1e-6)));
+    });
+    g.bench("def-cg(8) tol=1e-6", || {
+        std::hint::black_box(defcg::solve(
+            &op,
+            &b,
+            None,
+            Some(&defl),
+            &CgConfig::with_tol(1e-6),
+        ));
+    });
+    g.bench("ritz extraction k=8 l=12", || {
+        std::hint::black_box(extract(
+            None,
+            &run.stored,
+            n,
+            &RitzConfig { k: 8, select: RitzSelect::Largest, min_col_norm: 1e-12 },
+        ));
+    });
+    g.bench("recycle manager 4-system sequence", || {
+        let mut mgr = RecycleManager::new(RecycleConfig { k: 8, l: 12, ..Default::default() });
+        for _ in 0..4 {
+            std::hint::black_box(mgr.solve_next(&op, &b, None, &CgConfig::with_tol(1e-6)));
+        }
+    });
+    g.report();
+
+    // Engine path (requires `make artifacts`).
+    if Engine::available("artifacts") {
+        let eng = Arc::new(Engine::load("artifacts").expect("engine"));
+        let sizes = eng.manifest().sizes.clone();
+        let ne = *sizes.iter().max().unwrap_or(&256);
+        let dim = eng.manifest().dim;
+        let mut data = vec![0.0f32; ne * dim];
+        let mut r2 = Rng::new(3);
+        for v in data.iter_mut() {
+            *v = (r2.normal() * 0.3) as f32;
+        }
+        let x = Tensor::mat(ne, dim, data);
+        let t0 = std::time::Instant::now();
+        let ek = EngineKernel::from_features(eng, &x, 1.0, 10.0).expect("gram");
+        println!(
+            "engine: gram_n{ne} built on device in {:.3}s (includes XLA compile)",
+            t0.elapsed().as_secs_f64()
+        );
+        let v: Vec<f32> = (0..ne).map(|i| (i % 5) as f32 - 2.0).collect();
+        let s: Vec<f32> = vec![0.5; ne];
+        let mut g = BenchGroup::new("solvers — engine (XLA/PJRT) matvec path")
+            .with_config(BenchConfig { warmup: 2, iters: 10, max_seconds: 60.0 });
+        g.bench_with_work(
+            &format!("engine kmatvec n={ne}"),
+            Some(2.0 * (ne * ne) as f64),
+            &mut || {
+                std::hint::black_box(ek.kmatvec_f32(&v).unwrap());
+            },
+        );
+        g.bench_with_work(
+            &format!("engine amatvec (fused I+SKS) n={ne}"),
+            Some(2.0 * (ne * ne) as f64),
+            &mut || {
+                std::hint::black_box(ek.amatvec_f32(&s, &v).unwrap());
+            },
+        );
+        g.report();
+    } else {
+        println!("(engine benches skipped: run `make artifacts` first)");
+    }
+}

@@ -1,0 +1,52 @@
+//! Bench: Table 1 — end-to-end Laplace fits per solver backend.
+//!
+//! Regenerates the paper's Table-1 comparison as a timing benchmark:
+//! full Newton sequences with Cholesky / CG / def-CG(8,12) at two problem
+//! sizes. Expected ordering (cumulative time): Cholesky > CG > def-CG,
+//! with the gap growing in n.
+
+use krr::experiments::common::{ExpOpts, Workload};
+use krr::gp::laplace::SolverBackend;
+use krr::util::bench::{BenchConfig, BenchGroup};
+
+fn opts(n: usize) -> ExpOpts {
+    ExpOpts {
+        n,
+        seed: 1,
+        amplitude: 1.0,
+        lengthscale: 10.0,
+        tol: 1e-5,
+        k: 8,
+        l: 12,
+        max_newton: 10,
+        backend: "native".into(),
+        fast: false,
+    }
+}
+
+fn main() {
+    let mut g = BenchGroup::new("table1 — full Laplace fit per backend")
+        .with_config(BenchConfig { warmup: 1, iters: 5, max_seconds: 120.0 });
+    for n in [128usize, 256, 384] {
+        let o = opts(n);
+        let w = Workload::build(&o);
+        g.bench(&format!("cholesky n={n}"), || {
+            std::hint::black_box(w.fit(SolverBackend::Cholesky, &o));
+        });
+        g.bench(&format!("cg n={n}"), || {
+            std::hint::black_box(w.fit(SolverBackend::Cg, &o));
+        });
+        g.bench(&format!("def-cg(8,12) n={n}"), || {
+            std::hint::black_box(w.fit(w.defcg_backend(&o), &o));
+        });
+    }
+    g.report();
+
+    // Sanity: print the expected ordering for the largest size.
+    let o = opts(384);
+    let w = Workload::build(&o);
+    let tc = w.fit(SolverBackend::Cholesky, &o).total_solve_seconds();
+    let tg = w.fit(SolverBackend::Cg, &o).total_solve_seconds();
+    let td = w.fit(w.defcg_backend(&o), &o).total_solve_seconds();
+    println!("cumulative solve seconds @ n=384: cholesky {tc:.3} | cg {tg:.3} | def-cg {td:.3}");
+}

@@ -1,0 +1,127 @@
+//! End-to-end driver: full GP classification on synthetic infinite-MNIST.
+//!
+//! ```text
+//! cargo run --release --example gp_classification -- [n] [backend]
+//! ```
+//!
+//! This is the repository's END-TO-END VALIDATION workload (recorded in
+//! EXPERIMENTS.md): it exercises every layer on the paper's actual task —
+//!
+//!   data  → synthetic 3-vs-5 digits (28×28, 784-dim features)
+//!   L1/L2 → RBF Gram + fused Newton-system matvecs (AOT artifacts when
+//!           backend = engine; rust-native otherwise)
+//!   L3    → Laplace/Newton loop with three solver backends; def-CG
+//!           recycles its harmonic-Ritz subspace across Newton steps
+//!
+//! and reports the Table-1-style progression plus train/test accuracy.
+
+use krr::data::digits::{generate, DigitsConfig};
+use krr::gp::kernel::RbfKernel;
+use krr::gp::laplace::{
+    DenseKernel, KernelOp, LaplaceConfig, LaplaceFit, LaplaceGpc, SolverBackend,
+};
+use krr::gp::likelihood::Logistic;
+use krr::runtime::engine::{Engine, Tensor};
+use krr::runtime::ops::EngineKernel;
+use krr::solvers::recycle::RecycleConfig;
+use krr::util::rng::Rng;
+use std::sync::Arc;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(512);
+    let backend = args.get(1).map(|s| s.as_str()).unwrap_or("native").to_string();
+    let (amp, ls) = (1.0, 10.0);
+
+    println!("GPC end-to-end: n = {n}, backend = {backend}, RBF(θ={amp}, λ={ls})\n");
+
+    // Dataset: train + held-out test.
+    let all = generate(&DigitsConfig { n: n + n / 4, seed: 7, ..Default::default() });
+    let mut rng = Rng::new(1);
+    let (train, test) = all.split(n as f64 / all.n() as f64, &mut rng);
+    let train = krr::data::digits::Digits {
+        x: train.x.take_rows(&(0..n.min(train.n())).collect::<Vec<_>>()),
+        y: train.y[..n.min(train.n())].to_vec(),
+    };
+    println!("train = {} images, test = {} images", train.n(), test.n());
+
+    // Kernel operator per backend.
+    let kernel = RbfKernel::new(amp, ls);
+    let engine_kernel: Option<EngineKernel>;
+    let native_kernel: Option<DenseKernel>;
+    let kop: &dyn KernelOp = if backend == "engine" {
+        assert!(
+            Engine::available("artifacts"),
+            "engine backend requires `make artifacts`"
+        );
+        let eng = Arc::new(Engine::load("artifacts").expect("engine"));
+        assert!(
+            eng.manifest().sizes.contains(&train.n()),
+            "n={} not an artifact size {:?}",
+            train.n(),
+            eng.manifest().sizes
+        );
+        let x32 = Tensor::mat(train.n(), train.x.cols(), train.x.to_f32());
+        engine_kernel =
+            Some(EngineKernel::from_features(eng, &x32, amp, ls).expect("gram on device"));
+        engine_kernel.as_ref().unwrap()
+    } else {
+        native_kernel = Some(DenseKernel::new(kernel.gram(&train.x)));
+        engine_kernel = None;
+        native_kernel.as_ref().unwrap()
+    };
+    let _ = &engine_kernel;
+
+    // Fit with def-CG(8,12) — the paper's configuration.
+    let cfg = LaplaceConfig {
+        solver: SolverBackend::DefCg(RecycleConfig { k: 8, l: 12, ..Default::default() }),
+        solve_tol: 1e-5,
+        newton_tol: 1.0,
+        max_newton: 15,
+        ..Default::default()
+    };
+    let mut gpc = LaplaceGpc::new(kop, &train.y, cfg);
+    let fit = gpc.fit();
+    report(&fit);
+
+    // Train accuracy from the latent mode; test accuracy via the
+    // cross-Gram predictive mean f* = K*ᵀ a.
+    let lik = Logistic;
+    let train_acc = accuracy(&train.y, &fit.f_hat);
+    let cross = kernel.cross_gram(&train.x, &test.x);
+    let f_test = gpc.predict_latent(&cross, &fit);
+    let test_acc = accuracy(&test.y, &f_test);
+    let mean_p: f64 = f_test.iter().map(|&f| lik.predict(f)).sum::<f64>() / f_test.len() as f64;
+    println!(
+        "\ntrain accuracy = {:.2}%   test accuracy = {:.2}%   mean p(3|x) on test = {:.3}",
+        100.0 * train_acc,
+        100.0 * test_acc,
+        mean_p
+    );
+    assert!(fit.converged, "Newton must converge");
+    assert!(train_acc > 0.95, "train accuracy too low: {train_acc}");
+    assert!(test_acc > 0.9, "test accuracy too low: {test_acc}");
+    println!("OK");
+}
+
+fn report(fit: &LaplaceFit) {
+    println!("It. | log p(y|f)   | inner iters | defl.dim | t_cum [s]");
+    println!("----+--------------+-------------+----------+----------");
+    for s in &fit.steps {
+        println!(
+            "{:3} | {:12.3} | {:11} | {:8} | {:.3}",
+            s.newton_iter, s.log_lik, s.solver_iterations, s.deflation_dim, s.cumulative_seconds
+        );
+    }
+    println!(
+        "converged = {} after {} Newton steps, total inner iterations = {}",
+        fit.converged,
+        fit.steps.len(),
+        fit.steps.iter().map(|s| s.solver_iterations).sum::<usize>()
+    );
+}
+
+fn accuracy(y: &[f64], f: &[f64]) -> f64 {
+    let correct = y.iter().zip(f).filter(|(&yi, &fi)| yi * fi > 0.0).count();
+    correct as f64 / y.len() as f64
+}

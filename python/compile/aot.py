@@ -1,0 +1,152 @@
+"""AOT compiler: lower every L2 entry point to an HLO-text artifact.
+
+Run once by `make artifacts`:
+
+    cd python && python -m compile.aot --out ../artifacts
+
+For each problem size n (and feature dim d = 784) this writes
+`<name>_n{n}.hlo.txt` files plus a `manifest.json` describing inputs and
+outputs, which the rust runtime (`rust/src/runtime/`) parses to compile
+and invoke the executables.
+
+INTERCHANGE FORMAT: HLO **text**, not `.serialize()`d protos — jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+All functions are lowered with `return_tuple=True`; the rust side unwraps
+with `to_tuple1()`/`decompose_tuple()`.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+DIM = 784  # 28x28 images, as in the paper's MNIST workload
+DEFAULT_SIZES = [64, 128, 256, 512, 1024]
+
+# Schedule selection: the (bm x n) grid pipeline is the real-TPU design
+# (VMEM-sized tiles, double-buffered HBM streaming — see the kernel
+# docstrings), but interpret-mode pallas lowers each grid step to an XLA
+# while-loop iteration with dynamic slices, which costs ~30x wallclock on
+# the CPU PJRT backend (measured: kmatvec n=1024, block 256 -> 6.3 ms vs
+# single block -> 0.22 ms). Artifacts for the CPU runtime are therefore
+# lowered with a monolithic block; flip this off to emit the TPU schedule.
+CPU_SCHEDULE = True
+
+
+def _block(n: int) -> int:
+    return n if CPU_SCHEDULE else min(n, 256)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def spec_of(s: jax.ShapeDtypeStruct):
+    return {"shape": list(s.shape), "dtype": "f32"}
+
+
+def entry_points(n: int):
+    """The artifact family for one problem size.
+
+    Returns {name: (fn, example_args, output_specs)}.
+    """
+    scalar = f32(1)
+    blk = _block(n)
+    return {
+        f"gram_n{n}": (
+            lambda x, amp, ls: (model.gram(x, amp[0], ls[0], block=blk),),
+            [f32(n, DIM), scalar, scalar],
+            [f32(n, n)],
+        ),
+        f"kmatvec_n{n}": (
+            lambda k, v: (model.kmatvec(k, v, block=blk),),
+            [f32(n, n), f32(n)],
+            [f32(n)],
+        ),
+        f"amatvec_n{n}": (
+            lambda k, s, p: (model.amatvec(k, s, p, block=blk),),
+            [f32(n, n), f32(n), f32(n)],
+            [f32(n)],
+        ),
+        f"gram_matvec_free_n{n}": (
+            lambda x, v, amp, ls: (
+                model.gram_matvec_free(x, v, amp[0], ls[0], block=blk),
+            ),
+            [f32(n, DIM), f32(n), scalar, scalar],
+            [f32(n)],
+        ),
+        f"newton_stats_n{n}": (
+            lambda k, f, y: model.newton_stats(k, f, y),
+            [f32(n, n), f32(n), f32(n)],
+            [f32(n), f32(n), f32(n), f32()],
+        ),
+        f"newton_update_n{n}": (
+            lambda k, b_rw, s, z, y: model.newton_update(k, b_rw, s, z, y),
+            [f32(n, n), f32(n), f32(n), f32(n), f32(n)],
+            [f32(n), f32(n), f32(), f32()],
+        ),
+        f"cg_update_n{n}": (
+            lambda x, r, p, ap, alpha: model.cg_update(x, r, p, ap, alpha[0]),
+            [f32(n), f32(n), f32(n), f32(n), scalar],
+            [f32(n), f32(n), f32()],
+        ),
+    }
+
+
+def build(out_dir: str, sizes, verbose=True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"dim": DIM, "sizes": list(sizes), "artifacts": {}}
+    for n in sizes:
+        for name, (fn, args, outs) in entry_points(n).items():
+            lowered = jax.jit(fn).lower(*args)
+            text = to_hlo_text(lowered)
+            fname = f"{name}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            manifest["artifacts"][name] = {
+                "file": fname,
+                "n": n,
+                "inputs": [spec_of(a) for a in args],
+                "outputs": [spec_of(o) for o in outs],
+            }
+            if verbose:
+                print(f"  lowered {name:<28} ({len(text)//1024} KiB)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    if verbose:
+        print(f"wrote {len(manifest['artifacts'])} artifacts to {out_dir}")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--sizes",
+        default=",".join(str(s) for s in DEFAULT_SIZES),
+        help="comma-separated problem sizes n",
+    )
+    args = ap.parse_args()
+    sizes = [int(s) for s in args.sizes.split(",") if s]
+    build(args.out, sizes)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""L1 Pallas kernel: fused CG vector update.
+
+One CG iteration's vector tail is bandwidth-bound:
+
+    x <- x + alpha p;   r <- r - alpha Ap;   rr <- r.r
+
+Composed naively that is 6 HBM sweeps (read x,p / write x; read r,ap /
+write r; read r). The fused kernel does it in one pass per row block
+(2 reads amortized + 2 writes), emitting per-block partial sums of rr that
+the L2 wrapper reduces — a grid-safe way to accumulate a scalar without
+cross-step output races.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .rbf_gram import pick_block
+
+
+def _cg_update_kernel(alpha_ref, x_ref, r_ref, p_ref, ap_ref, xo_ref, ro_ref, rro_ref):
+    alpha = alpha_ref[0]
+    xn = x_ref[...] + alpha * p_ref[...]
+    rn = r_ref[...] - alpha * ap_ref[...]
+    xo_ref[...] = xn
+    ro_ref[...] = rn
+    rro_ref[...] = jnp.sum(rn * rn, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def cg_update(x, r, p, ap, alpha, block=512):
+    """Fused update; returns (x', r', rr') with rr' = r'.r' (f32 scalar).
+
+    `alpha` is a () or (1,) f32 array (dynamic — no recompilation per step).
+    """
+    (n,) = x.shape
+    assert r.shape == (n,) and p.shape == (n,) and ap.shape == (n,)
+    bm = pick_block(n, block)
+    nblocks = n // bm
+    alpha = jnp.reshape(alpha, (1,)).astype(jnp.float32)
+    xo, ro, partials = pl.pallas_call(
+        _cg_update_kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((nblocks,), jnp.float32),
+        ],
+        interpret=True,
+    )(alpha, x, r, p, ap)
+    return xo, ro, jnp.sum(partials)

@@ -1,0 +1,59 @@
+"""L1 Pallas kernel: matrix-free RBF Gram matvec, y = K(X) v.
+
+The large-n path (paper conclusion: 1e5-1e6 points): K is never
+materialized. The grid walks row blocks of X; each step recomputes its
+(bm x n) Gram slab in VMEM from the raw features — an (bm x d) x (d x n)
+MXU matmul plus VPU exp — and immediately contracts it with v. HBM traffic
+is O(n d) per step for the X operand instead of O(n^2) for K, trading
+flops (recompute) for bandwidth, which is the right trade once the K
+matrix no longer fits in HBM (or was never worth building).
+
+Hyperparameters are dynamic (1,) inputs — see rbf_gram.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .rbf_gram import _as_param, pick_block
+
+
+def _gram_matvec_kernel(amp_ref, ls_ref, x1_ref, xt_ref, v_ref, sq_ref, o_ref):
+    a = x1_ref[...]                                      # (bm, d)
+    xt = xt_ref[...]                                     # (d, n)
+    sq1 = jnp.sum(a * a, axis=1, keepdims=True)          # (bm, 1)
+    sq2 = sq_ref[...][None, :]                           # (1, n) — precomputed
+    cross = jnp.dot(a, xt, preferred_element_type=jnp.float32)   # (bm, n)
+    d2 = jnp.maximum(sq1 + sq2 - 2.0 * cross, 0.0)
+    amp = amp_ref[0]
+    ls = ls_ref[0]
+    inv = 1.0 / (2.0 * ls * ls)
+    kblk = (amp * amp) * jnp.exp(-d2 * inv)
+    o_ref[...] = jnp.dot(kblk, v_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def gram_matvec(x, v, amplitude=1.0, lengthscale=1.0, block=128):
+    """y = K v without materializing K. x: (n, d) f32, v: (n,) f32."""
+    n, d = x.shape
+    assert v.shape == (n,)
+    bm = pick_block(n, block)
+    xt = x.T  # hoisted once at L2; shared across all grid steps
+    sq = jnp.sum(x * x, axis=1)  # (n,) hoisted — avoids per-step recompute
+    return pl.pallas_call(
+        _gram_matvec_kernel,
+        grid=(n // bm,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, n), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(_as_param(amplitude), _as_param(lengthscale), x, xt, v, sq)

@@ -1,0 +1,86 @@
+"""L2: JAX compute graphs for the GPC/Laplace workload.
+
+Each public function here is a jit-able, fixed-shape entry point that
+`aot.py` lowers to an HLO-text artifact. They compose the L1 Pallas
+kernels (which lower inline into the same HLO because interpret-mode
+pallas_call emits plain HLO ops) with the surrounding elementwise math,
+so XLA fuses the whole step into a single executable the rust runtime
+invokes.
+
+Python never runs at serve time: these functions execute exactly once,
+inside `jax.jit(...).lower(...)` during `make artifacts`.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import cg_fused, gram_matvec, rbf_gram, spd_matvec
+from .kernels.ref import log_sigmoid_ref, sigmoid_ref
+
+
+def gram(x, amplitude, lengthscale, block=128):
+    """K = RBF Gram of X (n, d) — Pallas-tiled (L1: rbf_gram).
+
+    amplitude/lengthscale are traced scalars: one artifact serves every
+    hyperparameter setting.
+    """
+    return rbf_gram.rbf_gram(x, x, amplitude=amplitude, lengthscale=lengthscale, block=block)
+
+
+def cross_gram(x1, x2, amplitude, lengthscale, block=128):
+    """K12 between two point sets (used by the inducing-point example)."""
+    return rbf_gram.rbf_gram(x1, x2, amplitude=amplitude, lengthscale=lengthscale, block=block)
+
+
+def kmatvec(k, v, block=256):
+    """y = K v (L1: blocked matvec)."""
+    return spd_matvec.kmatvec(k, v, block=block)
+
+
+def amatvec(k, s, p, block=256):
+    """The Newton operator A p = p + s*(K(s*p)) — paper Eq. (10), fused."""
+    return spd_matvec.spd_matvec(k, s, p, block=block)
+
+
+def gram_matvec_free(x, v, amplitude, lengthscale, block=128):
+    """Matrix-free K v straight from features (large-n path)."""
+    return gram_matvec.gram_matvec(
+        x, v, amplitude=amplitude, lengthscale=lengthscale, block=block
+    )
+
+
+def cg_update(x, r, p, ap, alpha):
+    """Fused CG tail: x' = x+αp, r' = r−αAp, rr' = r'.r'."""
+    return cg_fused.cg_update(x, r, p, ap, alpha)
+
+
+def newton_stats(k, f, y):
+    """Per-Newton-step quantities (paper Eqs. 9-10).
+
+    Inputs: K (n,n), current latent f (n,), labels y (n,) in {-1,+1}.
+    Returns (rhs, s, b_rw, loglik):
+      s      = sqrt(pi(1-pi))        — diagonal of H^1/2
+      b_rw   = H f + grad            — Newton RHS precursor
+      rhs    = s * (K b_rw)          — the paper's b (Eq. 9)
+      loglik = log p(y | f)
+    The K matvec goes through the L1 blocked kernel; the elementwise
+    pieces fuse around it.
+    """
+    pi = sigmoid_ref(f)
+    grad = 0.5 * (y + 1.0) - pi
+    h = pi * (1.0 - pi)
+    s = jnp.sqrt(h)
+    b_rw = h * f + grad
+    kb = spd_matvec.kmatvec(k, b_rw)
+    rhs = s * kb
+    loglik = jnp.sum(log_sigmoid_ref(y * f))
+    return rhs, s, b_rw, loglik
+
+
+def newton_update(k, b_rw, s, z, y):
+    """Post-solve Newton update: a = b_rw − s∘z, f' = K a; also returns
+    log p(y|f') and ψ-quadratic term a.f' for the stopping rule."""
+    a = b_rw - s * z
+    f_new = spd_matvec.kmatvec(k, a)
+    loglik = jnp.sum(log_sigmoid_ref(y * f_new))
+    quad = jnp.dot(a, f_new)
+    return f_new, a, loglik, quad

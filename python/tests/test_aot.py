@@ -1,0 +1,75 @@
+"""AOT pipeline: artifacts lower, manifest is consistent, HLO text parses."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    manifest = aot.build(out, sizes=[8], verbose=False)
+    return out, manifest
+
+
+def test_manifest_lists_all_entry_points(built):
+    out, manifest = built
+    names = set(manifest["artifacts"])
+    for stem in [
+        "gram",
+        "kmatvec",
+        "amatvec",
+        "gram_matvec_free",
+        "newton_stats",
+        "newton_update",
+        "cg_update",
+    ]:
+        assert f"{stem}_n8" in names, f"missing {stem}_n8"
+    assert manifest["dim"] == aot.DIM
+    assert manifest["sizes"] == [8]
+
+
+def test_files_exist_and_are_hlo_text(built):
+    out, manifest = built
+    for name, meta in manifest["artifacts"].items():
+        path = os.path.join(out, meta["file"])
+        assert os.path.exists(path), path
+        text = open(path).read()
+        assert "HloModule" in text, f"{name} not HLO text"
+        assert "ENTRY" in text
+        # text interchange, not serialized proto
+        assert not text.startswith("\x08")
+
+
+def test_manifest_shapes_match_expectation(built):
+    _, manifest = built
+    g = manifest["artifacts"]["gram_n8"]
+    assert g["inputs"][0]["shape"] == [8, aot.DIM]
+    assert g["inputs"][1]["shape"] == [1]
+    assert g["outputs"][0]["shape"] == [8, 8]
+    ns = manifest["artifacts"]["newton_stats_n8"]
+    assert ns["outputs"][3]["shape"] == []  # scalar loglik
+    cu = manifest["artifacts"]["cg_update_n8"]
+    assert len(cu["inputs"]) == 5
+    assert len(cu["outputs"]) == 3
+
+
+def test_manifest_roundtrips_json(built):
+    out, manifest = built
+    loaded = json.load(open(os.path.join(out, "manifest.json")))
+    assert loaded == json.loads(json.dumps(manifest))
+
+
+def test_rebuild_is_deterministic(built, tmp_path):
+    out1, m1 = built
+    out2 = str(tmp_path / "again")
+    m2 = aot.build(out2, sizes=[8], verbose=False)
+    assert set(m1["artifacts"]) == set(m2["artifacts"])
+    # HLO text should be stable given identical jax version + inputs
+    f = m1["artifacts"]["kmatvec_n8"]["file"]
+    t1 = open(os.path.join(out1, f)).read()
+    t2 = open(os.path.join(out2, f)).read()
+    assert t1 == t2

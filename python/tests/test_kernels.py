@@ -1,0 +1,137 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes and data; assert_allclose against ref.py is THE
+core correctness signal for the compute layer (the rust integration tests
+then check the AOT artifacts against the rust-native implementations).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import cg_fused, gram_matvec, rbf_gram, spd_matvec
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+SIZES = [4, 8, 16, 24, 64, 128, 160]
+DIMS = [1, 3, 16, 49]
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n1=st.sampled_from(SIZES),
+    n2=st.sampled_from(SIZES),
+    d=st.sampled_from(DIMS),
+    amp=st.floats(0.3, 3.0),
+    ls=st.floats(0.3, 5.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rbf_gram_matches_ref(n1, n2, d, amp, ls, seed):
+    rng = np.random.default_rng(seed)
+    x1, x2 = rand(rng, n1, d), rand(rng, n2, d)
+    got = rbf_gram.rbf_gram(x1, x2, amplitude=amp, lengthscale=ls)
+    want = ref.rbf_gram_ref(x1, x2, amp, ls)
+    assert got.shape == (n1, n2)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_rbf_gram_symmetric_and_unit_diag():
+    rng = np.random.default_rng(0)
+    x = rand(rng, 32, 8)
+    k = np.asarray(rbf_gram.rbf_gram(x, x, amplitude=2.0, lengthscale=1.0))
+    assert_allclose(k, k.T, rtol=1e-6)
+    assert_allclose(np.diag(k), 4.0 * np.ones(32), rtol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.sampled_from(SIZES), seed=st.integers(0, 2**31 - 1))
+def test_kmatvec_matches_ref(n, seed):
+    rng = np.random.default_rng(seed)
+    k, v = rand(rng, n, n), rand(rng, n)
+    got = spd_matvec.kmatvec(k, v)
+    assert_allclose(np.asarray(got), np.asarray(ref.kmatvec_ref(k, v)), rtol=2e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.sampled_from(SIZES), seed=st.integers(0, 2**31 - 1))
+def test_spd_matvec_matches_ref(n, seed):
+    rng = np.random.default_rng(seed)
+    k = rand(rng, n, n)
+    s = jnp.abs(rand(rng, n))
+    p = rand(rng, n)
+    got = spd_matvec.spd_matvec(k, s, p)
+    assert_allclose(
+        np.asarray(got), np.asarray(ref.spd_matvec_ref(k, s, p)), rtol=2e-5, atol=1e-5
+    )
+
+
+def test_spd_matvec_with_zero_s_is_identity():
+    rng = np.random.default_rng(1)
+    k, p = rand(rng, 16, 16), rand(rng, 16)
+    got = spd_matvec.spd_matvec(k, jnp.zeros(16), p)
+    assert_allclose(np.asarray(got), np.asarray(p), rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.sampled_from(SIZES),
+    alpha=st.floats(-2.0, 2.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cg_update_matches_ref(n, alpha, seed):
+    rng = np.random.default_rng(seed)
+    x, r, p, ap = rand(rng, n), rand(rng, n), rand(rng, n), rand(rng, n)
+    xn, rn, rr = cg_fused.cg_update(x, r, p, ap, jnp.float32(alpha))
+    xw, rw, rrw = ref.cg_update_ref(x, r, p, ap, alpha)
+    assert_allclose(np.asarray(xn), np.asarray(xw), rtol=1e-5, atol=1e-6)
+    assert_allclose(np.asarray(rn), np.asarray(rw), rtol=1e-5, atol=1e-6)
+    assert_allclose(float(rr), float(rrw), rtol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from(SIZES),
+    d=st.sampled_from(DIMS),
+    amp=st.floats(0.5, 2.0),
+    ls=st.floats(0.5, 4.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gram_matvec_free_matches_ref(n, d, amp, ls, seed):
+    rng = np.random.default_rng(seed)
+    x, v = rand(rng, n, d), rand(rng, n)
+    got = gram_matvec.gram_matvec(x, v, amplitude=amp, lengthscale=ls)
+    want = ref.gram_matvec_ref(x, v, amp, ls)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)
+
+
+def test_gram_matvec_free_agrees_with_materialized_kernel():
+    rng = np.random.default_rng(2)
+    x, v = rand(rng, 64, 16), rand(rng, 64)
+    free = gram_matvec.gram_matvec(x, v, amplitude=1.3, lengthscale=2.0)
+    dense = spd_matvec.kmatvec(rbf_gram.rbf_gram(x, x, 1.3, 2.0), v)
+    assert_allclose(np.asarray(free), np.asarray(dense), rtol=2e-5, atol=2e-5)
+
+
+def test_pick_block_divides():
+    for n in [1, 7, 64, 100, 128, 999, 1024]:
+        b = rbf_gram.pick_block(n, 128)
+        assert n % b == 0
+        assert 1 <= b <= min(n, 128)
+
+
+@pytest.mark.parametrize("n", [16, 64])
+def test_kernels_accept_nondefault_blocks(n):
+    rng = np.random.default_rng(3)
+    x = rand(rng, n, 4)
+    for block in [1, 2, n]:
+        k = rbf_gram.rbf_gram(x, x, 1.0, 1.0, block=block)
+        want = ref.rbf_gram_ref(x, x, 1.0, 1.0)
+        assert_allclose(np.asarray(k), np.asarray(want), rtol=1e-5, atol=1e-6)

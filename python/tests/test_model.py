@@ -1,0 +1,94 @@
+"""L2 correctness: model graphs vs numpy references and invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32)
+
+
+def rand_labels(rng, n):
+    return jnp.asarray(rng.choice([-1.0, 1.0], size=n), dtype=jnp.float32)
+
+
+def rand_spd_kernelish(rng, n):
+    """An SPD K like an RBF Gram: PSD + unit-ish diagonal."""
+    x = rand(rng, n, 5)
+    return ref.rbf_gram_ref(x, x, 1.0, 2.0) + 1e-4 * jnp.eye(n)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.sampled_from([8, 16, 64]), seed=st.integers(0, 2**31 - 1))
+def test_newton_stats_matches_ref(n, seed):
+    rng = np.random.default_rng(seed)
+    k = rand_spd_kernelish(rng, n)
+    f, y = rand(rng, n), rand_labels(rng, n)
+    rhs, s, b_rw, ll = model.newton_stats(k, f, y)
+    rhs_w, s_w, b_w, ll_w = ref.newton_stats_ref(k, f, y)
+    assert_allclose(np.asarray(rhs), np.asarray(rhs_w), rtol=2e-5, atol=1e-5)
+    assert_allclose(np.asarray(s), np.asarray(s_w), rtol=1e-5, atol=1e-6)
+    assert_allclose(np.asarray(b_rw), np.asarray(b_w), rtol=1e-5, atol=1e-6)
+    assert_allclose(float(ll), float(ll_w), rtol=1e-5)
+
+
+def test_newton_stats_at_zero_latent():
+    # f = 0: pi = 1/2, h = 1/4, grad = y/2, loglik = -n log 2.
+    n = 32
+    rng = np.random.default_rng(0)
+    k = rand_spd_kernelish(rng, n)
+    y = rand_labels(rng, n)
+    rhs, s, b_rw, ll = model.newton_stats(k, jnp.zeros(n), y)
+    assert_allclose(np.asarray(s), 0.5 * np.ones(n), rtol=1e-6)
+    assert_allclose(np.asarray(b_rw), np.asarray(y) / 2.0, rtol=1e-6)
+    assert_allclose(float(ll), -n * np.log(2.0), rtol=1e-5)
+    assert_allclose(np.asarray(rhs), 0.5 * np.asarray(k @ (y / 2.0)), rtol=2e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.sampled_from([8, 16, 64]), seed=st.integers(0, 2**31 - 1))
+def test_newton_update_consistency(n, seed):
+    rng = np.random.default_rng(seed)
+    k = rand_spd_kernelish(rng, n)
+    b_rw, s, z = rand(rng, n), jnp.abs(rand(rng, n)), rand(rng, n)
+    y = rand_labels(rng, n)
+    f_new, a, ll, quad = model.newton_update(k, b_rw, s, z, y)
+    a_w = b_rw - s * z
+    f_w = k @ a_w
+    assert_allclose(np.asarray(a), np.asarray(a_w), rtol=1e-5, atol=1e-6)
+    assert_allclose(np.asarray(f_new), np.asarray(f_w), rtol=2e-5, atol=1e-5)
+    assert_allclose(float(quad), float(jnp.dot(a_w, f_w)), rtol=1e-4, atol=1e-4)
+    assert float(ll) <= 0.0
+
+
+def test_amatvec_is_spd_operator():
+    # v.(A v) > 0 and symmetry via random probes.
+    n = 48
+    rng = np.random.default_rng(1)
+    k = rand_spd_kernelish(rng, n)
+    s = jnp.abs(rand(rng, n))
+    u, v = rand(rng, n), rand(rng, n)
+    au = model.amatvec(k, s, u)
+    av = model.amatvec(k, s, v)
+    # symmetry: u.(A v) == v.(A u)
+    assert_allclose(float(jnp.dot(u, av)), float(jnp.dot(v, au)), rtol=1e-4)
+    # positive definiteness (I + PSD)
+    assert float(jnp.dot(u, au)) > 0.0
+
+
+def test_gram_then_matvec_composes():
+    n, d = 32, 7
+    rng = np.random.default_rng(2)
+    x, v = rand(rng, n, d), rand(rng, n)
+    k = model.gram(x, jnp.float32(1.2), jnp.float32(1.7))
+    y1 = model.kmatvec(k, v)
+    y2 = model.gram_matvec_free(x, v, jnp.float32(1.2), jnp.float32(1.7))
+    assert_allclose(np.asarray(y1), np.asarray(y2), rtol=3e-5, atol=3e-5)

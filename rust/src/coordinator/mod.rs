@@ -1,0 +1,21 @@
+//! L3 coordinator: a concurrent solve-service for sequences of SPD systems.
+//!
+//! The paper's contribution lives at the level of *sequences*: information
+//! flows from system `i` to system `i+1` through the recycled subspace.
+//! This module packages that into a deployable service:
+//!
+//! * a [`service::SolveService`] owning a worker pool and (optionally) the
+//!   PJRT engine;
+//! * [`service::SequenceHandle`]s, one per solve sequence (e.g. one per
+//!   Laplace optimization or per hyperparameter trajectory), each with its
+//!   own [`crate::solvers::recycle::RecycleManager`] state;
+//! * strict FIFO ordering *within* a sequence (recycling is inherently
+//!   sequential) and parallelism *across* sequences;
+//! * service-level metrics (solves, iterations, matvecs, wall time).
+//!
+//! This is the shape a GP-serving system would use: many concurrent model
+//! fits, each a sequence of related systems, sharing one compute engine.
+
+pub mod service;
+
+pub use service::{SequenceHandle, ServiceMetrics, SolveService};

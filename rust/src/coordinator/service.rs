@@ -1,0 +1,316 @@
+//! The solve-service implementation.
+
+use crate::solvers::cg::CgConfig;
+use crate::solvers::recycle::{RecycleConfig, RecycleManager, SystemStats};
+use crate::solvers::{SolveResult, SpdOperator};
+use crate::util::pool::ThreadPool;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// A solve request: operator + right-hand side (+ per-solve config).
+struct Task {
+    op: Arc<dyn SpdOperator + Send + Sync>,
+    b: Vec<f64>,
+    x0: Option<Vec<f64>>,
+    cfg: CgConfig,
+    slot: Arc<ResultSlot>,
+}
+
+/// One-shot result slot (mini oneshot channel).
+struct ResultSlot {
+    value: Mutex<Option<SolveResult>>,
+    cv: Condvar,
+}
+
+impl ResultSlot {
+    fn new() -> Arc<Self> {
+        Arc::new(ResultSlot { value: Mutex::new(None), cv: Condvar::new() })
+    }
+
+    fn put(&self, r: SolveResult) {
+        *self.value.lock().unwrap() = Some(r);
+        self.cv.notify_all();
+    }
+
+    fn take(&self) -> SolveResult {
+        let mut g = self.value.lock().unwrap();
+        while g.is_none() {
+            g = self.cv.wait(g).unwrap();
+        }
+        g.take().unwrap()
+    }
+}
+
+/// Pending future for a submitted solve.
+pub struct SolveTicket {
+    slot: Arc<ResultSlot>,
+}
+
+impl SolveTicket {
+    /// Block until the solve finishes.
+    pub fn wait(self) -> SolveResult {
+        self.slot.take()
+    }
+}
+
+struct SequenceState {
+    mgr: RecycleManager,
+    queue: VecDeque<Task>,
+    running: bool,
+    closed: bool,
+}
+
+/// Aggregated service counters.
+#[derive(Debug, Default)]
+pub struct ServiceMetrics {
+    pub solves: AtomicUsize,
+    pub iterations: AtomicUsize,
+    pub matvecs: AtomicUsize,
+    pub solve_nanos: AtomicU64,
+    pub sequences_opened: AtomicUsize,
+}
+
+impl ServiceMetrics {
+    pub fn snapshot(&self) -> (usize, usize, usize, f64, usize) {
+        (
+            self.solves.load(Ordering::Relaxed),
+            self.iterations.load(Ordering::Relaxed),
+            self.matvecs.load(Ordering::Relaxed),
+            self.solve_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
+            self.sequences_opened.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// The service: a shared pool plus per-sequence recycling state.
+pub struct SolveService {
+    pool: Arc<ThreadPool>,
+    metrics: Arc<ServiceMetrics>,
+}
+
+impl SolveService {
+    pub fn new(workers: usize) -> Self {
+        SolveService {
+            pool: Arc::new(ThreadPool::new(workers)),
+            metrics: Arc::new(ServiceMetrics::default()),
+        }
+    }
+
+    pub fn metrics(&self) -> &ServiceMetrics {
+        &self.metrics
+    }
+
+    /// Open a new sequence with its own recycled-subspace state.
+    pub fn open_sequence(&self, cfg: RecycleConfig) -> SequenceHandle {
+        self.metrics.sequences_opened.fetch_add(1, Ordering::Relaxed);
+        SequenceHandle {
+            state: Arc::new(Mutex::new(SequenceState {
+                mgr: RecycleManager::new(cfg),
+                queue: VecDeque::new(),
+                running: false,
+                closed: false,
+            })),
+            pool: self.pool.clone(),
+            metrics: self.metrics.clone(),
+        }
+    }
+}
+
+/// Handle to one solve sequence. Submissions are processed strictly FIFO
+/// (recycling transfers state from each solve to the next); distinct
+/// sequences run concurrently on the shared pool.
+#[derive(Clone)]
+pub struct SequenceHandle {
+    state: Arc<Mutex<SequenceState>>,
+    pool: Arc<ThreadPool>,
+    metrics: Arc<ServiceMetrics>,
+}
+
+impl SequenceHandle {
+    /// Submit the next system of this sequence. Returns a ticket that can
+    /// be waited on; submissions may be pipelined without waiting.
+    pub fn submit(
+        &self,
+        op: Arc<dyn SpdOperator + Send + Sync>,
+        b: Vec<f64>,
+        x0: Option<Vec<f64>>,
+        cfg: CgConfig,
+    ) -> SolveTicket {
+        let slot = ResultSlot::new();
+        let task = Task { op, b, x0, cfg, slot: slot.clone() };
+        let mut st = self.state.lock().unwrap();
+        assert!(!st.closed, "submit on closed sequence");
+        st.queue.push_back(task);
+        if !st.running {
+            st.running = true;
+            drop(st);
+            self.spawn_drainer();
+        }
+        SolveTicket { slot }
+    }
+
+    fn spawn_drainer(&self) {
+        let state = self.state.clone();
+        let metrics = self.metrics.clone();
+        self.pool.spawn(move || loop {
+            let task = {
+                let mut st = state.lock().unwrap();
+                match st.queue.pop_front() {
+                    Some(t) => t,
+                    None => {
+                        st.running = false;
+                        return;
+                    }
+                }
+            };
+            // Run the solve outside the sequence lock is NOT possible: the
+            // recycle manager *is* the sequence state. But the lock is per
+            // sequence, so other sequences proceed in parallel.
+            let result = {
+                let mut st = state.lock().unwrap();
+                st.mgr
+                    .solve_next(task.op.as_ref(), &task.b, task.x0.as_deref(), &task.cfg)
+            };
+            metrics.solves.fetch_add(1, Ordering::Relaxed);
+            metrics
+                .iterations
+                .fetch_add(result.iterations, Ordering::Relaxed);
+            metrics.matvecs.fetch_add(result.matvecs, Ordering::Relaxed);
+            metrics
+                .solve_nanos
+                .fetch_add((result.seconds * 1e9) as u64, Ordering::Relaxed);
+            task.slot.put(result);
+        });
+    }
+
+    /// Per-system statistics accumulated by this sequence's manager.
+    pub fn history(&self) -> Vec<SystemStats> {
+        self.state.lock().unwrap().mgr.history().to_vec()
+    }
+
+    /// Current recycled-basis dimension.
+    pub fn k_active(&self) -> usize {
+        self.state.lock().unwrap().mgr.k_active()
+    }
+
+    /// Close the sequence (subsequent submits panic).
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::mat::Mat;
+    use crate::solvers::StopReason;
+    use crate::util::rng::Rng;
+
+    /// Owning dense operator for Arc'ing into the service.
+    struct OwnedDense(Mat);
+
+    impl SpdOperator for OwnedDense {
+        fn n(&self) -> usize {
+            self.0.rows()
+        }
+        fn matvec(&self, x: &[f64], y: &mut [f64]) {
+            self.0.matvec_into(x, y);
+        }
+    }
+
+    fn spd(n: usize, seed: u64) -> Arc<OwnedDense> {
+        let mut rng = Rng::new(seed);
+        Arc::new(OwnedDense(Mat::rand_spd(n, 1e4, &mut rng)))
+    }
+
+    #[test]
+    fn single_sequence_solves_in_order_with_recycling() {
+        let svc = SolveService::new(2);
+        let seq = svc.open_sequence(RecycleConfig { k: 6, l: 10, ..Default::default() });
+        let op = spd(60, 1);
+        let b = vec![1.0; 60];
+        let cfg = CgConfig::with_tol(1e-8);
+        let tickets: Vec<_> = (0..4)
+            .map(|_| seq.submit(op.clone(), b.clone(), None, cfg.clone()))
+            .collect();
+        let results: Vec<_> = tickets.into_iter().map(|t| t.wait()).collect();
+        for r in &results {
+            assert_eq!(r.stop, StopReason::Converged);
+        }
+        // Identical systems: solves after the first must be cheaper.
+        assert!(results[3].iterations < results[0].iterations);
+        let hist = seq.history();
+        assert_eq!(hist.len(), 4);
+        assert!(seq.k_active() > 0);
+    }
+
+    #[test]
+    fn sequences_run_concurrently_and_keep_state_separate() {
+        let svc = SolveService::new(4);
+        let cfg = CgConfig::with_tol(1e-6);
+        let mut handles = Vec::new();
+        for s in 0..3 {
+            let seq = svc.open_sequence(RecycleConfig { k: 4, l: 6, ..Default::default() });
+            let op = spd(40, 100 + s);
+            let b: Vec<f64> = (0..40).map(|i| (i + s as usize) as f64).collect();
+            let t1 = seq.submit(op.clone(), b.clone(), None, cfg.clone());
+            let t2 = seq.submit(op, b, None, cfg.clone());
+            handles.push((seq, t1, t2));
+        }
+        for (seq, t1, t2) in handles {
+            assert_eq!(t1.wait().stop, StopReason::Converged);
+            assert_eq!(t2.wait().stop, StopReason::Converged);
+            assert_eq!(seq.history().len(), 2);
+        }
+        let (solves, iters, matvecs, secs, seqs) = svc.metrics().snapshot();
+        assert_eq!(solves, 6);
+        assert_eq!(seqs, 3);
+        assert!(iters > 0 && matvecs >= iters);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn pipelined_submissions_complete() {
+        let svc = SolveService::new(2);
+        let seq = svc.open_sequence(RecycleConfig::default());
+        let op = spd(30, 7);
+        let tickets: Vec<_> = (0..8)
+            .map(|i| {
+                let b: Vec<f64> = (0..30).map(|j| ((i + j) % 5) as f64 + 1.0).collect();
+                seq.submit(op.clone(), b, None, CgConfig::with_tol(1e-6))
+            })
+            .collect();
+        for t in tickets {
+            assert_eq!(t.wait().stop, StopReason::Converged);
+        }
+        assert_eq!(seq.history().len(), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "closed sequence")]
+    fn closed_sequence_rejects() {
+        let svc = SolveService::new(1);
+        let seq = svc.open_sequence(RecycleConfig::default());
+        seq.close();
+        let op = spd(5, 9);
+        let _ = seq.submit(op, vec![1.0; 5], None, CgConfig::default());
+    }
+
+    #[test]
+    fn warm_start_passthrough() {
+        let svc = SolveService::new(1);
+        let seq = svc.open_sequence(RecycleConfig::default());
+        let op = spd(20, 11);
+        let b = vec![2.0; 20];
+        // First solve to get solution, then warm start from it.
+        let x = seq
+            .submit(op.clone(), b.clone(), None, CgConfig::with_tol(1e-10))
+            .wait()
+            .x;
+        let warm = seq
+            .submit(op, b, Some(x), CgConfig::with_tol(1e-10))
+            .wait();
+        assert!(warm.iterations <= 2, "warm start took {}", warm.iterations);
+    }
+}

@@ -1,0 +1,337 @@
+//! Synthetic "infinite MNIST": deformed stroke-rendered digits 3 and 5.
+//!
+//! Each sample starts from a polyline stroke template of the digit, gets a
+//! random affine distortion (rotation, anisotropic scale, shear,
+//! translation), per-vertex elastic jitter, and is rasterized with a
+//! Gaussian pen onto a 28×28 grid; finally pixel noise is added. Labels
+//! are +1 for "3" and −1 for "5" (binary GPC, as in the paper's §3).
+
+use crate::linalg::mat::Mat;
+use crate::util::rng::Rng;
+
+/// Image side length (28 like MNIST) — feature dimension is SIDE².
+pub const SIDE: usize = 28;
+/// Feature dimension (784).
+pub const DIM: usize = SIDE * SIDE;
+
+/// Generator configuration.
+#[derive(Clone, Debug)]
+pub struct DigitsConfig {
+    /// Number of samples (balanced between the two classes).
+    pub n: usize,
+    pub seed: u64,
+    /// Max rotation angle (radians) of the random affine.
+    pub max_rotation: f64,
+    /// Scale jitter: factors drawn from [1−s, 1+s].
+    pub scale_jitter: f64,
+    /// Max shear coefficient.
+    pub max_shear: f64,
+    /// Max translation in pixels.
+    pub max_translate: f64,
+    /// Std of per-vertex elastic displacement (pixels).
+    pub elastic_std: f64,
+    /// Std of additive pixel noise.
+    pub pixel_noise: f64,
+    /// Gaussian pen radius (pixels).
+    pub pen_sigma: f64,
+}
+
+impl Default for DigitsConfig {
+    fn default() -> Self {
+        DigitsConfig {
+            n: 200,
+            seed: 0,
+            max_rotation: 0.25,
+            scale_jitter: 0.15,
+            max_shear: 0.2,
+            max_translate: 2.0,
+            elastic_std: 0.6,
+            pixel_noise: 0.03,
+            pen_sigma: 0.9,
+        }
+    }
+}
+
+/// A generated dataset: features X (n × 784, values in [0, ~1]) and
+/// labels y ∈ {−1, +1}ⁿ (+1 = "3", −1 = "5").
+#[derive(Clone, Debug)]
+pub struct Digits {
+    pub x: Mat,
+    pub y: Vec<f64>,
+}
+
+impl Digits {
+    pub fn n(&self) -> usize {
+        self.y.len()
+    }
+
+    /// Split into (train, test) by a shuffled index at `train_frac`.
+    pub fn split(&self, train_frac: f64, rng: &mut Rng) -> (Digits, Digits) {
+        let n = self.n();
+        let n_train = ((n as f64) * train_frac).round() as usize;
+        let mut idx: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut idx);
+        let take = |ids: &[usize]| Digits {
+            x: self.x.take_rows(ids),
+            y: ids.iter().map(|&i| self.y[i]).collect(),
+        };
+        (take(&idx[..n_train]), take(&idx[n_train..]))
+    }
+
+    /// Subsample m points (used by the inducing-point baseline).
+    pub fn subset(&self, m: usize, rng: &mut Rng) -> (Digits, Vec<usize>) {
+        let idx = rng.sample_indices(self.n(), m);
+        (
+            Digits { x: self.x.take_rows(&idx), y: idx.iter().map(|&i| self.y[i]).collect() },
+            idx,
+        )
+    }
+}
+
+/// Stroke template for digit "3": two stacked open bows, as polyline
+/// vertices in unit coordinates ([0,1]², y downward).
+fn template_three() -> Vec<(f64, f64)> {
+    vec![
+        (0.25, 0.18),
+        (0.45, 0.12),
+        (0.65, 0.16),
+        (0.72, 0.28),
+        (0.66, 0.42),
+        (0.48, 0.48),
+        (0.66, 0.54),
+        (0.74, 0.68),
+        (0.66, 0.82),
+        (0.45, 0.88),
+        (0.24, 0.82),
+    ]
+}
+
+/// Stroke template for digit "5": top bar, left descender, lower bowl.
+fn template_five() -> Vec<(f64, f64)> {
+    vec![
+        (0.70, 0.12),
+        (0.32, 0.12),
+        (0.30, 0.20),
+        (0.28, 0.46),
+        (0.45, 0.42),
+        (0.62, 0.46),
+        (0.72, 0.58),
+        (0.70, 0.74),
+        (0.55, 0.86),
+        (0.34, 0.84),
+        (0.25, 0.74),
+    ]
+}
+
+/// Render one deformed digit into `img` (SIDE×SIDE, row-major).
+fn render(template: &[(f64, f64)], cfg: &DigitsConfig, rng: &mut Rng, img: &mut [f64]) {
+    debug_assert_eq!(img.len(), DIM);
+    for p in img.iter_mut() {
+        *p = 0.0;
+    }
+    // Random affine about the image center.
+    let theta = rng.uniform_in(-cfg.max_rotation, cfg.max_rotation);
+    let (sin, cos) = theta.sin_cos();
+    let sx = 1.0 + rng.uniform_in(-cfg.scale_jitter, cfg.scale_jitter);
+    let sy = 1.0 + rng.uniform_in(-cfg.scale_jitter, cfg.scale_jitter);
+    let shear = rng.uniform_in(-cfg.max_shear, cfg.max_shear);
+    let tx = rng.uniform_in(-cfg.max_translate, cfg.max_translate);
+    let ty = rng.uniform_in(-cfg.max_translate, cfg.max_translate);
+    let side = SIDE as f64;
+
+    // Transform template vertices to pixel space with elastic jitter.
+    let pts: Vec<(f64, f64)> = template
+        .iter()
+        .map(|&(u, v)| {
+            let (cx, cy) = (u - 0.5, v - 0.5);
+            let (rx, ry) = (cos * cx - sin * cy, sin * cx + cos * cy);
+            let (ax, ay) = (sx * (rx + shear * ry), sy * ry);
+            (
+                (ax + 0.5) * side + tx + rng.normal() * cfg.elastic_std,
+                (ay + 0.5) * side + ty + rng.normal() * cfg.elastic_std,
+            )
+        })
+        .collect();
+
+    // Rasterize each segment with a Gaussian pen, sampling along its length.
+    let sigma2 = cfg.pen_sigma * cfg.pen_sigma;
+    let reach = (3.0 * cfg.pen_sigma).ceil() as isize;
+    for seg in pts.windows(2) {
+        let (x0, y0) = seg[0];
+        let (x1, y1) = seg[1];
+        let len = ((x1 - x0).powi(2) + (y1 - y0).powi(2)).sqrt();
+        let steps = (len * 2.0).ceil().max(1.0) as usize;
+        for s in 0..=steps {
+            let t = s as f64 / steps as f64;
+            let (px, py) = (x0 + t * (x1 - x0), y0 + t * (y1 - y0));
+            let (ci, cj) = (py.round() as isize, px.round() as isize);
+            for di in -reach..=reach {
+                for dj in -reach..=reach {
+                    let (i, j) = (ci + di, cj + dj);
+                    if i < 0 || j < 0 || i >= SIDE as isize || j >= SIDE as isize {
+                        continue;
+                    }
+                    let d2 = (i as f64 - py).powi(2) + (j as f64 - px).powi(2);
+                    let v = (-d2 / (2.0 * sigma2)).exp();
+                    let idx = i as usize * SIDE + j as usize;
+                    img[idx] = img[idx].max(v);
+                }
+            }
+        }
+    }
+
+    // Pixel noise, clamped to keep the value range MNIST-like.
+    if cfg.pixel_noise > 0.0 {
+        for p in img.iter_mut() {
+            *p = (*p + rng.normal() * cfg.pixel_noise).clamp(0.0, 1.0);
+        }
+    }
+}
+
+/// Generate a balanced dataset of deformed 3s (+1) and 5s (−1).
+pub fn generate(cfg: &DigitsConfig) -> Digits {
+    let mut rng = Rng::new(cfg.seed);
+    let mut x = Mat::zeros(cfg.n, DIM);
+    let mut y = vec![0.0; cfg.n];
+    let three = template_three();
+    let five = template_five();
+    let mut img = vec![0.0; DIM];
+    for i in 0..cfg.n {
+        let is_three = i % 2 == 0;
+        render(if is_three { &three } else { &five }, cfg, &mut rng, &mut img);
+        x.row_mut(i).copy_from_slice(&img);
+        y[i] = if is_three { 1.0 } else { -1.0 };
+    }
+    // Shuffle so class labels are not index-correlated.
+    let mut idx: Vec<usize> = (0..cfg.n).collect();
+    rng.shuffle(&mut idx);
+    Digits { x: x.take_rows(&idx), y: idx.iter().map(|&i| y[i]).collect() }
+}
+
+/// Render an image to ASCII art (debugging / demo output).
+pub fn ascii_art(row: &[f64]) -> String {
+    let ramp: &[u8] = b" .:-=+*#%@";
+    let mut s = String::with_capacity(DIM + SIDE);
+    for i in 0..SIDE {
+        for j in 0..SIDE {
+            let v = row[i * SIDE + j].clamp(0.0, 1.0);
+            let c = ramp[((v * (ramp.len() - 1) as f64).round() as usize).min(ramp.len() - 1)];
+            s.push(c as char);
+        }
+        s.push('\n');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::kernel::RbfKernel;
+    use crate::linalg::vec_ops::norm2;
+
+    #[test]
+    fn generates_requested_size_and_balance() {
+        let ds = generate(&DigitsConfig { n: 100, seed: 1, ..Default::default() });
+        assert_eq!(ds.n(), 100);
+        assert_eq!(ds.x.rows(), 100);
+        assert_eq!(ds.x.cols(), DIM);
+        let pos = ds.y.iter().filter(|&&v| v == 1.0).count();
+        assert_eq!(pos, 50);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = generate(&DigitsConfig { n: 20, seed: 7, ..Default::default() });
+        let b = generate(&DigitsConfig { n: 20, seed: 7, ..Default::default() });
+        assert_eq!(a.x.max_abs_diff(&b.x), 0.0);
+        assert_eq!(a.y, b.y);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = generate(&DigitsConfig { n: 20, seed: 1, ..Default::default() });
+        let b = generate(&DigitsConfig { n: 20, seed: 2, ..Default::default() });
+        assert!(a.x.max_abs_diff(&b.x) > 0.1);
+    }
+
+    #[test]
+    fn pixels_in_unit_range_and_nontrivial() {
+        let ds = generate(&DigitsConfig { n: 30, seed: 3, ..Default::default() });
+        for i in 0..30 {
+            let row = ds.x.row(i);
+            assert!(row.iter().all(|&v| (0.0..=1.0).contains(&v)));
+            // stroke must light up a reasonable number of pixels
+            let lit = row.iter().filter(|&&v| v > 0.5).count();
+            assert!((20..400).contains(&lit), "lit = {lit}");
+        }
+    }
+
+    #[test]
+    fn classes_are_separated_in_feature_space() {
+        // Mean within-class distance must be smaller than between-class:
+        // the clustering structure that shapes the Gram spectrum.
+        let ds = generate(&DigitsConfig { n: 60, seed: 4, ..Default::default() });
+        let mut within = 0.0;
+        let mut between = 0.0;
+        let (mut nw, mut nb) = (0, 0);
+        for i in 0..ds.n() {
+            for j in 0..i {
+                let mut d = vec![0.0; DIM];
+                crate::linalg::vec_ops::sub(ds.x.row(i), ds.x.row(j), &mut d);
+                let dist = norm2(&d);
+                if ds.y[i] == ds.y[j] {
+                    within += dist;
+                    nw += 1;
+                } else {
+                    between += dist;
+                    nb += 1;
+                }
+            }
+        }
+        let (within, between) = (within / nw as f64, between / nb as f64);
+        assert!(
+            between > within * 1.05,
+            "between {between} not > within {within}"
+        );
+    }
+
+    #[test]
+    fn gram_spectrum_decays() {
+        // The RBF Gram over this data must have a decaying spectrum with a
+        // heavy top — the structure def-CG exploits.
+        let ds = generate(&DigitsConfig { n: 40, seed: 5, ..Default::default() });
+        let k = RbfKernel::new(1.0, 10.0).gram(&ds.x);
+        let eig = crate::linalg::eig::sym_eig(&k).unwrap();
+        let total: f64 = eig.values.iter().sum();
+        let top5: f64 = eig.values.iter().rev().take(5).sum();
+        assert!(top5 / total > 0.5, "top-5 mass = {}", top5 / total);
+    }
+
+    #[test]
+    fn split_partitions_dataset() {
+        let ds = generate(&DigitsConfig { n: 50, seed: 6, ..Default::default() });
+        let mut rng = Rng::new(1);
+        let (tr, te) = ds.split(0.8, &mut rng);
+        assert_eq!(tr.n(), 40);
+        assert_eq!(te.n(), 10);
+    }
+
+    #[test]
+    fn subset_selects_m_rows() {
+        let ds = generate(&DigitsConfig { n: 50, seed: 6, ..Default::default() });
+        let mut rng = Rng::new(2);
+        let (sub, idx) = ds.subset(10, &mut rng);
+        assert_eq!(sub.n(), 10);
+        for (r, &i) in idx.iter().enumerate() {
+            assert_eq!(sub.y[r], ds.y[i]);
+        }
+    }
+
+    #[test]
+    fn ascii_art_renders() {
+        let ds = generate(&DigitsConfig { n: 2, seed: 8, ..Default::default() });
+        let art = ascii_art(ds.x.row(0));
+        assert_eq!(art.lines().count(), SIDE);
+        assert!(art.contains('@') || art.contains('%') || art.contains('#'));
+    }
+}

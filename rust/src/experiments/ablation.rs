@@ -1,0 +1,178 @@
+//! Ablations beyond the paper: the design choices DESIGN.md calls out.
+//!
+//! 1. **k sweep** — recycled-subspace dimension vs total inner iterations
+//!    (the paper fixes k = 8; cost grows O(nk) per iteration).
+//! 2. **ℓ sweep** — how many stored directions the Ritz extraction needs.
+//! 3. **AW policy** — refresh (exact deflation, k matvecs/system) vs
+//!    reuse (free but inexact; the instability the paper discusses).
+//! 4. **Ritz end** — deflating the largest vs smallest harmonic Ritz
+//!    values on the GPC spectrum (bounded below by 1 ⇒ largest wins).
+
+use crate::experiments::common::{ExpOpts, Workload};
+use crate::gp::laplace::{LaplaceFit, SolverBackend};
+use crate::solvers::recycle::{AwPolicy, RecycleConfig};
+use crate::solvers::ritz::RitzSelect;
+use crate::util::table::{Align, Table};
+
+fn total_inner_iters(fit: &LaplaceFit) -> usize {
+    fit.steps.iter().map(|s| s.solver_iterations).sum()
+}
+
+fn total_matvecs(fit: &LaplaceFit) -> usize {
+    fit.steps.iter().map(|s| s.solver_matvecs).sum()
+}
+
+pub fn run_config(w: &Workload, o: &ExpOpts, rc: RecycleConfig) -> LaplaceFit {
+    w.fit(SolverBackend::DefCg(rc), o)
+}
+
+pub fn run(o: &ExpOpts) {
+    let w = Workload::build(o);
+    let cg = w.fit(SolverBackend::Cg, o);
+    let base_iters = total_inner_iters(&cg);
+    println!("baseline CG: {base_iters} total inner iterations, {:.3}s\n", cg.total_solve_seconds());
+
+    // (1) k sweep.
+    let mut t = Table::new(
+        &format!("Ablation 1 — recycled dimension k (ℓ={}, n={})", o.l, o.n),
+        &["k", "inner iters", "matvecs", "vs CG", "time [s]"],
+    )
+    .align(0, Align::Left);
+    for k in [0usize, 2, 4, 8, 12, 16] {
+        let fit = if k == 0 {
+            w.fit(SolverBackend::Cg, o)
+        } else {
+            run_config(&w, o, RecycleConfig { k, l: o.l, ..Default::default() })
+        };
+        let it = total_inner_iters(&fit);
+        t.row(vec![
+            format!("{k}"),
+            format!("{it}"),
+            format!("{}", total_matvecs(&fit)),
+            format!("{:+.0}%", 100.0 * (it as f64 - base_iters as f64) / base_iters as f64),
+            format!("{:.3}", fit.total_solve_seconds()),
+        ]);
+    }
+    println!("{}", t.render());
+    let _ = t.save_csv("ablation_k");
+
+    // (2) ℓ sweep.
+    let mut t = Table::new(
+        &format!("Ablation 2 — stored iterations ℓ (k={}, n={})", o.k, o.n),
+        &["l", "inner iters", "matvecs", "time [s]"],
+    )
+    .align(0, Align::Left);
+    for l in [4usize, 8, 12, 16, 24] {
+        let fit = run_config(&w, o, RecycleConfig { k: o.k, l, ..Default::default() });
+        t.row(vec![
+            format!("{l}"),
+            format!("{}", total_inner_iters(&fit)),
+            format!("{}", total_matvecs(&fit)),
+            format!("{:.3}", fit.total_solve_seconds()),
+        ]);
+    }
+    println!("{}", t.render());
+    let _ = t.save_csv("ablation_l");
+
+    // (3) AW policy + (4) Ritz end.
+    let mut t = Table::new(
+        &format!("Ablation 3/4 — AW policy × Ritz end (k={}, ℓ={})", o.k, o.l),
+        &["policy", "ritz end", "inner iters", "matvecs", "converged steps"],
+    )
+    .align(0, Align::Left)
+    .align(1, Align::Left);
+    for (pol, pname) in [(AwPolicy::Refresh, "refresh"), (AwPolicy::Reuse, "reuse")] {
+        for (sel, sname) in [(RitzSelect::Largest, "largest"), (RitzSelect::Smallest, "smallest")] {
+            let fit = run_config(
+                &w,
+                o,
+                RecycleConfig {
+                    k: o.k,
+                    l: o.l,
+                    select: sel,
+                    aw_policy: pol,
+                    ..Default::default()
+                },
+            );
+            let conv = fit
+                .steps
+                .iter()
+                .filter(|s| s.residual_trace.last().map(|r| *r <= o.tol).unwrap_or(true))
+                .count();
+            t.row(vec![
+                pname.to_string(),
+                sname.to_string(),
+                format!("{}", total_inner_iters(&fit)),
+                format!("{}", total_matvecs(&fit)),
+                format!("{}/{}", conv, fit.steps.len()),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    let _ = t.save_csv("ablation_policy");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn largest_ritz_beats_smallest_on_gpc_spectrum() {
+        // A = I + SKS has spectrum bounded below by 1 with a heavy top:
+        // deflating the largest eigenvalues must help at least as much.
+        let o = ExpOpts {
+            n: 96,
+            seed: 6,
+            amplitude: 1.0,
+            lengthscale: 10.0,
+            tol: 1e-5,
+            k: 6,
+            l: 10,
+            max_newton: 6,
+            backend: "native".into(),
+            fast: true,
+        };
+        let w = Workload::build(&o);
+        let largest = run_config(
+            &w,
+            &o,
+            RecycleConfig { k: 6, l: 10, select: RitzSelect::Largest, ..Default::default() },
+        );
+        let smallest = run_config(
+            &w,
+            &o,
+            RecycleConfig { k: 6, l: 10, select: RitzSelect::Smallest, ..Default::default() },
+        );
+        assert!(
+            total_inner_iters(&largest) <= total_inner_iters(&smallest),
+            "largest {} > smallest {}",
+            total_inner_iters(&largest),
+            total_inner_iters(&smallest)
+        );
+    }
+
+    #[test]
+    fn bigger_k_does_not_hurt_iterations() {
+        let o = ExpOpts {
+            n: 96,
+            seed: 6,
+            amplitude: 1.0,
+            lengthscale: 10.0,
+            tol: 1e-5,
+            k: 6,
+            l: 12,
+            max_newton: 6,
+            backend: "native".into(),
+            fast: true,
+        };
+        let w = Workload::build(&o);
+        let k2 = run_config(&w, &o, RecycleConfig { k: 2, l: 12, ..Default::default() });
+        let k8 = run_config(&w, &o, RecycleConfig { k: 8, l: 12, ..Default::default() });
+        assert!(
+            total_inner_iters(&k8) <= total_inner_iters(&k2) + 2,
+            "k=8 {} much worse than k=2 {}",
+            total_inner_iters(&k8),
+            total_inner_iters(&k2)
+        );
+    }
+}

@@ -1,0 +1,148 @@
+//! Fig. 2 — Left: CPU time per Newton iteration (Cholesky / CG / def-CG).
+//!          Right: inner iterations per system (CG vs def-CG).
+//!
+//! Paper's reading: per-iteration time of the iterative solvers falls as
+//! the Newton optimizer converges (systems get easier); def-CG saves ≥12
+//! iterations (~25%) per system from the second system on; savings
+//! stagnate late in the sequence.
+
+use crate::experiments::common::{ExpOpts, Workload};
+use crate::experiments::plot::{render as plot, Series};
+use crate::experiments::table1;
+use crate::util::table::{fix, Align, Table};
+
+pub fn run(o: &ExpOpts) {
+    let w = Workload::build(o);
+    let r = table1::compute(&w, o);
+
+    // Left panel: per-iteration solve time.
+    let series_time: Vec<Series> = [
+        ("cholesky", '#', &r.chol),
+        ("cg", '*', &r.cg),
+        ("def-cg", 'o', &r.defcg),
+    ]
+    .into_iter()
+    .map(|(name, m, fit)| {
+        Series::new(
+            name,
+            m,
+            fit.steps
+                .iter()
+                .map(|s| (s.newton_iter as f64, s.solve_seconds.max(1e-9)))
+                .collect(),
+        )
+    })
+    .collect();
+    println!(
+        "{}",
+        plot(
+            &format!("Fig 2 (left) — solve seconds per Newton iteration, n={}", o.n),
+            &series_time,
+            64,
+            16,
+            true
+        )
+    );
+
+    // Right panel: inner iterations per system.
+    let series_iters: Vec<Series> = [("cg", '*', &r.cg), ("def-cg", 'o', &r.defcg)]
+        .into_iter()
+        .map(|(name, m, fit)| {
+            Series::new(
+                name,
+                m,
+                fit.steps
+                    .iter()
+                    .map(|s| (s.newton_iter as f64, s.solver_iterations as f64))
+                    .collect(),
+            )
+        })
+        .collect();
+    println!(
+        "{}",
+        plot(
+            "Fig 2 (right) — inner iterations per system (tol 1e-5)",
+            &series_iters,
+            64,
+            16,
+            false
+        )
+    );
+
+    // Numeric table + CSV.
+    let mut t = Table::new(
+        "Fig 2 data",
+        &["It.", "chol t[s]", "cg t[s]", "defcg t[s]", "cg iters", "defcg iters", "saved", "saved %"],
+    )
+    .align(0, Align::Left);
+    let rows = r.cg.steps.len().max(r.defcg.steps.len()).max(r.chol.steps.len());
+    let mut total_saved = 0isize;
+    for i in 0..rows {
+        let ct = r.chol.steps.get(i).map(|s| fix(s.solve_seconds, 4)).unwrap_or("-".into());
+        let gt = r.cg.steps.get(i).map(|s| fix(s.solve_seconds, 4)).unwrap_or("-".into());
+        let dt = r.defcg.steps.get(i).map(|s| fix(s.solve_seconds, 4)).unwrap_or("-".into());
+        let gi = r.cg.steps.get(i).map(|s| s.solver_iterations);
+        let di = r.defcg.steps.get(i).map(|s| s.solver_iterations);
+        let (saved, pct) = match (gi, di) {
+            (Some(g), Some(d)) => {
+                let s = g as isize - d as isize;
+                total_saved += s;
+                (format!("{s}"), format!("{:.0}%", 100.0 * s as f64 / g.max(1) as f64))
+            }
+            _ => ("-".into(), "-".into()),
+        };
+        t.row(vec![
+            format!("{}", i + 1),
+            ct,
+            gt,
+            dt,
+            gi.map(|v| v.to_string()).unwrap_or("-".into()),
+            di.map(|v| v.to_string()).unwrap_or("-".into()),
+            saved,
+            pct,
+        ]);
+    }
+    println!("{}", t.render());
+    println!("total inner iterations saved by recycling: {total_saved}");
+    if let Ok(p) = t.save_csv("fig2") {
+        println!("(csv: {})", p.display());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::table1::compute;
+
+    #[test]
+    fn defcg_saves_iterations_after_first_system() {
+        let o = ExpOpts {
+            n: 96,
+            seed: 3,
+            amplitude: 1.0,
+            lengthscale: 10.0,
+            tol: 1e-5,
+            k: 6,
+            l: 10,
+            max_newton: 8,
+            backend: "native".into(),
+            fast: true,
+        };
+        let w = Workload::build(&o);
+        let r = compute(&w, &o);
+        // The paper's Fig 2 (right): def-CG needs fewer iterations than CG
+        // for systems 2.. (system 1 is identical).
+        assert_eq!(
+            r.cg.steps[0].solver_iterations,
+            r.defcg.steps[0].solver_iterations,
+            "first systems must match"
+        );
+        let n_steps = r.cg.steps.len().min(r.defcg.steps.len());
+        let mut saved = 0isize;
+        for i in 1..n_steps {
+            saved += r.cg.steps[i].solver_iterations as isize
+                - r.defcg.steps[i].solver_iterations as isize;
+        }
+        assert!(saved > 0, "no net iteration saving ({saved})");
+    }
+}

@@ -1,0 +1,123 @@
+//! ASCII charts for the "figure" experiments.
+//!
+//! Renders one or more named series as a terminal line chart — enough to
+//! see the paper's qualitative shapes (slopes, crossovers) directly in the
+//! test log, with the exact numbers in the accompanying CSV.
+
+/// A named data series (x, y).
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+    pub marker: char,
+}
+
+impl Series {
+    pub fn new(name: &str, marker: char, points: Vec<(f64, f64)>) -> Series {
+        Series { name: name.to_string(), points, marker }
+    }
+}
+
+/// Render series into an ASCII grid. `log_y` plots log10(y).
+pub fn render(title: &str, series: &[Series], width: usize, height: usize, log_y: bool) -> String {
+    let mut pts: Vec<(f64, f64)> = Vec::new();
+    for s in series {
+        for &(x, y) in &s.points {
+            let y = if log_y { y.max(1e-300).log10() } else { y };
+            if x.is_finite() && y.is_finite() {
+                pts.push((x, y));
+            }
+        }
+    }
+    if pts.is_empty() {
+        return format!("## {title}\n(no data)\n");
+    }
+    let (mut xmin, mut xmax) = (f64::MAX, f64::MIN);
+    let (mut ymin, mut ymax) = (f64::MAX, f64::MIN);
+    for &(x, y) in &pts {
+        xmin = xmin.min(x);
+        xmax = xmax.max(x);
+        ymin = ymin.min(y);
+        ymax = ymax.max(y);
+    }
+    if (xmax - xmin).abs() < 1e-300 {
+        xmax = xmin + 1.0;
+    }
+    if (ymax - ymin).abs() < 1e-300 {
+        ymax = ymin + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for s in series {
+        for &(x, y) in &s.points {
+            let yv = if log_y { y.max(1e-300).log10() } else { y };
+            if !x.is_finite() || !yv.is_finite() {
+                continue;
+            }
+            let col = ((x - xmin) / (xmax - xmin) * (width - 1) as f64).round() as usize;
+            let row = ((ymax - yv) / (ymax - ymin) * (height - 1) as f64).round() as usize;
+            grid[row.min(height - 1)][col.min(width - 1)] = s.marker;
+        }
+    }
+    let ylab = |v: f64| -> String {
+        if log_y {
+            format!("1e{v:+.0}")
+        } else {
+            format!("{v:9.3}")
+        }
+    };
+    let mut out = format!("## {title}\n");
+    for (i, row) in grid.iter().enumerate() {
+        let yv = ymax - (ymax - ymin) * i as f64 / (height - 1) as f64;
+        let lab = if i % 3 == 0 { ylab(yv) } else { String::new() };
+        out.push_str(&format!("{lab:>9} |{}|\n", row.iter().collect::<String>()));
+    }
+    out.push_str(&format!(
+        "{:>9} +{}+\n{:>9}  x: [{:.3} .. {:.3}]   ",
+        "", "-".repeat(width), "", xmin, xmax
+    ));
+    for s in series {
+        out.push_str(&format!("{}={}  ", s.marker, s.name));
+    }
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_two_series() {
+        let a = Series::new("cg", '*', (0..20).map(|i| (i as f64, (20 - i) as f64)).collect());
+        let b = Series::new("defcg", 'o', (0..20).map(|i| (i as f64, (20 - i) as f64 / 2.0)).collect());
+        let s = render("test chart", &[a, b], 40, 10, false);
+        assert!(s.contains("*"));
+        assert!(s.contains("o"));
+        assert!(s.contains("cg"));
+        assert_eq!(s.lines().count(), 10 + 3);
+    }
+
+    #[test]
+    fn log_scale_renders_exponents() {
+        let a = Series::new(
+            "resid",
+            '*',
+            (0..10).map(|i| (i as f64, 10f64.powi(-i))).collect(),
+        );
+        let s = render("log chart", &[a], 30, 8, true);
+        assert!(s.contains("1e"), "{s}");
+    }
+
+    #[test]
+    fn empty_series_safe() {
+        let s = render("empty", &[Series::new("x", '*', vec![])], 10, 5, false);
+        assert!(s.contains("no data"));
+    }
+
+    #[test]
+    fn constant_series_safe() {
+        let a = Series::new("c", '*', vec![(1.0, 5.0), (2.0, 5.0)]);
+        let s = render("const", &[a], 20, 6, false);
+        assert!(s.contains('*'));
+    }
+}

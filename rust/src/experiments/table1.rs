@@ -1,0 +1,134 @@
+//! Table 1: Cholesky vs CG vs def-CG(k, ℓ) across Newton iterations.
+//!
+//! For every Newton iteration the paper reports, per solver:
+//! `log p(y|f)`, the relative error δ of that log-likelihood against the
+//! Cholesky (exact) value at the same iteration, and cumulative solve
+//! time. Expected shape: iterative ≪ direct in time; def-CG < CG in time
+//! and inner iterations from the second system on; δ ~ 1e-3 at tol 1e-5.
+
+use crate::experiments::common::{ExpOpts, Workload};
+use crate::gp::laplace::{LaplaceFit, SolverBackend};
+use crate::util::table::{fix, sci, Align, Table};
+
+pub struct Table1Result {
+    pub chol: LaplaceFit,
+    pub cg: LaplaceFit,
+    pub defcg: LaplaceFit,
+}
+
+pub fn compute(w: &Workload, o: &ExpOpts) -> Table1Result {
+    crate::log_info!("table1: n={} backend={} tol={}", o.n, o.backend, o.tol);
+    let chol = w.fit(SolverBackend::Cholesky, o);
+    let cg = w.fit(SolverBackend::Cg, o);
+    let defcg = w.fit(w.defcg_backend(o), o);
+    Table1Result { chol, cg, defcg }
+}
+
+pub fn render(r: &Table1Result, o: &ExpOpts) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "Table 1 — GPC Newton progress, n={}, tol={:.0e}, def-CG(k={}, l={})",
+            o.n, o.tol, o.k, o.l
+        ),
+        &[
+            "It.",
+            "chol log p(y|f)",
+            "chol t[s]",
+            "cg log p(y|f)",
+            "cg δ",
+            "cg t[s]",
+            "defcg log p(y|f)",
+            "defcg δ",
+            "defcg t[s]",
+        ],
+    )
+    .align(0, Align::Left);
+    let rows = r.chol.steps.len().max(r.cg.steps.len()).max(r.defcg.steps.len());
+    for i in 0..rows {
+        let cell = |fit: &LaplaceFit, f: &dyn Fn(&crate::gp::laplace::NewtonStepStats) -> String| {
+            fit.steps.get(i).map(|s| f(s)).unwrap_or_else(|| "-".into())
+        };
+        let chol_ll = r.chol.steps.get(i).map(|s| s.log_lik);
+        let delta = |fit: &LaplaceFit| -> String {
+            match (fit.steps.get(i), chol_ll) {
+                (Some(s), Some(c)) => sci((s.log_lik - c).abs() / c.abs()),
+                _ => "-".into(),
+            }
+        };
+        t.row(vec![
+            format!("{}", i + 1),
+            cell(&r.chol, &|s| fix(s.log_lik, 3)),
+            cell(&r.chol, &|s| fix(s.cumulative_seconds, 3)),
+            cell(&r.cg, &|s| fix(s.log_lik, 3)),
+            delta(&r.cg),
+            cell(&r.cg, &|s| fix(s.cumulative_seconds, 3)),
+            cell(&r.defcg, &|s| fix(s.log_lik, 3)),
+            delta(&r.defcg),
+            cell(&r.defcg, &|s| fix(s.cumulative_seconds, 3)),
+        ]);
+    }
+    t
+}
+
+pub fn run(o: &ExpOpts) {
+    let w = Workload::build(o);
+    let r = compute(&w, o);
+    let t = render(&r, o);
+    println!("{}", t.render());
+    if let Ok(p) = t.save_csv("table1") {
+        println!("(csv: {})", p.display());
+    }
+    // Headline summary mirroring the paper's reading of the table.
+    let sum_iters = |f: &LaplaceFit| f.steps.iter().map(|s| s.solver_iterations).sum::<usize>();
+    println!(
+        "\nsummary: chol {:.3}s | cg {:.3}s ({} inner iters) | defcg {:.3}s ({} inner iters)",
+        r.chol.total_solve_seconds(),
+        r.cg.total_solve_seconds(),
+        sum_iters(&r.cg),
+        r.defcg.total_solve_seconds(),
+        sum_iters(&r.defcg),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts() -> ExpOpts {
+        ExpOpts {
+            n: 96,
+            seed: 1,
+            amplitude: 1.0,
+            lengthscale: 10.0,
+            tol: 1e-5,
+            k: 6,
+            l: 10,
+            max_newton: 8,
+            backend: "native".into(),
+            fast: true,
+        }
+    }
+
+    #[test]
+    fn table1_shapes_hold_at_small_n() {
+        let o = opts();
+        let w = Workload::build(&o);
+        let r = compute(&w, &o);
+        // All three converge to nearly the same final log-likelihood.
+        let (c, g, d) = (
+            r.chol.final_log_lik(),
+            r.cg.final_log_lik(),
+            r.defcg.final_log_lik(),
+        );
+        assert!((g - c).abs() / c.abs() < 1e-2, "cg {g} vs chol {c}");
+        assert!((d - c).abs() / c.abs() < 1e-2, "defcg {d} vs chol {c}");
+        // def-CG must use no more inner iterations than CG in total
+        // (strictly fewer from the second system on).
+        let cg_iters: usize = r.cg.steps.iter().skip(1).map(|s| s.solver_iterations).sum();
+        let def_iters: usize = r.defcg.steps.iter().skip(1).map(|s| s.solver_iterations).sum();
+        assert!(def_iters <= cg_iters, "defcg {def_iters} > cg {cg_iters}");
+        // Rendered table has one row per Newton iteration.
+        let t = render(&r, &o);
+        assert!(t.n_rows() >= 2);
+    }
+}

@@ -1,0 +1,205 @@
+//! Inducing-point (subset-of-data) baseline — the paper's §3.1 comparison.
+//!
+//! The linear-cost alternative to iterative solvers: pick `m < n`
+//! representer points `X_m`, run the full Laplace optimization on the
+//! m-subset only (`O(m³)` per Newton step via Cholesky), then *induce* the
+//! latent values of the remaining points through the conditional mean
+//! `E[f_{n−m} | f_m] = K_{(n−m)m} K_mm⁻¹ f_m` and score `log p(y | f)` on
+//! the **entire** training set. Fast, but with a finite, uncorrectable
+//! approximation error — the trade-off Fig. 4 plots.
+
+use crate::data::digits::Digits;
+use crate::gp::kernel::RbfKernel;
+use crate::gp::laplace::{DenseKernel, LaplaceConfig, LaplaceGpc, SolverBackend};
+use crate::gp::likelihood::Logistic;
+use crate::linalg::cholesky::Cholesky;
+use crate::util::rng::Rng;
+use std::time::Instant;
+
+/// One Newton-trajectory point of the subset method (a dot in Fig. 4).
+#[derive(Clone, Debug)]
+pub struct SubsetTrajectoryPoint {
+    pub newton_iter: usize,
+    /// log p(y | f) over the FULL training set with induced latents.
+    pub full_log_lik: f64,
+    /// Cumulative linear-solve seconds so far.
+    pub cumulative_seconds: f64,
+}
+
+/// Result of the subset-of-data Laplace run.
+#[derive(Clone, Debug)]
+pub struct SubsetResult {
+    pub m: usize,
+    pub trajectory: Vec<SubsetTrajectoryPoint>,
+    /// Induced latents over the full set at the final iterate.
+    pub f_full: Vec<f64>,
+}
+
+/// Run the inducing-point baseline with `m` randomly selected points.
+///
+/// `kernel` must match the kernel used by the full-data methods for the
+/// comparison to be meaningful.
+pub fn run_subset(
+    data: &Digits,
+    kernel: &RbfKernel,
+    m: usize,
+    max_newton: usize,
+    rng: &mut Rng,
+) -> SubsetResult {
+    let n = data.n();
+    assert!(m >= 2 && m <= n, "subset size out of range");
+    let (sub, idx) = data.subset(m, rng);
+
+    // K_mm (+ jitter for numerical safety at small lengthscales).
+    let mut kmm = kernel.gram(&sub.x);
+    kmm.add_diag(1e-8);
+    // Cross-covariances K_nm between ALL training points and the subset —
+    // rows ordered like `data`.
+    let knm = kernel.cross_gram(&data.x, &sub.x);
+    let kmm_ch = Cholesky::factor(&kmm).expect("K_mm SPD");
+
+    let lik = Logistic;
+
+    // Laplace on the subset, recording the induced full-set log-lik per
+    // Newton iteration. We re-run the fit with increasing iteration caps to
+    // reconstruct the trajectory; m is small so the cost is acceptable, and
+    // we time only the final full run's solves (the others are warm
+    // re-measurements of identical prefixes).
+    let kern = DenseKernel::new(kernel.gram(&sub.x));
+    let mut gpc = LaplaceGpc::new(
+        &kern,
+        &sub.y,
+        LaplaceConfig {
+            solver: SolverBackend::Cholesky,
+            newton_tol: 1e-3,
+            max_newton,
+            ..Default::default()
+        },
+    );
+    let start = Instant::now();
+    let fit = gpc.fit();
+    let _total = start.elapsed().as_secs_f64();
+
+    // Replay the trajectory: recompute f_m at each Newton prefix.
+    // (LaplaceFit stores per-step stats; to get intermediate f we re-run
+    // with capped max_newton — each prefix run repeats the same
+    // deterministic iterations.)
+    let mut trajectory = Vec::new();
+    let mut cumulative = 0.0;
+    for step in 1..=fit.steps.len() {
+        let mut gpc_i = LaplaceGpc::new(
+            &kern,
+            &sub.y,
+            LaplaceConfig {
+                solver: SolverBackend::Cholesky,
+                newton_tol: 0.0, // run exactly `step` iterations
+                max_newton: step,
+                ..Default::default()
+            },
+        );
+        let t0 = Instant::now();
+        let fit_i = gpc_i.fit();
+        // Only count the *last* step's solve time (prefix steps were already
+        // counted in earlier trajectory points).
+        let step_time = fit_i.steps.last().map(|s| s.solve_seconds).unwrap_or(0.0);
+        let _ = t0;
+        cumulative += step_time;
+
+        // Induce latents for all points: f_full = K_nm K_mm⁻¹ f_m.
+        let alpha = kmm_ch.solve(&fit_i.f_hat);
+        let f_full = knm.matvec(&alpha);
+        let full_log_lik = lik.log_lik(&data.y, &f_full);
+        trajectory.push(SubsetTrajectoryPoint {
+            newton_iter: step,
+            full_log_lik,
+            cumulative_seconds: cumulative,
+        });
+    }
+
+    let alpha = kmm_ch.solve(&fit.f_hat);
+    let f_full = knm.matvec(&alpha);
+    let _ = idx;
+    SubsetResult { m, trajectory, f_full }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::digits::{generate, DigitsConfig};
+
+    fn dataset(n: usize) -> Digits {
+        generate(&DigitsConfig { n, seed: 9, ..Default::default() })
+    }
+
+    #[test]
+    fn subset_runs_and_improves_over_iterations() {
+        let ds = dataset(80);
+        let kernel = RbfKernel::new(1.0, 10.0);
+        let mut rng = Rng::new(1);
+        let res = run_subset(&ds, &kernel, 20, 10, &mut rng);
+        assert_eq!(res.m, 20);
+        assert!(!res.trajectory.is_empty());
+        let first = res.trajectory.first().unwrap().full_log_lik;
+        let last = res.trajectory.last().unwrap().full_log_lik;
+        // Subset-Newton maximizes the subset's Ψ, so the FULL-set log-lik
+        // is not strictly monotone; it must however not degrade materially.
+        assert!(
+            last >= first - 0.02 * first.abs(),
+            "degraded materially: {first} -> {last}"
+        );
+        assert_eq!(res.f_full.len(), 80);
+    }
+
+    #[test]
+    fn larger_subsets_fit_better() {
+        let ds = dataset(100);
+        let kernel = RbfKernel::new(1.0, 10.0);
+        let mut rng = Rng::new(2);
+        let small = run_subset(&ds, &kernel, 10, 12, &mut rng);
+        let mut rng = Rng::new(2);
+        let large = run_subset(&ds, &kernel, 60, 12, &mut rng);
+        let ll_small = small.trajectory.last().unwrap().full_log_lik;
+        let ll_large = large.trajectory.last().unwrap().full_log_lik;
+        assert!(
+            ll_large > ll_small,
+            "m=60 ll {ll_large} not better than m=10 ll {ll_small}"
+        );
+    }
+
+    #[test]
+    fn full_subset_approaches_full_laplace() {
+        // m = n: the "subset" method degenerates to the exact method; the
+        // induced latents should equal the subset fit's latents (same set).
+        let ds = dataset(40);
+        let kernel = RbfKernel::new(1.0, 10.0);
+        let mut rng = Rng::new(3);
+        let res = run_subset(&ds, &kernel, 40, 15, &mut rng);
+        // Full-data exact Laplace for reference:
+        let kern = DenseKernel::new(kernel.gram(&ds.x));
+        let mut gpc = LaplaceGpc::new(
+            &kern,
+            &ds.y,
+            LaplaceConfig {
+                solver: SolverBackend::Cholesky,
+                newton_tol: 1e-3,
+                max_newton: 15,
+                ..Default::default()
+            },
+        );
+        let fit = gpc.fit();
+        let ll_sub = res.trajectory.last().unwrap().full_log_lik;
+        let ll_exact = fit.final_log_lik();
+        assert!(
+            (ll_sub - ll_exact).abs() / ll_exact.abs() < 0.05,
+            "subset(m=n) ll {ll_sub} vs exact {ll_exact}"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn rejects_oversized_subset() {
+        let ds = dataset(10);
+        let mut rng = Rng::new(4);
+        let _ = run_subset(&ds, &RbfKernel::new(1.0, 1.0), 11, 5, &mut rng);
+    }
+}

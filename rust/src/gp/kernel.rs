@@ -1,0 +1,226 @@
+//! Covariance kernels and Gram-matrix assembly (native path).
+//!
+//! The paper uses the Gaussian/RBF kernel
+//! `k(xᵢ, xⱼ) = θ² exp(−‖xᵢ − xⱼ‖² / 2λ²)` (§3). The same computation is
+//! implemented as an L1 Pallas kernel (`python/compile/kernels/rbf_gram.py`)
+//! for the AOT path; this native implementation is the reference the
+//! integration tests compare the artifact against, and the fallback when
+//! running without artifacts.
+
+use crate::linalg::mat::Mat;
+use crate::linalg::vec_ops::dot;
+
+/// RBF (squared-exponential) kernel with amplitude θ and lengthscale λ.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RbfKernel {
+    /// Amplitude θ (the kernel value at zero distance is θ²).
+    pub amplitude: f64,
+    /// Lengthscale λ.
+    pub lengthscale: f64,
+}
+
+impl RbfKernel {
+    pub fn new(amplitude: f64, lengthscale: f64) -> Self {
+        assert!(amplitude > 0.0 && lengthscale > 0.0);
+        RbfKernel { amplitude, lengthscale }
+    }
+
+    /// k(x, y) for two feature vectors.
+    pub fn eval(&self, x: &[f64], y: &[f64]) -> f64 {
+        assert_eq!(x.len(), y.len());
+        let mut d2 = 0.0;
+        for i in 0..x.len() {
+            let d = x[i] - y[i];
+            d2 += d * d;
+        }
+        self.amplitude * self.amplitude * (-d2 / (2.0 * self.lengthscale * self.lengthscale)).exp()
+    }
+
+    /// Symmetric Gram matrix over rows of X (n × d), via the
+    /// ‖x‖² + ‖y‖² − 2xᵀy expansion.
+    ///
+    /// The inner product block is a register-blocked symmetric product
+    /// (SYRK-style): only the lower triangle is computed (half the flops
+    /// of a general matmul) and a 2×2 register block computes four dot
+    /// products per pass, amortizing each row-stream read over two
+    /// outputs. Perf log in EXPERIMENTS.md §Perf.
+    pub fn gram(&self, x: &Mat) -> Mat {
+        let n = x.rows();
+        let sq: Vec<f64> = (0..n).map(|i| dot(x.row(i), x.row(i))).collect();
+        let a2 = self.amplitude * self.amplitude;
+        let inv2l2 = 1.0 / (2.0 * self.lengthscale * self.lengthscale);
+        let mut k = Mat::zeros(n, n);
+        let fill = |sqi: f64, sqj: f64, g: f64| -> f64 {
+            let d2 = (sqi + sqj - 2.0 * g).max(0.0);
+            a2 * (-d2 * inv2l2).exp()
+        };
+        let mut i = 0;
+        while i < n {
+            let has_i1 = i + 1 < n;
+            let (xi0, xi1) = (x.row(i), x.row(if has_i1 { i + 1 } else { i }));
+            let mut j = 0;
+            while j <= i {
+                let has_j1 = j + 1 < n;
+                let (xj0, xj1) = (x.row(j), x.row(if has_j1 { j + 1 } else { j }));
+                // Four simultaneous dot products over one pass of d.
+                let (mut s00, mut s01, mut s10, mut s11) = (0.0, 0.0, 0.0, 0.0);
+                for t in 0..x.cols() {
+                    let (a0, a1) = (xi0[t], xi1[t]);
+                    let (b0, b1) = (xj0[t], xj1[t]);
+                    s00 += a0 * b0;
+                    s01 += a0 * b1;
+                    s10 += a1 * b0;
+                    s11 += a1 * b1;
+                }
+                // Fill every lower-triangle entry the 2×2 block covers.
+                let v00 = fill(sq[i], sq[j], s00);
+                k[(i, j)] = v00;
+                k[(j, i)] = v00;
+                if has_j1 && j + 1 <= i {
+                    let v01 = fill(sq[i], sq[j + 1], s01);
+                    k[(i, j + 1)] = v01;
+                    k[(j + 1, i)] = v01;
+                }
+                if has_i1 {
+                    let v10 = fill(sq[i + 1], sq[j], s10);
+                    k[(i + 1, j)] = v10;
+                    k[(j, i + 1)] = v10;
+                    if has_j1 && j + 1 <= i + 1 {
+                        let v11 = fill(sq[i + 1], sq[j + 1], s11);
+                        k[(i + 1, j + 1)] = v11;
+                        k[(j + 1, i + 1)] = v11;
+                    }
+                }
+                j += 2;
+            }
+            i += 2;
+        }
+        k
+    }
+
+    /// Cross Gram matrix between rows of X1 (n1 × d) and X2 (n2 × d).
+    pub fn cross_gram(&self, x1: &Mat, x2: &Mat) -> Mat {
+        assert_eq!(x1.cols(), x2.cols());
+        let (n1, n2) = (x1.rows(), x2.rows());
+        let sq1: Vec<f64> = (0..n1).map(|i| dot(x1.row(i), x1.row(i))).collect();
+        let sq2: Vec<f64> = (0..n2).map(|i| dot(x2.row(i), x2.row(i))).collect();
+        let g = x1.matmul(&x2.transpose());
+        let a2 = self.amplitude * self.amplitude;
+        let inv2l2 = 1.0 / (2.0 * self.lengthscale * self.lengthscale);
+        Mat::from_fn(n1, n2, |i, j| {
+            let d2 = (sq1[i] + sq2[j] - 2.0 * g[(i, j)]).max(0.0);
+            a2 * (-d2 * inv2l2).exp()
+        })
+    }
+
+    /// Matrix-free Gram matvec: y = K v computed in row blocks without
+    /// materializing K (`O(n²d)` flops, `O(n·block)` extra memory). This is
+    /// the large-n path the paper's conclusion alludes to (10⁵–10⁶ points).
+    pub fn gram_matvec(&self, x: &Mat, v: &[f64], y: &mut [f64]) {
+        let n = x.rows();
+        assert_eq!(v.len(), n);
+        assert_eq!(y.len(), n);
+        let sq: Vec<f64> = (0..n).map(|i| dot(x.row(i), x.row(i))).collect();
+        let a2 = self.amplitude * self.amplitude;
+        let inv2l2 = 1.0 / (2.0 * self.lengthscale * self.lengthscale);
+        const BLOCK: usize = 64;
+        for ib in (0..n).step_by(BLOCK) {
+            let iend = (ib + BLOCK).min(n);
+            for yi in y[ib..iend].iter_mut() {
+                *yi = 0.0;
+            }
+            for j in 0..n {
+                let vj = v[j];
+                if vj == 0.0 {
+                    continue;
+                }
+                let xj = x.row(j);
+                for i in ib..iend {
+                    let g = dot(x.row(i), xj);
+                    let d2 = (sq[i] + sq[j] - 2.0 * g).max(0.0);
+                    y[i] += vj * a2 * (-d2 * inv2l2).exp();
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::cholesky::Cholesky;
+    use crate::util::quickprop::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn eval_at_zero_distance_is_amplitude_squared() {
+        let k = RbfKernel::new(2.0, 1.5);
+        let x = [1.0, -3.0, 2.0];
+        assert!((k.eval(&x, &x) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eval_decays_with_distance() {
+        let k = RbfKernel::new(1.0, 1.0);
+        let a = [0.0];
+        assert!(k.eval(&a, &[1.0]) > k.eval(&a, &[2.0]));
+        // k(x,y) = exp(-d²/2)
+        assert!((k.eval(&a, &[1.0]) - (-0.5f64).exp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gram_matches_pairwise_eval() {
+        forall("gram == pairwise", 10, |g| {
+            let n = g.usize_in(1, 15);
+            let d = g.usize_in(1, 8);
+            let mut rng = Rng::new(g.usize_in(0, 1 << 30) as u64);
+            let x = Mat::randn(n, d, &mut rng);
+            let k = RbfKernel::new(g.f64_in(0.5, 3.0), g.f64_in(0.5, 3.0));
+            let gram = k.gram(&x);
+            let mut ok = true;
+            for i in 0..n {
+                for j in 0..n {
+                    ok &= (gram[(i, j)] - k.eval(x.row(i), x.row(j))).abs() < 1e-10;
+                }
+            }
+            ok
+        });
+    }
+
+    #[test]
+    fn gram_is_psd() {
+        let mut rng = Rng::new(5);
+        let x = Mat::randn(20, 4, &mut rng);
+        let k = RbfKernel::new(1.0, 2.0);
+        let mut gram = k.gram(&x);
+        gram.add_diag(1e-8); // jitter for strictness
+        assert!(Cholesky::factor(&gram).is_ok());
+    }
+
+    #[test]
+    fn cross_gram_consistent_with_gram() {
+        let mut rng = Rng::new(6);
+        let x = Mat::randn(10, 3, &mut rng);
+        let k = RbfKernel::new(1.3, 0.9);
+        let full = k.gram(&x);
+        let cross = k.cross_gram(&x, &x);
+        // Summation orders differ between the SYRK path and cross_gram.
+        assert!(full.max_abs_diff(&cross) < 1e-10);
+    }
+
+    #[test]
+    fn gram_matvec_matches_materialized() {
+        forall("K v matrix-free == dense", 8, |g| {
+            let n = g.usize_in(2, 40);
+            let d = g.usize_in(1, 6);
+            let mut rng = Rng::new(g.usize_in(0, 1 << 30) as u64);
+            let x = Mat::randn(n, d, &mut rng);
+            let k = RbfKernel::new(1.0, 1.5);
+            let v = g.normal_vec(n);
+            let dense = k.gram(&x).matvec(&v);
+            let mut y = vec![0.0; n];
+            k.gram_matvec(&x, &v, &mut y);
+            dense.iter().zip(&y).all(|(u, w)| (u - w).abs() < 1e-9)
+        });
+    }
+}

@@ -1,0 +1,514 @@
+//! Laplace approximation for GP classification via Newton's method.
+//!
+//! Implements the numerically stable formulation of Kuss & Rasmussen
+//! (2006) / Rasmussen & Williams Alg. 3.1, which the paper adopts in §3:
+//! each Newton iteration solves one SPD system
+//!
+//! ```text
+//!   A⁽ⁱ⁾ z = b⁽ⁱ⁾,   A⁽ⁱ⁾ = I + H^½ K H^½   (Eq. 10)
+//!   b⁽ⁱ⁾ = H^½ K (H f⁽ⁱ⁾ + ∇ log p(y|f⁽ⁱ⁾))  (Eq. 9)
+//! ```
+//!
+//! then updates `a = (Hf + ∇) − H^½ z`, `f ← K a`. The eigenvalues of `A`
+//! lie in `[1, 1 + n·max(K)/4]`, so the system is well conditioned from
+//! below and the interesting spectrum is at the top — which is why the
+//! recycled basis deflates the **largest** harmonic Ritz values.
+//!
+//! The linear-solver backend is pluggable ([`SolverBackend`]); with
+//! [`SolverBackend::DefCg`] the Newton loop *is* the paper's sequence of
+//! related systems, and a [`RecycleManager`] carries `W` across them.
+
+use crate::gp::likelihood::Logistic;
+use crate::linalg::cholesky::Cholesky;
+use crate::linalg::mat::Mat;
+use crate::linalg::vec_ops::dot;
+use crate::solvers::cg::{self, CgConfig};
+use crate::solvers::recycle::{RecycleConfig, RecycleManager};
+use crate::solvers::{SolveResult, SpdOperator};
+use std::time::Instant;
+
+/// Abstract access to the kernel Gram matrix `K`.
+///
+/// `matvec` is all the iterative path needs; `dense` must be available for
+/// the Cholesky baseline. The XLA-artifact engine implements this trait in
+/// `runtime::ops` with `K` resident in device memory.
+pub trait KernelOp: Sync {
+    fn n(&self) -> usize;
+    /// y = K v.
+    fn matvec(&self, v: &[f64], y: &mut [f64]);
+    /// Dense K if this operator has one (native path).
+    fn dense(&self) -> Option<&Mat> {
+        None
+    }
+}
+
+/// In-core dense kernel matrix.
+pub struct DenseKernel {
+    k: Mat,
+}
+
+impl DenseKernel {
+    pub fn new(k: Mat) -> Self {
+        assert!(k.is_square());
+        DenseKernel { k }
+    }
+}
+
+impl KernelOp for DenseKernel {
+    fn n(&self) -> usize {
+        self.k.rows()
+    }
+
+    fn matvec(&self, v: &[f64], y: &mut [f64]) {
+        self.k.matvec_into(v, y);
+    }
+
+    fn dense(&self) -> Option<&Mat> {
+        Some(&self.k)
+    }
+}
+
+/// The Newton-system operator `A = I + S K S`, `S = diag(h^½)`, applied
+/// matrix-free: `A·v = v + s ∘ (K (s ∘ v))`. One `K`-matvec per apply.
+pub struct LaplaceOperator<'a> {
+    k: &'a dyn KernelOp,
+    s: &'a [f64],
+}
+
+impl<'a> LaplaceOperator<'a> {
+    pub fn new(k: &'a dyn KernelOp, s: &'a [f64]) -> Self {
+        assert_eq!(k.n(), s.len());
+        LaplaceOperator { k, s }
+    }
+}
+
+impl<'a> SpdOperator for LaplaceOperator<'a> {
+    fn n(&self) -> usize {
+        self.s.len()
+    }
+
+    fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        let n = self.s.len();
+        // tmp = s ∘ x — reuse y as scratch.
+        for i in 0..n {
+            y[i] = self.s[i] * x[i];
+        }
+        let mut ky = vec![0.0; n];
+        self.k.matvec(y, &mut ky);
+        for i in 0..n {
+            y[i] = x[i] + self.s[i] * ky[i];
+        }
+    }
+}
+
+/// Which linear solver runs inside each Newton step.
+#[derive(Clone, Debug)]
+pub enum SolverBackend {
+    /// Dense Cholesky on the materialized `A` — the paper's exact column.
+    Cholesky,
+    /// Plain conjugate gradients.
+    Cg,
+    /// Deflated CG(k, ℓ) with harmonic-Ritz recycling across Newton steps.
+    DefCg(RecycleConfig),
+}
+
+impl SolverBackend {
+    pub fn name(&self) -> String {
+        match self {
+            SolverBackend::Cholesky => "cholesky".into(),
+            SolverBackend::Cg => "cg".into(),
+            SolverBackend::DefCg(c) => format!("def-cg(k={},l={})", c.k, c.l),
+        }
+    }
+}
+
+/// Laplace/Newton configuration.
+#[derive(Clone, Debug)]
+pub struct LaplaceConfig {
+    pub solver: SolverBackend,
+    /// Relative-residual tolerance of the inner linear solves (paper: 1e-5,
+    /// Fig 3 uses 1e-8).
+    pub solve_tol: f64,
+    /// Newton stop: ΔΨ below this (paper: 1.0).
+    pub newton_tol: f64,
+    /// Hard cap on Newton iterations.
+    pub max_newton: usize,
+    /// Iteration cap forwarded to the inner iterative solver (0 = auto).
+    pub max_solver_iters: usize,
+}
+
+impl Default for LaplaceConfig {
+    fn default() -> Self {
+        LaplaceConfig {
+            solver: SolverBackend::Cg,
+            solve_tol: 1e-5,
+            newton_tol: 1.0,
+            max_newton: 25,
+            max_solver_iters: 0,
+        }
+    }
+}
+
+/// Per-Newton-step record (one row of the paper's Table 1).
+#[derive(Clone, Debug)]
+pub struct NewtonStepStats {
+    pub newton_iter: usize,
+    /// log p(y | f) after the step.
+    pub log_lik: f64,
+    /// Ψ(f) = log p(y|f) − ½ aᵀ f (the paper's "first two terms" of Eq. 8).
+    pub psi: f64,
+    /// Inner-solver iterations (0 for Cholesky).
+    pub solver_iterations: usize,
+    pub solver_matvecs: usize,
+    /// Relative residual trace of the inner solve (Fig. 3).
+    pub residual_trace: Vec<f64>,
+    /// Active recycled-subspace dimension during this step.
+    pub deflation_dim: usize,
+    /// Wall time of this step's linear solve.
+    pub solve_seconds: f64,
+    /// Cumulative linear-solve time so far (Table 1's `t`).
+    pub cumulative_seconds: f64,
+}
+
+/// Result of a full Laplace fit.
+#[derive(Clone, Debug)]
+pub struct LaplaceFit {
+    /// Posterior mode (latent function values at the training points).
+    pub f_hat: Vec<f64>,
+    /// `a = K⁻¹ f̂` as maintained by the stable iteration.
+    pub a_hat: Vec<f64>,
+    pub steps: Vec<NewtonStepStats>,
+    pub converged: bool,
+}
+
+impl LaplaceFit {
+    pub fn final_log_lik(&self) -> f64 {
+        self.steps.last().map(|s| s.log_lik).unwrap_or(f64::NAN)
+    }
+
+    pub fn total_solve_seconds(&self) -> f64 {
+        self.steps.last().map(|s| s.cumulative_seconds).unwrap_or(0.0)
+    }
+}
+
+/// GP classification with a Laplace approximation.
+pub struct LaplaceGpc<'a> {
+    k: &'a dyn KernelOp,
+    y: &'a [f64],
+    cfg: LaplaceConfig,
+    lik: Logistic,
+    recycler: Option<RecycleManager>,
+}
+
+impl<'a> LaplaceGpc<'a> {
+    pub fn new(k: &'a dyn KernelOp, y: &'a [f64], cfg: LaplaceConfig) -> Self {
+        assert_eq!(k.n(), y.len());
+        assert!(y.iter().all(|&v| v == 1.0 || v == -1.0), "labels must be ±1");
+        let recycler = match &cfg.solver {
+            SolverBackend::DefCg(rc) => Some(RecycleManager::new(rc.clone())),
+            _ => None,
+        };
+        LaplaceGpc { k, y, cfg, lik: Logistic, recycler }
+    }
+
+    /// Access the recycle manager (after a run) for diagnostics.
+    pub fn recycler(&self) -> Option<&RecycleManager> {
+        self.recycler.as_ref()
+    }
+
+    /// Run Newton to convergence; returns the fit with per-step stats.
+    pub fn fit(&mut self) -> LaplaceFit {
+        let n = self.k.n();
+        let mut f = vec![0.0; n];
+        let mut a_hat = vec![0.0; n];
+        let mut steps: Vec<NewtonStepStats> = Vec::new();
+        let mut cumulative = 0.0f64;
+        let mut psi_prev = f64::NEG_INFINITY;
+        let mut converged = false;
+
+        let mut grad = vec![0.0; n];
+        let mut h = vec![0.0; n];
+        let mut converged_at = 0;
+
+        for it in 1..=self.cfg.max_newton {
+            // Newton-system coefficients at the current f.
+            self.lik.grad(self.y, &f, &mut grad);
+            self.lik.hess_diag(&f, &mut h);
+            let s: Vec<f64> = h.iter().map(|&v| v.sqrt()).collect();
+
+            // b_rw = H f + ∇;  rhs = s ∘ (K b_rw)  (paper Eq. 9).
+            let b_rw: Vec<f64> = (0..n).map(|i| h[i] * f[i] + grad[i]).collect();
+            let mut kb = vec![0.0; n];
+            self.k.matvec(&b_rw, &mut kb);
+            let rhs: Vec<f64> = (0..n).map(|i| s[i] * kb[i]).collect();
+
+            // Solve A z = rhs with the configured backend.
+            let solve_start = Instant::now();
+            let (z, solve_stats) = self.solve_system(&s, &rhs);
+            let solve_seconds = solve_start.elapsed().as_secs_f64();
+            cumulative += solve_seconds;
+
+            // a = b_rw − s ∘ z;  f ← K a.
+            for i in 0..n {
+                a_hat[i] = b_rw[i] - s[i] * z[i];
+            }
+            self.k.matvec(&a_hat, &mut f);
+
+            let log_lik = self.lik.log_lik(self.y, &f);
+            let psi = log_lik - 0.5 * dot(&a_hat, &f);
+
+            steps.push(NewtonStepStats {
+                newton_iter: it,
+                log_lik,
+                psi,
+                solver_iterations: solve_stats.iterations,
+                solver_matvecs: solve_stats.matvecs,
+                residual_trace: solve_stats.residuals,
+                deflation_dim: solve_stats.deflation_dim,
+                solve_seconds,
+                cumulative_seconds: cumulative,
+            });
+
+            // ΔΨ stopping rule (paper: ΔΨ < 1).
+            let dpsi = psi - psi_prev;
+            if it > 1 && dpsi.abs() < self.cfg.newton_tol {
+                converged = true;
+                converged_at = it;
+                break;
+            }
+            psi_prev = psi;
+        }
+        let _ = converged_at;
+
+        LaplaceFit { f_hat: f, a_hat, steps, converged }
+    }
+
+    /// One inner solve, dispatched per backend.
+    fn solve_system(&mut self, s: &[f64], rhs: &[f64]) -> (Vec<f64>, InnerStats) {
+        let n = self.k.n();
+        match &self.cfg.solver {
+            SolverBackend::Cholesky => {
+                let k = self
+                    .k
+                    .dense()
+                    .expect("Cholesky backend requires a dense kernel matrix");
+                // A = I + S K S materialized.
+                let mut a = Mat::from_fn(n, n, |i, j| s[i] * k[(i, j)] * s[j]);
+                a.add_diag(1.0);
+                let ch = Cholesky::factor(&a).expect("A = I + SKS must be SPD");
+                let z = ch.solve(rhs);
+                (z, InnerStats { iterations: 0, matvecs: 0, residuals: vec![], deflation_dim: 0 })
+            }
+            SolverBackend::Cg => {
+                let op = LaplaceOperator::new(self.k, s);
+                let cfg = CgConfig {
+                    tol: self.cfg.solve_tol,
+                    max_iters: self.cfg.max_solver_iters,
+                    store_l: 0,
+                    ..Default::default()
+                };
+                let r = cg::solve(&op, rhs, None, &cfg);
+                (r.x.clone(), InnerStats::from(&r, 0))
+            }
+            SolverBackend::DefCg(_) => {
+                let op = LaplaceOperator::new(self.k, s);
+                let cfg = CgConfig {
+                    tol: self.cfg.solve_tol,
+                    max_iters: self.cfg.max_solver_iters,
+                    store_l: 0, // manager overrides with its ℓ
+                    ..Default::default()
+                };
+                let mgr = self.recycler.as_mut().expect("recycler present for DefCg");
+                let dim = mgr.k_active();
+                let r = mgr.solve_next(&op, rhs, None, &cfg);
+                (r.x.clone(), InnerStats::from(&r, dim))
+            }
+        }
+    }
+
+    /// Predict latent values at test points given the fit, using
+    /// `f* = K*ᵀ a` (MAP plug-in; K* is the train×test cross-Gram).
+    pub fn predict_latent(&self, cross: &Mat, fit: &LaplaceFit) -> Vec<f64> {
+        assert_eq!(cross.rows(), self.k.n());
+        cross.matvec_t(&fit.a_hat)
+    }
+}
+
+struct InnerStats {
+    iterations: usize,
+    matvecs: usize,
+    residuals: Vec<f64>,
+    deflation_dim: usize,
+}
+
+impl InnerStats {
+    fn from(r: &SolveResult, deflation_dim: usize) -> Self {
+        InnerStats {
+            iterations: r.iterations,
+            matvecs: r.matvecs,
+            residuals: r.residuals.clone(),
+            deflation_dim,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::digits::{self, DigitsConfig};
+    use crate::gp::kernel::RbfKernel;
+    use crate::util::rng::Rng;
+
+    /// Small synthetic 2-cluster classification problem.
+    fn toy_problem(n: usize, seed: u64) -> (Mat, Vec<f64>, Mat) {
+        let mut rng = Rng::new(seed);
+        let d = 3;
+        let mut x = Mat::zeros(n, d);
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let cls = if i % 2 == 0 { 1.0 } else { -1.0 };
+            for j in 0..d {
+                x[(i, j)] = rng.normal() * 0.5 + cls * 1.5 * ((j == 0) as i32 as f64);
+            }
+            y[i] = cls;
+        }
+        let k = RbfKernel::new(1.5, 1.0).gram(&x);
+        (x, y, k)
+    }
+
+    fn fit_with(backend: SolverBackend, n: usize, seed: u64) -> LaplaceFit {
+        let (_x, y, k) = toy_problem(n, seed);
+        let kern = DenseKernel::new(k);
+        let cfg = LaplaceConfig {
+            solver: backend,
+            solve_tol: 1e-8,
+            newton_tol: 1e-4,
+            max_newton: 40,
+            max_solver_iters: 0,
+        };
+        LaplaceGpc::new(&kern, &y, cfg).fit()
+    }
+
+    #[test]
+    fn newton_increases_psi_monotonically() {
+        let fit = fit_with(SolverBackend::Cholesky, 60, 1);
+        assert!(fit.converged);
+        for w in fit.steps.windows(2) {
+            assert!(
+                w[1].psi >= w[0].psi - 1e-6,
+                "Ψ decreased: {} -> {}",
+                w[0].psi,
+                w[1].psi
+            );
+        }
+    }
+
+    #[test]
+    fn all_backends_agree_on_the_mode() {
+        let chol = fit_with(SolverBackend::Cholesky, 50, 2);
+        let cg = fit_with(SolverBackend::Cg, 50, 2);
+        let defcg = fit_with(
+            SolverBackend::DefCg(RecycleConfig { k: 4, l: 8, ..Default::default() }),
+            50,
+            2,
+        );
+        let ll = chol.final_log_lik();
+        assert!(
+            (cg.final_log_lik() - ll).abs() / ll.abs() < 1e-5,
+            "cg {} vs chol {}",
+            cg.final_log_lik(),
+            ll
+        );
+        assert!(
+            (defcg.final_log_lik() - ll).abs() / ll.abs() < 1e-5,
+            "defcg {} vs chol {}",
+            defcg.final_log_lik(),
+            ll
+        );
+        // Modes agree pointwise.
+        for (u, v) in chol.f_hat.iter().zip(&cg.f_hat) {
+            assert!((u - v).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn mode_fits_training_labels() {
+        let (_x, y, k) = toy_problem(80, 3);
+        let kern = DenseKernel::new(k);
+        let mut gpc = LaplaceGpc::new(
+            &kern,
+            &y,
+            LaplaceConfig { solver: SolverBackend::Cholesky, newton_tol: 1e-6, ..Default::default() },
+        );
+        let fit = gpc.fit();
+        // The latent mode should classify the (separable) training set well.
+        let correct = y
+            .iter()
+            .zip(&fit.f_hat)
+            .filter(|(&yi, &fi)| yi * fi > 0.0)
+            .count();
+        assert!(correct as f64 / y.len() as f64 > 0.9, "correct = {correct}");
+    }
+
+    #[test]
+    fn defcg_recycling_saves_iterations_on_later_newton_steps() {
+        let n = 120;
+        let (_x, y, k) = digits_like_system(n, 4);
+        let kern = DenseKernel::new(k);
+        let mk_cfg = |solver| LaplaceConfig {
+            solver,
+            solve_tol: 1e-5,
+            newton_tol: 1e-3,
+            max_newton: 15,
+            max_solver_iters: 0,
+        };
+        let cg_fit = LaplaceGpc::new(&kern, &y, mk_cfg(SolverBackend::Cg)).fit();
+        let def_fit = LaplaceGpc::new(
+            &kern,
+            &y,
+            mk_cfg(SolverBackend::DefCg(RecycleConfig { k: 8, l: 12, ..Default::default() })),
+        )
+        .fit();
+        // Sum inner iterations over Newton steps 2.. (step 1 has no basis).
+        let cg_total: usize = cg_fit.steps.iter().skip(1).map(|s| s.solver_iterations).sum();
+        let def_total: usize = def_fit.steps.iter().skip(1).map(|s| s.solver_iterations).sum();
+        assert!(
+            def_total < cg_total,
+            "def-CG total {def_total} >= CG total {cg_total}"
+        );
+    }
+
+    /// A digit-like kernel system (uses the synthetic MNIST generator).
+    fn digits_like_system(n: usize, seed: u64) -> (Mat, Vec<f64>, Mat) {
+        let ds = digits::generate(&DigitsConfig { n, seed, ..Default::default() });
+        let k = RbfKernel::new(1.0, 10.0).gram(&ds.x);
+        (ds.x, ds.y, k)
+    }
+
+    #[test]
+    fn predict_latent_on_train_equals_f_hat() {
+        let (x, y, k) = toy_problem(40, 5);
+        let kern = DenseKernel::new(k.clone());
+        let mut gpc = LaplaceGpc::new(
+            &kern,
+            &y,
+            LaplaceConfig { solver: SolverBackend::Cholesky, newton_tol: 1e-8, ..Default::default() },
+        );
+        let fit = gpc.fit();
+        // cross-gram of train with train = K, so prediction = K a = f̂.
+        let kk = RbfKernel::new(1.5, 1.0).cross_gram(&x, &x);
+        let pred = gpc.predict_latent(&kk, &fit);
+        for (p, f) in pred.iter().zip(&fit.f_hat) {
+            assert!((p - f).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "labels must be ±1")]
+    fn rejects_bad_labels() {
+        let k = Mat::identity(3);
+        let kern = DenseKernel::new(k);
+        let y = vec![1.0, 0.0, -1.0];
+        let _ = LaplaceGpc::new(&kern, &y, LaplaceConfig::default());
+    }
+}

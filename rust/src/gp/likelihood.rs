@@ -1,0 +1,166 @@
+//! Logistic (Bernoulli-logit) likelihood for binary GPC.
+//!
+//! With labels `y ∈ {−1, +1}` and latent `f`, the paper's §3 likelihood is
+//! `p(yᵢ | fᵢ) = σ(yᵢ fᵢ) = 1 / (1 + exp(−yᵢ fᵢ))`. This module provides
+//! the three quantities the Laplace/Newton loop needs:
+//!
+//! * `log p(y|f) = Σᵢ log σ(yᵢ fᵢ)` — evaluated with the numerically
+//!   stable `log(1 + e⁻ᶻ)` form;
+//! * gradient `∇ᵢ = (yᵢ + 1)/2 − πᵢ` with `πᵢ = σ(fᵢ)`;
+//! * Hessian diagonal `Hᵢᵢ = πᵢ (1 − πᵢ)` of `−∇∇ log p` (the paper's H,
+//!   which is diagonal and PSD for the logit link).
+
+/// Numerically stable logistic sigmoid.
+#[inline]
+pub fn sigmoid(z: f64) -> f64 {
+    if z >= 0.0 {
+        let e = (-z).exp();
+        1.0 / (1.0 + e)
+    } else {
+        let e = z.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Numerically stable `log σ(z) = −log(1 + e^{−z})`.
+#[inline]
+pub fn log_sigmoid(z: f64) -> f64 {
+    if z >= 0.0 {
+        -(-z).exp().ln_1p()
+    } else {
+        z - z.exp().ln_1p()
+    }
+}
+
+/// Logistic likelihood over a label vector.
+#[derive(Clone, Debug, Default)]
+pub struct Logistic;
+
+impl Logistic {
+    /// `log p(y | f)`; `y[i] ∈ {−1, +1}`.
+    pub fn log_lik(&self, y: &[f64], f: &[f64]) -> f64 {
+        assert_eq!(y.len(), f.len());
+        y.iter().zip(f).map(|(&yi, &fi)| log_sigmoid(yi * fi)).sum()
+    }
+
+    /// Gradient of `log p(y|f)` w.r.t. f: `(y+1)/2 − σ(f)`.
+    pub fn grad(&self, y: &[f64], f: &[f64], out: &mut [f64]) {
+        assert_eq!(y.len(), f.len());
+        assert_eq!(y.len(), out.len());
+        for i in 0..y.len() {
+            out[i] = 0.5 * (y[i] + 1.0) - sigmoid(f[i]);
+        }
+    }
+
+    /// Diagonal of `H = −∇∇ log p(y|f)`: `π (1 − π)`, independent of y.
+    pub fn hess_diag(&self, f: &[f64], out: &mut [f64]) {
+        assert_eq!(f.len(), out.len());
+        for i in 0..f.len() {
+            let p = sigmoid(f[i]);
+            out[i] = (p * (1.0 - p)).max(0.0);
+        }
+    }
+
+    /// Predictive class probability for latent mean `f` (MAP plug-in).
+    pub fn predict(&self, f: f64) -> f64 {
+        sigmoid(f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickprop::forall;
+
+    #[test]
+    fn sigmoid_basics() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-15);
+        assert!(sigmoid(100.0) > 1.0 - 1e-12);
+        assert!(sigmoid(-100.0) < 1e-12);
+        // symmetry σ(−z) = 1 − σ(z)
+        for z in [-3.0, -0.5, 0.2, 7.0] {
+            assert!((sigmoid(-z) - (1.0 - sigmoid(z))).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn log_sigmoid_stable_at_extremes() {
+        assert!(log_sigmoid(800.0).abs() < 1e-12);
+        let v = log_sigmoid(-800.0);
+        assert!((v + 800.0).abs() < 1e-9, "{v}");
+        assert!(v.is_finite());
+    }
+
+    #[test]
+    fn grad_is_finite_difference_of_loglik() {
+        forall("∇ log p matches FD", 20, |g| {
+            let n = g.usize_in(1, 10);
+            let f = g.normal_vec(n);
+            let y: Vec<f64> = (0..n).map(|_| if g.bool() { 1.0 } else { -1.0 }).collect();
+            let lik = Logistic;
+            let mut grad = vec![0.0; n];
+            lik.grad(&y, &f, &mut grad);
+            let eps = 1e-6;
+            let mut ok = true;
+            for i in 0..n {
+                let mut fp = f.clone();
+                fp[i] += eps;
+                let mut fm = f.clone();
+                fm[i] -= eps;
+                let fd = (lik.log_lik(&y, &fp) - lik.log_lik(&y, &fm)) / (2.0 * eps);
+                ok &= (fd - grad[i]).abs() < 1e-5;
+            }
+            ok
+        });
+    }
+
+    #[test]
+    fn hess_is_negative_second_derivative() {
+        forall("H matches −FD²", 20, |g| {
+            let n = g.usize_in(1, 8);
+            let f = g.normal_vec(n);
+            let y: Vec<f64> = (0..n).map(|_| if g.bool() { 1.0 } else { -1.0 }).collect();
+            let lik = Logistic;
+            let mut h = vec![0.0; n];
+            lik.hess_diag(&f, &mut h);
+            let eps = 1e-4;
+            let mut ok = true;
+            for i in 0..n {
+                let mut fp = f.clone();
+                fp[i] += eps;
+                let mut fm = f.clone();
+                fm[i] -= eps;
+                let f0 = lik.log_lik(&y, &f);
+                let fd2 =
+                    (lik.log_lik(&y, &fp) - 2.0 * f0 + lik.log_lik(&y, &fm)) / (eps * eps);
+                ok &= (-fd2 - h[i]).abs() < 1e-4;
+            }
+            ok
+        });
+    }
+
+    #[test]
+    fn hess_bounded_by_quarter() {
+        // π(1−π) ≤ 1/4, attained at f = 0 — this bound gives the paper's
+        // eigenvalue containment λ(A) ∈ [1, n·max K / 4].
+        let lik = Logistic;
+        let f: Vec<f64> = (-50..50).map(|i| i as f64 / 5.0).collect();
+        let mut h = vec![0.0; f.len()];
+        lik.hess_diag(&f, &mut h);
+        for (i, &v) in h.iter().enumerate() {
+            assert!((0.0..=0.25 + 1e-15).contains(&v), "h[{i}] = {v}");
+        }
+        // maximum at f=0
+        let mut h0 = vec![0.0];
+        lik.hess_diag(&[0.0], &mut h0);
+        assert!((h0[0] - 0.25).abs() < 1e-15);
+    }
+
+    #[test]
+    fn loglik_is_monotone_in_margin() {
+        let lik = Logistic;
+        // larger y·f => larger log-likelihood
+        assert!(lik.log_lik(&[1.0], &[2.0]) > lik.log_lik(&[1.0], &[1.0]));
+        assert!(lik.log_lik(&[-1.0], &[-2.0]) > lik.log_lik(&[-1.0], &[-1.0]));
+    }
+}

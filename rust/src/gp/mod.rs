@@ -1,0 +1,26 @@
+//! Gaussian-process classification — the paper's flagship workload (§3).
+//!
+//! Binary GPC with a logistic link and a Laplace approximation to the
+//! posterior, following Kuss & Rasmussen (2006) / Rasmussen & Williams
+//! §3.7.3. Mode-finding is Newton's method; each Newton step requires one
+//! SPD solve with
+//!
+//! ```text
+//!   A⁽ⁱ⁾ = I + H^½ K H^½          (paper Eq. 10)
+//!   b⁽ⁱ⁾ = H^½ K (H f⁽ⁱ⁾ + ∇ log p(y | f⁽ⁱ⁾))   (paper Eq. 9)
+//! ```
+//!
+//! — exactly the sequence of related SPD systems that subspace recycling
+//! targets. The solver backend is pluggable: dense Cholesky (exact
+//! baseline), CG, or def-CG(k, ℓ) with a [`crate::solvers::recycle::RecycleManager`].
+
+pub mod hyper;
+pub mod inducing;
+pub mod kernel;
+pub mod laplace;
+pub mod likelihood;
+pub mod predict;
+pub mod regression;
+
+pub use kernel::RbfKernel;
+pub use laplace::{LaplaceConfig, LaplaceGpc, NewtonStepStats, SolverBackend};

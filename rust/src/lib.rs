@@ -1,0 +1,29 @@
+//! # krr — Krylov subspace recycling for sequences of SPD systems
+//!
+//! A three-layer (Rust + JAX + Pallas, AOT via XLA/PJRT) reproduction of
+//! *Krylov Subspace Recycling for Fast Iterative Least-Squares in Machine
+//! Learning* (de Roos & Hennig, 2017).
+//!
+//! The library solves **sequences** of symmetric positive definite linear
+//! systems `A⁽ⁱ⁾ x⁽ⁱ⁾ = b⁽ⁱ⁾` — the shape that Newton loops, Laplace
+//! approximations and GP hyperparameter adaptation produce — and transfers
+//! spectral information between consecutive systems via **deflated
+//! conjugate gradients** (Saad et al., 2000) with harmonic-Ritz recycling
+//! (Morgan, 1995).
+//!
+//! Layer map (see DESIGN.md):
+//! * [`solvers`] — CG, def-CG(k, ℓ), Cholesky, Lanczos, recycling state.
+//! * [`gp`] — GP classification with Laplace/Newton (the paper's workload).
+//! * [`coordinator`] — the solve-service that owns recycling across a
+//!   sequence and dispatches matvec traffic.
+//! * [`runtime`] — PJRT engine running AOT-compiled JAX/Pallas artifacts.
+//! * [`linalg`], [`data`], [`util`] — substrates built from scratch.
+
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod gp;
+pub mod linalg;
+pub mod runtime;
+pub mod solvers;
+pub mod util;

@@ -1,0 +1,418 @@
+//! Symmetric and generalized-symmetric eigensolvers.
+//!
+//! * [`sym_eig`] — full eigendecomposition of a real symmetric matrix via
+//!   Householder tridiagonalization (EISPACK `tred2`) followed by the
+//!   implicit-shift QL iteration (`tql2`). Eigenvalues ascend.
+//! * [`sym_tridiag_eig`] — QL directly on a tridiagonal (used for the
+//!   Lanczos path and by `sym_eig`).
+//! * [`gen_sym_eig`] — the harmonic-projection problem of the paper,
+//!   Eq. (7): `G u = θ F u` with `G = (AZ)ᵀ(AZ)` SPD and `F = (AZ)ᵀZ`
+//!   symmetric. Reduced to a standard symmetric problem with the Cholesky
+//!   factor of `G`: `S w = μ w`, `S = L⁻¹ F L⁻ᵀ`, `θ = 1/μ`, `u = L⁻ᵀ w`.
+
+use crate::linalg::cholesky::Cholesky;
+use crate::linalg::mat::Mat;
+
+/// Eigendecomposition result: `values[i]` ascending with eigenvector
+/// `vectors.col(i)`.
+#[derive(Clone, Debug)]
+pub struct EigResult {
+    pub values: Vec<f64>,
+    pub vectors: Mat,
+}
+
+/// Householder tridiagonalization with accumulation (EISPACK tred2).
+/// Returns (d, e, z): diagonal, off-diagonal (e[0] unused), and the
+/// orthogonal accumulation matrix such that `zᵀ a z = tridiag(d, e)`.
+fn tred2(a: &Mat) -> (Vec<f64>, Vec<f64>, Mat) {
+    let n = a.rows();
+    let mut z = a.clone();
+    let mut d = vec![0.0; n];
+    let mut e = vec![0.0; n];
+    for i in (1..n).rev() {
+        let l = i - 1;
+        let mut h = 0.0;
+        let mut scale = 0.0;
+        if l > 0 {
+            for k in 0..=l {
+                scale += z[(i, k)].abs();
+            }
+            if scale == 0.0 {
+                e[i] = z[(i, l)];
+            } else {
+                for k in 0..=l {
+                    z[(i, k)] /= scale;
+                    h += z[(i, k)] * z[(i, k)];
+                }
+                let mut f = z[(i, l)];
+                let g = if f >= 0.0 { -h.sqrt() } else { h.sqrt() };
+                e[i] = scale * g;
+                h -= f * g;
+                z[(i, l)] = f - g;
+                f = 0.0;
+                for j in 0..=l {
+                    z[(j, i)] = z[(i, j)] / h;
+                    let mut g = 0.0;
+                    for k in 0..=j {
+                        g += z[(j, k)] * z[(i, k)];
+                    }
+                    for k in (j + 1)..=l {
+                        g += z[(k, j)] * z[(i, k)];
+                    }
+                    e[j] = g / h;
+                    f += e[j] * z[(i, j)];
+                }
+                let hh = f / (h + h);
+                for j in 0..=l {
+                    let f = z[(i, j)];
+                    let g = e[j] - hh * f;
+                    e[j] = g;
+                    for k in 0..=j {
+                        let upd = f * e[k] + g * z[(i, k)];
+                        z[(j, k)] -= upd;
+                    }
+                }
+            }
+        } else {
+            e[i] = z[(i, l)];
+        }
+        d[i] = h;
+    }
+    d[0] = 0.0;
+    e[0] = 0.0;
+    for i in 0..n {
+        let l = i;
+        if d[i] != 0.0 {
+            for j in 0..l {
+                let mut g = 0.0;
+                for k in 0..l {
+                    g += z[(i, k)] * z[(k, j)];
+                }
+                for k in 0..l {
+                    let upd = g * z[(k, i)];
+                    z[(k, j)] -= upd;
+                }
+            }
+        }
+        d[i] = z[(i, i)];
+        z[(i, i)] = 1.0;
+        for j in 0..l {
+            z[(j, i)] = 0.0;
+            z[(i, j)] = 0.0;
+        }
+    }
+    (d, e, z)
+}
+
+/// Implicit-shift QL on a symmetric tridiagonal, accumulating eigenvectors
+/// into `z` (EISPACK tql2). `d` diagonal, `e` sub-diagonal with e[0] unused.
+fn tql2(d: &mut [f64], e: &mut [f64], z: &mut Mat) -> Result<(), String> {
+    let n = d.len();
+    if n == 0 {
+        return Ok(());
+    }
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // Find small off-diagonal to split.
+            let mut m = l;
+            while m < n - 1 {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            if iter > 50 {
+                return Err(format!("tql2: no convergence at eigenvalue {l}"));
+            }
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            g = d[m] - d[l] + e[l] / (g + if g >= 0.0 { r.abs() } else { -r.abs() });
+            let (mut s, mut c) = (1.0, 1.0);
+            let mut p = 0.0;
+            for i in (l..m).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                // Accumulate the rotation into the eigenvector matrix.
+                for k in 0..n {
+                    f = z[(k, i + 1)];
+                    z[(k, i + 1)] = s * z[(k, i)] + c * f;
+                    z[(k, i)] = c * z[(k, i)] - s * f;
+                }
+            }
+            if r == 0.0 && m > l {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+    // Sort ascending, permuting vectors.
+    for i in 0..n {
+        let mut kmin = i;
+        for j in (i + 1)..n {
+            if d[j] < d[kmin] {
+                kmin = j;
+            }
+        }
+        if kmin != i {
+            d.swap(i, kmin);
+            for r in 0..n {
+                let tmp = z[(r, i)];
+                z[(r, i)] = z[(r, kmin)];
+                z[(r, kmin)] = tmp;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Full symmetric eigendecomposition. Panics on non-square input; returns
+/// an error only if QL fails to converge (essentially never for symmetric
+/// input).
+pub fn sym_eig(a: &Mat) -> Result<EigResult, String> {
+    assert!(a.is_square(), "sym_eig needs square input");
+    let (mut d, mut e, mut z) = tred2(a);
+    tql2(&mut d, &mut e, &mut z)?;
+    Ok(EigResult { values: d, vectors: z })
+}
+
+/// Eigendecomposition of a symmetric tridiagonal given diagonal `diag` and
+/// sub-diagonal `off` (len n-1). Used on the Lanczos T matrix.
+pub fn sym_tridiag_eig(diag: &[f64], off: &[f64]) -> Result<EigResult, String> {
+    let n = diag.len();
+    assert!(off.len() + 1 == n || (n == 0 && off.is_empty()), "off-diagonal length");
+    let mut d = diag.to_vec();
+    let mut e = vec![0.0; n];
+    for i in 1..n {
+        e[i] = off[i - 1];
+    }
+    let mut z = Mat::identity(n);
+    tql2(&mut d, &mut e, &mut z)?;
+    Ok(EigResult { values: d, vectors: z })
+}
+
+/// Generalized symmetric-definite problem `G u = θ F u` (paper Eq. 7) with
+/// `G` SPD and `F` symmetric. Returns pairs (θ_j, u_j) sorted by **θ
+/// descending in magnitude** with infinite θ (μ ≈ 0) filtered out; the
+/// def-CG recycling step selects the leading k.
+pub fn gen_sym_eig(g_mat: &Mat, f_mat: &Mat) -> Result<Vec<(f64, Vec<f64>)>, String> {
+    assert!(g_mat.is_square() && f_mat.is_square());
+    assert_eq!(g_mat.rows(), f_mat.rows());
+    let n = g_mat.rows();
+    let ch = Cholesky::factor(g_mat).map_err(|e| format!("G not SPD: {e}"))?;
+    // S = L⁻¹ F L⁻ᵀ, built column-wise: first X = L⁻¹ F (forward solve per
+    // column of F), then S = L⁻¹ Xᵀ  (since (L⁻¹ F L⁻ᵀ) = L⁻¹ (L⁻¹ Fᵀ)ᵀ and
+    // F symmetric).
+    let mut x = Mat::zeros(n, n);
+    for j in 0..n {
+        let col = ch.solve_lower(&f_mat.col(j));
+        x.set_col(j, &col);
+    }
+    let xt = x.transpose();
+    let mut s = Mat::zeros(n, n);
+    for j in 0..n {
+        let col = ch.solve_lower(&xt.col(j));
+        s.set_col(j, &col);
+    }
+    s.symmetrize();
+    let eig = sym_eig(&s)?;
+    // θ = 1/μ; back-transform u = L⁻ᵀ w via the Cholesky backward solve.
+    let mut out: Vec<(f64, Vec<f64>)> = Vec::with_capacity(n);
+    // scale for the μ≈0 cutoff
+    let mu_max = eig.values.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
+    for j in 0..n {
+        let mu = eig.values[j];
+        if mu.abs() <= 1e-14 * (1.0 + mu_max) {
+            continue; // θ infinite: direction lies in null(F) after scaling
+        }
+        let w = eig.vectors.col(j);
+        // Solve Lᵀ u = w.
+        let l = ch.l();
+        let mut u = w.clone();
+        for i in (0..n).rev() {
+            let mut t = u[i];
+            for k in (i + 1)..n {
+                t -= l[(k, i)] * u[k];
+            }
+            u[i] = t / l[(i, i)];
+        }
+        out.push((1.0 / mu, u));
+    }
+    out.sort_by(|a, b| b.0.abs().partial_cmp(&a.0.abs()).unwrap());
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickprop::forall;
+    use crate::util::rng::Rng;
+
+    fn eig_residual(a: &Mat, eig: &EigResult) -> f64 {
+        // max_j ‖A v_j − λ_j v_j‖
+        let mut worst = 0.0f64;
+        for j in 0..a.rows() {
+            let v = eig.vectors.col(j);
+            let av = a.matvec(&v);
+            let mut r = 0.0;
+            for i in 0..a.rows() {
+                r += (av[i] - eig.values[j] * v[i]).powi(2);
+            }
+            worst = worst.max(r.sqrt());
+        }
+        worst
+    }
+
+    #[test]
+    fn diagonal_matrix_eigenvalues() {
+        let a = Mat::from_fn(4, 4, |i, j| if i == j { (i + 1) as f64 } else { 0.0 });
+        let e = sym_eig(&a).unwrap();
+        for (i, &v) in e.values.iter().enumerate() {
+            assert!((v - (i + 1) as f64).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] -> eigenvalues 1, 3
+        let a = Mat::from_vec(2, 2, vec![2., 1., 1., 2.]);
+        let e = sym_eig(&a).unwrap();
+        assert!((e.values[0] - 1.0).abs() < 1e-12);
+        assert!((e.values[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eig_residuals_small_random_spd() {
+        forall("A v == λ v", 15, |g| {
+            let n = g.usize_in(2, 25);
+            let a = Mat::from_vec(n, n, g.spd_matrix(n, 1e5));
+            let e = sym_eig(&a).unwrap();
+            eig_residual(&a, &e) < 1e-7 * (1.0 + a.fro_norm())
+        });
+    }
+
+    #[test]
+    fn eigenvectors_orthonormal() {
+        forall("VᵀV == I", 15, |g| {
+            let n = g.usize_in(2, 20);
+            let a = Mat::from_vec(n, n, g.spd_matrix(n, 1e4));
+            let e = sym_eig(&a).unwrap();
+            let vtv = e.vectors.t_matmul(&e.vectors);
+            vtv.max_abs_diff(&Mat::identity(n)) < 1e-9
+        });
+    }
+
+    #[test]
+    fn eigenvalues_ascend_and_match_trace() {
+        forall("tr(A) == Σλ", 15, |g| {
+            let n = g.usize_in(2, 20);
+            let a = Mat::from_vec(n, n, g.spd_matrix(n, 1e3));
+            let e = sym_eig(&a).unwrap();
+            let ascending = e.values.windows(2).all(|w| w[0] <= w[1] + 1e-12);
+            let tr: f64 = (0..n).map(|i| a[(i, i)]).sum();
+            let sum: f64 = e.values.iter().sum();
+            ascending && (tr - sum).abs() < 1e-8 * (1.0 + tr.abs())
+        });
+    }
+
+    #[test]
+    fn tridiag_eig_matches_dense() {
+        let diag = vec![2.0, 3.0, 4.0, 5.0];
+        let off = vec![1.0, 0.5, 0.25];
+        let t = Mat::from_fn(4, 4, |i, j| {
+            if i == j {
+                diag[i]
+            } else if i + 1 == j || j + 1 == i {
+                off[i.min(j)]
+            } else {
+                0.0
+            }
+        });
+        let e1 = sym_tridiag_eig(&diag, &off).unwrap();
+        let e2 = sym_eig(&t).unwrap();
+        for (a, b) in e1.values.iter().zip(&e2.values) {
+            assert!((a - b).abs() < 1e-10);
+        }
+        assert!(eig_residual(&t, &e1) < 1e-10);
+    }
+
+    #[test]
+    fn gen_sym_eig_residuals() {
+        // G u = θ F u with random SPD G and symmetric F.
+        forall("G u == θ F u", 10, |g| {
+            let n = g.usize_in(2, 12);
+            let gm = Mat::from_vec(n, n, g.spd_matrix(n, 100.0));
+            let mut fm = {
+                let mut rng = Rng::new(g.usize_in(0, 1 << 30) as u64);
+                Mat::randn(n, n, &mut rng)
+            };
+            fm.symmetrize();
+            let pairs = gen_sym_eig(&gm, &fm).unwrap();
+            if pairs.is_empty() {
+                return true;
+            }
+            pairs.iter().all(|(theta, u)| {
+                let gu = gm.matvec(u);
+                let fu = fm.matvec(u);
+                let mut r = 0.0;
+                let mut scale = 0.0;
+                for i in 0..n {
+                    r += (gu[i] - theta * fu[i]).powi(2);
+                    scale += gu[i].powi(2) + (theta * fu[i]).powi(2);
+                }
+                r.sqrt() <= 1e-6 * (1.0 + scale.sqrt())
+            })
+        });
+    }
+
+    #[test]
+    fn gen_sym_eig_identity_g_reduces_to_inverse_eigs() {
+        // G = I: I u = θ F u  ⇔  F u = (1/θ) u.
+        let mut rng = Rng::new(17);
+        let mut f = Mat::randn(5, 5, &mut rng);
+        f.symmetrize();
+        let pairs = gen_sym_eig(&Mat::identity(5), &f).unwrap();
+        let fe = sym_eig(&f).unwrap();
+        let mut thetas: Vec<f64> = pairs.iter().map(|(t, _)| 1.0 / t).collect();
+        thetas.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut expect: Vec<f64> = fe.values.iter().copied().filter(|v| v.abs() > 1e-12).collect();
+        expect.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(thetas.len(), expect.len());
+        for (a, b) in thetas.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-8, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn one_by_one() {
+        let a = Mat::from_vec(1, 1, vec![3.0]);
+        let e = sym_eig(&a).unwrap();
+        assert_eq!(e.values, vec![3.0]);
+        assert!((e.vectors[(0, 0)].abs() - 1.0).abs() < 1e-15);
+    }
+}

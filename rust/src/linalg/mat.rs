@@ -1,0 +1,395 @@
+//! Row-major dense matrix with cache-blocked kernels.
+
+use crate::linalg::vec_ops;
+use crate::util::rng::Rng;
+use std::fmt;
+
+/// Row-major dense `f64` matrix.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        let rmax = self.rows.min(6);
+        let cmax = self.cols.min(8);
+        for i in 0..rmax {
+            write!(f, "  ")?;
+            for j in 0..cmax {
+                write!(f, "{:>10.4} ", self[(i, j)])?;
+            }
+            writeln!(f, "{}", if cmax < self.cols { "…" } else { "" })?;
+        }
+        if rmax < self.rows {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl Mat {
+    // ---- constructors -------------------------------------------------
+
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn identity(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, f: impl Fn(usize, usize) -> f64) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    /// Wrap an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "buffer size mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// Random i.i.d. standard normal entries.
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
+        let data = (0..rows * cols).map(|_| rng.normal()).collect();
+        Mat { rows, cols, data }
+    }
+
+    /// Random SPD matrix with log-spaced spectrum in [1, cond].
+    pub fn rand_spd(n: usize, cond: f64, rng: &mut Rng) -> Mat {
+        let mut g = crate::util::quickprop::Gen::from_rng(rng.fork());
+        Mat::from_vec(n, n, g.spd_matrix(n, cond))
+    }
+
+    // ---- accessors -----------------------------------------------------
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    pub fn set_col(&mut self, j: usize, v: &[f64]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            self[(i, j)] = v[i];
+        }
+    }
+
+    pub fn is_square(&self) -> bool {
+        self.rows == self.cols
+    }
+
+    // ---- elementwise ----------------------------------------------------
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    pub fn scale_in_place(&mut self, s: f64) {
+        vec_ops::scale(&mut self.data, s);
+    }
+
+    pub fn add_in_place(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        vec_ops::axpy(1.0, &other.data, &mut self.data);
+    }
+
+    /// self += s * I (square only).
+    pub fn add_diag(&mut self, s: f64) {
+        assert!(self.is_square());
+        for i in 0..self.rows {
+            self[(i, i)] += s;
+        }
+    }
+
+    /// Symmetrize: self <- (self + selfᵀ)/2.
+    pub fn symmetrize(&mut self) {
+        assert!(self.is_square());
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                let m = 0.5 * (self[(i, j)] + self[(j, i)]);
+                self[(i, j)] = m;
+                self[(j, i)] = m;
+            }
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        vec_ops::norm2(&self.data)
+    }
+
+    /// Max |a_ij - b_ij|.
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f64, |m, (a, b)| m.max((a - b).abs()))
+    }
+
+    // ---- products --------------------------------------------------------
+
+    /// y = A x (allocating).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.rows];
+        self.matvec_into(x, &mut y);
+        y
+    }
+
+    /// y = A x into a caller buffer. Row-major rows are contiguous, so each
+    /// output element is one `dot` — this auto-vectorizes well.
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols, "matvec dim");
+        assert_eq!(y.len(), self.rows, "matvec dim");
+        for i in 0..self.rows {
+            y[i] = vec_ops::dot(self.row(i), x);
+        }
+    }
+
+    /// y = Aᵀ x (allocating). Column access: accumulate row-wise to stay
+    /// cache-friendly.
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows, "matvec_t dim");
+        let mut y = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let xi = x[i];
+            if xi != 0.0 {
+                vec_ops::axpy(xi, self.row(i), &mut y);
+            }
+        }
+        y
+    }
+
+    /// C = A · B, blocked i-k-j loop order (B rows stream through cache).
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows, "matmul dim {}x{} · {}x{}", self.rows, self.cols, b.rows, b.cols);
+        let mut c = Mat::zeros(self.rows, b.cols);
+        const BK: usize = 64;
+        for kb in (0..self.cols).step_by(BK) {
+            let kend = (kb + BK).min(self.cols);
+            for i in 0..self.rows {
+                let crow = c.row_mut(i);
+                for k in kb..kend {
+                    let aik = self.data[i * self.cols + k];
+                    if aik != 0.0 {
+                        vec_ops::axpy(aik, &b.data[k * b.cols..(k + 1) * b.cols], crow);
+                    }
+                }
+            }
+        }
+        c
+    }
+
+    /// C = Aᵀ · B without forming Aᵀ.
+    pub fn t_matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.rows, b.rows, "t_matmul dim");
+        let mut c = Mat::zeros(self.cols, b.cols);
+        for k in 0..self.rows {
+            let arow = self.row(k);
+            let brow = b.row(k);
+            for i in 0..self.cols {
+                let aki = arow[i];
+                if aki != 0.0 {
+                    vec_ops::axpy(aki, brow, c.row_mut(i));
+                }
+            }
+        }
+        c
+    }
+
+    /// Extract a sub-matrix by row indices (gathers rows).
+    pub fn take_rows(&self, idx: &[usize]) -> Mat {
+        let mut m = Mat::zeros(idx.len(), self.cols);
+        for (dst, &src) in idx.iter().enumerate() {
+            m.row_mut(dst).copy_from_slice(self.row(src));
+        }
+        m
+    }
+
+    /// f32 copy of the buffer (for the XLA boundary).
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&x| x as f32).collect()
+    }
+
+    /// Build from an f32 buffer.
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Mat {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data: data.iter().map(|&x| x as f64).collect() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickprop::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identity_matvec() {
+        let i = Mat::identity(5);
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(i.matvec(&x), x.to_vec());
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Mat::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_associates_with_matvec() {
+        forall("(A·B)x == A(Bx)", 20, |g| {
+            let n = g.usize_in(1, 15);
+            let m = g.usize_in(1, 15);
+            let k = g.usize_in(1, 15);
+            let mut rng = Rng::new(g.usize_in(0, 1 << 30) as u64);
+            let a = Mat::randn(n, m, &mut rng);
+            let b = Mat::randn(m, k, &mut rng);
+            let x = g.normal_vec(k);
+            let lhs = a.matmul(&b).matvec(&x);
+            let rhs = a.matvec(&b.matvec(&x));
+            lhs.iter().zip(&rhs).all(|(u, v)| (u - v).abs() < 1e-9)
+        });
+    }
+
+    #[test]
+    fn transpose_roundtrip_and_t_matmul() {
+        forall("AᵀB == transpose(A)·B", 20, |g| {
+            let n = g.usize_in(1, 12);
+            let m = g.usize_in(1, 12);
+            let k = g.usize_in(1, 12);
+            let mut rng = Rng::new(g.usize_in(0, 1 << 30) as u64);
+            let a = Mat::randn(n, m, &mut rng);
+            let b = Mat::randn(n, k, &mut rng);
+            let fast = a.t_matmul(&b);
+            let slow = a.transpose().matmul(&b);
+            fast.max_abs_diff(&slow) < 1e-10
+        });
+    }
+
+    #[test]
+    fn matvec_t_matches_transpose() {
+        forall("Aᵀx == transpose(A)·x", 20, |g| {
+            let n = g.usize_in(1, 12);
+            let m = g.usize_in(1, 12);
+            let mut rng = Rng::new(g.usize_in(0, 1 << 30) as u64);
+            let a = Mat::randn(n, m, &mut rng);
+            let x = g.normal_vec(n);
+            let fast = a.matvec_t(&x);
+            let slow = a.transpose().matvec(&x);
+            fast.iter().zip(&slow).all(|(u, v)| (u - v).abs() < 1e-10)
+        });
+    }
+
+    #[test]
+    fn rand_spd_is_spd() {
+        let mut rng = Rng::new(7);
+        let a = Mat::rand_spd(12, 1e3, &mut rng);
+        assert!(a.is_square());
+        assert!(a.max_abs_diff(&a.transpose()) < 1e-9);
+        // positive definiteness via Cholesky existence is tested in cholesky.rs
+        let x = vec![1.0; 12];
+        let q = crate::linalg::vec_ops::dot(&x, &a.matvec(&x));
+        assert!(q > 0.0);
+    }
+
+    #[test]
+    fn take_rows_and_cols() {
+        let a = Mat::from_fn(4, 3, |i, j| (i * 10 + j) as f64);
+        let s = a.take_rows(&[2, 0]);
+        assert_eq!(s.row(0), &[20., 21., 22.]);
+        assert_eq!(s.row(1), &[0., 1., 2.]);
+        assert_eq!(a.col(1), vec![1., 11., 21., 31.]);
+    }
+
+    #[test]
+    fn add_diag_and_symmetrize() {
+        let mut a = Mat::from_vec(2, 2, vec![1., 2., 4., 5.]);
+        a.add_diag(1.0);
+        assert_eq!(a.data(), &[2., 2., 4., 6.]);
+        a.symmetrize();
+        assert_eq!(a[(0, 1)], 3.0);
+        assert_eq!(a[(1, 0)], 3.0);
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let a = Mat::from_vec(2, 2, vec![1.5, -2.25, 3.0, 0.125]);
+        let b = Mat::from_f32(2, 2, &a.to_f32());
+        assert_eq!(a, b); // exactly representable values
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul dim")]
+    fn matmul_dim_mismatch_panics() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(2, 3);
+        let _ = a.matmul(&b);
+    }
+}

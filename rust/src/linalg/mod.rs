@@ -1,0 +1,24 @@
+//! Dense linear algebra substrate, written from scratch.
+//!
+//! No BLAS/LAPACK bindings exist in this offline environment, so this
+//! module implements the dense kernels the rest of the library needs:
+//!
+//! * [`mat`] — row-major `Mat` with blocked matmul / matvec;
+//! * [`vec_ops`] — unrolled dot/axpy/norm primitives (the CG hot path);
+//! * [`cholesky`] — LLᵀ factorization, solves, log-determinant;
+//! * [`qr`] — Householder QR with thin-Q extraction;
+//! * [`eig`] — symmetric eigensolver (tridiagonalization + implicit-shift
+//!   QL) and the generalized symmetric-definite problem `G u = θ F u`
+//!   needed for harmonic-Ritz extraction (paper Eq. 7).
+//!
+//! Numerics are `f64` throughout: the solver layer needs full precision;
+//! the XLA artifact path (f32) converts at the boundary.
+
+pub mod cholesky;
+pub mod eig;
+pub mod mat;
+pub mod qr;
+pub mod vec_ops;
+
+pub use cholesky::Cholesky;
+pub use mat::Mat;

@@ -1,0 +1,305 @@
+//! Householder QR factorization with thin-Q extraction.
+//!
+//! Used to (re)orthonormalize recycled subspace bases `W` (numerical
+//! stability of deflation degrades when the Ritz vectors become nearly
+//! dependent — the effect the paper's §3 discussion attributes stagnation
+//! to) and in tests as an orthogonality oracle.
+
+use crate::linalg::mat::Mat;
+use crate::linalg::vec_ops;
+
+/// Compact WY-free Householder QR: stores the reflectors and R.
+#[derive(Clone, Debug)]
+pub struct Qr {
+    /// m x n; below-diagonal holds the Householder vectors (v_j, with
+    /// implicit leading 1), upper triangle holds R.
+    qr: Mat,
+    /// Scaling betas for each reflector.
+    betas: Vec<f64>,
+}
+
+impl Qr {
+    /// Factor an m x n matrix with m >= n.
+    pub fn factor(a: &Mat) -> Qr {
+        let (m, n) = (a.rows(), a.cols());
+        assert!(m >= n, "Qr::factor requires m >= n (got {m}x{n})");
+        let mut qr = a.clone();
+        let mut betas = vec![0.0; n];
+        for j in 0..n {
+            // Build the Householder vector for column j below row j.
+            let mut norm2 = 0.0;
+            for i in j..m {
+                norm2 += qr[(i, j)] * qr[(i, j)];
+            }
+            let norm = norm2.sqrt();
+            if norm == 0.0 {
+                betas[j] = 0.0;
+                continue;
+            }
+            let a0 = qr[(j, j)];
+            let alpha = if a0 >= 0.0 { -norm } else { norm };
+            // v = x - alpha e1, normalized so v[0] = 1.
+            let v0 = a0 - alpha;
+            // beta = -v0 / alpha  (standard LAPACK-style tau with v0-normalized v)
+            let beta = -v0 / alpha;
+            for i in (j + 1)..m {
+                qr[(i, j)] /= v0;
+            }
+            qr[(j, j)] = alpha;
+            betas[j] = beta;
+            // Apply reflector to the trailing columns.
+            for k in (j + 1)..n {
+                // w = vᵀ A[:,k]
+                let mut w = qr[(j, k)];
+                for i in (j + 1)..m {
+                    w += qr[(i, j)] * qr[(i, k)];
+                }
+                w *= beta;
+                qr[(j, k)] -= w;
+                for i in (j + 1)..m {
+                    let vij = qr[(i, j)];
+                    qr[(i, k)] -= w * vij;
+                }
+            }
+        }
+        Qr { qr, betas }
+    }
+
+    /// Thin Q (m x n) with orthonormal columns.
+    pub fn thin_q(&self) -> Mat {
+        let (m, n) = (self.qr.rows(), self.qr.cols());
+        let mut q = Mat::zeros(m, n);
+        for i in 0..n {
+            q[(i, i)] = 1.0;
+        }
+        // Accumulate reflectors in reverse order: Q = H_0 H_1 ... H_{n-1} E.
+        for j in (0..n).rev() {
+            let beta = self.betas[j];
+            if beta == 0.0 {
+                continue;
+            }
+            for k in 0..n {
+                let mut w = q[(j, k)];
+                for i in (j + 1)..m {
+                    w += self.qr[(i, j)] * q[(i, k)];
+                }
+                w *= beta;
+                q[(j, k)] -= w;
+                for i in (j + 1)..m {
+                    let vij = self.qr[(i, j)];
+                    q[(i, k)] -= w * vij;
+                }
+            }
+        }
+        q
+    }
+
+    /// Upper-triangular R (n x n).
+    pub fn r(&self) -> Mat {
+        let n = self.qr.cols();
+        let mut r = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                r[(i, j)] = self.qr[(i, j)];
+            }
+        }
+        r
+    }
+
+    /// Numerical rank of R with relative tolerance.
+    pub fn rank(&self, rel_tol: f64) -> usize {
+        let n = self.qr.cols();
+        let dmax = (0..n).fold(0.0f64, |m, i| m.max(self.qr[(i, i)].abs()));
+        if dmax == 0.0 {
+            return 0;
+        }
+        (0..n).filter(|&i| self.qr[(i, i)].abs() > rel_tol * dmax).count()
+    }
+
+    /// Least-squares solve min ‖Ax − b‖ via R x = Qᵀ b.
+    pub fn solve_ls(&self, b: &[f64]) -> Vec<f64> {
+        let (m, n) = (self.qr.rows(), self.qr.cols());
+        assert_eq!(b.len(), m);
+        let mut y = b.to_vec();
+        // Apply Qᵀ = H_{n-1} ... H_0 to b.
+        for j in 0..n {
+            let beta = self.betas[j];
+            if beta == 0.0 {
+                continue;
+            }
+            let mut w = y[j];
+            for i in (j + 1)..m {
+                w += self.qr[(i, j)] * y[i];
+            }
+            w *= beta;
+            y[j] -= w;
+            for i in (j + 1)..m {
+                y[i] -= w * self.qr[(i, j)];
+            }
+        }
+        // Back substitution R x = y[..n].
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for k in (i + 1)..n {
+                s -= self.qr[(i, k)] * x[k];
+            }
+            let d = self.qr[(i, i)];
+            x[i] = if d.abs() > 1e-300 { s / d } else { 0.0 };
+        }
+        x
+    }
+}
+
+/// Modified Gram–Schmidt orthonormalization of the columns of `a` against
+/// themselves (and optionally an existing orthonormal basis `against`).
+/// Returns the orthonormal basis; columns that collapse below `tol` are
+/// dropped. Cheaper than full QR for the k ≪ n recycling bases, and the
+/// method the deflation literature uses in-loop.
+pub fn mgs_orthonormalize(a: &Mat, against: Option<&Mat>, tol: f64) -> Mat {
+    let m = a.rows();
+    let mut cols: Vec<Vec<f64>> = Vec::new();
+    for j in 0..a.cols() {
+        let mut v = a.col(j);
+        if let Some(q) = against {
+            for jq in 0..q.cols() {
+                let qc = q.col(jq);
+                let c = vec_ops::dot(&qc, &v);
+                vec_ops::axpy(-c, &qc, &mut v);
+            }
+        }
+        for existing in &cols {
+            let c = vec_ops::dot(existing, &v);
+            vec_ops::axpy(-c, existing, &mut v);
+        }
+        // Second pass (re-orthogonalization) for numerical robustness.
+        if let Some(q) = against {
+            for jq in 0..q.cols() {
+                let qc = q.col(jq);
+                let c = vec_ops::dot(&qc, &v);
+                vec_ops::axpy(-c, &qc, &mut v);
+            }
+        }
+        for existing in &cols {
+            let c = vec_ops::dot(existing, &v);
+            vec_ops::axpy(-c, existing, &mut v);
+        }
+        let norm = vec_ops::norm2(&v);
+        if norm > tol {
+            vec_ops::scale(&mut v, 1.0 / norm);
+            cols.push(v);
+        }
+    }
+    let mut q = Mat::zeros(m, cols.len());
+    for (j, c) in cols.iter().enumerate() {
+        q.set_col(j, c);
+    }
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickprop::forall;
+    use crate::util::rng::Rng;
+
+    fn orthonormality_error(q: &Mat) -> f64 {
+        let qtq = q.t_matmul(q);
+        qtq.max_abs_diff(&Mat::identity(q.cols()))
+    }
+
+    #[test]
+    fn qr_reconstructs() {
+        forall("Q·R == A", 20, |g| {
+            let m = g.usize_in(1, 20);
+            let n = g.usize_in(1, m + 1).min(m);
+            let mut rng = Rng::new(g.usize_in(0, 1 << 30) as u64);
+            let a = Mat::randn(m, n, &mut rng);
+            let qr = Qr::factor(&a);
+            let rec = qr.thin_q().matmul(&qr.r());
+            rec.max_abs_diff(&a) < 1e-9 * (1.0 + a.fro_norm())
+        });
+    }
+
+    #[test]
+    fn thin_q_is_orthonormal() {
+        forall("QᵀQ == I", 20, |g| {
+            let m = g.usize_in(2, 25);
+            let n = g.usize_in(1, m).min(m);
+            let mut rng = Rng::new(g.usize_in(0, 1 << 30) as u64);
+            let a = Mat::randn(m, n, &mut rng);
+            orthonormality_error(&Qr::factor(&a).thin_q()) < 1e-10
+        });
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        let mut rng = Rng::new(3);
+        let a = Mat::randn(6, 4, &mut rng);
+        let r = Qr::factor(&a).r();
+        for i in 0..4 {
+            for j in 0..i {
+                assert_eq!(r[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn least_squares_matches_normal_equations() {
+        forall("QR ls == normal eq", 15, |g| {
+            let m = g.usize_in(5, 25);
+            let n = g.usize_in(1, 5);
+            let mut rng = Rng::new(g.usize_in(0, 1 << 30) as u64);
+            let a = Mat::randn(m, n, &mut rng);
+            let b = g.normal_vec(m);
+            let x = Qr::factor(&a).solve_ls(&b);
+            // Normal equations: AᵀA x = Aᵀ b
+            let ata = a.t_matmul(&a);
+            let atb = a.matvec_t(&b);
+            let x2 = crate::linalg::Cholesky::factor(&ata).unwrap().solve(&atb);
+            x.iter().zip(&x2).all(|(u, v)| (u - v).abs() < 1e-6)
+        });
+    }
+
+    #[test]
+    fn rank_detects_deficiency() {
+        let mut rng = Rng::new(5);
+        let mut a = Mat::randn(8, 3, &mut rng);
+        // Make column 2 a copy of column 0.
+        let c0 = a.col(0);
+        a.set_col(2, &c0);
+        assert_eq!(Qr::factor(&a).rank(1e-10), 2);
+    }
+
+    #[test]
+    fn mgs_orthonormalizes_and_drops_dependent() {
+        let mut rng = Rng::new(8);
+        let mut a = Mat::randn(10, 4, &mut rng);
+        let c1 = a.col(1);
+        a.set_col(3, &c1); // dependent column
+        let q = mgs_orthonormalize(&a, None, 1e-10);
+        assert_eq!(q.cols(), 3);
+        assert!(orthonormality_error(&q) < 1e-10);
+    }
+
+    #[test]
+    fn mgs_against_external_basis() {
+        let mut rng = Rng::new(9);
+        let base = Qr::factor(&Mat::randn(12, 3, &mut rng)).thin_q();
+        let a = Mat::randn(12, 2, &mut rng);
+        let q = mgs_orthonormalize(&a, Some(&base), 1e-10);
+        // q columns orthogonal to base columns
+        let cross = base.t_matmul(&q);
+        assert!(cross.fro_norm() < 1e-10);
+        assert!(orthonormality_error(&q) < 1e-10);
+    }
+
+    #[test]
+    fn qr_handles_zero_column() {
+        let a = Mat::zeros(5, 2);
+        let qr = Qr::factor(&a);
+        assert_eq!(qr.rank(1e-12), 0);
+        let x = qr.solve_ls(&[1.0; 5]);
+        assert_eq!(x, vec![0.0, 0.0]);
+    }
+}

@@ -1,0 +1,124 @@
+//! Vector primitives on `&[f64]` — the CG inner loop.
+//!
+//! These are written with 4-way manual unrolling so LLVM reliably
+//! auto-vectorizes them; they are the L3 hot path when running with the
+//! native (non-XLA) backend and are benchmarked in `benches/bench_linalg`.
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// y += alpha * x
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * xi;
+    }
+}
+
+/// y = x + beta * y  (the CG direction update `p = r + beta p`)
+#[inline]
+pub fn xpby(x: &[f64], beta: f64, y: &mut [f64]) {
+    assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi = xi + beta * *yi;
+    }
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm2(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// a <- a * s
+#[inline]
+pub fn scale(a: &mut [f64], s: f64) {
+    for x in a.iter_mut() {
+        *x *= s;
+    }
+}
+
+/// out = a - b
+#[inline]
+pub fn sub(a: &[f64], b: &[f64], out: &mut [f64]) {
+    assert_eq!(a.len(), b.len());
+    assert_eq!(a.len(), out.len());
+    for i in 0..a.len() {
+        out[i] = a[i] - b[i];
+    }
+}
+
+/// Maximum absolute entry.
+#[inline]
+pub fn max_abs(a: &[f64]) -> f64 {
+    a.iter().fold(0.0f64, |m, &x| m.max(x.abs()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickprop::forall;
+
+    #[test]
+    fn dot_simple() {
+        assert_eq!(dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+        assert_eq!(dot(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn dot_matches_naive_on_odd_lengths() {
+        forall("dot == naive", 50, |g| {
+            let n = g.usize_in(1, 40);
+            let a = g.normal_vec(n);
+            let b = g.normal_vec(n);
+            let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            (dot(&a, &b) - naive).abs() <= 1e-12 * (1.0 + naive.abs())
+        });
+    }
+
+    #[test]
+    fn axpy_and_xpby() {
+        let x = [1.0, 2.0];
+        let mut y = [10.0, 20.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 24.0]);
+        let mut p = [1.0, 1.0];
+        xpby(&[5.0, 6.0], 3.0, &mut p); // p = x + beta p
+        assert_eq!(p, [8.0, 9.0]);
+    }
+
+    #[test]
+    fn norm_and_scale() {
+        let mut a = [3.0, 4.0];
+        assert_eq!(norm2(&a), 5.0);
+        scale(&mut a, 2.0);
+        assert_eq!(a, [6.0, 8.0]);
+        assert_eq!(max_abs(&[-7.0, 3.0]), 7.0);
+    }
+
+    #[test]
+    fn sub_works() {
+        let mut out = [0.0; 3];
+        sub(&[5.0, 5.0, 5.0], &[1.0, 2.0, 3.0], &mut out);
+        assert_eq!(out, [4.0, 3.0, 2.0]);
+    }
+}

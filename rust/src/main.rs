@@ -1,0 +1,14 @@
+//! `krr` — CLI entry point.
+//!
+//! Subcommands regenerate each of the paper's tables/figures, run the
+//! end-to-end GPC workload, or start the solve service demo:
+//!
+//! ```text
+//! krr table1 [--n 512] [--tol 1e-5] [--backend engine|native]
+//! krr fig1 | fig2 | fig3 | fig4 | ablation
+//! krr demo-digits          # render a few synthetic digits as ASCII art
+//! ```
+
+fn main() {
+    krr::experiments::cli_main();
+}

@@ -1,0 +1,247 @@
+//! The PJRT engine: compile artifacts once, execute many times.
+//!
+//! Follows the reference wiring of /opt/xla-example/load_hlo.rs:
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`. Executables are compiled lazily on
+//! first call and cached for the process lifetime. Large operands (the
+//! Gram matrix) are uploaded once as device buffers and passed by
+//! reference via `execute_b`.
+
+use crate::runtime::manifest::{ArtifactMeta, Manifest};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// Host-side tensor value passed to / returned from an engine call.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn vec(data: Vec<f32>) -> Tensor {
+        Tensor { shape: vec![data.len()], data }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn param(v: f32) -> Tensor {
+        Tensor { shape: vec![1], data: vec![v] }
+    }
+
+    pub fn mat(rows: usize, cols: usize, data: Vec<f32>) -> Tensor {
+        assert_eq!(data.len(), rows * cols);
+        Tensor { shape: vec![rows, cols], data }
+    }
+
+    pub fn from_f64(shape: Vec<usize>, data: &[f64]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: data.iter().map(|&x| x as f32).collect() }
+    }
+
+    pub fn to_f64(&self) -> Vec<f64> {
+        self.data.iter().map(|&x| x as f64).collect()
+    }
+
+    fn to_literal(&self) -> Result<Literal> {
+        let lit = Literal::vec1(&self.data);
+        if self.shape.len() == 1 {
+            return Ok(lit);
+        }
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+
+    fn from_literal(lit: &Literal, shape: &[usize]) -> Result<Tensor> {
+        let data = lit.to_vec::<f32>()?;
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+}
+
+/// The engine. `Send + Sync`: the PJRT CPU client supports concurrent
+/// dispatch, and the executable cache is mutex-guarded.
+pub struct Engine {
+    client: PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    exes: Mutex<HashMap<String, Arc<PjRtLoadedExecutable>>>,
+}
+
+// SAFETY: the xla wrapper types hold raw pointers into the PJRT C API.
+// PJRT clients, loaded executables and buffers are documented thread-safe
+// for concurrent Execute/Transfer calls; all mutable engine state (the
+// lazy compile cache) is behind a Mutex.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Load the engine from an artifact directory (e.g. `artifacts/`).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .map_err(|e| anyhow!("loading manifest: {e}"))?;
+        let client = PjRtClient::cpu()?;
+        crate::log_info!(
+            "engine up: platform={} devices={} artifacts={} sizes={:?}",
+            client.platform_name(),
+            client.device_count(),
+            manifest.artifacts.len(),
+            manifest.sizes
+        );
+        Ok(Engine { client, dir, manifest, exes: Mutex::new(HashMap::new()) })
+    }
+
+    /// Whether an artifact directory looks usable (lets tests and examples
+    /// skip gracefully when `make artifacts` has not run).
+    pub fn available(dir: impl AsRef<Path>) -> bool {
+        dir.as_ref().join("manifest.json").exists()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn meta(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))
+    }
+
+    /// Compile (or fetch the cached) executable for `name`.
+    fn executable(&self, name: &str) -> Result<Arc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.exes.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let meta = self.meta(name)?;
+        let path = self.dir.join(&meta.file);
+        let t0 = std::time::Instant::now();
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = Arc::new(self.client.compile(&comp)?);
+        crate::log_debug!("compiled {name} in {:.3}s", t0.elapsed().as_secs_f64());
+        // Double-checked insert: racing threads may both compile; last wins
+        // (both executables are valid).
+        self.exes.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile a set of artifacts (e.g. at service startup).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    /// Upload a tensor to device memory (for operands reused across calls).
+    pub fn upload(&self, t: &Tensor) -> Result<PjRtBuffer> {
+        Ok(self
+            .client
+            .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)?)
+    }
+
+    fn unpack_outputs(&self, meta: &ArtifactMeta, result: Literal) -> Result<Vec<Tensor>> {
+        // Artifacts are lowered with return_tuple=True: the single output
+        // buffer is a tuple literal with `meta.outputs.len()` elements.
+        let mut result = result;
+        let parts = result.decompose_tuple()?;
+        if parts.len() != meta.outputs.len() {
+            bail!(
+                "artifact {}: expected {} outputs, got {}",
+                meta.name,
+                meta.outputs.len(),
+                parts.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(&meta.outputs)
+            .map(|(lit, spec)| Tensor::from_literal(lit, &spec.shape))
+            .collect()
+    }
+
+    fn check_args(&self, meta: &ArtifactMeta, shapes: &[Vec<usize>]) -> Result<()> {
+        if shapes.len() != meta.inputs.len() {
+            bail!(
+                "artifact {}: expected {} inputs, got {}",
+                meta.name,
+                meta.inputs.len(),
+                shapes.len()
+            );
+        }
+        for (i, (got, want)) in shapes.iter().zip(&meta.inputs).enumerate() {
+            if *got != want.shape {
+                bail!(
+                    "artifact {}: input {i} shape {:?} != expected {:?}",
+                    meta.name,
+                    got,
+                    want.shape
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute with host tensors (uploads everything per call).
+    pub fn call(&self, name: &str, args: &[Tensor]) -> Result<Vec<Tensor>> {
+        let meta = self.meta(name)?.clone();
+        let shapes: Vec<_> = args.iter().map(|a| a.shape.clone()).collect();
+        self.check_args(&meta, &shapes)?;
+        let exe = self.executable(name)?;
+        let literals: Vec<Literal> = args
+            .iter()
+            .map(|a| a.to_literal())
+            .collect::<Result<_>>()?;
+        let out = exe.execute::<Literal>(&literals)?;
+        let lit = out[0][0].to_literal_sync()?;
+        self.unpack_outputs(&meta, lit)
+    }
+
+    /// Execute with pre-uploaded device buffers (the hot path: `K` stays
+    /// resident; small vectors are uploaded by the caller per call).
+    pub fn call_b(&self, name: &str, args: &[&PjRtBuffer]) -> Result<Vec<Tensor>> {
+        let meta = self.meta(name)?.clone();
+        let exe = self.executable(name)?;
+        let out = exe.execute_b::<&PjRtBuffer>(args)?;
+        let lit = out[0][0].to_literal_sync()?;
+        self.unpack_outputs(&meta, lit)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_roundtrips() {
+        let t = Tensor::mat(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit, &[2, 3]).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn tensor_f64_conversion() {
+        let t = Tensor::from_f64(vec![3], &[1.0, 2.5, -3.0]);
+        assert_eq!(t.data, vec![1.0f32, 2.5, -3.0]);
+        assert_eq!(t.to_f64(), vec![1.0, 2.5, -3.0]);
+    }
+
+    #[test]
+    fn scalar_and_param_shapes() {
+        assert_eq!(Tensor::scalar(2.0).shape, Vec::<usize>::new());
+        assert_eq!(Tensor::param(2.0).shape, vec![1]);
+    }
+
+    #[test]
+    fn available_detects_missing_dir() {
+        assert!(!Engine::available("/definitely/not/a/dir"));
+    }
+}

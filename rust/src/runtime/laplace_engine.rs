@@ -1,0 +1,111 @@
+//! Fused engine-side Laplace driver.
+//!
+//! The generic [`crate::gp::laplace::LaplaceGpc`] calls the kernel
+//! operator once per elementwise stage, which on the engine backend means
+//! several host↔device round trips per Newton step. This driver instead
+//! invokes the **fused L2 artifacts** — `newton_stats_n{n}` (π, ∇, H, s,
+//! b_rw, rhs, log-lik in ONE executable around the L1 matvec kernel) and
+//! `newton_update_n{n}` (a, f′ = K a, log-lik, quadratic term) — so each
+//! Newton step costs exactly two engine calls plus the inner CG solve.
+//! This is the L2 item of the performance pass (EXPERIMENTS.md §Perf).
+
+use crate::gp::laplace::{LaplaceFit, NewtonStepStats};
+use crate::runtime::ops::{EngineKernel, EngineSpdOperator};
+use crate::solvers::cg::CgConfig;
+use crate::solvers::recycle::{RecycleConfig, RecycleManager};
+use anyhow::Result;
+use std::time::Instant;
+
+/// Configuration for the fused engine Laplace run.
+#[derive(Clone, Debug)]
+pub struct EngineLaplaceConfig {
+    /// Inner-solve tolerance. The artifacts are f32: tolerances below
+    /// ~1e-6 are clamped by a stagnation guard rather than spinning.
+    pub solve_tol: f64,
+    pub newton_tol: f64,
+    pub max_newton: usize,
+    /// def-CG recycling; `None` runs plain CG inside each Newton step.
+    pub recycle: Option<RecycleConfig>,
+}
+
+impl Default for EngineLaplaceConfig {
+    fn default() -> Self {
+        EngineLaplaceConfig {
+            solve_tol: 1e-5,
+            newton_tol: 1.0,
+            max_newton: 20,
+            recycle: Some(RecycleConfig::default()),
+        }
+    }
+}
+
+/// Run the full Laplace/Newton loop against a device-resident kernel.
+pub fn fit(kernel: &EngineKernel, y: &[f64], cfg: &EngineLaplaceConfig) -> Result<LaplaceFit> {
+    use crate::gp::laplace::KernelOp;
+    let n = kernel.n();
+    assert_eq!(y.len(), n);
+    let mut f = vec![0.0; n];
+    let mut a_hat = vec![0.0; n];
+    let mut steps: Vec<NewtonStepStats> = Vec::new();
+    let mut cumulative = 0.0;
+    let mut psi_prev = f64::NEG_INFINITY;
+    let mut converged = false;
+    let mut recycler = cfg.recycle.clone().map(RecycleManager::new);
+
+    for it in 1..=cfg.max_newton {
+        // ONE engine call: all Newton-step quantities (Eq. 9) fused.
+        let (rhs, s, b_rw, _loglik_pre) = kernel.newton_stats(&f, y)?;
+
+        // Inner solve on the fused A = I + SKS artifact operator, with the
+        // f32-floor guards on (see solvers::cg docs).
+        let solve_start = Instant::now();
+        let op = EngineSpdOperator::new(kernel, &s);
+        let solve_cfg = CgConfig {
+            tol: cfg.solve_tol.max(2e-7), // f32 floor
+            max_iters: 0,
+            store_l: 0,
+            stall_window: 60,
+            recompute_every: 25,
+        };
+        let (z, iters, matvecs, trace, defl_dim) = match recycler.as_mut() {
+            Some(mgr) => {
+                let dim = mgr.k_active();
+                let r = mgr.solve_next(&op, &rhs, None, &solve_cfg);
+                (r.x, r.iterations, r.matvecs, r.residuals, dim)
+            }
+            None => {
+                let r = crate::solvers::cg::solve(&op, &rhs, None, &solve_cfg);
+                (r.x, r.iterations, r.matvecs, r.residuals, 0)
+            }
+        };
+        let solve_seconds = solve_start.elapsed().as_secs_f64();
+        cumulative += solve_seconds;
+
+        // ONE engine call: a = b_rw − s∘z, f' = K a, log-lik, quad.
+        let (f_new, a_new, loglik, quad) = kernel.newton_update(&b_rw, &s, &z, y)?;
+        f = f_new;
+        a_hat = a_new;
+        let psi = loglik - 0.5 * quad;
+
+        steps.push(NewtonStepStats {
+            newton_iter: it,
+            log_lik: loglik,
+            psi,
+            solver_iterations: iters,
+            solver_matvecs: matvecs,
+            residual_trace: trace,
+            deflation_dim: defl_dim,
+            solve_seconds,
+            cumulative_seconds: cumulative,
+        });
+
+        let dpsi = psi - psi_prev;
+        if it > 1 && dpsi.abs() < cfg.newton_tol {
+            converged = true;
+            break;
+        }
+        psi_prev = psi;
+    }
+
+    Ok(LaplaceFit { f_hat: f, a_hat, steps, converged })
+}

@@ -1,0 +1,188 @@
+//! Artifact manifest parsing (`artifacts/manifest.json`).
+//!
+//! Written by `python/compile/aot.py`; describes every lowered entry point
+//! with its file name and input/output shapes, so the rust engine can
+//! validate calls before handing them to XLA.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Tensor spec (f32 only — the artifact family is single-precision).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_scalar(&self) -> bool {
+        self.shape.is_empty()
+    }
+}
+
+/// One artifact entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    /// Problem size this entry was lowered for.
+    pub n: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    /// Feature dimension (784 for the 28×28 image workload).
+    pub dim: usize,
+    /// Problem sizes the artifact family covers.
+    pub sizes: Vec<usize>,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest, String> {
+        let j = Json::parse(text).map_err(|e| e.to_string())?;
+        let dim = j.get("dim").as_usize().ok_or("manifest: missing dim")?;
+        let sizes = j
+            .get("sizes")
+            .as_arr()
+            .ok_or("manifest: missing sizes")?
+            .iter()
+            .map(|v| v.as_usize().ok_or("manifest: bad size"))
+            .collect::<Result<Vec<_>, _>>()?;
+        let arts = j
+            .get("artifacts")
+            .as_obj()
+            .ok_or("manifest: missing artifacts")?;
+        let mut artifacts = BTreeMap::new();
+        for (name, meta) in arts {
+            let spec_list = |key: &str| -> Result<Vec<TensorSpec>, String> {
+                meta.get(key)
+                    .as_arr()
+                    .ok_or_else(|| format!("manifest: {name}.{key} missing"))?
+                    .iter()
+                    .map(|s| {
+                        let shape = s
+                            .get("shape")
+                            .as_arr()
+                            .ok_or("bad shape")?
+                            .iter()
+                            .map(|d| d.as_usize().ok_or("bad dim"))
+                            .collect::<Result<Vec<_>, _>>()?;
+                        Ok(TensorSpec { shape })
+                    })
+                    .collect()
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name: name.clone(),
+                    file: meta
+                        .get("file")
+                        .as_str()
+                        .ok_or_else(|| format!("manifest: {name}.file missing"))?
+                        .to_string(),
+                    n: meta
+                        .get("n")
+                        .as_usize()
+                        .ok_or_else(|| format!("manifest: {name}.n missing"))?,
+                    inputs: spec_list("inputs")?,
+                    outputs: spec_list("outputs")?,
+                },
+            );
+        }
+        Ok(Manifest { dim, sizes, artifacts })
+    }
+
+    pub fn load(path: &Path) -> Result<Manifest, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.get(name)
+    }
+
+    /// Artifact name for an entry-point stem at size n (e.g. "gram", 128
+    /// -> "gram_n128"), if present.
+    pub fn entry(&self, stem: &str, n: usize) -> Option<&ArtifactMeta> {
+        self.artifacts.get(&format!("{stem}_n{n}"))
+    }
+
+    /// The largest artifact size ≤ n, for picking a family member.
+    pub fn best_size_for(&self, n: usize) -> Option<usize> {
+        self.sizes.iter().copied().filter(|&s| s <= n).max()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "dim": 784,
+        "sizes": [8, 16],
+        "artifacts": {
+            "gram_n8": {
+                "file": "gram_n8.hlo.txt",
+                "n": 8,
+                "inputs": [{"shape": [8, 784], "dtype": "f32"},
+                           {"shape": [1], "dtype": "f32"},
+                           {"shape": [1], "dtype": "f32"}],
+                "outputs": [{"shape": [8, 8], "dtype": "f32"}]
+            },
+            "cg_update_n8": {
+                "file": "cg_update_n8.hlo.txt",
+                "n": 8,
+                "inputs": [{"shape": [8], "dtype": "f32"}],
+                "outputs": [{"shape": [], "dtype": "f32"}]
+            }
+        }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.dim, 784);
+        assert_eq!(m.sizes, vec![8, 16]);
+        assert_eq!(m.artifacts.len(), 2);
+        let g = m.get("gram_n8").unwrap();
+        assert_eq!(g.file, "gram_n8.hlo.txt");
+        assert_eq!(g.inputs.len(), 3);
+        assert_eq!(g.inputs[0].shape, vec![8, 784]);
+        assert_eq!(g.inputs[0].element_count(), 8 * 784);
+        assert_eq!(g.outputs[0].shape, vec![8, 8]);
+    }
+
+    #[test]
+    fn scalar_specs() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let c = m.get("cg_update_n8").unwrap();
+        assert!(c.outputs[0].is_scalar());
+        assert_eq!(c.outputs[0].element_count(), 1);
+    }
+
+    #[test]
+    fn entry_lookup() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.entry("gram", 8).is_some());
+        assert!(m.entry("gram", 16).is_none());
+        assert_eq!(m.best_size_for(12), Some(8));
+        assert_eq!(m.best_size_for(100), Some(16));
+        assert_eq!(m.best_size_for(4), None);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+        assert!(Manifest::parse(r#"{"dim": 1, "sizes": [], "artifacts": {"x": {}}}"#).is_err());
+    }
+}

@@ -1,0 +1,18 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! The rust side of the three-layer architecture. `make artifacts` (python,
+//! build-time only) lowers the L2/L1 compute graphs to HLO **text**;
+//! [`engine::Engine`] loads those files, compiles each once on the PJRT
+//! CPU client (`xla` crate), and exposes a typed call API. The Gram matrix
+//! `K` is uploaded to device memory once per problem and stays resident
+//! across the O(100) matvecs of a Newton solve ([`ops::EngineKernel`]).
+//!
+//! Python never runs here: the binary is self-contained given `artifacts/`.
+
+pub mod engine;
+pub mod laplace_engine;
+pub mod manifest;
+pub mod ops;
+
+pub use engine::Engine;
+pub use manifest::Manifest;

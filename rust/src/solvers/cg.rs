@@ -1,0 +1,376 @@
+//! The method of conjugate gradients (Hestenes & Stiefel, 1952).
+//!
+//! This is the paper's iterative baseline and the inner engine that def-CG
+//! extends. The implementation records a relative-residual trace (Fig. 3)
+//! and can store the first ℓ normalized search directions together with
+//! their `A·p` products — the raw material for harmonic-Ritz recycling
+//! (§2.3) — at zero extra matvec cost.
+
+use crate::linalg::vec_ops::{axpy, dot, norm2, xpby};
+use crate::solvers::{SolveResult, SpdOperator, StopReason, StoredDirections};
+use std::time::Instant;
+
+/// Configuration for a CG run.
+#[derive(Clone, Debug)]
+pub struct CgConfig {
+    /// Stop when ‖r‖/‖b‖ ≤ tol.
+    pub tol: f64,
+    /// Iteration cap (0 means `10 n`).
+    pub max_iters: usize,
+    /// Store the first ℓ (direction, A·direction) pairs for recycling.
+    pub store_l: usize,
+    /// Stagnation window: stop with [`StopReason::Stagnated`] when the
+    /// residual improved by < 0.1% over this many iterations.
+    ///
+    /// **0 (default) disables the check.** CG residual norms are not
+    /// monotone — ill-conditioned systems legitimately plateau for
+    /// hundreds of iterations before the superlinear phase — so this is an
+    /// opt-in for paths with a known numerical floor: the f32 XLA-artifact
+    /// operators (floor ≈ 1e-6 relative) and `AwPolicy::Reuse` recycling
+    /// (floor at the sequence drift level).
+    pub stall_window: usize,
+    /// Residual replacement (van der Vorst & Ye): every this many
+    /// iterations, recompute `r = b − A x` exactly (one extra matvec)
+    /// instead of trusting the recursion. The recursive residual
+    /// self-converges even when the operator is inexact (f32 artifacts),
+    /// silently leaving the *true* residual at the precision floor;
+    /// replacement exposes the floor so `stall_window` can stop the solve.
+    /// 0 (default) disables.
+    pub recompute_every: usize,
+}
+
+impl Default for CgConfig {
+    fn default() -> Self {
+        CgConfig { tol: 1e-5, max_iters: 0, store_l: 0, stall_window: 0, recompute_every: 0 }
+    }
+}
+
+impl CgConfig {
+    pub fn with_tol(tol: f64) -> Self {
+        CgConfig { tol, ..Default::default() }
+    }
+
+    pub(crate) fn effective_max_iters(&self, n: usize) -> usize {
+        if self.max_iters == 0 {
+            10 * n.max(1)
+        } else {
+            self.max_iters
+        }
+    }
+
+    /// True if the residual trace shows < 1% improvement over the window.
+    pub(crate) fn stagnated(&self, residuals: &[f64]) -> bool {
+        if self.stall_window == 0 || residuals.len() <= self.stall_window {
+            return false;
+        }
+        let now = residuals[residuals.len() - 1];
+        let then = residuals[residuals.len() - 1 - self.stall_window];
+        now > 0.999 * then
+    }
+}
+
+/// Solve `A x = b` with CG starting from `x0` (zeros if `None`).
+pub fn solve(
+    a: &dyn SpdOperator,
+    b: &[f64],
+    x0: Option<&[f64]>,
+    cfg: &CgConfig,
+) -> SolveResult {
+    let start = Instant::now();
+    let n = a.n();
+    assert_eq!(b.len(), n, "rhs dimension mismatch");
+    let bnorm = norm2(b);
+    let mut matvecs = 0usize;
+
+    let mut x = match x0 {
+        Some(x0) => {
+            assert_eq!(x0.len(), n);
+            x0.to_vec()
+        }
+        None => vec![0.0; n],
+    };
+
+    // r = b - A x
+    let mut r = b.to_vec();
+    if x0.is_some() {
+        let ax = a.matvec_alloc(&x);
+        matvecs += 1;
+        for i in 0..n {
+            r[i] -= ax[i];
+        }
+    }
+
+    let denom = if bnorm > 0.0 { bnorm } else { 1.0 };
+    let mut residuals = vec![norm2(&r) / denom];
+    let mut stored = StoredDirections::default();
+
+    if residuals[0] <= cfg.tol {
+        return SolveResult {
+            x,
+            residuals,
+            iterations: 0,
+            matvecs,
+            stop: StopReason::Converged,
+            stored,
+            seconds: start.elapsed().as_secs_f64(),
+        };
+    }
+
+    let mut p = r.clone();
+    let mut rr = dot(&r, &r);
+    let mut ap = vec![0.0; n];
+    let max_iters = cfg.effective_max_iters(n);
+    let mut stop = StopReason::MaxIters;
+    let mut iterations = 0;
+
+    for _j in 0..max_iters {
+        a.matvec(&p, &mut ap);
+        matvecs += 1;
+        let d = dot(&p, &ap);
+        if d <= 0.0 || !d.is_finite() {
+            stop = StopReason::Breakdown;
+            break;
+        }
+        if stored.len() < cfg.store_l {
+            // Store normalized direction and matching A·p scaling.
+            let pn = norm2(&p);
+            if pn > 0.0 {
+                let inv = 1.0 / pn;
+                stored.p.push(p.iter().map(|v| v * inv).collect());
+                stored.ap.push(ap.iter().map(|v| v * inv).collect());
+            }
+        }
+        let alpha = rr / d;
+        axpy(alpha, &p, &mut x);
+        axpy(-alpha, &ap, &mut r);
+        iterations += 1;
+        // Residual replacement: trade one matvec for an exact residual,
+        // defeating the recursion's self-consistency on inexact operators.
+        if cfg.recompute_every > 0 && iterations % cfg.recompute_every == 0 {
+            a.matvec(&x, &mut ap); // reuse ap as scratch (rebuilt next iter)
+            matvecs += 1;
+            for i in 0..n {
+                r[i] = b[i] - ap[i];
+            }
+        }
+        let rr_new = dot(&r, &r);
+        residuals.push(rr_new.sqrt() / denom);
+        if *residuals.last().unwrap() <= cfg.tol {
+            stop = StopReason::Converged;
+            break;
+        }
+        if cfg.stagnated(&residuals) {
+            stop = StopReason::Stagnated;
+            break;
+        }
+        let beta = rr_new / rr;
+        rr = rr_new;
+        xpby(&r, beta, &mut p); // p = r + beta p
+    }
+
+    SolveResult {
+        x,
+        residuals,
+        iterations,
+        matvecs,
+        stop,
+        stored,
+        seconds: start.elapsed().as_secs_f64(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::mat::Mat;
+    use crate::solvers::DenseOp;
+    use crate::util::quickprop::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn solves_identity_in_one_iteration() {
+        let a = Mat::identity(5);
+        let b = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        let r = solve(&DenseOp::new(&a), &b, None, &CgConfig::with_tol(1e-12));
+        assert_eq!(r.stop, StopReason::Converged);
+        assert!(r.iterations <= 1);
+        for (xi, bi) in r.x.iter().zip(&b) {
+            assert!((xi - bi).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn converges_on_random_spd() {
+        forall("CG solves SPD", 15, |g| {
+            let n = g.usize_in(2, 30);
+            let a = Mat::from_vec(n, n, g.spd_matrix(n, 1e3));
+            let x_true = g.normal_vec(n);
+            let b = a.matvec(&x_true);
+            let r = solve(&DenseOp::new(&a), &b, None, &CgConfig::with_tol(1e-10));
+            r.stop == StopReason::Converged
+                && r.x.iter().zip(&x_true).all(|(u, v)| (u - v).abs() < 1e-5)
+        });
+    }
+
+    #[test]
+    fn finite_termination_in_exact_arithmetic() {
+        // CG terminates in at most n steps (here: well within 2n even with
+        // round-off, for a mildly conditioned matrix).
+        let mut rng = Rng::new(2);
+        let n = 20;
+        let a = Mat::rand_spd(n, 100.0, &mut rng);
+        let b: Vec<f64> = (0..n).map(|i| (i as f64).sin()).collect();
+        let r = solve(&DenseOp::new(&a), &b, None, &CgConfig::with_tol(1e-12));
+        assert_eq!(r.stop, StopReason::Converged);
+        assert!(r.iterations <= 2 * n, "iterations={}", r.iterations);
+    }
+
+    #[test]
+    fn residual_trace_matches_true_residual() {
+        let mut rng = Rng::new(3);
+        let n = 15;
+        let a = Mat::rand_spd(n, 50.0, &mut rng);
+        let b: Vec<f64> = (0..n).map(|i| 1.0 + i as f64).collect();
+        let r = solve(&DenseOp::new(&a), &b, None, &CgConfig::with_tol(1e-10));
+        // recompute ‖b - A x‖/‖b‖ and compare to the last trace entry
+        let ax = a.matvec(&r.x);
+        let mut res = 0.0;
+        for i in 0..n {
+            res += (b[i] - ax[i]).powi(2);
+        }
+        let res = res.sqrt() / norm2(&b);
+        let traced = r.final_residual();
+        assert!(
+            (res - traced).abs() < 1e-8,
+            "true {res} vs traced {traced} (recursive residual drift)"
+        );
+    }
+
+    #[test]
+    fn warm_start_reduces_iterations() {
+        let mut rng = Rng::new(4);
+        let n = 40;
+        let a = Mat::rand_spd(n, 1e4, &mut rng);
+        let x_true: Vec<f64> = (0..n).map(|i| (i as f64).cos()).collect();
+        let b = a.matvec(&x_true);
+        let cold = solve(&DenseOp::new(&a), &b, None, &CgConfig::with_tol(1e-8));
+        // Warm start very close to the solution.
+        let x0: Vec<f64> = x_true.iter().map(|v| v * (1.0 + 1e-6)).collect();
+        let warm = solve(&DenseOp::new(&a), &b, Some(&x0), &CgConfig::with_tol(1e-8));
+        assert!(warm.iterations < cold.iterations);
+    }
+
+    #[test]
+    fn stores_at_most_l_normalized_directions() {
+        let mut rng = Rng::new(5);
+        let n = 30;
+        let a = Mat::rand_spd(n, 1e3, &mut rng);
+        let b: Vec<f64> = (0..n).map(|i| i as f64 + 1.0).collect();
+        let cfg = CgConfig { tol: 1e-10, max_iters: 0, store_l: 6, ..Default::default() };
+        let r = solve(&DenseOp::new(&a), &b, None, &cfg);
+        assert_eq!(r.stored.len(), 6.min(r.iterations));
+        for (p, ap) in r.stored.p.iter().zip(&r.stored.ap) {
+            assert!((norm2(p) - 1.0).abs() < 1e-12);
+            // ap must equal A p for the normalized p
+            let want = a.matvec(p);
+            for (u, v) in ap.iter().zip(&want) {
+                assert!((u - v).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn stored_directions_are_a_conjugate() {
+        // pᵢᵀ A pⱼ = 0 for i≠j — the defining CG invariant.
+        let mut rng = Rng::new(6);
+        let n = 25;
+        let a = Mat::rand_spd(n, 1e3, &mut rng);
+        let b: Vec<f64> = (0..n).map(|i| (i * i % 7) as f64 - 3.0).collect();
+        let cfg = CgConfig { tol: 1e-12, max_iters: 0, store_l: 8, ..Default::default() };
+        let r = solve(&DenseOp::new(&a), &b, None, &cfg);
+        for i in 0..r.stored.len() {
+            for j in 0..i {
+                let paj = dot(&r.stored.p[i], &r.stored.ap[j]);
+                assert!(paj.abs() < 1e-8, "p{i}ᵀAp{j} = {paj}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_rhs_returns_zero() {
+        let a = Mat::identity(4);
+        let r = solve(&DenseOp::new(&a), &[0.0; 4], None, &CgConfig::default());
+        assert_eq!(r.stop, StopReason::Converged);
+        assert_eq!(r.iterations, 0);
+        assert_eq!(r.x, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn max_iters_respected() {
+        let mut rng = Rng::new(7);
+        let a = Mat::rand_spd(50, 1e8, &mut rng);
+        let b = vec![1.0; 50];
+        let cfg = CgConfig { tol: 1e-14, max_iters: 3, store_l: 0, ..Default::default() };
+        let r = solve(&DenseOp::new(&a), &b, None, &cfg);
+        assert_eq!(r.stop, StopReason::MaxIters);
+        assert_eq!(r.iterations, 3);
+        assert_eq!(r.matvecs, 3);
+    }
+
+    #[test]
+    fn stagnation_detected_on_noisy_operator() {
+        // An operator with an injected per-call error floor (the noise
+        // pattern changes every call, like f32 rounding under different
+        // operand values): CG can never reach tol 1e-13 and must stop as
+        // Stagnated, not spin to max_iters.
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        struct Noisy<'a>(&'a Mat, AtomicUsize);
+        impl<'a> crate::solvers::SpdOperator for Noisy<'a> {
+            fn n(&self) -> usize {
+                self.0.rows()
+            }
+            fn matvec(&self, x: &[f64], y: &mut [f64]) {
+                self.0.matvec_into(x, y);
+                let call = self.1.fetch_add(1, Ordering::Relaxed);
+                let scale = crate::linalg::vec_ops::norm2(y) * 1e-6;
+                for (i, v) in y.iter_mut().enumerate() {
+                    let h = ((i + 131 * call).wrapping_mul(2654435761)) % 1000;
+                    *v += scale * (h as f64 / 1000.0 - 0.5);
+                }
+            }
+        }
+        let mut rng = Rng::new(9);
+        let a = Mat::rand_spd(60, 1e3, &mut rng);
+        let b = vec![1.0; 60];
+        let cfg = CgConfig {
+            tol: 1e-13,
+            max_iters: 5000,
+            store_l: 0,
+            stall_window: 60,
+            recompute_every: 10,
+        };
+        let r = solve(&Noisy(&a, AtomicUsize::new(0)), &b, None, &cfg);
+        assert_eq!(r.stop, StopReason::Stagnated, "stopped as {:?}", r.stop);
+        assert!(r.iterations < 5000);
+        // The solution should still be decent (floor ~1e-6).
+        assert!(r.final_residual() < 1e-4);
+    }
+
+    #[test]
+    fn iteration_count_grows_with_condition_number() {
+        let mut rng = Rng::new(8);
+        let n = 60;
+        let easy = Mat::rand_spd(n, 10.0, &mut rng);
+        let hard = Mat::rand_spd(n, 1e6, &mut rng);
+        let b = vec![1.0; n];
+        let cfg = CgConfig::with_tol(1e-8);
+        let re = solve(&DenseOp::new(&easy), &b, None, &cfg);
+        let rh = solve(&DenseOp::new(&hard), &b, None, &cfg);
+        assert!(
+            rh.iterations > re.iterations,
+            "hard {} <= easy {}",
+            rh.iterations,
+            re.iterations
+        );
+    }
+}

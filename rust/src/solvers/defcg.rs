@@ -1,0 +1,516 @@
+//! Deflated conjugate gradients — Algorithm 1 of the paper
+//! (Saad, Yeung, Erhel & Guyomarc'h, *A deflated version of the conjugate
+//! gradient algorithm*, SISC 2000).
+//!
+//! Given a basis `W ∈ ℝ^{n×k}` of a recycled subspace (approximate
+//! eigenvectors from the previous system in the sequence) and its image
+//! `AW`, the method:
+//!
+//! 1. shifts the start point so the initial residual is orthogonal to `W`
+//!    (`x₀ = x₋₁ + W (WᵀAW)⁻¹ Wᵀ r₋₁`, line 2);
+//! 2. deflates every new direction against `W`
+//!    (`p_j = β p_{j−1} + r_j − W μ_j` with `WᵀAW μ_j = WᵀA r_j`, line 11).
+//!
+//! The iteration then behaves like CG on the projected operator
+//! `P_W A` whose spectrum has the deflated eigenvalues removed, so the
+//! effective condition number drops to `λ_n / λ_{k+1}` (paper §2.1).
+//!
+//! Cost per iteration over CG: one k×k triangular solve plus two skinny
+//! products with `W`/`AW` — `O(nk)`; no extra matvecs because `WᵀA r =
+//! (AW)ᵀ r` reuses the stored `AW`.
+
+use crate::linalg::cholesky::Cholesky;
+use crate::linalg::mat::Mat;
+use crate::linalg::vec_ops::{axpy, dot, norm2};
+use crate::solvers::cg::CgConfig;
+use crate::solvers::{SolveResult, SpdOperator, StopReason, StoredDirections};
+use std::time::Instant;
+
+/// The recycled subspace handed to a deflated solve: the basis `W` and its
+/// image `AW` under the *current* system's operator.
+///
+/// NOTE on sequences: the harmonic-Ritz vectors are extracted from system
+/// `i` but reused against system `i+1 ≠ i`. Like the paper, we reuse the
+/// stale `A⁽ⁱ⁾W` image as the approximation of `A⁽ⁱ⁺¹⁾W` when the caller
+/// does not refresh it ([`Deflation::refresh`] recomputes it exactly with
+/// k matvecs; the ablation bench quantifies the difference).
+#[derive(Clone, Debug)]
+pub struct Deflation {
+    pub w: Mat,
+    pub aw: Mat,
+}
+
+impl Deflation {
+    pub fn new(w: Mat, aw: Mat) -> Self {
+        assert_eq!(w.rows(), aw.rows());
+        assert_eq!(w.cols(), aw.cols());
+        Deflation { w, aw }
+    }
+
+    pub fn k(&self) -> usize {
+        self.w.cols()
+    }
+
+    /// Recompute `AW` exactly under a (new) operator; costs k matvecs.
+    pub fn refresh(&mut self, a: &dyn SpdOperator) -> usize {
+        let n = self.w.rows();
+        let mut y = vec![0.0; n];
+        for j in 0..self.w.cols() {
+            let col = self.w.col(j);
+            a.matvec(&col, &mut y);
+            self.aw.set_col(j, &y);
+        }
+        self.w.cols()
+    }
+
+    /// Serialize the basis to a byte buffer (own little-endian format:
+    /// magic, n, k, then W and AW column-major f64). Lets a service
+    /// persist recycled subspaces across process restarts, or transfer
+    /// them between workers.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let (n, k) = (self.w.rows(), self.k());
+        let mut out = Vec::with_capacity(16 + 16 * n * k);
+        out.extend_from_slice(b"KRRDEFL1");
+        out.extend_from_slice(&(n as u64).to_le_bytes());
+        out.extend_from_slice(&(k as u64).to_le_bytes());
+        for m in [&self.w, &self.aw] {
+            for v in m.data() {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Deserialize a basis written by [`Deflation::to_bytes`].
+    pub fn from_bytes(bytes: &[u8]) -> Result<Deflation, String> {
+        if bytes.len() < 24 || &bytes[..8] != b"KRRDEFL1" {
+            return Err("bad magic".into());
+        }
+        let rd = |off: usize| u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap()) as usize;
+        let (n, k) = (rd(8), rd(16));
+        let need = 24 + 16 * n * k;
+        if bytes.len() != need {
+            return Err(format!("length {} != expected {need}", bytes.len()));
+        }
+        let read_mat = |start: usize| -> crate::linalg::Mat {
+            let mut data = Vec::with_capacity(n * k);
+            for i in 0..n * k {
+                let off = start + 8 * i;
+                data.push(f64::from_le_bytes(bytes[off..off + 8].try_into().unwrap()));
+            }
+            crate::linalg::Mat::from_vec(n, k, data)
+        };
+        let w = read_mat(24);
+        let aw = read_mat(24 + 8 * n * k);
+        Ok(Deflation::new(w, aw))
+    }
+}
+
+/// Deflated-CG solve. With `defl = None` (or an empty basis) this reduces
+/// exactly to plain CG. `cfg.store_l` controls how many directions are
+/// recorded for the next harmonic-Ritz extraction.
+pub fn solve(
+    a: &dyn SpdOperator,
+    b: &[f64],
+    x0: Option<&[f64]>,
+    defl: Option<&Deflation>,
+    cfg: &CgConfig,
+) -> SolveResult {
+    let start = Instant::now();
+    let n = a.n();
+    assert_eq!(b.len(), n, "rhs dimension mismatch");
+
+    let empty = defl.map(|d| d.k() == 0).unwrap_or(true);
+    if empty {
+        // Plain CG path; keep a single implementation of the inner loop.
+        return crate::solvers::cg::solve(a, b, x0, cfg);
+    }
+    let defl = defl.unwrap();
+    let (w, aw) = (&defl.w, &defl.aw);
+    let k = defl.k();
+    assert_eq!(w.rows(), n, "deflation basis dimension mismatch");
+
+    let bnorm = norm2(b);
+    let denom = if bnorm > 0.0 { bnorm } else { 1.0 };
+    let mut matvecs = 0usize;
+
+    // WᵀAW (k×k, SPD for SPD A and full-rank W) factored once per solve.
+    let wtaw = {
+        let mut m = w.t_matmul(aw);
+        m.symmetrize();
+        m
+    };
+    let wtaw_ch = match Cholesky::factor(&wtaw) {
+        Ok(ch) => ch,
+        Err(_) => {
+            // Degenerate recycled basis — fall back to plain CG rather than
+            // dividing by a singular projector.
+            crate::log_warn!("WᵀAW not SPD (k={k}); falling back to undeflated CG");
+            return crate::solvers::cg::solve(a, b, x0, cfg);
+        }
+    };
+
+    // r₋₁ = b − A x₋₁
+    let mut x = match x0 {
+        Some(x0) => {
+            assert_eq!(x0.len(), n);
+            x0.to_vec()
+        }
+        None => vec![0.0; n],
+    };
+    let mut r = b.to_vec();
+    if x0.is_some() {
+        let ax = a.matvec_alloc(&x);
+        matvecs += 1;
+        for i in 0..n {
+            r[i] -= ax[i];
+        }
+    }
+
+    // Line 2: x₀ = x₋₁ + W γ,  γ = (WᵀAW)⁻¹ Wᵀ r₋₁.
+    let x_pre_shift = x.clone();
+    let r_pre_norm = norm2(&r);
+    let gamma = wtaw_ch.solve(&w.matvec_t(&r));
+    for j in 0..k {
+        let g = gamma[j];
+        if g != 0.0 {
+            for i in 0..n {
+                x[i] += g * w[(i, j)];
+            }
+        }
+    }
+    // r₀ = b − A x₀ recomputed EXACTLY (one matvec). Saad's update
+    // r₀ = r₋₁ − AW γ is free but silently wrong when AW is stale (the
+    // recycled basis comes from system i−1): the solver would then
+    // converge an incorrect residual recursion and return a wrong
+    // solution. One exact matvec buys correctness for every AW policy.
+    {
+        let ax = a.matvec_alloc(&x);
+        matvecs += 1;
+        for i in 0..n {
+            r[i] = b[i] - ax[i];
+        }
+    }
+    // Shift safeguard: the deflation shift minimizes the A⁻¹-norm of the
+    // residual, not the 2-norm, so mild 2-norm growth is normal for
+    // harmonic-Ritz bases. But growth beyond a small factor means the
+    // basis belongs to a too-different system (fast drift under
+    // AwPolicy::Reuse) and deflating with it would poison the direction
+    // recursion — revert and run plain CG instead.
+    if norm2(&r) > 3.0 * r_pre_norm {
+        crate::log_debug!(
+            "deflation shift increased residual ({:.3e} -> {:.3e}); dropping basis for this solve",
+            r_pre_norm,
+            norm2(&r)
+        );
+        let mut result = crate::solvers::cg::solve(a, b, Some(&x_pre_shift), cfg);
+        result.matvecs += matvecs;
+        return result;
+    }
+
+    let mut residuals = vec![norm2(&r) / denom];
+    let mut stored = StoredDirections::default();
+
+    if residuals[0] <= cfg.tol {
+        return SolveResult {
+            x,
+            residuals,
+            iterations: 0,
+            matvecs,
+            stop: StopReason::Converged,
+            stored,
+            seconds: start.elapsed().as_secs_f64(),
+        };
+    }
+
+    // Line 3: p₀ = r₀ − W μ₀ with WᵀAW μ₀ = WᵀA r₀ = (AW)ᵀ r₀.
+    let deflect = |r: &[f64]| -> Vec<f64> { wtaw_ch.solve(&aw.matvec_t(r)) };
+    let mut p = {
+        let mu = deflect(&r);
+        let mut p = r.clone();
+        for j in 0..k {
+            let m = mu[j];
+            if m != 0.0 {
+                for i in 0..n {
+                    p[i] -= m * w[(i, j)];
+                }
+            }
+        }
+        p
+    };
+
+    let mut rr = dot(&r, &r);
+    let mut ap = vec![0.0; n];
+    let max_iters = cfg.effective_max_iters(n);
+    let mut stop = StopReason::MaxIters;
+    let mut iterations = 0;
+
+    for _j in 0..max_iters {
+        // Lines 6–10: the standard CG sweep.
+        a.matvec(&p, &mut ap);
+        matvecs += 1;
+        let d = dot(&p, &ap);
+        if d <= 0.0 || !d.is_finite() {
+            stop = StopReason::Breakdown;
+            break;
+        }
+        if stored.len() < cfg.store_l {
+            let pn = norm2(&p);
+            if pn > 0.0 {
+                let inv = 1.0 / pn;
+                stored.p.push(p.iter().map(|v| v * inv).collect());
+                stored.ap.push(ap.iter().map(|v| v * inv).collect());
+            }
+        }
+        let alpha = rr / d;
+        axpy(alpha, &p, &mut x);
+        axpy(-alpha, &ap, &mut r);
+        let rr_new = dot(&r, &r);
+        iterations += 1;
+        residuals.push(rr_new.sqrt() / denom);
+        if *residuals.last().unwrap() <= cfg.tol {
+            stop = StopReason::Converged;
+            break;
+        }
+        if cfg.stagnated(&residuals) {
+            stop = StopReason::Stagnated;
+            break;
+        }
+        let beta = rr_new / rr;
+        rr = rr_new;
+        // Line 11: p = β p + r − W μ,  WᵀAW μ = (AW)ᵀ r.
+        let mu = deflect(&r);
+        for i in 0..n {
+            p[i] = beta * p[i] + r[i];
+        }
+        for j in 0..k {
+            let m = mu[j];
+            if m != 0.0 {
+                for i in 0..n {
+                    p[i] -= m * w[(i, j)];
+                }
+            }
+        }
+    }
+
+    SolveResult {
+        x,
+        residuals,
+        iterations,
+        matvecs,
+        stop,
+        stored,
+        seconds: start.elapsed().as_secs_f64(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::eig::sym_eig;
+    use crate::linalg::mat::Mat;
+    use crate::solvers::cg::CgConfig;
+    use crate::solvers::DenseOp;
+    use crate::util::quickprop::forall;
+    use crate::util::rng::Rng;
+
+    /// Deflation basis from the exact top-k eigenvectors of A.
+    fn exact_deflation(a: &Mat, k: usize) -> Deflation {
+        let e = sym_eig(a).unwrap();
+        let n = a.rows();
+        let mut w = Mat::zeros(n, k);
+        for (dst, j) in ((n - k)..n).enumerate() {
+            w.set_col(dst, &e.vectors.col(j));
+        }
+        let aw = a.matmul(&w);
+        Deflation::new(w, aw)
+    }
+
+    #[test]
+    fn reduces_to_cg_without_basis() {
+        let mut rng = Rng::new(1);
+        let a = Mat::rand_spd(12, 100.0, &mut rng);
+        let b = vec![1.0; 12];
+        let cfg = CgConfig::with_tol(1e-10);
+        let r1 = solve(&DenseOp::new(&a), &b, None, None, &cfg);
+        let r2 = crate::solvers::cg::solve(&DenseOp::new(&a), &b, None, &cfg);
+        assert_eq!(r1.iterations, r2.iterations);
+        for (u, v) in r1.x.iter().zip(&r2.x) {
+            assert_eq!(u, v);
+        }
+    }
+
+    #[test]
+    fn solves_correctly_with_deflation() {
+        forall("def-CG solves SPD", 10, |g| {
+            let n = g.usize_in(6, 25);
+            let a = Mat::from_vec(n, n, g.spd_matrix(n, 1e4));
+            let x_true = g.normal_vec(n);
+            let b = a.matvec(&x_true);
+            let defl = exact_deflation(&a, 3);
+            let r = solve(
+                &DenseOp::new(&a),
+                &b,
+                None,
+                Some(&defl),
+                &CgConfig::with_tol(1e-11),
+            );
+            r.stop == StopReason::Converged
+                && r.x.iter().zip(&x_true).all(|(u, v)| (u - v).abs() < 1e-5)
+        });
+    }
+
+    #[test]
+    fn residual_stays_orthogonal_to_w() {
+        // The deflation constraint (paper Eq. 5): Wᵀ r_j = 0 for all j.
+        let mut rng = Rng::new(2);
+        let n = 30;
+        let a = Mat::rand_spd(n, 1e5, &mut rng);
+        let b: Vec<f64> = (0..n).map(|i| (i as f64).sin() + 1.0).collect();
+        let defl = exact_deflation(&a, 4);
+
+        // Instrument: run the solver to several iteration caps and check
+        // Wᵀ r at each stopping point.
+        for cap in [1, 2, 5, 9] {
+            let cfg = CgConfig { tol: 1e-16, max_iters: cap, store_l: 0, ..Default::default() };
+            let r = solve(&DenseOp::new(&a), &b, None, Some(&defl), &cfg);
+            let ax = a.matvec(&r.x);
+            let res: Vec<f64> = b.iter().zip(&ax).map(|(bi, axi)| bi - axi).collect();
+            let wtr = defl.w.matvec_t(&res);
+            let rel = crate::linalg::vec_ops::norm2(&wtr) / crate::linalg::vec_ops::norm2(&res);
+            assert!(rel < 1e-8, "‖Wᵀr‖/‖r‖ = {rel} after {cap} iters");
+        }
+    }
+
+    #[test]
+    fn exact_deflation_reduces_iterations() {
+        // Deflating the top-k eigenvectors must cut the iteration count for
+        // a matrix with a few dominant eigenvalues.
+        let mut rng = Rng::new(3);
+        let n = 80;
+        let a = Mat::rand_spd(n, 1e6, &mut rng);
+        let b = vec![1.0; n];
+        let cfg = CgConfig::with_tol(1e-8);
+        let plain = crate::solvers::cg::solve(&DenseOp::new(&a), &b, None, &cfg);
+        let defl = exact_deflation(&a, 8);
+        let deflated = solve(&DenseOp::new(&a), &b, None, Some(&defl), &cfg);
+        assert!(
+            deflated.iterations < plain.iterations,
+            "deflated {} >= plain {}",
+            deflated.iterations,
+            plain.iterations
+        );
+    }
+
+    #[test]
+    fn effective_condition_number_governs_rate() {
+        // With the top eigenvalue isolated (λ_n ≫ λ_{n-1}), deflating k=1
+        // should make def-CG converge like CG on the easy remainder.
+        let n = 40;
+        let mut rng = Rng::new(4);
+        // Build A = Q D Qᵀ with one huge eigenvalue.
+        let q = crate::linalg::qr::Qr::factor(&Mat::randn(n, n, &mut rng)).thin_q();
+        let mut d = Mat::zeros(n, n);
+        for i in 0..n - 1 {
+            d[(i, i)] = 1.0 + i as f64 / n as f64; // in [1, 2]
+        }
+        d[(n - 1, n - 1)] = 1e6;
+        let a = {
+            let mut m = q.matmul(&d).matmul(&q.transpose());
+            m.symmetrize();
+            m
+        };
+        let b = vec![1.0; n];
+        let cfg = CgConfig::with_tol(1e-10);
+        let defl = exact_deflation(&a, 1);
+        let deflated = solve(&DenseOp::new(&a), &b, None, Some(&defl), &cfg);
+        let plain = crate::solvers::cg::solve(&DenseOp::new(&a), &b, None, &cfg);
+        // κ_eff = 2 ⇒ very fast convergence.
+        assert!(deflated.iterations <= 15, "deflated took {}", deflated.iterations);
+        assert!(deflated.iterations < plain.iterations);
+    }
+
+    #[test]
+    fn falls_back_to_cg_on_rank_deficient_w() {
+        let mut rng = Rng::new(5);
+        let n = 10;
+        let a = Mat::rand_spd(n, 100.0, &mut rng);
+        let w = Mat::zeros(n, 2); // rank-0 basis: WᵀAW singular
+        let aw = Mat::zeros(n, 2);
+        let b = vec![1.0; n];
+        let r = solve(
+            &DenseOp::new(&a),
+            &b,
+            None,
+            Some(&Deflation::new(w, aw)),
+            &CgConfig::with_tol(1e-8),
+        );
+        assert_eq!(r.stop, StopReason::Converged);
+    }
+
+    #[test]
+    fn serialization_roundtrips() {
+        let mut rng = Rng::new(11);
+        let a = Mat::rand_spd(12, 100.0, &mut rng);
+        let defl = exact_deflation(&a, 3);
+        let bytes = defl.to_bytes();
+        let back = Deflation::from_bytes(&bytes).unwrap();
+        assert_eq!(back.k(), 3);
+        assert_eq!(defl.w.max_abs_diff(&back.w), 0.0);
+        assert_eq!(defl.aw.max_abs_diff(&back.aw), 0.0);
+    }
+
+    #[test]
+    fn deserialization_rejects_garbage() {
+        assert!(Deflation::from_bytes(b"short").is_err());
+        assert!(Deflation::from_bytes(b"WRONGMAGICxxxxxxxxxxxxxxxx").is_err());
+        let mut rng = Rng::new(12);
+        let a = Mat::rand_spd(6, 10.0, &mut rng);
+        let mut bytes = exact_deflation(&a, 2).to_bytes();
+        bytes.truncate(bytes.len() - 1);
+        assert!(Deflation::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn deserialized_basis_still_deflates() {
+        let mut rng = Rng::new(13);
+        let n = 50;
+        let a = Mat::rand_spd(n, 1e6, &mut rng);
+        let b = vec![1.0; n];
+        let cfg = CgConfig::with_tol(1e-8);
+        let defl = exact_deflation(&a, 6);
+        let restored = Deflation::from_bytes(&defl.to_bytes()).unwrap();
+        let plain = crate::solvers::cg::solve(&DenseOp::new(&a), &b, None, &cfg);
+        let deflated = solve(&DenseOp::new(&a), &b, None, Some(&restored), &cfg);
+        assert!(deflated.iterations < plain.iterations);
+    }
+
+    #[test]
+    fn refresh_recomputes_aw() {
+        let mut rng = Rng::new(6);
+        let n = 8;
+        let a1 = Mat::rand_spd(n, 10.0, &mut rng);
+        let a2 = Mat::rand_spd(n, 10.0, &mut rng);
+        let w = crate::linalg::qr::Qr::factor(&Mat::randn(n, 3, &mut rng)).thin_q();
+        let mut d = Deflation::new(w.clone(), a1.matmul(&w));
+        let cost = d.refresh(&DenseOp::new(&a2));
+        assert_eq!(cost, 3);
+        assert!(d.aw.max_abs_diff(&a2.matmul(&w)) < 1e-12);
+    }
+
+    #[test]
+    fn deflated_start_has_w_orthogonal_initial_residual() {
+        let mut rng = Rng::new(7);
+        let n = 20;
+        let a = Mat::rand_spd(n, 1e3, &mut rng);
+        let b: Vec<f64> = (0..n).map(|i| i as f64 - 10.0).collect();
+        let defl = exact_deflation(&a, 5);
+        let cfg = CgConfig { tol: 1e-16, max_iters: 1, store_l: 0, ..Default::default() };
+        // x0 far from solution
+        let x0 = vec![100.0; n];
+        let r = solve(&DenseOp::new(&a), &b, Some(&x0), Some(&defl), &cfg);
+        // matvecs: 1 for r₋₁ + 1 for the exact r₀ recompute + 1 per iteration
+        assert_eq!(r.matvecs, 3);
+        assert!(r.residuals[0] > 0.0);
+    }
+}

@@ -1,0 +1,175 @@
+//! Iterative and direct solvers for sequences of SPD systems.
+//!
+//! The module implements the paper's algorithmic core:
+//!
+//! * [`cg`] — the method of conjugate gradients (Hestenes–Stiefel) with a
+//!   per-iteration trace and optional storage of the first ℓ search
+//!   directions (the raw material for subspace recycling);
+//! * [`defcg`] — **deflated CG**, Algorithm 1 of the paper (Saad, Yeung,
+//!   Erhel & Guyomarc'h, 2000): CG preconditioned by the singular projector
+//!   `P_W = I − AW(WᵀAW)⁻¹Wᵀ`;
+//! * [`ritz`] — harmonic-Ritz extraction (Morgan, 1995; paper §2.3): builds
+//!   `F = (AZ)ᵀZ`, `G = (AZ)ᵀ(AZ)` from quantities stored during the CG
+//!   run and solves `G u = θ F u` for approximate eigenpairs;
+//! * [`recycle`] — the recycle manager that carries `(W, AW)` from system
+//!   `i` to system `i+1` (the "computational transfer learning" of §1);
+//! * [`lanczos`] — plain Lanczos tridiagonalization, an alternative Ritz
+//!   source and a spectrum-estimation tool;
+//! * [`direct`] — dense Cholesky baseline (the paper's exact reference).
+
+pub mod blockcg;
+pub mod cg;
+pub mod defcg;
+pub mod direct;
+pub mod lanczos;
+pub mod pcg;
+pub mod recycle;
+pub mod ritz;
+
+use crate::linalg::mat::Mat;
+
+/// Abstract SPD operator `y = A x`.
+///
+/// Implementations: dense in-core matrices ([`DenseOp`]), the GPC Newton
+/// system `A = I + H^½ K H^½` (`gp::laplace`), and the XLA-artifact-backed
+/// operator in `runtime` (the three-layer hot path).
+pub trait SpdOperator: Sync {
+    /// Problem dimension n.
+    fn n(&self) -> usize;
+
+    /// y = A x. `y.len() == x.len() == n`.
+    fn matvec(&self, x: &[f64], y: &mut [f64]);
+
+    /// Allocating convenience wrapper.
+    fn matvec_alloc(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.n()];
+        self.matvec(x, &mut y);
+        y
+    }
+}
+
+/// Dense in-core operator.
+pub struct DenseOp<'a> {
+    a: &'a Mat,
+}
+
+impl<'a> DenseOp<'a> {
+    pub fn new(a: &'a Mat) -> Self {
+        assert!(a.is_square(), "DenseOp needs a square matrix");
+        DenseOp { a }
+    }
+}
+
+impl<'a> SpdOperator for DenseOp<'a> {
+    fn n(&self) -> usize {
+        self.a.rows()
+    }
+
+    fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        self.a.matvec_into(x, y);
+    }
+}
+
+/// Why a solve stopped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopReason {
+    /// Relative residual dropped below tolerance.
+    Converged,
+    /// Iteration cap hit.
+    MaxIters,
+    /// Numerical breakdown (e.g. pᵀAp ≤ 0, which for true SPD A signals
+    /// accumulated round-off).
+    Breakdown,
+    /// Residual stopped improving (hit a numerical floor — e.g. the f32
+    /// precision of the XLA artifact path, or an inexact deflation basis).
+    Stagnated,
+}
+
+/// Quantities stored from the first ℓ iterations of a (deflated) CG run,
+/// exactly the inputs the harmonic-Ritz extraction needs (paper §2.3).
+/// Directions are stored **normalized** (‖p‖ = 1) with the matching scaling
+/// applied to A·p, which keeps the Gram matrices F, G well-scaled.
+#[derive(Clone, Debug, Default)]
+pub struct StoredDirections {
+    /// Normalized search directions, one column per stored iteration.
+    pub p: Vec<Vec<f64>>,
+    /// A times the stored (normalized) directions.
+    pub ap: Vec<Vec<f64>>,
+}
+
+impl StoredDirections {
+    pub fn len(&self) -> usize {
+        self.p.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.p.is_empty()
+    }
+
+    /// Stack stored directions as matrix columns: returns (P, AP).
+    pub fn as_mats(&self, n: usize) -> (Mat, Mat) {
+        let l = self.p.len();
+        let mut p = Mat::zeros(n, l);
+        let mut ap = Mat::zeros(n, l);
+        for j in 0..l {
+            p.set_col(j, &self.p[j]);
+            ap.set_col(j, &self.ap[j]);
+        }
+        (p, ap)
+    }
+}
+
+/// Result of one linear solve.
+#[derive(Clone, Debug)]
+pub struct SolveResult {
+    pub x: Vec<f64>,
+    /// ‖r_j‖ / ‖b‖ after each iteration, starting with iteration 0's
+    /// initial residual (so `residuals.len() == iterations + 1`).
+    pub residuals: Vec<f64>,
+    pub iterations: usize,
+    pub matvecs: usize,
+    pub stop: StopReason,
+    /// Stored direction/Ap pairs for recycling (empty if ℓ = 0).
+    pub stored: StoredDirections,
+    /// Wall-clock seconds spent inside the solver.
+    pub seconds: f64,
+}
+
+impl SolveResult {
+    /// Final relative residual.
+    pub fn final_residual(&self) -> f64 {
+        *self.residuals.last().unwrap_or(&f64::NAN)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dense_op_matches_mat() {
+        let mut rng = Rng::new(1);
+        let a = Mat::rand_spd(10, 100.0, &mut rng);
+        let op = DenseOp::new(&a);
+        assert_eq!(op.n(), 10);
+        let x: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        assert_eq!(op.matvec_alloc(&x), a.matvec(&x));
+    }
+
+    #[test]
+    fn stored_directions_stack() {
+        let mut sd = StoredDirections::default();
+        sd.p.push(vec![1.0, 0.0]);
+        sd.ap.push(vec![2.0, 0.0]);
+        sd.p.push(vec![0.0, 1.0]);
+        sd.ap.push(vec![0.0, 3.0]);
+        let (p, ap) = sd.as_mats(2);
+        assert_eq!(p[(0, 0)], 1.0);
+        assert_eq!(p[(1, 1)], 1.0);
+        assert_eq!(ap[(0, 0)], 2.0);
+        assert_eq!(ap[(1, 1)], 3.0);
+        assert_eq!(sd.len(), 2);
+        assert!(!sd.is_empty());
+    }
+}

@@ -1,0 +1,344 @@
+//! The recycle manager: subspace transfer across a sequence of systems.
+//!
+//! This is the "computational transfer learning" loop of the paper's §1:
+//! solve system `i`, extract harmonic Ritz vectors from the stored CG
+//! directions, and deflate system `i+1` with them. The manager owns the
+//! `(W, AW)` state, the def-CG(k, ℓ) hyperparameters, and the policy
+//! decisions the paper discusses in §3:
+//!
+//! * whether to refresh `AW` under the new operator (k extra matvecs,
+//!   exact deflation) or reuse the stale image (free, the paper's choice —
+//!   valid because consecutive Newton systems differ little);
+//! * whether to re-orthonormalize `W` when it degenerates (the stability
+//!   issue the paper blames for late-sequence stagnation).
+
+use crate::linalg::qr::mgs_orthonormalize;
+use crate::solvers::cg::CgConfig;
+use crate::solvers::defcg::{self, Deflation};
+use crate::solvers::ritz::{self, RitzConfig, RitzValue};
+use crate::solvers::{SolveResult, SpdOperator};
+
+/// Policy for keeping `AW` consistent across systems.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AwPolicy {
+    /// Reuse `A⁽ⁱ⁾W` as the image under `A⁽ⁱ⁺¹⁾`: zero matvecs, but the
+    /// deflation projector becomes inexact (error ∝ ‖A⁽ⁱ⁺¹⁾−A⁽ⁱ⁾‖) and the
+    /// solve can stall near tight tolerances — the instability the paper's
+    /// §3 discussion attributes stagnation to.
+    Reuse,
+    /// Recompute `AW` exactly with k matvecs per new system. This is what
+    /// the paper's overhead estimate accounts for ("W and AW are obtained
+    /// in O(n²(ℓ+1)k)"); required when solving below the drift level.
+    Refresh,
+    /// Reuse when the requested tolerance is loose (≥ 1e-6 — staleness can
+    /// stay below the target if the sequence drifts slowly), refresh when
+    /// the solve needs to go below the staleness floor. Cheaper than
+    /// Refresh but relies on def-CG's shift safeguard when the sequence
+    /// drifts fast (early Newton steps).
+    Auto,
+}
+
+/// def-CG(k, ℓ) hyperparameters plus policies.
+#[derive(Clone, Debug)]
+pub struct RecycleConfig {
+    /// Recycled subspace dimension (paper's k, Table 1 uses 8).
+    pub k: usize,
+    /// CG iterations whose directions are stored (paper's ℓ, Table 1: 12).
+    pub l: usize,
+    pub select: ritz::RitzSelect,
+    pub aw_policy: AwPolicy,
+    /// Re-orthonormalize W (and refresh AW) when its condition degrades.
+    pub stabilize: bool,
+}
+
+impl Default for RecycleConfig {
+    fn default() -> Self {
+        RecycleConfig {
+            k: 8,
+            l: 12,
+            select: ritz::RitzSelect::Largest,
+            // Refresh: exact deflation never harms convergence; its k
+            // matvecs/system are what the paper's own overhead estimate
+            // budgets for ("W and AW are obtained in O(n²(ℓ+1)k)").
+            aw_policy: AwPolicy::Refresh,
+            stabilize: false,
+        }
+    }
+}
+
+/// Statistics for one solved system in the sequence.
+#[derive(Clone, Debug)]
+pub struct SystemStats {
+    pub index: usize,
+    pub iterations: usize,
+    pub matvecs: usize,
+    pub final_residual: f64,
+    pub deflation_dim: usize,
+    pub ritz_values: Vec<f64>,
+    pub seconds: f64,
+}
+
+/// Carries the recycled subspace along a sequence of SPD systems.
+pub struct RecycleManager {
+    cfg: RecycleConfig,
+    defl: Option<Deflation>,
+    history: Vec<SystemStats>,
+}
+
+impl RecycleManager {
+    pub fn new(cfg: RecycleConfig) -> Self {
+        RecycleManager { cfg, defl: None, history: Vec::new() }
+    }
+
+    pub fn config(&self) -> &RecycleConfig {
+        &self.cfg
+    }
+
+    /// Current recycled basis dimension (0 before the first extraction).
+    pub fn k_active(&self) -> usize {
+        self.defl.as_ref().map(|d| d.k()).unwrap_or(0)
+    }
+
+    /// Current deflation state (for inspection / spectrum plots).
+    pub fn deflation(&self) -> Option<&Deflation> {
+        self.defl.as_ref()
+    }
+
+    /// Per-system statistics collected so far.
+    pub fn history(&self) -> &[SystemStats] {
+        &self.history
+    }
+
+    /// Seed the manager with an externally chosen basis (e.g. the a-priori
+    /// low-rank space of an inducing-point method, as §1.1 suggests).
+    pub fn seed(&mut self, a: &dyn SpdOperator, w: crate::linalg::Mat) {
+        let mut d = Deflation::new(w.clone(), crate::linalg::Mat::zeros(w.rows(), w.cols()));
+        d.refresh(a);
+        self.defl = Some(d);
+    }
+
+    /// Drop the recycled basis (next solve is plain CG).
+    pub fn reset(&mut self) {
+        self.defl = None;
+        self.history.clear();
+    }
+
+    /// Solve the next system in the sequence with def-CG(k, ℓ) using the
+    /// current recycled basis, then update the basis from the stored
+    /// directions. Returns the solver result.
+    pub fn solve_next(
+        &mut self,
+        a: &dyn SpdOperator,
+        b: &[f64],
+        x0: Option<&[f64]>,
+        solve_cfg: &CgConfig,
+    ) -> SolveResult {
+        let n = a.n();
+        let mut extra_matvecs = 0usize;
+
+        // Policy: refresh AW under the new operator if requested.
+        if let Some(d) = self.defl.as_mut() {
+            let refresh = match self.cfg.aw_policy {
+                AwPolicy::Refresh => true,
+                AwPolicy::Reuse => false,
+                AwPolicy::Auto => solve_cfg.tol < 1e-6,
+            };
+            if refresh {
+                extra_matvecs += d.refresh(a);
+            }
+            if self.cfg.stabilize {
+                // Re-orthonormalize W when its Gram matrix is far from I,
+                // then AW must be recomputed (k matvecs).
+                let gram = d.w.t_matmul(&d.w);
+                let dev = gram.max_abs_diff(&crate::linalg::Mat::identity(d.k()));
+                if dev > 1e-4 {
+                    let w = mgs_orthonormalize(&d.w, None, 1e-12);
+                    let mut nd = Deflation::new(
+                        w.clone(),
+                        crate::linalg::Mat::zeros(n, w.cols()),
+                    );
+                    extra_matvecs += nd.refresh(a);
+                    *d = nd;
+                }
+            }
+        }
+
+        let cfg = CgConfig { store_l: self.cfg.l, ..solve_cfg.clone() };
+        let mut result = defcg::solve(a, b, x0, self.defl.as_ref(), &cfg);
+        result.matvecs += extra_matvecs;
+
+        // Extract the next basis from this run's stored directions.
+        let ritz_cfg = RitzConfig {
+            k: self.cfg.k,
+            select: self.cfg.select,
+            min_col_norm: 1e-10,
+        };
+        let mut ritz_values: Vec<f64> = Vec::new();
+        if let Some((defl, vals)) = ritz::extract(self.defl.as_ref(), &result.stored, n, &ritz_cfg)
+        {
+            ritz_values = vals.iter().map(|v: &RitzValue| v.theta).collect();
+            self.defl = Some(defl);
+        }
+
+        self.history.push(SystemStats {
+            index: self.history.len(),
+            iterations: result.iterations,
+            matvecs: result.matvecs,
+            final_residual: result.final_residual(),
+            deflation_dim: self.k_active(),
+            ritz_values,
+            seconds: result.seconds,
+        });
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::mat::Mat;
+    use crate::solvers::{DenseOp, StopReason};
+    use crate::util::rng::Rng;
+
+    /// A slowly drifting sequence of SPD matrices: A_i = A + εᵢ Δ,
+    /// mimicking the Newton sequence of the paper (consecutive systems
+    /// differ less and less).
+    fn drifting_sequence(n: usize, count: usize, seed: u64) -> Vec<Mat> {
+        let mut rng = Rng::new(seed);
+        let a0 = Mat::rand_spd(n, 1e4, &mut rng);
+        let mut delta = Mat::randn(n, n, &mut rng);
+        delta.symmetrize();
+        delta.scale_in_place(1e-3 / n as f64);
+        (0..count)
+            .map(|i| {
+                let mut a = a0.clone();
+                let scale = 1.0 / (1.0 + i as f64); // shrinking drift
+                let mut d = delta.clone();
+                d.scale_in_place(scale);
+                a.add_in_place(&d);
+                // keep strictly SPD
+                a.add_diag(1e-6);
+                a
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sequence_iterations_decrease_with_recycling() {
+        let n = 90;
+        let seq = drifting_sequence(n, 5, 11);
+        let b: Vec<f64> = (0..n).map(|i| 1.0 + (i % 7) as f64).collect();
+        let solve_cfg = CgConfig { tol: 1e-8, max_iters: 50_000, store_l: 0, ..Default::default() };
+
+        let mut mgr = RecycleManager::new(RecycleConfig { k: 8, l: 12, ..Default::default() });
+        let mut plain_iters = Vec::new();
+        let mut recycled_iters = Vec::new();
+        for a in &seq {
+            let op = DenseOp::new(a);
+            let plain = crate::solvers::cg::solve(&op, &b, None, &solve_cfg);
+            assert_eq!(plain.stop, StopReason::Converged);
+            let rec = mgr.solve_next(&op, &b, None, &solve_cfg);
+            assert_eq!(rec.stop, StopReason::Converged);
+            plain_iters.push(plain.iterations);
+            recycled_iters.push(rec.iterations);
+        }
+        // First system: no basis yet, so identical to plain CG.
+        assert_eq!(plain_iters[0], recycled_iters[0]);
+        // Every later system must need fewer iterations than plain CG.
+        for i in 1..seq.len() {
+            assert!(
+                recycled_iters[i] < plain_iters[i],
+                "system {i}: recycled {} >= plain {}",
+                recycled_iters[i],
+                plain_iters[i]
+            );
+        }
+    }
+
+    #[test]
+    fn history_records_every_system() {
+        let n = 40;
+        let seq = drifting_sequence(n, 3, 12);
+        let b = vec![1.0; n];
+        let mut mgr = RecycleManager::new(RecycleConfig { k: 4, l: 6, ..Default::default() });
+        for a in &seq {
+            mgr.solve_next(&DenseOp::new(a), &b, None, &CgConfig::with_tol(1e-6));
+        }
+        assert_eq!(mgr.history().len(), 3);
+        assert_eq!(mgr.history()[0].index, 0);
+        assert!(mgr.history()[1].deflation_dim > 0);
+        assert!(mgr.history()[2].ritz_values.len() <= 4);
+    }
+
+    #[test]
+    fn refresh_policy_costs_k_matvecs_but_stays_correct() {
+        let n = 50;
+        let seq = drifting_sequence(n, 3, 13);
+        let b = vec![1.0; n];
+        let cfg = RecycleConfig {
+            k: 5,
+            l: 8,
+            aw_policy: AwPolicy::Refresh,
+            ..Default::default()
+        };
+        let mut mgr = RecycleManager::new(cfg);
+        for a in &seq {
+            let r = mgr.solve_next(&DenseOp::new(a), &b, None, &CgConfig::with_tol(1e-8));
+            assert_eq!(r.stop, StopReason::Converged);
+            // solution check
+            let ax = a.matvec(&r.x);
+            let num: f64 = ax.iter().zip(&b).map(|(u, v)| (u - v).powi(2)).sum();
+            assert!(num.sqrt() / (n as f64).sqrt() < 1e-6);
+        }
+        // Refresh happened on systems 2 and 3 (k matvecs each).
+        assert!(mgr.history()[1].matvecs > mgr.history()[1].iterations);
+    }
+
+    #[test]
+    fn seed_with_external_basis() {
+        let n = 40;
+        let mut rng = Rng::new(14);
+        let a = Mat::rand_spd(n, 1e5, &mut rng);
+        let w = crate::linalg::qr::Qr::factor(&Mat::randn(n, 6, &mut rng)).thin_q();
+        let mut mgr = RecycleManager::new(RecycleConfig::default());
+        mgr.seed(&DenseOp::new(&a), w);
+        assert_eq!(mgr.k_active(), 6);
+        let b = vec![1.0; n];
+        let r = mgr.solve_next(&DenseOp::new(&a), &b, None, &CgConfig::with_tol(1e-8));
+        assert_eq!(r.stop, StopReason::Converged);
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let n = 30;
+        let seq = drifting_sequence(n, 2, 15);
+        let b = vec![1.0; n];
+        let mut mgr = RecycleManager::new(RecycleConfig::default());
+        for a in &seq {
+            mgr.solve_next(&DenseOp::new(a), &b, None, &CgConfig::with_tol(1e-6));
+        }
+        assert!(mgr.k_active() > 0);
+        mgr.reset();
+        assert_eq!(mgr.k_active(), 0);
+        assert!(mgr.history().is_empty());
+    }
+
+    #[test]
+    fn stabilize_keeps_w_well_conditioned() {
+        let n = 60;
+        let seq = drifting_sequence(n, 6, 16);
+        let b = vec![1.0; n];
+        let cfg = RecycleConfig { k: 6, l: 10, stabilize: true, ..Default::default() };
+        let mut mgr = RecycleManager::new(cfg);
+        for a in &seq {
+            mgr.solve_next(&DenseOp::new(a), &b, None, &CgConfig::with_tol(1e-8));
+        }
+        if let Some(d) = mgr.deflation() {
+            let gram = d.w.t_matmul(&d.w);
+            // Diagonal should be ~1 (normalized columns); off-diagonal bounded.
+            for i in 0..d.k() {
+                assert!((gram[(i, i)] - 1.0).abs() < 1e-6);
+            }
+        }
+    }
+}

@@ -1,0 +1,170 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup, repeated timed runs, and a mean/σ/percentile report.
+//! All `benches/*.rs` binaries are `harness = false` and drive this module;
+//! `cargo bench` therefore produces one aligned report per paper table or
+//! figure.
+
+use crate::util::stats::Summary;
+use crate::util::table::{fix, Table};
+use std::time::Instant;
+
+/// Configuration for one benchmark group.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    /// Warmup iterations (not recorded).
+    pub warmup: usize,
+    /// Recorded iterations.
+    pub iters: usize,
+    /// Hard cap on total recorded time (seconds); stops early when exceeded.
+    pub max_seconds: f64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup: 2, iters: 10, max_seconds: 30.0 }
+    }
+}
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+    /// Optional throughput denominator (e.g. FLOPs or items per iteration);
+    /// if set, the report includes an ops/s column.
+    pub work_per_iter: Option<f64>,
+}
+
+/// A group of related benchmark cases that renders a single report.
+pub struct BenchGroup {
+    title: String,
+    cfg: BenchConfig,
+    results: Vec<BenchResult>,
+}
+
+impl BenchGroup {
+    pub fn new(title: &str) -> Self {
+        // Smoke-mode lets `cargo bench` finish quickly in CI:
+        // KRR_BENCH_FAST=1 shrinks the iteration counts.
+        let mut cfg = BenchConfig::default();
+        if std::env::var("KRR_BENCH_FAST").is_ok() {
+            cfg = BenchConfig { warmup: 1, iters: 3, max_seconds: 5.0 };
+        }
+        BenchGroup { title: title.to_string(), cfg, results: Vec::new() }
+    }
+
+    pub fn with_config(mut self, cfg: BenchConfig) -> Self {
+        if std::env::var("KRR_BENCH_FAST").is_err() {
+            self.cfg = cfg;
+        }
+        self
+    }
+
+    /// Time `f` repeatedly; `f` is the full measured unit (per-iteration).
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) {
+        self.bench_with_work(name, None, &mut f)
+    }
+
+    /// Like `bench`, with a throughput denominator per iteration.
+    pub fn bench_with_work(&mut self, name: &str, work: Option<f64>, f: &mut dyn FnMut()) {
+        for _ in 0..self.cfg.warmup {
+            f();
+        }
+        let mut times = Vec::with_capacity(self.cfg.iters);
+        let budget_start = Instant::now();
+        for _ in 0..self.cfg.iters {
+            let t = Instant::now();
+            f();
+            times.push(t.elapsed().as_secs_f64());
+            if budget_start.elapsed().as_secs_f64() > self.cfg.max_seconds {
+                break;
+            }
+        }
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            summary: Summary::of(&times),
+            work_per_iter: work,
+        });
+    }
+
+    /// Render the report table and write CSV under results/bench_<slug>.csv.
+    pub fn report(&self) {
+        let has_tp = self.results.iter().any(|r| r.work_per_iter.is_some());
+        let mut header = vec!["case", "n", "mean [ms]", "std [ms]", "p50 [ms]", "p99 [ms]"];
+        if has_tp {
+            header.push("Mops/s");
+        }
+        let mut t = Table::new(&self.title, &header).align(0, crate::util::table::Align::Left);
+        for r in &self.results {
+            let s = &r.summary;
+            let mut row = vec![
+                r.name.clone(),
+                format!("{}", s.n),
+                fix(s.mean * 1e3, 3),
+                fix(s.std * 1e3, 3),
+                fix(s.p50 * 1e3, 3),
+                fix(s.p99 * 1e3, 3),
+            ];
+            if has_tp {
+                row.push(match r.work_per_iter {
+                    Some(w) => fix(w / s.mean / 1e6, 1),
+                    None => "-".to_string(),
+                });
+            }
+            t.row(row);
+        }
+        println!("{}", t.render());
+        let slug: String = self
+            .title
+            .chars()
+            .map(|c| if c.is_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+            .collect();
+        if let Ok(p) = t.save_csv(&format!("bench_{slug}")) {
+            println!("(csv: {})\n", p.display());
+        }
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_records_iters() {
+        let mut g = BenchGroup::new("test group")
+            .with_config(BenchConfig { warmup: 1, iters: 5, max_seconds: 10.0 });
+        let mut x = 0u64;
+        g.bench("noop-ish", || {
+            x = x.wrapping_add(1);
+            std::hint::black_box(x);
+        });
+        // KRR_BENCH_FAST may shrink iters to 3.
+        assert!(g.results()[0].summary.n >= 3);
+        assert!(g.results()[0].summary.mean >= 0.0);
+    }
+
+    #[test]
+    fn throughput_column() {
+        let mut g = BenchGroup::new("tp")
+            .with_config(BenchConfig { warmup: 0, iters: 3, max_seconds: 10.0 });
+        g.bench_with_work("work", Some(1e6), &mut || {
+            std::thread::sleep(std::time::Duration::from_micros(100));
+        });
+        let r = &g.results()[0];
+        assert_eq!(r.work_per_iter, Some(1e6));
+        assert!(r.summary.mean > 0.0);
+    }
+
+    #[test]
+    fn budget_stops_early() {
+        let mut g = BenchGroup::new("budget")
+            .with_config(BenchConfig { warmup: 0, iters: 1000, max_seconds: 0.05 });
+        g.bench("sleepy", || std::thread::sleep(std::time::Duration::from_millis(10)));
+        assert!(g.results()[0].summary.n < 1000);
+    }
+}

@@ -1,0 +1,308 @@
+//! A tiny declarative CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! defaults, typed accessors and auto-generated `--help` text. Used by the
+//! `krr` binary and every example.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Parse failure (unknown option, missing value, bad type).
+#[derive(Debug, Clone)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+#[derive(Clone)]
+struct OptSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative command-line spec.
+pub struct Cli {
+    program: String,
+    about: String,
+    opts: Vec<OptSpec>,
+    positional: Vec<(String, String)>, // (name, help)
+}
+
+/// Parsed argument values.
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    positional: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(program: &str, about: &str) -> Self {
+        Cli {
+            program: program.to_string(),
+            about: about.to_string(),
+            opts: Vec::new(),
+            positional: Vec::new(),
+        }
+    }
+
+    /// Register `--name <value>` with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Register `--name <value>` that is required (no default).
+    pub fn req(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Register a boolean `--name` flag (default false).
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    /// Register a positional argument (for help text only; all extra
+    /// non-option tokens are collected in order).
+    pub fn pos(mut self, name: &str, help: &str) -> Self {
+        self.positional.push((name.to_string(), help.to_string()));
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.program, self.about, self.program);
+        for (p, _) in &self.positional {
+            s.push_str(&format!(" <{p}>"));
+        }
+        s.push_str(" [OPTIONS]\n");
+        if !self.positional.is_empty() {
+            s.push_str("\nARGS:\n");
+            for (p, h) in &self.positional {
+                s.push_str(&format!("  <{p:<14}> {h}\n"));
+            }
+        }
+        s.push_str("\nOPTIONS:\n");
+        for o in &self.opts {
+            let lhs = if o.is_flag {
+                format!("--{}", o.name)
+            } else {
+                format!("--{} <v>", o.name)
+            };
+            let dflt = match &o.default {
+                Some(d) => format!(" [default: {d}]"),
+                None if o.is_flag => String::new(),
+                None => " [required]".to_string(),
+            };
+            s.push_str(&format!("  {lhs:<22} {}{dflt}\n", o.help));
+        }
+        s.push_str("  --help                 print this help\n");
+        s
+    }
+
+    /// Parse a token stream (exclusive of argv[0]).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut values = BTreeMap::new();
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        for o in &self.opts {
+            if o.is_flag {
+                flags.insert(o.name.clone(), false);
+            } else if let Some(d) = &o.default {
+                values.insert(o.name.clone(), d.clone());
+            }
+        }
+        let mut it = argv.iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(CliError(self.help_text()));
+            }
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| CliError(format!("unknown option --{name}")))?;
+                if spec.is_flag {
+                    if inline.is_some() {
+                        return Err(CliError(format!("flag --{name} takes no value")));
+                    }
+                    flags.insert(name, true);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .cloned()
+                            .ok_or_else(|| CliError(format!("--{name} needs a value")))?,
+                    };
+                    values.insert(name, v);
+                }
+            } else {
+                positional.push(tok.clone());
+            }
+        }
+        for o in &self.opts {
+            if !o.is_flag && o.default.is_none() && !values.contains_key(&o.name) {
+                return Err(CliError(format!("missing required option --{}", o.name)));
+            }
+        }
+        Ok(Args { values, flags, positional })
+    }
+
+    /// Parse the real process arguments; print help and exit on `--help`.
+    pub fn parse_env(&self) -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse(&argv) {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("{e}");
+                std::process::exit(if e.0.contains("USAGE:") { 0 } else { 2 });
+            }
+        }
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option --{name} not registered"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{}'", self.get(name)))
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{}'", self.get(name)))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects a float, got '{}'", self.get(name)))
+    }
+
+    pub fn get_flag(&self, name: &str) -> bool {
+        *self
+            .flags
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} not registered"))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Parse a comma-separated list of values, e.g. `--sizes 128,256,512`.
+    pub fn get_list_usize(&self, name: &str) -> Vec<usize> {
+        self.get(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .unwrap_or_else(|_| panic!("--{name}: bad integer '{s}'"))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("n", "100", "size")
+            .opt("tol", "1e-5", "tolerance")
+            .flag("verbose", "chatty")
+            .req("name", "required name")
+            .pos("cmd", "subcommand")
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cli().parse(&sv(&["--name", "x"])).unwrap();
+        assert_eq!(a.get_usize("n"), 100);
+        assert_eq!(a.get_f64("tol"), 1e-5);
+        assert!(!a.get_flag("verbose"));
+    }
+
+    #[test]
+    fn explicit_values_and_flags() {
+        let a = cli()
+            .parse(&sv(&["run", "--n", "42", "--verbose", "--name=abc", "--tol=1e-8"]))
+            .unwrap();
+        assert_eq!(a.get_usize("n"), 42);
+        assert_eq!(a.get("name"), "abc");
+        assert!(a.get_flag("verbose"));
+        assert_eq!(a.get_f64("tol"), 1e-8);
+        assert_eq!(a.positional(), &["run".to_string()]);
+    }
+
+    #[test]
+    fn missing_required_fails() {
+        assert!(cli().parse(&sv(&[])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_fails() {
+        assert!(cli().parse(&sv(&["--name", "x", "--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_fails() {
+        assert!(cli().parse(&sv(&["--name"])).is_err());
+    }
+
+    #[test]
+    fn help_contains_options() {
+        let h = cli().help_text();
+        assert!(h.contains("--tol"));
+        assert!(h.contains("[default: 1e-5]"));
+        assert!(h.contains("[required]"));
+    }
+
+    #[test]
+    fn list_parsing() {
+        let c = Cli::new("t", "t").opt("sizes", "1,2,3", "sizes");
+        let a = c.parse(&sv(&["--sizes", "128, 256,512"])).unwrap();
+        assert_eq!(a.get_list_usize("sizes"), vec![128, 256, 512]);
+    }
+}

@@ -1,0 +1,118 @@
+//! Leveled, timestamped logging to stderr.
+//!
+//! A global atomic level filter and `info!`/`debug!`/`warn!`-style macros.
+//! No external crates: the timestamp is seconds since process start, which
+//! is what you want when reading solver traces anyway.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+/// Severity levels, ordered.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// Process start reference for log timestamps.
+pub fn t0() -> Instant {
+    use std::sync::OnceLock;
+    static T0: OnceLock<Instant> = OnceLock::new();
+    *T0.get_or_init(Instant::now)
+}
+
+/// Set the global log level.
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// Set level from a string ("error".."trace"); unknown strings keep Info.
+pub fn set_level_str(s: &str) {
+    let l = match s {
+        "error" => Level::Error,
+        "warn" => Level::Warn,
+        "info" => Level::Info,
+        "debug" => Level::Debug,
+        "trace" => Level::Trace,
+        _ => Level::Info,
+    };
+    set_level(l);
+}
+
+/// Whether a message at `l` would be emitted.
+pub fn enabled(l: Level) -> bool {
+    (l as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit a log record (used by the macros).
+pub fn emit(l: Level, module: &str, msg: std::fmt::Arguments<'_>) {
+    if !enabled(l) {
+        return;
+    }
+    let dt = t0().elapsed().as_secs_f64();
+    let tag = match l {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+        Level::Trace => "TRACE",
+    };
+    eprintln!("[{dt:10.3}s {tag} {module}] {msg}");
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($a:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Error, module_path!(), format_args!($($a)*)) };
+}
+#[macro_export]
+macro_rules! log_warn {
+    ($($a:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Warn, module_path!(), format_args!($($a)*)) };
+}
+#[macro_export]
+macro_rules! log_info {
+    ($($a:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Info, module_path!(), format_args!($($a)*)) };
+}
+#[macro_export]
+macro_rules! log_debug {
+    ($($a:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Debug, module_path!(), format_args!($($a)*)) };
+}
+#[macro_export]
+macro_rules! log_trace {
+    ($($a:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Trace, module_path!(), format_args!($($a)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_filtering() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info); // restore default for other tests
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+    }
+
+    #[test]
+    fn level_str_parsing() {
+        set_level_str("trace");
+        assert!(enabled(Level::Trace));
+        set_level_str("bogus"); // falls back to info
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+    }
+
+    #[test]
+    fn emit_does_not_panic() {
+        log_info!("hello {}", 42);
+        log_debug!("filtered out");
+    }
+}

@@ -1,0 +1,18 @@
+//! Hand-rolled utility substrates.
+//!
+//! The build environment is fully offline, so every generic dependency a
+//! project of this kind would normally pull from crates.io (an async
+//! runtime, a CLI parser, a JSON codec, a PRNG, a property-testing
+//! framework, a benchmark harness) is implemented here from scratch.
+//! Each submodule is deliberately small, dependency-free and unit-tested.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod pool;
+pub mod quickprop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod timer;

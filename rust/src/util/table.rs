@@ -1,0 +1,175 @@
+//! Aligned text tables and CSV output for experiment reports.
+//!
+//! Every experiment in `experiments/` renders its results with this module
+//! so that `krr table1` prints something visually comparable to the paper's
+//! Table 1, and simultaneously writes machine-readable CSV to `results/`.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+/// Column alignment.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple table: header row + data rows of strings.
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            aligns: vec![Align::Right; header.len()],
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn align(mut self, col: usize, a: Align) -> Self {
+        self.aligns[col] = a;
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render as an aligned text table.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut w = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            w[i] = w[i].max(h.chars().count());
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(out, "## {}", self.title);
+        }
+        let fmt_row = |cells: &[String], w: &[usize], aligns: &[Align]| -> String {
+            let mut line = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                let pad = w[i] - c.chars().count();
+                match aligns[i] {
+                    Align::Left => {
+                        let _ = write!(line, " {}{} |", c, " ".repeat(pad));
+                    }
+                    Align::Right => {
+                        let _ = write!(line, " {}{} |", " ".repeat(pad), c);
+                    }
+                }
+            }
+            line
+        };
+        let _ = writeln!(out, "{}", fmt_row(&self.header, &w, &self.aligns));
+        let mut sep = String::from("|");
+        for wi in &w {
+            let _ = write!(sep, "{}|", "-".repeat(wi + 2));
+        }
+        let _ = writeln!(out, "{sep}");
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(r, &w, &self.aligns));
+        }
+        out
+    }
+
+    /// Render as CSV (RFC-4180-ish quoting).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| -> String {
+            if s.contains([',', '"', '\n']) {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{}",
+            self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",")
+        );
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        }
+        out
+    }
+
+    /// Write CSV under `results/<name>.csv` (creating the directory).
+    pub fn save_csv(&self, name: &str) -> std::io::Result<std::path::PathBuf> {
+        let dir = Path::new("results");
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{name}.csv"));
+        let mut f = std::fs::File::create(&path)?;
+        f.write_all(self.to_csv().as_bytes())?;
+        Ok(path)
+    }
+}
+
+/// Format a float in scientific notation like the paper ("8.573e-03").
+pub fn sci(x: f64) -> String {
+    format!("{x:.3e}")
+}
+
+/// Format a float with fixed decimals.
+pub fn fix(x: f64, d: usize) -> String {
+    format!("{x:.d$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_aligns_columns() {
+        let mut t = Table::new("demo", &["it", "value"]).align(0, Align::Left);
+        t.row(vec!["1".into(), "-4926.523".into()]);
+        t.row(vec!["10".into(), "-1.2".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert!(lines[0].starts_with("## demo"));
+        // all table lines equal width
+        let widths: Vec<usize> = lines[1..].iter().map(|l| l.chars().count()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]), "{s}");
+        assert!(s.contains("| 1  |"));
+    }
+
+    #[test]
+    fn csv_quoting() {
+        let mut t = Table::new("", &["a", "b"]);
+        t.row(vec!["x,y".into(), "he said \"hi\"".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"he said \"\"hi\"\"\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        let mut t = Table::new("", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn sci_matches_paper_style() {
+        assert_eq!(sci(8.573e-3), "8.573e-3");
+        assert_eq!(fix(-4926.5231, 3), "-4926.523");
+    }
+}

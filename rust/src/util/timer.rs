@@ -1,0 +1,88 @@
+//! Wall-clock timing helpers and a cumulative stopwatch.
+
+use std::time::{Duration, Instant};
+
+/// Time a closure, returning (result, seconds).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let start = Instant::now();
+    let out = f();
+    (out, start.elapsed().as_secs_f64())
+}
+
+/// A stopwatch that can be started/stopped repeatedly and accumulates.
+/// Used for the paper's "cumulative runtime" columns (Table 1).
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    total: Duration,
+    started: Option<Instant>,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Stopwatch { total: Duration::ZERO, started: None }
+    }
+
+    pub fn start(&mut self) {
+        assert!(self.started.is_none(), "Stopwatch already running");
+        self.started = Some(Instant::now());
+    }
+
+    pub fn stop(&mut self) {
+        let s = self.started.take().expect("Stopwatch not running");
+        self.total += s.elapsed();
+    }
+
+    /// Run a closure with the watch running.
+    pub fn measure<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        self.start();
+        let out = f();
+        self.stop();
+        out
+    }
+
+    /// Cumulative elapsed seconds (excluding a currently-running segment).
+    pub fn seconds(&self) -> f64 {
+        self.total.as_secs_f64()
+    }
+
+    pub fn reset(&mut self) {
+        self.total = Duration::ZERO;
+        self.started = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_returns_result() {
+        let (v, t) = time_it(|| 2 + 2);
+        assert_eq!(v, 4);
+        assert!(t >= 0.0);
+    }
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut w = Stopwatch::new();
+        w.measure(|| std::thread::sleep(Duration::from_millis(5)));
+        let t1 = w.seconds();
+        assert!(t1 >= 0.004, "t1={t1}");
+        w.measure(|| std::thread::sleep(Duration::from_millis(5)));
+        assert!(w.seconds() > t1);
+        w.reset();
+        assert_eq!(w.seconds(), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "not running")]
+    fn stop_without_start_panics() {
+        Stopwatch::new().stop();
+    }
+}

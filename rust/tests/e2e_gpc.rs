@@ -1,0 +1,138 @@
+//! End-to-end integration: the full GPC pipeline on the native backend.
+//!
+//! Exercises data generation → Gram assembly → Laplace/Newton → recycled
+//! def-CG → prediction, and cross-checks the three solver backends, the
+//! coordinator service, and the hyperparameter loop at a size that keeps
+//! CI fast but non-trivial.
+
+use krr::coordinator::SolveService;
+use krr::data::digits::{generate, DigitsConfig};
+use krr::gp::kernel::RbfKernel;
+use krr::gp::laplace::{DenseKernel, LaplaceConfig, LaplaceGpc, SolverBackend};
+use krr::solvers::cg::CgConfig;
+use krr::solvers::recycle::RecycleConfig;
+use krr::solvers::SpdOperator;
+use std::sync::Arc;
+
+const N: usize = 128;
+
+fn fit(backend: SolverBackend) -> krr::gp::laplace::LaplaceFit {
+    let ds = generate(&DigitsConfig { n: N, seed: 21, ..Default::default() });
+    let k = DenseKernel::new(RbfKernel::new(1.0, 10.0).gram(&ds.x));
+    let cfg = LaplaceConfig {
+        solver: backend,
+        solve_tol: 1e-6,
+        newton_tol: 1e-2,
+        max_newton: 15,
+        ..Default::default()
+    };
+    LaplaceGpc::new(&k, &ds.y, cfg).fit()
+}
+
+#[test]
+fn three_backends_reach_the_same_mode() {
+    let chol = fit(SolverBackend::Cholesky);
+    let cg = fit(SolverBackend::Cg);
+    let defcg = fit(SolverBackend::DefCg(RecycleConfig {
+        k: 8,
+        l: 12,
+        ..Default::default()
+    }));
+    assert!(chol.converged && cg.converged && defcg.converged);
+    let c = chol.final_log_lik();
+    for (name, f) in [("cg", &cg), ("defcg", &defcg)] {
+        let d = (f.final_log_lik() - c).abs() / c.abs();
+        assert!(d < 1e-3, "{name} diverged from cholesky: {d}");
+    }
+    // Recycling must save iterations overall (systems 2+).
+    let tail = |f: &krr::gp::laplace::LaplaceFit| {
+        f.steps.iter().skip(1).map(|s| s.solver_iterations).sum::<usize>()
+    };
+    assert!(tail(&defcg) < tail(&cg));
+}
+
+#[test]
+fn classification_quality_on_heldout_data() {
+    let all = generate(&DigitsConfig { n: N + 40, seed: 22, ..Default::default() });
+    let mut rng = krr::util::rng::Rng::new(5);
+    let (train, test) = all.split(N as f64 / all.n() as f64, &mut rng);
+    let kernel = RbfKernel::new(1.0, 10.0);
+    let k = DenseKernel::new(kernel.gram(&train.x));
+    let mut gpc = LaplaceGpc::new(
+        &k,
+        &train.y,
+        LaplaceConfig {
+            solver: SolverBackend::DefCg(RecycleConfig::default()),
+            solve_tol: 1e-6,
+            newton_tol: 1e-2,
+            max_newton: 15,
+            ..Default::default()
+        },
+    );
+    let fit = gpc.fit();
+    let cross = kernel.cross_gram(&train.x, &test.x);
+    let f_test = gpc.predict_latent(&cross, &fit);
+    let acc = test
+        .y
+        .iter()
+        .zip(&f_test)
+        .filter(|(&y, &f)| y * f > 0.0)
+        .count() as f64
+        / test.n() as f64;
+    assert!(acc > 0.9, "held-out accuracy {acc}");
+}
+
+#[test]
+fn coordinator_runs_the_newton_sequence() {
+    // Drive the Newton systems through the coordinator service, as the
+    // solver_service example does, and verify recycling kicks in.
+    struct NewtonOp {
+        k: krr::linalg::Mat,
+        s: Vec<f64>,
+    }
+    impl SpdOperator for NewtonOp {
+        fn n(&self) -> usize {
+            self.s.len()
+        }
+        fn matvec(&self, x: &[f64], y: &mut [f64]) {
+            let n = self.s.len();
+            let sx: Vec<f64> = (0..n).map(|i| self.s[i] * x[i]).collect();
+            let ksx = self.k.matvec(&sx);
+            for i in 0..n {
+                y[i] = x[i] + self.s[i] * ksx[i];
+            }
+        }
+    }
+    let ds = generate(&DigitsConfig { n: N, seed: 23, ..Default::default() });
+    let k = RbfKernel::new(1.0, 10.0).gram(&ds.x);
+    let svc = SolveService::new(2);
+    let seq = svc.open_sequence(RecycleConfig { k: 6, l: 10, ..Default::default() });
+    let mut iters = Vec::new();
+    for i in 0..4 {
+        let s: Vec<f64> = (0..N).map(|j| 0.5 - 0.03 * i as f64 + 1e-3 * (j % 7) as f64).collect();
+        let op = Arc::new(NewtonOp { k: k.clone(), s });
+        let b: Vec<f64> = ds.y.iter().map(|&v| v * 0.5).collect();
+        let r = seq.submit(op, b, None, CgConfig::with_tol(1e-6)).wait();
+        assert_eq!(r.stop, krr::solvers::StopReason::Converged);
+        iters.push(r.iterations);
+    }
+    assert!(iters[3] < iters[0], "no recycling benefit: {iters:?}");
+}
+
+#[test]
+fn hyperparameter_search_agrees_across_backends() {
+    let ds = generate(&DigitsConfig { n: 64, seed: 24, ..Default::default() });
+    let cg = krr::gp::hyper::grid_search(&ds, &[1.0], &[3.0, 10.0, 30.0], SolverBackend::Cg, 8);
+    let def = krr::gp::hyper::grid_search(
+        &ds,
+        &[1.0],
+        &[3.0, 10.0, 30.0],
+        SolverBackend::DefCg(RecycleConfig::default()),
+        8,
+    );
+    assert_eq!(cg.best.lengthscale, def.best.lengthscale);
+    let tot = |r: &krr::gp::hyper::HyperSearchResult| {
+        r.evaluated.iter().map(|p| p.solver_iterations).sum::<usize>()
+    };
+    assert!(tot(&def) <= tot(&cg));
+}

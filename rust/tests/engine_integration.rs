@@ -1,0 +1,277 @@
+//! Integration: the AOT engine path vs the rust-native reference path.
+//!
+//! These tests require `make artifacts` to have run (they skip gracefully
+//! otherwise, printing a notice) and check the cross-layer contract: the
+//! L1/L2 jax/pallas computations loaded through PJRT must agree with the
+//! independent rust implementations to f32 precision.
+
+use krr::data::digits::{generate, DigitsConfig};
+use krr::gp::kernel::RbfKernel;
+use krr::gp::laplace::{DenseKernel, KernelOp, LaplaceConfig, LaplaceGpc, SolverBackend};
+use krr::linalg::mat::Mat;
+use krr::runtime::engine::{Engine, Tensor};
+use krr::runtime::ops::{EngineKernel, EngineMatrixFreeKernel, EngineSpdOperator};
+use krr::solvers::cg::{self, CgConfig};
+use krr::solvers::{SpdOperator, StopReason};
+use krr::util::rng::Rng;
+use std::sync::Arc;
+
+const ARTIFACTS: &str = "artifacts";
+const N: usize = 64; // must be one of the manifest sizes
+
+fn engine() -> Option<Arc<Engine>> {
+    if !Engine::available(ARTIFACTS) {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Arc::new(Engine::load(ARTIFACTS).expect("engine load")))
+}
+
+/// Feature tensor for N digit images.
+fn features() -> (Tensor, Vec<f64>, Mat) {
+    let ds = generate(&DigitsConfig { n: N, seed: 42, ..Default::default() });
+    let x32 = Tensor::mat(N, 784, ds.x.to_f32());
+    (x32, ds.y.clone(), ds.x)
+}
+
+#[test]
+fn gram_artifact_matches_native_kernel() {
+    let Some(eng) = engine() else { return };
+    let (x32, _y, x) = features();
+    let (amp, ls) = (1.3, 9.0);
+    let out = eng
+        .call(
+            &format!("gram_n{N}"),
+            &[x32, Tensor::param(amp as f32), Tensor::param(ls as f32)],
+        )
+        .unwrap();
+    let native = RbfKernel::new(amp, ls).gram(&x);
+    let got = Mat::from_f32(N, N, &out[0].data);
+    let diff = got.max_abs_diff(&native);
+    assert!(diff < 1e-4, "gram mismatch: {diff}");
+}
+
+#[test]
+fn kmatvec_and_amatvec_match_native() {
+    let Some(eng) = engine() else { return };
+    let (x32, _y, x) = features();
+    let k_native = RbfKernel::new(1.0, 10.0).gram(&x);
+    let ek = EngineKernel::from_features(eng, &x32, 1.0, 10.0).unwrap();
+
+    let mut rng = Rng::new(1);
+    let v: Vec<f64> = (0..N).map(|_| rng.normal()).collect();
+    // kmatvec
+    let mut got = vec![0.0; N];
+    ek.matvec(&v, &mut got);
+    let want = k_native.matvec(&v);
+    for i in 0..N {
+        assert!((got[i] - want[i]).abs() < 1e-3, "kmatvec[{i}]: {} vs {}", got[i], want[i]);
+    }
+    // amatvec
+    let s: Vec<f64> = (0..N).map(|i| 0.1 + 0.2 * ((i % 5) as f64)).collect();
+    let op = EngineSpdOperator::new(&ek, &s);
+    let got_a = op.matvec_alloc(&v);
+    let want_a: Vec<f64> = {
+        let sv: Vec<f64> = s.iter().zip(&v).map(|(a, b)| a * b).collect();
+        let ksv = k_native.matvec(&sv);
+        (0..N).map(|i| v[i] + s[i] * ksv[i]).collect()
+    };
+    for i in 0..N {
+        assert!(
+            (got_a[i] - want_a[i]).abs() < 1e-3,
+            "amatvec[{i}]: {} vs {}",
+            got_a[i],
+            want_a[i]
+        );
+    }
+}
+
+#[test]
+fn matrix_free_kernel_matches_materialized() {
+    let Some(eng) = engine() else { return };
+    let (x32, _y, x) = features();
+    let mf = EngineMatrixFreeKernel::new(eng.clone(), &x32, 1.0, 10.0).unwrap();
+    let ek = EngineKernel::from_features(eng, &x32, 1.0, 10.0).unwrap();
+    let _ = x;
+    let mut rng = Rng::new(2);
+    let v: Vec<f64> = (0..N).map(|_| rng.normal()).collect();
+    let mut a = vec![0.0; N];
+    let mut b = vec![0.0; N];
+    mf.matvec(&v, &mut a);
+    ek.matvec(&v, &mut b);
+    for i in 0..N {
+        assert!((a[i] - b[i]).abs() < 2e-3, "[{i}] {} vs {}", a[i], b[i]);
+    }
+}
+
+#[test]
+fn newton_stats_artifact_matches_native_math() {
+    let Some(eng) = engine() else { return };
+    let (x32, y, x) = features();
+    let ek = EngineKernel::from_features(eng, &x32, 1.0, 10.0).unwrap();
+    let k_native = RbfKernel::new(1.0, 10.0).gram(&x);
+
+    let mut rng = Rng::new(3);
+    let f: Vec<f64> = (0..N).map(|_| rng.normal() * 0.5).collect();
+    let (rhs, s, b_rw, loglik) = ek.newton_stats(&f, &y).unwrap();
+
+    // Native recomputation.
+    let lik = krr::gp::likelihood::Logistic;
+    let mut grad = vec![0.0; N];
+    let mut h = vec![0.0; N];
+    lik.grad(&y, &f, &mut grad);
+    lik.hess_diag(&f, &mut h);
+    let s_w: Vec<f64> = h.iter().map(|v| v.sqrt()).collect();
+    let b_w: Vec<f64> = (0..N).map(|i| h[i] * f[i] + grad[i]).collect();
+    let kb = k_native.matvec(&b_w);
+    let rhs_w: Vec<f64> = (0..N).map(|i| s_w[i] * kb[i]).collect();
+    let ll_w = lik.log_lik(&y, &f);
+
+    for i in 0..N {
+        assert!((s[i] - s_w[i]).abs() < 1e-5);
+        assert!((b_rw[i] - b_w[i]).abs() < 1e-5);
+        assert!((rhs[i] - rhs_w[i]).abs() < 1e-3, "rhs[{i}] {} vs {}", rhs[i], rhs_w[i]);
+    }
+    assert!((loglik - ll_w).abs() / ll_w.abs() < 1e-4);
+}
+
+#[test]
+fn cg_on_engine_operator_converges_and_matches_native_solution() {
+    let Some(eng) = engine() else { return };
+    let (x32, _y, x) = features();
+    let ek = EngineKernel::from_features(eng, &x32, 1.0, 10.0).unwrap();
+    let k_native = RbfKernel::new(1.0, 10.0).gram(&x);
+
+    let s: Vec<f64> = (0..N).map(|i| 0.3 + 0.01 * (i as f64)).collect();
+    let b: Vec<f64> = (0..N).map(|i| ((i % 7) as f64) - 3.0).collect();
+    let op = EngineSpdOperator::new(&ek, &s);
+    let r = cg::solve(&op, &b, None, &CgConfig::with_tol(1e-5));
+    assert_eq!(r.stop, StopReason::Converged);
+
+    // Native solve of the same system for reference.
+    let mut a = Mat::from_fn(N, N, |i, j| s[i] * k_native[(i, j)] * s[j]);
+    a.add_diag(1.0);
+    let want = krr::solvers::direct::solve(&a, &b).x;
+    for i in 0..N {
+        assert!(
+            (r.x[i] - want[i]).abs() < 1e-3,
+            "x[{i}] {} vs {}",
+            r.x[i],
+            want[i]
+        );
+    }
+}
+
+#[test]
+fn full_laplace_through_engine_matches_native_backend() {
+    let Some(eng) = engine() else { return };
+    let (x32, y, x) = features();
+    let ek = EngineKernel::from_features(eng, &x32, 1.0, 10.0).unwrap();
+
+    let cfg = LaplaceConfig {
+        solver: SolverBackend::Cg,
+        solve_tol: 1e-5,
+        newton_tol: 1e-2,
+        max_newton: 15,
+        ..Default::default()
+    };
+    // Engine-backed kernel through the SAME LaplaceGpc code path.
+    let mut gpc_engine = LaplaceGpc::new(&ek, &y, cfg.clone());
+    let fit_engine = gpc_engine.fit();
+
+    let k_native = DenseKernel::new(RbfKernel::new(1.0, 10.0).gram(&x));
+    let mut gpc_native = LaplaceGpc::new(&k_native, &y, cfg);
+    let fit_native = gpc_native.fit();
+
+    let (a, b) = (fit_engine.final_log_lik(), fit_native.final_log_lik());
+    assert!(
+        (a - b).abs() / b.abs() < 1e-3,
+        "engine loglik {a} vs native {b}"
+    );
+}
+
+#[test]
+fn fused_engine_laplace_matches_generic_path() {
+    let Some(eng) = engine() else { return };
+    let (x32, y, x) = features();
+    let ek = EngineKernel::from_features(eng, &x32, 1.0, 10.0).unwrap();
+
+    // Fused driver (newton_stats + newton_update artifacts).
+    let cfg = krr::runtime::laplace_engine::EngineLaplaceConfig {
+        solve_tol: 1e-5,
+        newton_tol: 1e-2,
+        max_newton: 15,
+        recycle: None,
+    };
+    let fused = krr::runtime::laplace_engine::fit(&ek, &y, &cfg).unwrap();
+
+    // Generic native path for reference.
+    let k_native = DenseKernel::new(RbfKernel::new(1.0, 10.0).gram(&x));
+    let mut gpc = LaplaceGpc::new(
+        &k_native,
+        &y,
+        LaplaceConfig {
+            solver: SolverBackend::Cg,
+            solve_tol: 1e-5,
+            newton_tol: 1e-2,
+            max_newton: 15,
+            ..Default::default()
+        },
+    );
+    let native = gpc.fit();
+    let (a, b) = (fused.final_log_lik(), native.final_log_lik());
+    assert!(
+        (a - b).abs() / b.abs() < 1e-3,
+        "fused {a} vs native {b}"
+    );
+    // Latent modes agree pointwise to f32-ish precision.
+    for (u, v) in fused.f_hat.iter().zip(&native.f_hat) {
+        assert!((u - v).abs() < 5e-2, "{u} vs {v}");
+    }
+}
+
+#[test]
+fn fused_engine_laplace_with_recycling_saves_iterations() {
+    let Some(eng) = engine() else { return };
+    let (x32, y, _x) = features();
+    let ek = EngineKernel::from_features(eng, &x32, 2.5, 10.0).unwrap();
+    let base = krr::runtime::laplace_engine::EngineLaplaceConfig {
+        solve_tol: 1e-5,
+        newton_tol: 1e-3,
+        max_newton: 10,
+        recycle: None,
+    };
+    let plain = krr::runtime::laplace_engine::fit(&ek, &y, &base).unwrap();
+    let recycled = krr::runtime::laplace_engine::fit(
+        &ek,
+        &y,
+        &krr::runtime::laplace_engine::EngineLaplaceConfig {
+            recycle: Some(krr::solvers::recycle::RecycleConfig {
+                k: 6,
+                l: 10,
+                ..Default::default()
+            }),
+            ..base
+        },
+    )
+    .unwrap();
+    let tail = |f: &krr::gp::laplace::LaplaceFit| {
+        f.steps.iter().skip(1).map(|s| s.solver_iterations).sum::<usize>()
+    };
+    assert!(
+        tail(&recycled) <= tail(&plain),
+        "recycled {} > plain {}",
+        tail(&recycled),
+        tail(&plain)
+    );
+}
+
+#[test]
+fn engine_rejects_bad_shapes() {
+    let Some(eng) = engine() else { return };
+    let bad = Tensor::vec(vec![0.0; 3]);
+    let err = eng.call(&format!("kmatvec_n{N}"), &[bad.clone(), bad]).unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("shape"), "unexpected error: {msg}");
+    assert!(eng.call("nonexistent", &[]).is_err());
+}
