@@ -10,8 +10,11 @@ use krr::linalg::eig::sym_eig;
 use krr::linalg::mat::Mat;
 use krr::linalg::qr::Qr;
 use krr::linalg::vec_ops::{axpy, dot};
+use krr::solvers::{DenseOp, ParDenseOp, SpdOperator};
 use krr::util::bench::{BenchConfig, BenchGroup};
+use krr::util::pool::ThreadPool;
 use krr::util::rng::Rng;
+use std::sync::Arc;
 
 fn main() {
     let mut rng = Rng::new(1);
@@ -75,6 +78,46 @@ fn main() {
         g.bench("qr 512x16", || {
             std::hint::black_box(Qr::factor(&tall).thin_q());
         });
+    }
+    g.report();
+
+    // Parallel dense matvec: serial DenseOp vs pool-sharded ParDenseOp.
+    // At n = 2048 the O(n²) row work dominates fork/join overhead; on
+    // ≥ 4 cores the sharded path should win clearly (same row order, so
+    // results are bitwise identical to serial).
+    let mut g = BenchGroup::new("linalg — parallel dense matvec (n = 2048)")
+        .with_config(BenchConfig { warmup: 2, iters: 20, max_seconds: 60.0 });
+    {
+        let n = 2048;
+        // SPD via K + I on random features (cheaper to build than rand_spd
+        // at this size; the matvec cost is identical).
+        let feats = Mat::randn(n, 32, &mut rng);
+        let mut k = RbfKernel::new(1.0, 5.0).gram(&feats);
+        k.add_diag(1.0);
+        let a = Arc::new(k);
+        let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut y = vec![0.0; n];
+        let serial = DenseOp::new(&a);
+        g.bench_with_work(
+            &format!("serial DenseOp n={n}"),
+            Some(2.0 * (n * n) as f64),
+            &mut || {
+                serial.matvec(&v, &mut y);
+                std::hint::black_box(&y);
+            },
+        );
+        let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+        for workers in [2usize, 4, cores.min(16)] {
+            let par = ParDenseOp::new(a.clone(), Arc::new(ThreadPool::new(workers)));
+            g.bench_with_work(
+                &format!("ParDenseOp n={n} workers={workers}"),
+                Some(2.0 * (n * n) as f64),
+                &mut || {
+                    par.matvec(&v, &mut y);
+                    std::hint::black_box(&y);
+                },
+            );
+        }
     }
     g.report();
 

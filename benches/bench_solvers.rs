@@ -1,5 +1,6 @@
 //! Bench: solver layer — CG iteration cost, deflation overhead, recycling
-//! pipeline, and (when artifacts exist) the XLA engine matvec path.
+//! pipeline, and the engine matvec path (PJRT artifacts when built, the
+//! native f32 fallback otherwise).
 
 use krr::linalg::mat::Mat;
 use krr::runtime::engine::{Engine, Tensor};
@@ -21,7 +22,12 @@ fn main() {
     let op = DenseOp::new(&a);
 
     // Recycled basis for the def-CG cases.
-    let run = cg::solve(&op, &b, None, &CgConfig { tol: 1e-8, max_iters: 0, store_l: 12, ..Default::default() });
+    let run = cg::solve(
+        &op,
+        &b,
+        None,
+        &CgConfig { tol: 1e-8, max_iters: 0, store_l: 12, ..Default::default() },
+    );
     let (defl, _) = extract(
         None,
         &run.stored,
@@ -60,11 +66,15 @@ fn main() {
     });
     g.report();
 
-    // Engine path (requires `make artifacts`).
-    if Engine::available("artifacts") {
-        let eng = Arc::new(Engine::load("artifacts").expect("engine"));
+    // Engine path: PJRT artifacts when built, the native f32 fallback
+    // otherwise — the bench runs offline either way.
+    {
+        let eng = Arc::new(Engine::auto("artifacts"));
+        let backend = eng.backend_name();
         let sizes = eng.manifest().sizes.clone();
-        let ne = *sizes.iter().max().unwrap_or(&256);
+        // The largest size ≤ 512 keeps the native gram build quick while
+        // still exercising a realistic resident-K workload.
+        let ne = eng.manifest().best_size_for(512).unwrap_or(*sizes.iter().max().unwrap_or(&256));
         let dim = eng.manifest().dim;
         let mut data = vec![0.0f32; ne * dim];
         let mut r2 = Rng::new(3);
@@ -75,12 +85,12 @@ fn main() {
         let t0 = std::time::Instant::now();
         let ek = EngineKernel::from_features(eng, &x, 1.0, 10.0).expect("gram");
         println!(
-            "engine: gram_n{ne} built on device in {:.3}s (includes XLA compile)",
+            "engine ({backend}): gram_n{ne} built in {:.3}s (pjrt: includes XLA compile)",
             t0.elapsed().as_secs_f64()
         );
         let v: Vec<f32> = (0..ne).map(|i| (i % 5) as f32 - 2.0).collect();
         let s: Vec<f32> = vec![0.5; ne];
-        let mut g = BenchGroup::new("solvers — engine (XLA/PJRT) matvec path")
+        let mut g = BenchGroup::new(&format!("solvers — engine ({backend}) matvec path"))
             .with_config(BenchConfig { warmup: 2, iters: 10, max_seconds: 60.0 });
         g.bench_with_work(
             &format!("engine kmatvec n={ne}"),
@@ -97,7 +107,5 @@ fn main() {
             },
         );
         g.report();
-    } else {
-        println!("(engine benches skipped: run `make artifacts` first)");
     }
 }

@@ -50,11 +50,10 @@ fn main() {
     let engine_kernel: Option<EngineKernel>;
     let native_kernel: Option<DenseKernel>;
     let kop: &dyn KernelOp = if backend == "engine" {
-        assert!(
-            Engine::available("artifacts"),
-            "engine backend requires `make artifacts`"
-        );
-        let eng = Arc::new(Engine::load("artifacts").expect("engine"));
+        // PJRT artifacts when built (`make artifacts` + feature `pjrt`),
+        // the native f32 engine otherwise — works fully offline.
+        let eng = Arc::new(Engine::auto("artifacts"));
+        println!("engine backend: {}", eng.backend_name());
         assert!(
             eng.manifest().sizes.contains(&train.n()),
             "n={} not an artifact size {:?}",

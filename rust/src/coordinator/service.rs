@@ -1,8 +1,9 @@
 //! The solve-service implementation.
 
+use crate::linalg::mat::Mat;
 use crate::solvers::cg::CgConfig;
 use crate::solvers::recycle::{RecycleConfig, RecycleManager, SystemStats};
-use crate::solvers::{SolveResult, SpdOperator};
+use crate::solvers::{ParDenseOp, SolveResult, SpdOperator};
 use crate::util::pool::ThreadPool;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -86,6 +87,11 @@ impl ServiceMetrics {
 /// The service: a shared pool plus per-sequence recycling state.
 pub struct SolveService {
     pool: Arc<ThreadPool>,
+    /// Lazily-built pool for sharded dense matvecs ([`ParDenseOp`]).
+    /// Kept separate from the drainer pool: a drainer that blocked on
+    /// shard joins queued behind other drainers on the *same* fixed-size
+    /// pool would deadlock (nested fork/join).
+    compute: Mutex<Option<Arc<ThreadPool>>>,
     metrics: Arc<ServiceMetrics>,
 }
 
@@ -93,12 +99,29 @@ impl SolveService {
     pub fn new(workers: usize) -> Self {
         SolveService {
             pool: Arc::new(ThreadPool::new(workers)),
+            compute: Mutex::new(None),
             metrics: Arc::new(ServiceMetrics::default()),
         }
     }
 
     pub fn metrics(&self) -> &ServiceMetrics {
         &self.metrics
+    }
+
+    /// The dedicated compute pool for matvec sharding (created on first
+    /// use, sized to the machine).
+    pub fn compute_pool(&self) -> Arc<ThreadPool> {
+        let mut g = self.compute.lock().unwrap();
+        if g.is_none() {
+            *g = Some(Arc::new(ThreadPool::default_size()));
+        }
+        g.as_ref().unwrap().clone()
+    }
+
+    /// Wrap a dense SPD matrix in a [`ParDenseOp`] sharded over the
+    /// service's compute pool, ready to [`SequenceHandle::submit`].
+    pub fn par_operator(&self, a: Mat) -> Arc<ParDenseOp> {
+        Arc::new(ParDenseOp::new(Arc::new(a), self.compute_pool()))
     }
 
     /// Open a new sequence with its own recycled-subspace state.
@@ -295,6 +318,36 @@ mod tests {
         seq.close();
         let op = spd(5, 9);
         let _ = seq.submit(op, vec![1.0; 5], None, CgConfig::default());
+    }
+
+    #[test]
+    fn par_operator_matches_serial_solves() {
+        let svc = SolveService::new(2);
+        let mut rng = Rng::new(21);
+        let n = 300; // above ParDenseOp::PAR_THRESHOLD: shards for real
+        let a = Mat::rand_spd(n, 1e4, &mut rng);
+        let b: Vec<f64> = (0..n).map(|i| 1.0 + (i % 9) as f64).collect();
+        let cfg = CgConfig::with_tol(1e-10);
+
+        let par = svc.par_operator(a.clone());
+        let seq = svc.open_sequence(RecycleConfig { k: 6, l: 10, ..Default::default() });
+        let r_par = seq.submit(par, b.clone(), None, cfg.clone()).wait();
+        assert_eq!(r_par.stop, StopReason::Converged);
+
+        // Serial reference through a fresh sequence (same recycle state).
+        let seq2 = svc.open_sequence(RecycleConfig { k: 6, l: 10, ..Default::default() });
+        let r_ser = seq2.submit(spd_mat(a), b, None, cfg).wait();
+        assert_eq!(r_ser.stop, StopReason::Converged);
+
+        // Bitwise-identical matvecs => identical CG trajectories.
+        assert_eq!(r_par.iterations, r_ser.iterations);
+        for (u, v) in r_par.x.iter().zip(&r_ser.x) {
+            assert_eq!(u, v);
+        }
+    }
+
+    fn spd_mat(a: Mat) -> Arc<OwnedDense> {
+        Arc::new(OwnedDense(a))
     }
 
     #[test]

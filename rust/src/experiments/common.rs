@@ -83,11 +83,13 @@ impl Workload {
         let kernel = RbfKernel::new(o.amplitude, o.lengthscale);
         let backend = match o.backend.as_str() {
             "engine" => {
-                assert!(
-                    Engine::available("artifacts"),
-                    "--backend engine requires `make artifacts`"
-                );
-                let eng = Arc::new(Engine::load("artifacts").expect("engine load"));
+                // PJRT artifacts when `make artifacts` has run (and the
+                // `pjrt` feature is on); the built-in native engine with
+                // the same call surface otherwise — runs fully offline.
+                let eng = Arc::new(Engine::auto("artifacts"));
+                // Say which backend actually serves the run: a silent
+                // native fallback would mislabel timing comparisons.
+                crate::log_info!("--backend engine resolved to: {}", eng.backend_name());
                 assert!(
                     eng.manifest().sizes.contains(&o.n),
                     "engine backend: n={} not in artifact sizes {:?}",
@@ -100,7 +102,18 @@ impl Workload {
                         .expect("gram build"),
                 )
             }
-            "native" => BackendImpl::Native(DenseKernel::new(kernel.gram(&data.x))),
+            "native" => {
+                let k = kernel.gram(&data.x);
+                if o.n >= 512 {
+                    // The ≥512-dim experiments shard the dense matvec
+                    // across a machine-sized pool (ParDenseOp); results
+                    // are bit-identical to the serial path.
+                    let pool = Arc::new(crate::util::pool::ThreadPool::default_size());
+                    BackendImpl::Native(DenseKernel::parallel(k, pool))
+                } else {
+                    BackendImpl::Native(DenseKernel::new(k))
+                }
+            }
             other => panic!("unknown backend '{other}' (native|engine)"),
         };
         Workload { data, kernel, backend }

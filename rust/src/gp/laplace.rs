@@ -24,7 +24,9 @@ use crate::linalg::mat::Mat;
 use crate::linalg::vec_ops::dot;
 use crate::solvers::cg::{self, CgConfig};
 use crate::solvers::recycle::{RecycleConfig, RecycleManager};
-use crate::solvers::{SolveResult, SpdOperator};
+use crate::solvers::{ParDenseOp, SolveResult, SpdOperator};
+use crate::util::pool::ThreadPool;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Abstract access to the kernel Gram matrix `K`.
@@ -42,15 +44,26 @@ pub trait KernelOp: Sync {
     }
 }
 
-/// In-core dense kernel matrix.
+/// In-core dense kernel matrix, with an optional pool-sharded parallel
+/// matvec for the ≥512-dim workloads (shards match the serial row order
+/// bit-for-bit, so results are backend-independent).
 pub struct DenseKernel {
-    k: Mat,
+    k: Arc<Mat>,
+    par: Option<ParDenseOp>,
 }
 
 impl DenseKernel {
     pub fn new(k: Mat) -> Self {
         assert!(k.is_square());
-        DenseKernel { k }
+        DenseKernel { k: Arc::new(k), par: None }
+    }
+
+    /// Dense kernel whose matvec is row-sharded across `pool`.
+    pub fn parallel(k: Mat, pool: Arc<ThreadPool>) -> Self {
+        assert!(k.is_square());
+        let k = Arc::new(k);
+        let par = ParDenseOp::new(k.clone(), pool);
+        DenseKernel { k, par: Some(par) }
     }
 }
 
@@ -60,11 +73,14 @@ impl KernelOp for DenseKernel {
     }
 
     fn matvec(&self, v: &[f64], y: &mut [f64]) {
-        self.k.matvec_into(v, y);
+        match &self.par {
+            Some(p) => p.matvec(v, y),
+            None => self.k.matvec_into(v, y),
+        }
     }
 
     fn dense(&self) -> Option<&Mat> {
-        Some(&self.k)
+        Some(self.k.as_ref())
     }
 }
 
@@ -483,6 +499,29 @@ mod tests {
         let ds = digits::generate(&DigitsConfig { n, seed, ..Default::default() });
         let k = RbfKernel::new(1.0, 10.0).gram(&ds.x);
         (ds.x, ds.y, k)
+    }
+
+    #[test]
+    fn parallel_dense_kernel_fits_identically() {
+        // 300 > ParDenseOp::PAR_THRESHOLD: the sharded matvec is exercised
+        // for real, and (being bitwise-equal to serial) the whole Newton
+        // trajectory must match exactly.
+        let (_x, y, k) = toy_problem(300, 6);
+        let cfg = LaplaceConfig {
+            solver: SolverBackend::Cg,
+            solve_tol: 1e-8,
+            newton_tol: 1e-4,
+            max_newton: 30,
+            max_solver_iters: 0,
+        };
+        let serial = DenseKernel::new(k.clone());
+        let fit_s = LaplaceGpc::new(&serial, &y, cfg.clone()).fit();
+        let par = DenseKernel::parallel(k, Arc::new(ThreadPool::new(4)));
+        let fit_p = LaplaceGpc::new(&par, &y, cfg).fit();
+        assert_eq!(fit_s.steps.len(), fit_p.steps.len());
+        for (u, v) in fit_s.f_hat.iter().zip(&fit_p.f_hat) {
+            assert_eq!(u, v);
+        }
     }
 
     #[test]

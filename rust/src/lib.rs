@@ -12,12 +12,22 @@
 //! (Morgan, 1995).
 //!
 //! Layer map (see DESIGN.md):
-//! * [`solvers`] — CG, def-CG(k, ℓ), Cholesky, Lanczos, recycling state.
+//! * [`solvers`] — CG, def-CG(k, ℓ), Cholesky, Lanczos, recycling state,
+//!   and the pool-sharded parallel dense operator (`ParDenseOp`).
 //! * [`gp`] — GP classification with Laplace/Newton (the paper's workload).
 //! * [`coordinator`] — the solve-service that owns recycling across a
 //!   sequence and dispatches matvec traffic.
-//! * [`runtime`] — PJRT engine running AOT-compiled JAX/Pallas artifacts.
+//! * [`runtime`] — the artifact engine: a pure-Rust native backend by
+//!   default, the PJRT/XLA path behind the `pjrt` feature.
 //! * [`linalg`], [`data`], [`util`] — substrates built from scratch.
+// Style allowances for hand-rolled numerical kernels: explicit index
+// loops mirror the paper's algorithm statements and keep bounds visible.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::manual_memcpy,
+    clippy::too_many_arguments,
+    clippy::type_complexity
+)]
 
 pub mod coordinator;
 pub mod data;

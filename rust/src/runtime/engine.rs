@@ -1,18 +1,26 @@
-//! The PJRT engine: compile artifacts once, execute many times.
+//! The compute engine: one call surface, two backends.
 //!
-//! Follows the reference wiring of /opt/xla-example/load_hlo.rs:
-//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
-//! `PjRtClient::compile` → `execute`. Executables are compiled lazily on
-//! first call and cached for the process lifetime. Large operands (the
-//! Gram matrix) are uploaded once as device buffers and passed by
-//! reference via `execute_b`.
+//! [`Engine`] executes the artifact family (`gram_n{n}`, `kmatvec_n{n}`,
+//! `amatvec_n{n}`, `newton_stats_n{n}`, `newton_update_n{n}`,
+//! `gram_matvec_free_n{n}`) behind a single typed API:
+//!
+//! * [`crate::runtime::native::NativeEngine`] — the pure-Rust fallback,
+//!   always available. Interprets each artifact in f32 (the artifact
+//!   family's precision) against the built-in manifest, so the entire
+//!   system builds and runs fully offline.
+//! * `runtime::pjrt::PjrtEngine` (feature `pjrt`) — compiles the HLO text
+//!   lowered by `python/compile/aot.py` on a PJRT client and keeps large
+//!   operands (the Gram matrix) resident in device memory.
+//!
+//! Callers hold an `Engine` and never branch on the backend; [`Buffer`]
+//! abstracts "operand kept resident across calls" the same way.
 
-use crate::runtime::manifest::{ArtifactMeta, Manifest};
-use anyhow::{anyhow, bail, Context, Result};
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
-use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+use crate::runtime::error::{EngineError, Result};
+use crate::runtime::manifest::Manifest;
+use crate::runtime::native::NativeEngine;
+#[cfg(feature = "pjrt")]
+use crate::runtime::pjrt::PjrtEngine;
+use std::path::Path;
 
 /// Host-side tensor value passed to / returned from an engine call.
 #[derive(Clone, Debug, PartialEq)]
@@ -48,184 +56,229 @@ impl Tensor {
         self.data.iter().map(|&x| x as f64).collect()
     }
 
-    fn to_literal(&self) -> Result<Literal> {
-        let lit = Literal::vec1(&self.data);
-        if self.shape.len() == 1 {
-            return Ok(lit);
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// An operand kept resident across engine calls (the Gram matrix, the
+/// per-solve scaling vector). On the native backend this is simply the
+/// host tensor; on the PJRT backend it is a device buffer uploaded once,
+/// paired with its logical shape (device buffers don't carry one).
+pub enum Buffer {
+    Native(Tensor),
+    #[cfg(feature = "pjrt")]
+    Pjrt(xla::PjRtBuffer, Vec<usize>),
+}
+
+// SAFETY (pjrt only): PJRT buffers are documented thread-safe for
+// concurrent Execute/Transfer calls; the native variant is a plain tensor.
+#[cfg(feature = "pjrt")]
+unsafe impl Send for Buffer {}
+#[cfg(feature = "pjrt")]
+unsafe impl Sync for Buffer {}
+
+impl Buffer {
+    /// Logical shape of the resident operand.
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Buffer::Native(t) => &t.shape,
+            #[cfg(feature = "pjrt")]
+            Buffer::Pjrt(_, shape) => shape,
         }
-        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
-        Ok(lit.reshape(&dims)?)
     }
 
-    fn from_literal(lit: &Literal, shape: &[usize]) -> Result<Tensor> {
-        let data = lit.to_vec::<f32>()?;
-        Ok(Tensor { shape: shape.to_vec(), data })
+    /// Download the buffer back to a host tensor, shape preserved on
+    /// both backends.
+    pub fn tensor(&self) -> Result<Tensor> {
+        match self {
+            Buffer::Native(t) => Ok(t.clone()),
+            #[cfg(feature = "pjrt")]
+            Buffer::Pjrt(b, shape) => {
+                let flat = crate::runtime::pjrt::buffer_to_tensor(b)?;
+                if flat.data.len() != shape.iter().product::<usize>() {
+                    return Err(EngineError::new(format!(
+                        "device buffer holds {} elements, logical shape {:?}",
+                        flat.data.len(),
+                        shape
+                    )));
+                }
+                Ok(Tensor { shape: shape.clone(), data: flat.data })
+            }
+        }
     }
 }
 
-/// The engine. `Send + Sync`: the PJRT CPU client supports concurrent
-/// dispatch, and the executable cache is mutex-guarded.
-pub struct Engine {
-    client: PjRtClient,
-    dir: PathBuf,
-    manifest: Manifest,
-    exes: Mutex<HashMap<String, Arc<PjRtLoadedExecutable>>>,
+/// The engine: `Send + Sync`, cheap to share behind an `Arc`.
+pub enum Engine {
+    Native(NativeEngine),
+    #[cfg(feature = "pjrt")]
+    Pjrt(PjrtEngine),
 }
 
-// SAFETY: the xla wrapper types hold raw pointers into the PJRT C API.
-// PJRT clients, loaded executables and buffers are documented thread-safe
-// for concurrent Execute/Transfer calls; all mutable engine state (the
-// lazy compile cache) is behind a Mutex.
+// SAFETY (pjrt only): see PjrtEngine — the PJRT CPU client supports
+// concurrent dispatch and all mutable state is mutex-guarded. The native
+// variant is automatically Send + Sync; these impls widen the enum when
+// the non-auto variant is compiled in.
+#[cfg(feature = "pjrt")]
 unsafe impl Send for Engine {}
+#[cfg(feature = "pjrt")]
 unsafe impl Sync for Engine {}
 
 impl Engine {
+    /// The built-in native engine (embedded manifest; no artifact files).
+    pub fn native() -> Engine {
+        Engine::Native(NativeEngine::embedded())
+    }
+
     /// Load the engine from an artifact directory (e.g. `artifacts/`).
+    ///
+    /// With the `pjrt` feature this compiles the directory's HLO artifacts
+    /// on a PJRT client; the default build interprets the directory's
+    /// manifest natively (artifact *files* are not needed).
     pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
-        let dir = dir.as_ref().to_path_buf();
+        Engine::load_impl(dir.as_ref())
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn load_impl(dir: &Path) -> Result<Engine> {
+        Ok(Engine::Pjrt(PjrtEngine::load(dir)?))
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn load_impl(dir: &Path) -> Result<Engine> {
         let manifest = Manifest::load(&dir.join("manifest.json"))
-            .map_err(|e| anyhow!("loading manifest: {e}"))?;
-        let client = PjRtClient::cpu()?;
-        crate::log_info!(
-            "engine up: platform={} devices={} artifacts={} sizes={:?}",
-            client.platform_name(),
-            client.device_count(),
-            manifest.artifacts.len(),
-            manifest.sizes
-        );
-        Ok(Engine { client, dir, manifest, exes: Mutex::new(HashMap::new()) })
+            .map_err(|e| EngineError::new(e).context("loading manifest"))?;
+        Ok(Engine::Native(NativeEngine::new(manifest)))
+    }
+
+    /// Best-available engine: artifacts in `dir` when present, the
+    /// built-in native engine otherwise. Never fails — malformed artifact
+    /// directories fall back to native with a warning.
+    pub fn auto(dir: impl AsRef<Path>) -> Engine {
+        let dir = dir.as_ref();
+        if Engine::available(dir) {
+            match Engine::load(dir) {
+                Ok(e) => return e,
+                Err(err) => {
+                    crate::log_warn!(
+                        "engine: cannot load {}: {err}; using the native fallback",
+                        dir.display()
+                    );
+                }
+            }
+        }
+        Engine::native()
     }
 
     /// Whether an artifact directory looks usable (lets tests and examples
-    /// skip gracefully when `make artifacts` has not run).
+    /// pick the artifact path only when `make artifacts` has run).
     pub fn available(dir: impl AsRef<Path>) -> bool {
         dir.as_ref().join("manifest.json").exists()
     }
 
+    /// Backend name, for logs and reports.
+    pub fn backend_name(&self) -> &'static str {
+        match self {
+            Engine::Native(_) => "native",
+            #[cfg(feature = "pjrt")]
+            Engine::Pjrt(_) => "pjrt",
+        }
+    }
+
     pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    fn meta(&self, name: &str) -> Result<&ArtifactMeta> {
-        self.manifest
-            .get(name)
-            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))
-    }
-
-    /// Compile (or fetch the cached) executable for `name`.
-    fn executable(&self, name: &str) -> Result<Arc<PjRtLoadedExecutable>> {
-        if let Some(exe) = self.exes.lock().unwrap().get(name) {
-            return Ok(exe.clone());
+        match self {
+            Engine::Native(ne) => ne.manifest(),
+            #[cfg(feature = "pjrt")]
+            Engine::Pjrt(pe) => pe.manifest(),
         }
-        let meta = self.meta(name)?;
-        let path = self.dir.join(&meta.file);
-        let t0 = std::time::Instant::now();
-        let proto = HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 artifact path")?,
-        )?;
-        let comp = XlaComputation::from_proto(&proto);
-        let exe = Arc::new(self.client.compile(&comp)?);
-        crate::log_debug!("compiled {name} in {:.3}s", t0.elapsed().as_secs_f64());
-        // Double-checked insert: racing threads may both compile; last wins
-        // (both executables are valid).
-        self.exes.lock().unwrap().insert(name.to_string(), exe.clone());
-        Ok(exe)
     }
 
-    /// Pre-compile a set of artifacts (e.g. at service startup).
+    /// Pre-compile a set of artifacts (e.g. at service startup). The
+    /// native backend has nothing to compile and only validates names.
     pub fn warmup(&self, names: &[&str]) -> Result<()> {
-        for n in names {
-            self.executable(n)?;
-        }
-        Ok(())
-    }
-
-    /// Upload a tensor to device memory (for operands reused across calls).
-    pub fn upload(&self, t: &Tensor) -> Result<PjRtBuffer> {
-        Ok(self
-            .client
-            .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)?)
-    }
-
-    fn unpack_outputs(&self, meta: &ArtifactMeta, result: Literal) -> Result<Vec<Tensor>> {
-        // Artifacts are lowered with return_tuple=True: the single output
-        // buffer is a tuple literal with `meta.outputs.len()` elements.
-        let mut result = result;
-        let parts = result.decompose_tuple()?;
-        if parts.len() != meta.outputs.len() {
-            bail!(
-                "artifact {}: expected {} outputs, got {}",
-                meta.name,
-                meta.outputs.len(),
-                parts.len()
-            );
-        }
-        parts
-            .iter()
-            .zip(&meta.outputs)
-            .map(|(lit, spec)| Tensor::from_literal(lit, &spec.shape))
-            .collect()
-    }
-
-    fn check_args(&self, meta: &ArtifactMeta, shapes: &[Vec<usize>]) -> Result<()> {
-        if shapes.len() != meta.inputs.len() {
-            bail!(
-                "artifact {}: expected {} inputs, got {}",
-                meta.name,
-                meta.inputs.len(),
-                shapes.len()
-            );
-        }
-        for (i, (got, want)) in shapes.iter().zip(&meta.inputs).enumerate() {
-            if *got != want.shape {
-                bail!(
-                    "artifact {}: input {i} shape {:?} != expected {:?}",
-                    meta.name,
-                    got,
-                    want.shape
-                );
+        match self {
+            Engine::Native(ne) => {
+                for n in names {
+                    ne.manifest().require(n).map_err(EngineError::new)?;
+                }
+                Ok(())
             }
+            #[cfg(feature = "pjrt")]
+            Engine::Pjrt(pe) => pe.warmup(names),
         }
-        Ok(())
+    }
+
+    /// Upload a tensor for reuse across calls.
+    pub fn upload(&self, t: &Tensor) -> Result<Buffer> {
+        match self {
+            Engine::Native(_) => Ok(Buffer::Native(t.clone())),
+            #[cfg(feature = "pjrt")]
+            Engine::Pjrt(pe) => Ok(Buffer::Pjrt(pe.upload(t)?, t.shape.clone())),
+        }
     }
 
     /// Execute with host tensors (uploads everything per call).
     pub fn call(&self, name: &str, args: &[Tensor]) -> Result<Vec<Tensor>> {
-        let meta = self.meta(name)?.clone();
-        let shapes: Vec<_> = args.iter().map(|a| a.shape.clone()).collect();
-        self.check_args(&meta, &shapes)?;
-        let exe = self.executable(name)?;
-        let literals: Vec<Literal> = args
-            .iter()
-            .map(|a| a.to_literal())
-            .collect::<Result<_>>()?;
-        let out = exe.execute::<Literal>(&literals)?;
-        let lit = out[0][0].to_literal_sync()?;
-        self.unpack_outputs(&meta, lit)
+        match self {
+            Engine::Native(ne) => {
+                let refs: Vec<&Tensor> = args.iter().collect();
+                ne.call(name, &refs)
+            }
+            #[cfg(feature = "pjrt")]
+            Engine::Pjrt(pe) => pe.call(name, args),
+        }
     }
 
-    /// Execute with pre-uploaded device buffers (the hot path: `K` stays
-    /// resident; small vectors are uploaded by the caller per call).
-    pub fn call_b(&self, name: &str, args: &[&PjRtBuffer]) -> Result<Vec<Tensor>> {
-        let meta = self.meta(name)?.clone();
-        let exe = self.executable(name)?;
-        let out = exe.execute_b::<&PjRtBuffer>(args)?;
-        let lit = out[0][0].to_literal_sync()?;
-        self.unpack_outputs(&meta, lit)
+    /// Execute with resident buffers (the hot path: `K` stays resident;
+    /// small vectors are uploaded by the caller per call). Input shapes
+    /// are validated against the manifest on **both** backends — buffers
+    /// carry their logical shape, so a bad resident operand fails with
+    /// the same typed error everywhere instead of an opaque XLA fault.
+    pub fn call_b(&self, name: &str, args: &[&Buffer]) -> Result<Vec<Tensor>> {
+        {
+            let meta = self.manifest().require(name).map_err(EngineError::new)?;
+            let shapes: Vec<&[usize]> = args.iter().map(|b| b.shape()).collect();
+            meta.check_inputs(&shapes).map_err(EngineError::new)?;
+        }
+        match self {
+            Engine::Native(ne) => {
+                let mut refs: Vec<&Tensor> = Vec::with_capacity(args.len());
+                for b in args {
+                    match b {
+                        Buffer::Native(t) => refs.push(t),
+                        #[cfg(feature = "pjrt")]
+                        Buffer::Pjrt(..) => {
+                            return Err(EngineError::new(
+                                "device buffer handed to the native engine",
+                            ))
+                        }
+                    }
+                }
+                ne.call(name, &refs)
+            }
+            #[cfg(feature = "pjrt")]
+            Engine::Pjrt(pe) => {
+                let mut bufs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(args.len());
+                for b in args {
+                    match b {
+                        Buffer::Pjrt(d, _) => bufs.push(d),
+                        Buffer::Native(_) => {
+                            return Err(EngineError::new(
+                                "host buffer handed to the pjrt engine",
+                            ))
+                        }
+                    }
+                }
+                pe.call_b(name, &bufs)
+            }
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn tensor_roundtrips() {
-        let t = Tensor::mat(2, 3, vec![1., 2., 3., 4., 5., 6.]);
-        let lit = t.to_literal().unwrap();
-        let back = Tensor::from_literal(&lit, &[2, 3]).unwrap();
-        assert_eq!(t, back);
-    }
 
     #[test]
     fn tensor_f64_conversion() {
@@ -237,11 +290,43 @@ mod tests {
     #[test]
     fn scalar_and_param_shapes() {
         assert_eq!(Tensor::scalar(2.0).shape, Vec::<usize>::new());
+        assert_eq!(Tensor::scalar(2.0).element_count(), 1);
         assert_eq!(Tensor::param(2.0).shape, vec![1]);
     }
 
     #[test]
     fn available_detects_missing_dir() {
         assert!(!Engine::available("/definitely/not/a/dir"));
+    }
+
+    #[test]
+    fn auto_falls_back_to_native() {
+        let e = Engine::auto("/definitely/not/a/dir");
+        assert_eq!(e.backend_name(), "native");
+        assert!(e.manifest().sizes.contains(&64));
+    }
+
+    #[test]
+    fn buffer_roundtrips_on_native() {
+        let e = Engine::native();
+        let t = Tensor::mat(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = e.upload(&t).unwrap();
+        assert_eq!(b.tensor().unwrap(), t);
+    }
+
+    #[test]
+    fn call_b_validates_buffer_shapes() {
+        let e = Engine::native();
+        let bad = e.upload(&Tensor::vec(vec![0.0; 3])).unwrap();
+        let err = e.call_b("kmatvec_n8", &[&bad, &bad]).unwrap_err();
+        assert!(format!("{err}").contains("shape"), "{err}");
+        assert!(e.call_b("nonexistent", &[]).is_err());
+    }
+
+    #[test]
+    fn warmup_validates_names() {
+        let e = Engine::native();
+        assert!(e.warmup(&["gram_n64", "kmatvec_n64"]).is_ok());
+        assert!(e.warmup(&["nonexistent"]).is_err());
     }
 }

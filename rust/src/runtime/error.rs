@@ -1,0 +1,78 @@
+//! Engine error type.
+//!
+//! The offline default build has no `anyhow`; this is the one error type
+//! the runtime layer needs — a message, optionally chained with context.
+
+use std::fmt;
+
+/// Engine-layer error: a human-readable message.
+#[derive(Clone, PartialEq, Eq)]
+pub struct EngineError {
+    msg: String,
+}
+
+impl EngineError {
+    pub fn new(msg: impl Into<String>) -> EngineError {
+        EngineError { msg: msg.into() }
+    }
+
+    /// Wrap with an outer context message (innermost cause last).
+    pub fn context(self, ctx: impl fmt::Display) -> EngineError {
+        EngineError { msg: format!("{ctx}: {}", self.msg) }
+    }
+
+    pub fn msg(&self) -> &str {
+        &self.msg
+    }
+}
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "EngineError({})", self.msg)
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+impl From<String> for EngineError {
+    fn from(msg: String) -> EngineError {
+        EngineError { msg }
+    }
+}
+
+impl From<&str> for EngineError {
+    fn from(msg: &str) -> EngineError {
+        EngineError { msg: msg.to_string() }
+    }
+}
+
+/// Runtime-layer result alias.
+pub type Result<T> = std::result::Result<T, EngineError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_context() {
+        let e = EngineError::new("inner");
+        assert_eq!(format!("{e}"), "inner");
+        let e = e.context("loading manifest");
+        assert_eq!(format!("{e}"), "loading manifest: inner");
+        assert_eq!(format!("{e:?}"), "EngineError(loading manifest: inner)");
+    }
+
+    #[test]
+    fn conversions() {
+        let a: EngineError = "x".into();
+        let b: EngineError = String::from("x").into();
+        assert_eq!(a, b);
+        assert_eq!(a.msg(), "x");
+    }
+}

@@ -10,10 +10,10 @@
 //! This is the L2 item of the performance pass (EXPERIMENTS.md §Perf).
 
 use crate::gp::laplace::{LaplaceFit, NewtonStepStats};
+use crate::runtime::error::Result;
 use crate::runtime::ops::{EngineKernel, EngineSpdOperator};
 use crate::solvers::cg::CgConfig;
 use crate::solvers::recycle::{RecycleConfig, RecycleManager};
-use anyhow::Result;
 use std::time::Instant;
 
 /// Configuration for the fused engine Laplace run.

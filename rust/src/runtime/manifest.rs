@@ -35,6 +35,31 @@ pub struct ArtifactMeta {
     pub outputs: Vec<TensorSpec>,
 }
 
+impl ArtifactMeta {
+    /// Validate call-argument shapes against this entry's input specs.
+    /// Every backend funnels through here, so the error wording is
+    /// identical across native and PJRT (tests assert on it).
+    pub fn check_inputs(&self, shapes: &[&[usize]]) -> Result<(), String> {
+        if shapes.len() != self.inputs.len() {
+            return Err(format!(
+                "artifact {}: expected {} inputs, got {}",
+                self.name,
+                self.inputs.len(),
+                shapes.len()
+            ));
+        }
+        for (i, (got, want)) in shapes.iter().zip(&self.inputs).enumerate() {
+            if *got != want.shape.as_slice() {
+                return Err(format!(
+                    "artifact {}: input {i} shape {:?} != expected {:?}",
+                    self.name, got, want.shape
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
 /// Parsed manifest.
 #[derive(Clone, Debug)]
 pub struct Manifest {
@@ -106,8 +131,26 @@ impl Manifest {
         Manifest::parse(&text)
     }
 
+    /// The built-in manifest served by the native fallback engine
+    /// (`rust/manifests/native.json`, compiled into the binary): the
+    /// full artifact family at dim 784 for sizes 8…2048. Keeping it as a
+    /// real manifest *file* means the native and PJRT backends go through
+    /// the identical validation path.
+    pub fn native_embedded() -> Manifest {
+        Manifest::parse(include_str!("../../manifests/native.json"))
+            .expect("embedded native manifest must parse")
+    }
+
     pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
         self.artifacts.get(name)
+    }
+
+    /// Like [`Manifest::get`] but with the canonical error message every
+    /// backend emits for a missing entry (tests assert on the wording).
+    pub fn require(&self, name: &str) -> Result<&ArtifactMeta, String> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| format!("unknown artifact '{name}'"))
     }
 
     /// Artifact name for an entry-point stem at size n (e.g. "gram", 128
@@ -177,6 +220,43 @@ mod tests {
         assert_eq!(m.best_size_for(12), Some(8));
         assert_eq!(m.best_size_for(100), Some(16));
         assert_eq!(m.best_size_for(4), None);
+    }
+
+    #[test]
+    fn check_inputs_validates_count_and_shape() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let g = m.get("gram_n8").unwrap();
+        let x: &[usize] = &[8, 784];
+        let p: &[usize] = &[1];
+        assert!(g.check_inputs(&[x, p, p]).is_ok());
+        let err = g.check_inputs(&[x, p]).unwrap_err();
+        assert!(err.contains("expected 3 inputs"), "{err}");
+        let bad: &[usize] = &[3];
+        let err = g.check_inputs(&[bad, p, p]).unwrap_err();
+        assert!(err.contains("input 0 shape"), "{err}");
+    }
+
+    #[test]
+    fn embedded_native_manifest_is_complete() {
+        let m = Manifest::native_embedded();
+        assert_eq!(m.dim, 784);
+        assert!(m.sizes.contains(&64) && m.sizes.contains(&512) && m.sizes.contains(&2048));
+        for &n in &m.sizes {
+            for stem in [
+                "gram",
+                "kmatvec",
+                "amatvec",
+                "newton_stats",
+                "newton_update",
+                "gram_matvec_free",
+            ] {
+                let meta = m.entry(stem, n).unwrap_or_else(|| panic!("missing {stem}_n{n}"));
+                assert_eq!(meta.n, n);
+                assert!(!meta.inputs.is_empty() && !meta.outputs.is_empty());
+            }
+            assert_eq!(m.entry("gram", n).unwrap().inputs[0].shape, vec![n, 784]);
+            assert_eq!(m.entry("kmatvec", n).unwrap().inputs[0].shape, vec![n, n]);
+        }
     }
 
     #[test]

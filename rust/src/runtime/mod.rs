@@ -1,18 +1,33 @@
-//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//! Runtime: execute the AOT artifact family behind a pluggable backend.
 //!
-//! The rust side of the three-layer architecture. `make artifacts` (python,
-//! build-time only) lowers the L2/L1 compute graphs to HLO **text**;
-//! [`engine::Engine`] loads those files, compiles each once on the PJRT
-//! CPU client (`xla` crate), and exposes a typed call API. The Gram matrix
-//! `K` is uploaded to device memory once per problem and stays resident
-//! across the O(100) matvecs of a Newton solve ([`ops::EngineKernel`]).
+//! The rust side of the three-layer architecture (see DESIGN.md). The
+//! artifact call surface — load a manifest, keep the Gram matrix resident,
+//! serve `kmatvec`/`amatvec`/fused-Newton calls — is exposed by
+//! [`engine::Engine`], which dispatches to one of two backends:
 //!
-//! Python never runs here: the binary is self-contained given `artifacts/`.
+//! * [`native::NativeEngine`] (always compiled, the default): a pure-Rust
+//!   f32 interpreter of every artifact, so the whole system builds, tests
+//!   and runs **fully offline** with no artifact files and no `xla` crate.
+//! * `pjrt::PjrtEngine` (feature `pjrt`): `make artifacts` (python,
+//!   build-time only) lowers the L2/L1 compute graphs to HLO **text**;
+//!   the engine loads those files, compiles each once on the PJRT CPU
+//!   client (`xla` crate), and executes on device. The Gram matrix `K` is
+//!   uploaded once per problem and stays resident across the O(100)
+//!   matvecs of a Newton solve ([`ops::EngineKernel`]).
+//!
+//! Python never runs here: given `artifacts/` the binary is
+//! self-contained, and without it the native backend serves everything.
 
 pub mod engine;
+pub mod error;
 pub mod laplace_engine;
 pub mod manifest;
+pub mod native;
 pub mod ops;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
-pub use engine::Engine;
+pub use engine::{Buffer, Engine, Tensor};
+pub use error::{EngineError, Result};
 pub use manifest::Manifest;
+pub use native::NativeEngine;

@@ -1,0 +1,306 @@
+//! The native fallback engine: the artifact family interpreted in Rust.
+//!
+//! Mirrors the AOT JAX/Pallas artifacts executed by the PJRT backend —
+//! same entry-point names, same input/output shapes (validated against a
+//! [`Manifest`]), and the same **f32 arithmetic**, so solver-layer code
+//! sees the identical precision floor (~1e-6 relative) on either backend
+//! and the integration suite runs unchanged against both. Everything here
+//! is plain Rust with no external dependencies, which is what makes the
+//! default build usable fully offline.
+//!
+//! Supported entry-point stems (each lowered per size `n`):
+//!
+//! | stem | computation |
+//! |---|---|
+//! | `gram` | `K = θ² exp(−‖xᵢ−xⱼ‖² / 2λ²)` over rows of X |
+//! | `kmatvec` | `y = K v` |
+//! | `amatvec` | `y = p + s ∘ (K (s ∘ p))` (the Newton operator `I + SKS`) |
+//! | `newton_stats` | π, ∇, H, s, b_rw, rhs, log-lik fused (Laplace Eq. 9) |
+//! | `newton_update` | `a = b_rw − s∘z`, `f' = K a`, log-lik, quad term |
+//! | `gram_matvec_free` | `y = K v` without materializing K |
+
+use crate::runtime::engine::Tensor;
+use crate::runtime::error::{EngineError, Result};
+use crate::runtime::manifest::{ArtifactMeta, Manifest};
+
+/// Pure-Rust engine backend. Holds only the manifest; all compute is
+/// stateless and reentrant, so the type is trivially `Send + Sync`.
+pub struct NativeEngine {
+    manifest: Manifest,
+}
+
+impl NativeEngine {
+    /// Engine over an explicit manifest (e.g. one read from a directory).
+    pub fn new(manifest: Manifest) -> NativeEngine {
+        NativeEngine { manifest }
+    }
+
+    /// Engine over the built-in manifest (`rust/manifests/native.json`):
+    /// dim 784, sizes 8…2048 — the synthetic-MNIST workload family.
+    pub fn embedded() -> NativeEngine {
+        NativeEngine { manifest: Manifest::native_embedded() }
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute one artifact. Validates the argument shapes against the
+    /// manifest, then dispatches on the entry-point stem.
+    pub fn call(&self, name: &str, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let meta = self.manifest.require(name).map_err(EngineError::new)?;
+        check_args(meta, args)?;
+        match artifact_stem(name) {
+            "gram" => Ok(vec![self.gram(args)]),
+            "kmatvec" => Ok(vec![kmatvec(args[0], &args[1].data)]),
+            "amatvec" => Ok(vec![amatvec(args[0], &args[1].data, &args[2].data)]),
+            "newton_stats" => Ok(newton_stats(args[0], &args[1].data, &args[2].data)),
+            "newton_update" => Ok(newton_update(
+                args[0],
+                &args[1].data,
+                &args[2].data,
+                &args[3].data,
+                &args[4].data,
+            )),
+            "gram_matvec_free" => Ok(vec![self.gram_matvec_free(args)]),
+            other => Err(EngineError::new(format!(
+                "artifact '{name}': stem '{other}' has no native implementation"
+            ))),
+        }
+    }
+
+    /// `gram_n{n}`: (X [n,d], θ [1], λ [1]) → K [n,n], all in f32.
+    fn gram(&self, args: &[&Tensor]) -> Tensor {
+        let x = args[0];
+        let (n, d) = (x.shape[0], x.shape[1]);
+        let (a2, inv2l2) = rbf_params(args[1].data[0], args[2].data[0]);
+        let mut k = vec![0.0f32; n * n];
+        for i in 0..n {
+            let xi = &x.data[i * d..(i + 1) * d];
+            for j in 0..=i {
+                let xj = &x.data[j * d..(j + 1) * d];
+                let v = rbf_f32(xi, xj, a2, inv2l2);
+                k[i * n + j] = v;
+                k[j * n + i] = v;
+            }
+        }
+        Tensor::mat(n, n, k)
+    }
+
+    /// `gram_matvec_free_n{n}`: (X, v, θ, λ) → K v, K never materialized.
+    fn gram_matvec_free(&self, args: &[&Tensor]) -> Tensor {
+        let (x, v) = (args[0], &args[1].data);
+        let (n, d) = (x.shape[0], x.shape[1]);
+        let (a2, inv2l2) = rbf_params(args[2].data[0], args[3].data[0]);
+        let mut y = vec![0.0f32; n];
+        for i in 0..n {
+            let xi = &x.data[i * d..(i + 1) * d];
+            let mut acc = 0.0f32;
+            for j in 0..n {
+                let xj = &x.data[j * d..(j + 1) * d];
+                acc += rbf_f32(xi, xj, a2, inv2l2) * v[j];
+            }
+            y[i] = acc;
+        }
+        Tensor::vec(y)
+    }
+}
+
+/// Strip the trailing `_n{digits}` size suffix from an artifact name.
+fn artifact_stem(name: &str) -> &str {
+    if let Some(pos) = name.rfind("_n") {
+        let suffix = &name[pos + 2..];
+        if !suffix.is_empty() && suffix.bytes().all(|b| b.is_ascii_digit()) {
+            return &name[..pos];
+        }
+    }
+    name
+}
+
+/// Shape validation — delegates to [`ArtifactMeta::check_inputs`], the
+/// single validator every backend shares.
+fn check_args(meta: &ArtifactMeta, args: &[&Tensor]) -> Result<()> {
+    let shapes: Vec<&[usize]> = args.iter().map(|t| t.shape.as_slice()).collect();
+    meta.check_inputs(&shapes).map_err(EngineError::new)
+}
+
+/// (θ², 1/(2λ²)) in f32.
+fn rbf_params(amp: f32, ls: f32) -> (f32, f32) {
+    (amp * amp, 1.0 / (2.0 * ls * ls))
+}
+
+/// One RBF kernel entry in f32: θ² exp(−‖xi−xj‖²/(2λ²)).
+#[inline]
+fn rbf_f32(xi: &[f32], xj: &[f32], a2: f32, inv2l2: f32) -> f32 {
+    let mut d2 = 0.0f32;
+    for (a, b) in xi.iter().zip(xj) {
+        let d = a - b;
+        d2 += d * d;
+    }
+    a2 * (-d2 * inv2l2).exp()
+}
+
+/// y = K v for a resident row-major n×n Gram tensor, f32 accumulation.
+fn kmatvec(k: &Tensor, v: &[f32]) -> Tensor {
+    let n = k.shape[0];
+    let mut y = vec![0.0f32; n];
+    for i in 0..n {
+        let row = &k.data[i * n..(i + 1) * n];
+        let mut acc = 0.0f32;
+        for (kij, vj) in row.iter().zip(v) {
+            acc += kij * vj;
+        }
+        y[i] = acc;
+    }
+    Tensor::vec(y)
+}
+
+/// y = p + s ∘ (K (s ∘ p)) — the fused Newton-operator matvec.
+fn amatvec(k: &Tensor, s: &[f32], p: &[f32]) -> Tensor {
+    let n = k.shape[0];
+    let sp: Vec<f32> = s.iter().zip(p).map(|(a, b)| a * b).collect();
+    let ksp = kmatvec(k, &sp);
+    let y: Vec<f32> = (0..n).map(|i| p[i] + s[i] * ksp.data[i]).collect();
+    Tensor::vec(y)
+}
+
+/// Numerically stable f32 logistic sigmoid.
+#[inline]
+fn sigmoid_f32(z: f32) -> f32 {
+    if z >= 0.0 {
+        1.0 / (1.0 + (-z).exp())
+    } else {
+        let e = z.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Numerically stable f32 log σ(z) = −log(1 + e^{−z}).
+#[inline]
+fn log_sigmoid_f32(z: f32) -> f32 {
+    if z >= 0.0 {
+        -(-z).exp().ln_1p()
+    } else {
+        z - z.exp().ln_1p()
+    }
+}
+
+/// `newton_stats_n{n}`: (K, f, y) → (rhs, s, b_rw, loglik). The fused
+/// Laplace step statistics (paper Eq. 9): π = σ(f), ∇ = (y+1)/2 − π,
+/// H = diag(π(1−π)), s = H^½, b_rw = Hf + ∇, rhs = s ∘ (K b_rw).
+fn newton_stats(k: &Tensor, f: &[f32], y: &[f32]) -> Vec<Tensor> {
+    let n = f.len();
+    let mut s = vec![0.0f32; n];
+    let mut b_rw = vec![0.0f32; n];
+    let mut loglik = 0.0f32;
+    for i in 0..n {
+        let pi = sigmoid_f32(f[i]);
+        let grad = 0.5 * (y[i] + 1.0) - pi;
+        let h = (pi * (1.0 - pi)).max(0.0);
+        s[i] = h.sqrt();
+        b_rw[i] = h * f[i] + grad;
+        loglik += log_sigmoid_f32(y[i] * f[i]);
+    }
+    let kb = kmatvec(k, &b_rw);
+    let rhs: Vec<f32> = (0..n).map(|i| s[i] * kb.data[i]).collect();
+    vec![
+        Tensor::vec(rhs),
+        Tensor::vec(s),
+        Tensor::vec(b_rw),
+        Tensor::scalar(loglik),
+    ]
+}
+
+/// `newton_update_n{n}`: (K, b_rw, s, z, y) → (f', a, loglik, quad):
+/// a = b_rw − s∘z, f' = K a, loglik = Σ log σ(y∘f'), quad = aᵀ f'.
+fn newton_update(k: &Tensor, b_rw: &[f32], s: &[f32], z: &[f32], y: &[f32]) -> Vec<Tensor> {
+    let n = b_rw.len();
+    let a: Vec<f32> = (0..n).map(|i| b_rw[i] - s[i] * z[i]).collect();
+    let f_new = kmatvec(k, &a);
+    let mut loglik = 0.0f32;
+    let mut quad = 0.0f32;
+    for i in 0..n {
+        loglik += log_sigmoid_f32(y[i] * f_new.data[i]);
+        quad += a[i] * f_new.data[i];
+    }
+    vec![
+        f_new,
+        Tensor::vec(a),
+        Tensor::scalar(loglik),
+        Tensor::scalar(quad),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::kernel::RbfKernel;
+    use crate::linalg::mat::Mat;
+    use crate::util::rng::Rng;
+
+    fn features(n: usize, d: usize, seed: u64) -> (Tensor, Mat) {
+        let mut rng = Rng::new(seed);
+        let x = Mat::randn(n, d, &mut rng);
+        (Tensor::mat(n, d, x.to_f32()), x)
+    }
+
+    #[test]
+    fn stem_parsing() {
+        assert_eq!(artifact_stem("gram_n128"), "gram");
+        assert_eq!(artifact_stem("gram_matvec_free_n8"), "gram_matvec_free");
+        assert_eq!(artifact_stem("newton_stats_n2048"), "newton_stats");
+        assert_eq!(artifact_stem("no_suffix"), "no_suffix");
+        assert_eq!(artifact_stem("bad_nx1"), "bad_nx1");
+        assert_eq!(artifact_stem("trailing_n"), "trailing_n");
+    }
+
+    #[test]
+    fn gram_matches_f64_reference() {
+        let ne = NativeEngine::embedded();
+        // The embedded manifest fixes dim = 784.
+        let (x32, x) = features(8, 784, 1);
+        let out = ne
+            .call("gram_n8", &[&x32, &Tensor::param(1.3), &Tensor::param(9.0)])
+            .unwrap();
+        let want = RbfKernel::new(1.3, 9.0).gram(&x);
+        let got = Mat::from_f32(8, 8, &out[0].data);
+        assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn matvec_free_matches_materialized() {
+        let ne = NativeEngine::embedded();
+        let (x32, _x) = features(8, 784, 2);
+        let amp = Tensor::param(1.0);
+        let ls = Tensor::param(10.0);
+        let k = ne.call("gram_n8", &[&x32, &amp, &ls]).unwrap();
+        let v = Tensor::vec((0..8).map(|i| i as f32 - 3.5).collect());
+        let dense = ne.call("kmatvec_n8", &[&k[0], &v]).unwrap();
+        let free = ne
+            .call("gram_matvec_free_n8", &[&x32, &v, &amp, &ls])
+            .unwrap();
+        for (a, b) in dense[0].data.iter().zip(&free[0].data) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn rejects_unknown_and_bad_shapes() {
+        let ne = NativeEngine::embedded();
+        assert!(ne.call("nonexistent", &[]).is_err());
+        let bad = Tensor::vec(vec![0.0; 3]);
+        let err = ne.call("kmatvec_n8", &[&bad, &bad]).unwrap_err();
+        assert!(format!("{err}").contains("shape"));
+        let err = ne.call("kmatvec_n8", &[&bad]).unwrap_err();
+        assert!(format!("{err}").contains("inputs"));
+    }
+
+    #[test]
+    fn f32_likelihood_helpers_match_f64() {
+        use crate::gp::likelihood::{log_sigmoid, sigmoid};
+        for z in [-20.0f32, -3.0, -0.1, 0.0, 0.1, 3.0, 20.0] {
+            assert!((sigmoid_f32(z) as f64 - sigmoid(z as f64)).abs() < 1e-6);
+            assert!((log_sigmoid_f32(z) as f64 - log_sigmoid(z as f64)).abs() < 1e-5);
+        }
+    }
+}

@@ -1,41 +1,37 @@
 //! Operator adapters: the engine's artifacts as solver-facing traits.
 //!
 //! [`EngineKernel`] implements [`crate::gp::laplace::KernelOp`] with the
-//! Gram matrix resident in device memory — built once by the `gram_n{n}`
-//! artifact (L1 Pallas tile kernel) and then consumed by `kmatvec` /
-//! `amatvec` calls from the CG hot loop. [`EngineSpdOperator`] exposes the
-//! Newton operator `A = I + S K S` directly as a
-//! [`crate::solvers::SpdOperator`].
+//! Gram matrix resident in engine memory — built once by the `gram_n{n}`
+//! artifact and then consumed by `kmatvec` / `amatvec` calls from the CG
+//! hot loop. [`EngineSpdOperator`] exposes the Newton operator
+//! `A = I + S K S` directly as a [`crate::solvers::SpdOperator`]. All of
+//! this is backend-agnostic: the same code runs against the native f32
+//! interpreter and (feature `pjrt`) the device-resident PJRT path.
 //!
-//! Precision note: artifacts are f32 (the TPU-native width); the solver
-//! layer is f64. Relative residuals below ~1e-6 are therefore not
-//! reachable through this path — use the native backend for the paper's
-//! Fig. 3 (tol 1e-8) and the engine path for tol ≥ 1e-5 workloads.
+//! Precision note: artifacts are f32 (the TPU-native width) on **both**
+//! backends; the solver layer is f64. Relative residuals below ~1e-6 are
+//! therefore not reachable through this path — use the f64 native solvers
+//! for the paper's Fig. 3 (tol 1e-8) and the engine path for tol ≥ 1e-5
+//! workloads.
 
 use crate::gp::laplace::KernelOp;
-use crate::runtime::engine::{Engine, Tensor};
+use crate::runtime::engine::{Buffer, Engine, Tensor};
+use crate::runtime::error::{EngineError, Result};
 use crate::solvers::SpdOperator;
-use anyhow::{anyhow, Result};
 use std::sync::Arc;
-use xla::PjRtBuffer;
 
-/// Device-resident Gram matrix with engine-backed matvecs.
+/// Resident Gram matrix with engine-backed matvecs.
 pub struct EngineKernel {
     engine: Arc<Engine>,
     n: usize,
-    k_buf: PjRtBuffer,
+    k_buf: Buffer,
     kmatvec_name: String,
     amatvec_name: String,
 }
 
-// SAFETY: see Engine — PJRT buffers are usable from any thread; all calls
-// go through the thread-safe engine.
-unsafe impl Send for EngineKernel {}
-unsafe impl Sync for EngineKernel {}
-
 impl EngineKernel {
-    /// Build K on device from features X (n × dim) via the `gram_n{n}`
-    /// artifact and keep it resident.
+    /// Build K from features X (n × dim) via the `gram_n{n}` artifact and
+    /// keep it resident.
     pub fn from_features(
         engine: Arc<Engine>,
         x: &Tensor,
@@ -67,7 +63,10 @@ impl EngineKernel {
     pub fn from_gram(engine: Arc<Engine>, k: &Tensor) -> Result<EngineKernel> {
         let n = k.shape[0];
         if k.shape != vec![n, n] {
-            return Err(anyhow!("gram must be square, got {:?}", k.shape));
+            return Err(EngineError::new(format!(
+                "gram must be square, got {:?}",
+                k.shape
+            )));
         }
         let k_buf = engine.upload(k)?;
         Ok(EngineKernel {
@@ -85,11 +84,7 @@ impl EngineKernel {
 
     /// Download K to the host (for the Cholesky baseline / tests).
     pub fn download_gram(&self) -> Result<Tensor> {
-        // Round-trip through a kmatvec with unit vectors would be O(n²)
-        // calls; instead keep a host copy? No: PjRtBuffer -> literal.
-        let lit = self.k_buf.to_literal_sync()?;
-        let data = lit.to_vec::<f32>()?;
-        Ok(Tensor { shape: vec![self.n, self.n], data })
+        self.k_buf.tensor()
     }
 
     /// y = K v through the engine (f32 internally).
@@ -118,7 +113,7 @@ impl EngineKernel {
     /// Like [`EngineKernel::amatvec_f32`] but with a pre-uploaded `s`
     /// buffer — the CG hot loop applies the same S every iteration, so
     /// [`EngineSpdOperator`] uploads it once.
-    pub fn amatvec_f32_buf(&self, s_buf: &xla::PjRtBuffer, p: &[f32]) -> Result<Vec<f32>> {
+    pub fn amatvec_f32_buf(&self, s_buf: &Buffer, p: &[f32]) -> Result<Vec<f32>> {
         let p_buf = self
             .engine
             .upload(&Tensor { shape: vec![self.n], data: p.to_vec() })?;
@@ -129,12 +124,16 @@ impl EngineKernel {
     }
 
     /// Upload an n-vector once for reuse across calls.
-    pub fn upload_vec(&self, v: &[f64]) -> Result<xla::PjRtBuffer> {
+    pub fn upload_vec(&self, v: &[f64]) -> Result<Buffer> {
         self.engine.upload(&Tensor::from_f64(vec![self.n], v))
     }
 
     /// Run the `newton_stats_n{n}` artifact: (rhs, s, b_rw, loglik).
-    pub fn newton_stats(&self, f: &[f64], y: &[f64]) -> Result<(Vec<f64>, Vec<f64>, Vec<f64>, f64)> {
+    pub fn newton_stats(
+        &self,
+        f: &[f64],
+        y: &[f64],
+    ) -> Result<(Vec<f64>, Vec<f64>, Vec<f64>, f64)> {
         let f_buf = self.engine.upload(&Tensor::from_f64(vec![self.n], f))?;
         let y_buf = self.engine.upload(&Tensor::from_f64(vec![self.n], y))?;
         let name = format!("newton_stats_n{}", self.n);
@@ -188,16 +187,12 @@ impl KernelOp for EngineKernel {
 }
 
 /// The Newton operator `A = I + S K S` served by the fused artifact.
-/// `S` is uploaded to device memory once at construction; each matvec
-/// transfers only the n-vector operand and result.
+/// `S` is uploaded once at construction; each matvec transfers only the
+/// n-vector operand and result.
 pub struct EngineSpdOperator<'a> {
     kernel: &'a EngineKernel,
-    s_buf: PjRtBuffer,
+    s_buf: Buffer,
 }
-
-// SAFETY: see EngineKernel.
-unsafe impl<'a> Send for EngineSpdOperator<'a> {}
-unsafe impl<'a> Sync for EngineSpdOperator<'a> {}
 
 impl<'a> EngineSpdOperator<'a> {
     pub fn new(kernel: &'a EngineKernel, s: &[f64]) -> Self {
@@ -229,14 +224,11 @@ impl<'a> SpdOperator for EngineSpdOperator<'a> {
 pub struct EngineMatrixFreeKernel {
     engine: Arc<Engine>,
     n: usize,
-    x_buf: PjRtBuffer,
+    x_buf: Buffer,
     amp: Tensor,
     ls: Tensor,
     name: String,
 }
-
-unsafe impl Send for EngineMatrixFreeKernel {}
-unsafe impl Sync for EngineMatrixFreeKernel {}
 
 impl EngineMatrixFreeKernel {
     pub fn new(
@@ -276,6 +268,57 @@ impl KernelOp for EngineMatrixFreeKernel {
             .expect("engine gram_matvec_free failed");
         for (yi, o) in y.iter_mut().zip(&out[0].data) {
             *yi = *o as f64;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::kernel::RbfKernel;
+    use crate::linalg::mat::Mat;
+    use crate::util::rng::Rng;
+
+    fn native_kernel(n: usize, seed: u64) -> (Arc<Engine>, Tensor, Mat) {
+        let mut rng = Rng::new(seed);
+        let x = Mat::randn(n, 784, &mut rng);
+        let x32 = Tensor::mat(n, 784, x.to_f32());
+        (Arc::new(Engine::native()), x32, x)
+    }
+
+    #[test]
+    fn from_gram_rejects_non_square() {
+        let eng = Arc::new(Engine::native());
+        let t = Tensor::mat(2, 3, vec![0.0; 6]);
+        assert!(EngineKernel::from_gram(eng, &t).is_err());
+    }
+
+    #[test]
+    fn kernel_matvec_matches_f64_gram() {
+        let (eng, x32, x) = native_kernel(8, 3);
+        let ek = EngineKernel::from_features(eng, &x32, 1.0, 10.0).unwrap();
+        let k = RbfKernel::new(1.0, 10.0).gram(&x);
+        let v: Vec<f64> = (0..8).map(|i| (i as f64) - 3.5).collect();
+        let mut got = vec![0.0; 8];
+        ek.matvec(&v, &mut got);
+        let want = k.matvec(&v);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-4, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn download_gram_restores_shape() {
+        let (eng, x32, _x) = native_kernel(8, 4);
+        let ek = EngineKernel::from_features(eng, &x32, 1.0, 10.0).unwrap();
+        let k = ek.download_gram().unwrap();
+        assert_eq!(k.shape, vec![8, 8]);
+        // Symmetric with θ² on the diagonal.
+        for i in 0..8 {
+            assert!((k.data[i * 8 + i] - 1.0).abs() < 1e-6);
+            for j in 0..8 {
+                assert_eq!(k.data[i * 8 + j], k.data[j * 8 + i]);
+            }
         }
     }
 }

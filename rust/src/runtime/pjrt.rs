@@ -1,0 +1,164 @@
+//! The PJRT backend: compile HLO artifacts once, execute many times.
+//!
+//! Only compiled with the `pjrt` feature (requires the external `xla`
+//! crate, which must be vendored — it is not available offline). Follows
+//! the reference wiring of /opt/xla-example/load_hlo.rs:
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`. Executables are compiled lazily on
+//! first call and cached for the process lifetime. Large operands (the
+//! Gram matrix) are uploaded once as device buffers and passed by
+//! reference via `execute_b`.
+
+use crate::runtime::engine::Tensor;
+use crate::runtime::error::{EngineError, Result};
+use crate::runtime::manifest::{ArtifactMeta, Manifest};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+fn xe(e: impl std::fmt::Debug) -> EngineError {
+    EngineError::new(format!("xla: {e:?}"))
+}
+
+fn to_literal(t: &Tensor) -> Result<Literal> {
+    let lit = Literal::vec1(&t.data);
+    if t.shape.len() == 1 {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).map_err(xe)
+}
+
+fn from_literal(lit: &Literal, shape: &[usize]) -> Result<Tensor> {
+    let data = lit.to_vec::<f32>().map_err(xe)?;
+    Ok(Tensor { shape: shape.to_vec(), data })
+}
+
+/// Download a device buffer to a host tensor (shape recovered flat: the
+/// caller tracks logical shapes; `Buffer::tensor` goes through here).
+pub fn buffer_to_tensor(buf: &PjRtBuffer) -> Result<Tensor> {
+    let lit = buf.to_literal_sync().map_err(xe)?;
+    let data = lit.to_vec::<f32>().map_err(xe)?;
+    Ok(Tensor::vec(data))
+}
+
+/// The PJRT engine. `Send + Sync`: the PJRT CPU client supports concurrent
+/// dispatch, and the executable cache is mutex-guarded.
+pub struct PjrtEngine {
+    client: PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    exes: Mutex<HashMap<String, Arc<PjRtLoadedExecutable>>>,
+}
+
+// SAFETY: the xla wrapper types hold raw pointers into the PJRT C API.
+// PJRT clients, loaded executables and buffers are documented thread-safe
+// for concurrent Execute/Transfer calls; all mutable engine state (the
+// lazy compile cache) is behind a Mutex.
+unsafe impl Send for PjrtEngine {}
+unsafe impl Sync for PjrtEngine {}
+
+impl PjrtEngine {
+    /// Load the engine from an artifact directory (e.g. `artifacts/`).
+    pub fn load(dir: impl AsRef<Path>) -> Result<PjrtEngine> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .map_err(|e| EngineError::new(e).context("loading manifest"))?;
+        let client = PjRtClient::cpu().map_err(xe)?;
+        crate::log_info!(
+            "engine up: platform={} devices={} artifacts={} sizes={:?}",
+            client.platform_name(),
+            client.device_count(),
+            manifest.artifacts.len(),
+            manifest.sizes
+        );
+        Ok(PjrtEngine { client, dir, manifest, exes: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn meta(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.manifest.require(name).map_err(EngineError::new)
+    }
+
+    /// Compile (or fetch the cached) executable for `name`.
+    fn executable(&self, name: &str) -> Result<Arc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.exes.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let meta = self.meta(name)?;
+        let path = self.dir.join(&meta.file);
+        let t0 = std::time::Instant::now();
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| EngineError::new("non-utf8 artifact path"))?;
+        let proto = HloModuleProto::from_text_file(path_str).map_err(xe)?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = Arc::new(self.client.compile(&comp).map_err(xe)?);
+        crate::log_debug!("compiled {name} in {:.3}s", t0.elapsed().as_secs_f64());
+        // Double-checked insert: racing threads may both compile; last wins
+        // (both executables are valid).
+        self.exes.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile a set of artifacts (e.g. at service startup).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    /// Upload a tensor to device memory (for operands reused across calls).
+    pub fn upload(&self, t: &Tensor) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
+            .map_err(xe)
+    }
+
+    fn unpack_outputs(&self, meta: &ArtifactMeta, result: Literal) -> Result<Vec<Tensor>> {
+        // Artifacts are lowered with return_tuple=True: the single output
+        // buffer is a tuple literal with `meta.outputs.len()` elements.
+        let mut result = result;
+        let parts = result.decompose_tuple().map_err(xe)?;
+        if parts.len() != meta.outputs.len() {
+            return Err(EngineError::new(format!(
+                "artifact {}: expected {} outputs, got {}",
+                meta.name,
+                meta.outputs.len(),
+                parts.len()
+            )));
+        }
+        parts
+            .iter()
+            .zip(&meta.outputs)
+            .map(|(lit, spec)| from_literal(lit, &spec.shape))
+            .collect()
+    }
+
+    /// Execute with host tensors (uploads everything per call).
+    pub fn call(&self, name: &str, args: &[Tensor]) -> Result<Vec<Tensor>> {
+        let meta = self.meta(name)?.clone();
+        let shapes: Vec<&[usize]> = args.iter().map(|a| a.shape.as_slice()).collect();
+        meta.check_inputs(&shapes).map_err(EngineError::new)?;
+        let exe = self.executable(name)?;
+        let literals: Vec<Literal> = args.iter().map(to_literal).collect::<Result<_>>()?;
+        let out = exe.execute::<Literal>(&literals).map_err(xe)?;
+        let lit = out[0][0].to_literal_sync().map_err(xe)?;
+        self.unpack_outputs(&meta, lit)
+    }
+
+    /// Execute with pre-uploaded device buffers (the hot path: `K` stays
+    /// resident; small vectors are uploaded by the caller per call).
+    pub fn call_b(&self, name: &str, args: &[&PjRtBuffer]) -> Result<Vec<Tensor>> {
+        let meta = self.meta(name)?.clone();
+        let exe = self.executable(name)?;
+        let out = exe.execute_b::<&PjRtBuffer>(args).map_err(xe)?;
+        let lit = out[0][0].to_literal_sync().map_err(xe)?;
+        self.unpack_outputs(&meta, lit)
+    }
+}

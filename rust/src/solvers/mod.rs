@@ -27,6 +27,8 @@ pub mod recycle;
 pub mod ritz;
 
 use crate::linalg::mat::Mat;
+use crate::util::pool::ThreadPool;
+use std::sync::Arc;
 
 /// Abstract SPD operator `y = A x`.
 ///
@@ -67,6 +69,82 @@ impl<'a> SpdOperator for DenseOp<'a> {
 
     fn matvec(&self, x: &[f64], y: &mut [f64]) {
         self.a.matvec_into(x, y);
+    }
+}
+
+/// Dense SPD operator with a row-sharded **parallel** matvec.
+///
+/// `y = A x` is split into contiguous row blocks, one per pool worker,
+/// executed on a shared [`ThreadPool`]. Each block computes the same
+/// per-row dot products in the same order as [`Mat::matvec_into`], so the
+/// result matches the serial [`DenseOp`] bit-for-bit. Systems below
+/// [`ParDenseOp::PAR_THRESHOLD`] rows run serially — fork/join overhead
+/// dominates the O(n²) work there.
+///
+/// The pool must not be the pool the *caller's* job is running on: a
+/// fixed-size pool whose workers block on joins of jobs queued behind
+/// them can deadlock. The coordinator therefore keeps a dedicated compute
+/// pool (see `coordinator::service::SolveService::compute_pool`).
+pub struct ParDenseOp {
+    a: Arc<Mat>,
+    pool: Arc<ThreadPool>,
+}
+
+impl ParDenseOp {
+    /// Row count below which the matvec runs serially.
+    pub const PAR_THRESHOLD: usize = 256;
+
+    pub fn new(a: Arc<Mat>, pool: Arc<ThreadPool>) -> Self {
+        assert!(a.is_square(), "ParDenseOp needs a square matrix");
+        ParDenseOp { a, pool }
+    }
+
+    pub fn mat(&self) -> &Mat {
+        &self.a
+    }
+
+    pub fn pool(&self) -> &Arc<ThreadPool> {
+        &self.pool
+    }
+}
+
+impl SpdOperator for ParDenseOp {
+    fn n(&self) -> usize {
+        self.a.rows()
+    }
+
+    fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        let n = self.a.rows();
+        assert_eq!(x.len(), n, "matvec dim");
+        assert_eq!(y.len(), n, "matvec dim");
+        let workers = self.pool.n_workers();
+        if n < Self::PAR_THRESHOLD || workers < 2 {
+            self.a.matvec_into(x, y);
+            return;
+        }
+        let blocks = workers.min(n);
+        let bs = n.div_ceil(blocks);
+        let xs: Arc<Vec<f64>> = Arc::new(x.to_vec());
+        let handles: Vec<_> = (0..blocks)
+            .map(|bi| {
+                let a = self.a.clone();
+                let xs = xs.clone();
+                self.pool.spawn(move || {
+                    let lo = (bi * bs).min(n);
+                    let hi = ((bi + 1) * bs).min(n);
+                    let mut out = vec![0.0; hi - lo];
+                    for (o, i) in out.iter_mut().zip(lo..hi) {
+                        *o = crate::linalg::vec_ops::dot(a.row(i), &xs);
+                    }
+                    out
+                })
+            })
+            .collect();
+        for (bi, h) in handles.into_iter().enumerate() {
+            let lo = (bi * bs).min(n);
+            let block = h.join();
+            y[lo..lo + block.len()].copy_from_slice(&block);
+        }
     }
 }
 
@@ -155,6 +233,48 @@ mod tests {
         assert_eq!(op.n(), 10);
         let x: Vec<f64> = (0..10).map(|i| i as f64).collect();
         assert_eq!(op.matvec_alloc(&x), a.matvec(&x));
+    }
+
+    #[test]
+    fn par_dense_op_matches_serial_bitwise() {
+        let mut rng = Rng::new(2);
+        // 300 > PAR_THRESHOLD forces the sharded path; 300 does not divide
+        // evenly by 4 workers, exercising the ragged last block.
+        let a = Arc::new(Mat::rand_spd(300, 1e4, &mut rng));
+        let pool = Arc::new(ThreadPool::new(4));
+        let par = ParDenseOp::new(a.clone(), pool);
+        let serial = DenseOp::new(&a);
+        let x: Vec<f64> = (0..300).map(|i| ((i * 13) % 17) as f64 - 8.0).collect();
+        let mut yp = vec![0.0; 300];
+        let mut ys = vec![0.0; 300];
+        par.matvec(&x, &mut yp);
+        serial.matvec(&x, &mut ys);
+        assert_eq!(yp, ys, "sharded matvec must match the serial row order");
+    }
+
+    #[test]
+    fn par_dense_op_small_systems_run_serially() {
+        let mut rng = Rng::new(3);
+        let a = Arc::new(Mat::rand_spd(10, 100.0, &mut rng));
+        let par = ParDenseOp::new(a.clone(), Arc::new(ThreadPool::new(4)));
+        assert_eq!(par.n(), 10);
+        let x = vec![1.0; 10];
+        assert_eq!(par.matvec_alloc(&x), a.matvec(&x));
+    }
+
+    #[test]
+    fn par_dense_op_solves_under_cg() {
+        let mut rng = Rng::new(4);
+        let n = 320;
+        let a = Arc::new(Mat::rand_spd(n, 1e3, &mut rng));
+        let par = ParDenseOp::new(a.clone(), Arc::new(ThreadPool::new(3)));
+        let b: Vec<f64> = (0..n).map(|i| 1.0 + (i % 5) as f64).collect();
+        let cfg = crate::solvers::cg::CgConfig::with_tol(1e-10);
+        let r = crate::solvers::cg::solve(&par, &b, None, &cfg);
+        assert_eq!(r.stop, StopReason::Converged);
+        let ax = a.matvec(&r.x);
+        let num: f64 = ax.iter().zip(&b).map(|(u, v)| (u - v) * (u - v)).sum();
+        assert!(num.sqrt() / crate::linalg::vec_ops::norm2(&b) < 1e-9);
     }
 
     #[test]

@@ -120,6 +120,44 @@ fn coordinator_runs_the_newton_sequence() {
 }
 
 #[test]
+fn coordinator_parallel_operator_reproduces_serial_sequence() {
+    // The service's ParDenseOp path (dense matvec sharded on the compute
+    // pool) must reproduce the serial sequence exactly: shards preserve
+    // the per-row dot order, so every CG trajectory is bitwise identical.
+    let n = 300;
+    let mut rng = krr::util::rng::Rng::new(31);
+    let a = krr::linalg::Mat::rand_spd(n, 1e4, &mut rng);
+    let b: Vec<f64> = (0..n).map(|i| 1.0 + (i % 6) as f64).collect();
+    let cfg = CgConfig::with_tol(1e-8);
+    let svc = SolveService::new(2);
+
+    struct Owned(krr::linalg::Mat);
+    impl SpdOperator for Owned {
+        fn n(&self) -> usize {
+            self.0.rows()
+        }
+        fn matvec(&self, x: &[f64], y: &mut [f64]) {
+            self.0.matvec_into(x, y);
+        }
+    }
+
+    let par_seq = svc.open_sequence(RecycleConfig { k: 6, l: 10, ..Default::default() });
+    let ser_seq = svc.open_sequence(RecycleConfig { k: 6, l: 10, ..Default::default() });
+    let par_op = svc.par_operator(a.clone());
+    let ser_op = Arc::new(Owned(a));
+    for _ in 0..3 {
+        let rp = par_seq.submit(par_op.clone(), b.clone(), None, cfg.clone()).wait();
+        let rs = ser_seq.submit(ser_op.clone(), b.clone(), None, cfg.clone()).wait();
+        assert_eq!(rp.stop, krr::solvers::StopReason::Converged);
+        assert_eq!(rp.iterations, rs.iterations);
+        for (u, v) in rp.x.iter().zip(&rs.x) {
+            assert_eq!(u, v);
+        }
+    }
+    assert!(par_seq.k_active() > 0);
+}
+
+#[test]
 fn hyperparameter_search_agrees_across_backends() {
     let ds = generate(&DigitsConfig { n: 64, seed: 24, ..Default::default() });
     let cg = krr::gp::hyper::grid_search(&ds, &[1.0], &[3.0, 10.0, 30.0], SolverBackend::Cg, 8);

@@ -1,9 +1,13 @@
-//! Integration: the AOT engine path vs the rust-native reference path.
+//! Integration: the engine path vs the rust-native reference path.
 //!
-//! These tests require `make artifacts` to have run (they skip gracefully
-//! otherwise, printing a notice) and check the cross-layer contract: the
-//! L1/L2 jax/pallas computations loaded through PJRT must agree with the
-//! independent rust implementations to f32 precision.
+//! The engine under test is backend-pluggable: the default build runs
+//! every case against the pure-Rust [`krr::runtime::NativeEngine`]
+//! (embedded manifest, f32 artifact semantics); with the `pjrt` feature
+//! *and* `make artifacts` done, the same cases run against the compiled
+//! PJRT artifacts instead. Either way the cross-layer contract is the
+//! same: the L1/L2 computations served through the engine call surface
+//! must agree with the independent f64 rust implementations to f32
+//! precision.
 
 use krr::data::digits::{generate, DigitsConfig};
 use krr::gp::kernel::RbfKernel;
@@ -16,15 +20,29 @@ use krr::solvers::{SpdOperator, StopReason};
 use krr::util::rng::Rng;
 use std::sync::Arc;
 
-const ARTIFACTS: &str = "artifacts";
 const N: usize = 64; // must be one of the manifest sizes
 
-fn engine() -> Option<Arc<Engine>> {
-    if !Engine::available(ARTIFACTS) {
-        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
-        return None;
+/// The engine under test. PJRT-only preconditions live behind the
+/// `pjrt` feature; everything below runs identically on both backends.
+fn engine() -> Arc<Engine> {
+    if cfg!(feature = "pjrt") {
+        assert!(
+            Engine::available("artifacts"),
+            "pjrt feature set but artifacts/ not built (run `make artifacts`)"
+        );
+        return Arc::new(Engine::load("artifacts").expect("engine load"));
     }
-    Some(Arc::new(Engine::load(ARTIFACTS).expect("engine load")))
+    Arc::new(Engine::native())
+}
+
+#[test]
+fn engine_backend_matches_build_features() {
+    let eng = engine();
+    #[cfg(feature = "pjrt")]
+    assert_eq!(eng.backend_name(), "pjrt");
+    #[cfg(not(feature = "pjrt"))]
+    assert_eq!(eng.backend_name(), "native");
+    assert!(eng.manifest().sizes.contains(&N));
 }
 
 /// Feature tensor for N digit images.
@@ -36,7 +54,7 @@ fn features() -> (Tensor, Vec<f64>, Mat) {
 
 #[test]
 fn gram_artifact_matches_native_kernel() {
-    let Some(eng) = engine() else { return };
+    let eng = engine();
     let (x32, _y, x) = features();
     let (amp, ls) = (1.3, 9.0);
     let out = eng
@@ -53,7 +71,7 @@ fn gram_artifact_matches_native_kernel() {
 
 #[test]
 fn kmatvec_and_amatvec_match_native() {
-    let Some(eng) = engine() else { return };
+    let eng = engine();
     let (x32, _y, x) = features();
     let k_native = RbfKernel::new(1.0, 10.0).gram(&x);
     let ek = EngineKernel::from_features(eng, &x32, 1.0, 10.0).unwrap();
@@ -88,7 +106,7 @@ fn kmatvec_and_amatvec_match_native() {
 
 #[test]
 fn matrix_free_kernel_matches_materialized() {
-    let Some(eng) = engine() else { return };
+    let eng = engine();
     let (x32, _y, x) = features();
     let mf = EngineMatrixFreeKernel::new(eng.clone(), &x32, 1.0, 10.0).unwrap();
     let ek = EngineKernel::from_features(eng, &x32, 1.0, 10.0).unwrap();
@@ -106,7 +124,7 @@ fn matrix_free_kernel_matches_materialized() {
 
 #[test]
 fn newton_stats_artifact_matches_native_math() {
-    let Some(eng) = engine() else { return };
+    let eng = engine();
     let (x32, y, x) = features();
     let ek = EngineKernel::from_features(eng, &x32, 1.0, 10.0).unwrap();
     let k_native = RbfKernel::new(1.0, 10.0).gram(&x);
@@ -137,7 +155,7 @@ fn newton_stats_artifact_matches_native_math() {
 
 #[test]
 fn cg_on_engine_operator_converges_and_matches_native_solution() {
-    let Some(eng) = engine() else { return };
+    let eng = engine();
     let (x32, _y, x) = features();
     let ek = EngineKernel::from_features(eng, &x32, 1.0, 10.0).unwrap();
     let k_native = RbfKernel::new(1.0, 10.0).gram(&x);
@@ -164,7 +182,7 @@ fn cg_on_engine_operator_converges_and_matches_native_solution() {
 
 #[test]
 fn full_laplace_through_engine_matches_native_backend() {
-    let Some(eng) = engine() else { return };
+    let eng = engine();
     let (x32, y, x) = features();
     let ek = EngineKernel::from_features(eng, &x32, 1.0, 10.0).unwrap();
 
@@ -192,7 +210,7 @@ fn full_laplace_through_engine_matches_native_backend() {
 
 #[test]
 fn fused_engine_laplace_matches_generic_path() {
-    let Some(eng) = engine() else { return };
+    let eng = engine();
     let (x32, y, x) = features();
     let ek = EngineKernel::from_features(eng, &x32, 1.0, 10.0).unwrap();
 
@@ -232,7 +250,7 @@ fn fused_engine_laplace_matches_generic_path() {
 
 #[test]
 fn fused_engine_laplace_with_recycling_saves_iterations() {
-    let Some(eng) = engine() else { return };
+    let eng = engine();
     let (x32, y, _x) = features();
     let ek = EngineKernel::from_features(eng, &x32, 2.5, 10.0).unwrap();
     let base = krr::runtime::laplace_engine::EngineLaplaceConfig {
@@ -268,7 +286,7 @@ fn fused_engine_laplace_with_recycling_saves_iterations() {
 
 #[test]
 fn engine_rejects_bad_shapes() {
-    let Some(eng) = engine() else { return };
+    let eng = engine();
     let bad = Tensor::vec(vec![0.0; 3]);
     let err = eng.call(&format!("kmatvec_n{N}"), &[bad.clone(), bad]).unwrap_err();
     let msg = format!("{err}");

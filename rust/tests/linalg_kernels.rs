@@ -1,0 +1,202 @@
+//! Kernel-level checks for the linalg substrate.
+//!
+//! The blocked/register-tiled kernels (`matvec_into`, `matmul`, the QR
+//! and symmetric-eig factorizations) are compared against naive
+//! triple-loop references on random matrices, including non-square and
+//! degenerate 1×n shapes, and the sharded [`ParDenseOp`] is required to
+//! reproduce the serial [`DenseOp`] to 1e-12 (it is in fact bitwise
+//! identical: the shards compute the same per-row dots in the same
+//! order).
+
+use krr::linalg::eig::sym_eig;
+use krr::linalg::mat::Mat;
+use krr::linalg::qr::{mgs_orthonormalize, Qr};
+use krr::linalg::vec_ops::norm2;
+use krr::solvers::{DenseOp, ParDenseOp, SpdOperator};
+use krr::util::pool::ThreadPool;
+use krr::util::quickprop::forall;
+use krr::util::rng::Rng;
+use std::sync::Arc;
+
+/// Naive y = A x (the reference the blocked kernel must match).
+fn naive_matvec(a: &Mat, x: &[f64]) -> Vec<f64> {
+    let mut y = vec![0.0; a.rows()];
+    for i in 0..a.rows() {
+        let mut acc = 0.0;
+        for j in 0..a.cols() {
+            acc += a[(i, j)] * x[j];
+        }
+        y[i] = acc;
+    }
+    y
+}
+
+/// Naive C = A B triple loop.
+fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.rows(), b.cols());
+    for i in 0..a.rows() {
+        for j in 0..b.cols() {
+            let mut acc = 0.0;
+            for k in 0..a.cols() {
+                acc += a[(i, k)] * b[(k, j)];
+            }
+            c[(i, j)] = acc;
+        }
+    }
+    c
+}
+
+#[test]
+fn blocked_matvec_matches_naive_reference() {
+    forall("matvec_into == naive", 25, |g| {
+        let rows = g.usize_in(1, 30);
+        let cols = g.usize_in(1, 30);
+        let mut rng = Rng::new(g.usize_in(0, 1 << 30) as u64);
+        let a = Mat::randn(rows, cols, &mut rng);
+        let x = g.normal_vec(cols);
+        let mut y = vec![0.0; rows];
+        a.matvec_into(&x, &mut y);
+        let want = naive_matvec(&a, &x);
+        y.iter().zip(&want).all(|(u, v)| (u - v).abs() < 1e-10)
+    });
+}
+
+#[test]
+fn blocked_matvec_edge_shapes() {
+    let mut rng = Rng::new(9);
+    // 1×n row, n×1 column, 1×1 scalar.
+    for (r, c) in [(1usize, 17usize), (17, 1), (1, 1)] {
+        let a = Mat::randn(r, c, &mut rng);
+        let x: Vec<f64> = (0..c).map(|i| i as f64 - 2.0).collect();
+        let mut y = vec![0.0; r];
+        a.matvec_into(&x, &mut y);
+        let want = naive_matvec(&a, &x);
+        for (u, v) in y.iter().zip(&want) {
+            assert!((u - v).abs() < 1e-12, "{r}x{c}: {u} vs {v}");
+        }
+    }
+}
+
+#[test]
+fn blocked_matmul_matches_naive_reference() {
+    forall("matmul == naive", 20, |g| {
+        let n = g.usize_in(1, 20);
+        let m = g.usize_in(1, 20);
+        let k = g.usize_in(1, 20);
+        let mut rng = Rng::new(g.usize_in(0, 1 << 30) as u64);
+        let a = Mat::randn(n, m, &mut rng);
+        let b = Mat::randn(m, k, &mut rng);
+        a.matmul(&b).max_abs_diff(&naive_matmul(&a, &b)) < 1e-10
+    });
+}
+
+#[test]
+fn blocked_matmul_crosses_block_boundary() {
+    // The matmul kernel blocks k in chunks of 64: exercise sizes
+    // straddling the boundary.
+    let mut rng = Rng::new(10);
+    for k in [63usize, 64, 65, 130] {
+        let a = Mat::randn(7, k, &mut rng);
+        let b = Mat::randn(k, 5, &mut rng);
+        assert!(
+            a.matmul(&b).max_abs_diff(&naive_matmul(&a, &b)) < 1e-10,
+            "k = {k}"
+        );
+    }
+}
+
+#[test]
+fn qr_thin_q_is_orthonormal() {
+    let mut rng = Rng::new(11);
+    for (r, c) in [(40usize, 8usize), (512, 16), (12, 12), (5, 1)] {
+        let a = Mat::randn(r, c, &mut rng);
+        let q = Qr::factor(&a).thin_q();
+        assert_eq!((q.rows(), q.cols()), (r, c));
+        let qtq = q.t_matmul(&q);
+        let dev = qtq.max_abs_diff(&Mat::identity(c));
+        assert!(dev < 1e-10, "{r}x{c}: ‖QᵀQ − I‖_max = {dev}");
+    }
+}
+
+#[test]
+fn qr_reconstructs_the_input() {
+    let mut rng = Rng::new(12);
+    let a = Mat::randn(30, 6, &mut rng);
+    let f = Qr::factor(&a);
+    let qr = f.thin_q().matmul(&f.r());
+    assert!(qr.max_abs_diff(&a) < 1e-10);
+}
+
+#[test]
+fn mgs_produces_orthonormal_basis() {
+    let mut rng = Rng::new(13);
+    let a = Mat::randn(25, 6, &mut rng);
+    let q = mgs_orthonormalize(&a, None, 1e-12);
+    let qtq = q.t_matmul(&q);
+    assert!(qtq.max_abs_diff(&Mat::identity(q.cols())) < 1e-10);
+}
+
+#[test]
+fn sym_eig_pairs_satisfy_residual_bound() {
+    forall("‖Av − λv‖ small on rand_spd", 8, |g| {
+        let n = g.usize_in(2, 25);
+        let mut rng = Rng::new(g.usize_in(0, 1 << 30) as u64);
+        let a = Mat::rand_spd(n, 1e4, &mut rng);
+        let e = sym_eig(&a).unwrap();
+        let scale = a.fro_norm().max(1.0);
+        let mut ok = true;
+        for j in 0..n {
+            let v = e.vectors.col(j);
+            let av = a.matvec(&v);
+            let resid: Vec<f64> = av
+                .iter()
+                .zip(&v)
+                .map(|(u, w)| u - e.values[j] * w)
+                .collect();
+            ok &= norm2(&resid) < 1e-8 * scale;
+            ok &= (norm2(&v) - 1.0).abs() < 1e-10;
+        }
+        // Ascending order.
+        ok && e.values.windows(2).all(|w| w[0] <= w[1] + 1e-12)
+    });
+}
+
+#[test]
+fn par_dense_op_matches_serial_to_1e12() {
+    // ISSUE acceptance: ParDenseOp output bitwise-comparable (within
+    // 1e-12) to serial DenseOp. Sizes straddle the serial threshold and
+    // the ragged-last-block case; worker counts exercise 1..8 shards.
+    let mut rng = Rng::new(14);
+    for &n in &[64usize, 255, 256, 257, 512] {
+        let a = Arc::new(Mat::rand_spd(n, 1e5, &mut rng));
+        let x: Vec<f64> = (0..n).map(|i| ((i * 7) % 13) as f64 - 6.0).collect();
+        let mut want = vec![0.0; n];
+        DenseOp::new(&a).matvec(&x, &mut want);
+        for workers in [1usize, 2, 3, 8] {
+            let par = ParDenseOp::new(a.clone(), Arc::new(ThreadPool::new(workers)));
+            let mut got = vec![0.0; n];
+            par.matvec(&x, &mut got);
+            for (i, (u, v)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (u - v).abs() <= 1e-12,
+                    "n={n} workers={workers} row {i}: {u} vs {v}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn par_dense_op_shares_one_pool_across_operators() {
+    // Several operators sharded over one pool — the coordinator's shape.
+    let pool = Arc::new(ThreadPool::new(4));
+    let mut rng = Rng::new(15);
+    let x: Vec<f64> = (0..300).map(|i| (i % 4) as f64).collect();
+    for seed in 0..3u64 {
+        let _ = seed;
+        let a = Arc::new(Mat::rand_spd(300, 1e3, &mut rng));
+        let par = ParDenseOp::new(a.clone(), pool.clone());
+        let got = par.matvec_alloc(&x);
+        assert_eq!(got, a.matvec(&x));
+    }
+}
