@@ -7,9 +7,8 @@
 
 use krr::experiments::common::{ExpOpts, Workload};
 use krr::experiments::fig1_spectrum;
-use krr::solvers::cg::{self, CgConfig};
 use krr::solvers::ritz::{extract, RitzConfig, RitzSelect};
-use krr::solvers::DenseOp;
+use krr::solvers::{self, DenseOp, SolveSpec};
 use krr::util::bench::{BenchConfig, BenchGroup};
 use krr::util::rng::Rng;
 use krr::linalg::mat::Mat;
@@ -41,11 +40,10 @@ fn main() {
     let mut rng = Rng::new(5);
     let a = Mat::rand_spd(o.n, 1e5, &mut rng);
     let b: Vec<f64> = (0..o.n).map(|i| 1.0 + (i % 7) as f64).collect();
-    let run = cg::solve(
+    let run = solvers::solve(
         &DenseOp::new(&a),
         &b,
-        None,
-        &CgConfig { tol: 1e-10, max_iters: 0, store_l: o.l, ..Default::default() },
+        &SolveSpec::cg().with_tol(1e-10).with_store_l(o.l),
     );
     g.bench("harmonic-Ritz extraction (k=8, l=12)", || {
         std::hint::black_box(extract(

@@ -8,9 +8,8 @@
 use krr::experiments::common::{ExpOpts, Workload};
 use krr::gp::laplace::LaplaceOperator;
 use krr::gp::likelihood::Logistic;
-use krr::solvers::cg::{self, CgConfig};
-use krr::solvers::defcg;
 use krr::solvers::ritz::{extract, RitzConfig, RitzSelect};
+use krr::solvers::{self, SolveSpec};
 use krr::util::bench::{BenchConfig, BenchGroup};
 
 fn main() {
@@ -39,8 +38,7 @@ fn main() {
     let b: Vec<f64> = w.data.y.iter().map(|&v| 0.5 * v).collect();
 
     // Recycled basis from a prior solve.
-    let cfg_store = CgConfig { tol: o.tol, max_iters: 0, store_l: o.l, ..Default::default() };
-    let prior = cg::solve(&op, &b, None, &cfg_store);
+    let prior = solvers::solve(&op, &b, &SolveSpec::cg().with_tol(o.tol).with_store_l(o.l));
     let (defl, _) = extract(
         None,
         &prior.stored,
@@ -49,9 +47,10 @@ fn main() {
     )
     .expect("ritz");
 
-    let cfg = CgConfig { tol: 1e-8, max_iters: 0, store_l: 0, ..Default::default() };
-    let plain = cg::solve(&op, &b, None, &cfg);
-    let deflated = defcg::solve(&op, &b, None, Some(&defl), &cfg);
+    let cg_spec = SolveSpec::cg().with_tol(1e-8);
+    let def_spec = SolveSpec::defcg().with_deflation(defl).with_tol(1e-8);
+    let plain = solvers::solve(&op, &b, &cg_spec);
+    let deflated = solvers::solve(&op, &b, &def_spec);
     println!(
         "iterations to 1e-8 @ n={n}: cg = {}, def-cg = {} (saved {})\n",
         plain.iterations,
@@ -62,10 +61,10 @@ fn main() {
     let mut g = BenchGroup::new("fig3 — single solve to rel. residual 1e-8")
         .with_config(BenchConfig { warmup: 1, iters: 8, max_seconds: 60.0 });
     g.bench("cg tol=1e-8", || {
-        std::hint::black_box(cg::solve(&op, &b, None, &cfg));
+        std::hint::black_box(solvers::solve(&op, &b, &cg_spec));
     });
     g.bench("def-cg(8,12) tol=1e-8", || {
-        std::hint::black_box(defcg::solve(&op, &b, None, Some(&defl), &cfg));
+        std::hint::black_box(solvers::solve(&op, &b, &def_spec));
     });
     g.report();
 }

@@ -84,7 +84,11 @@ fn main() {
     // Parallel dense matvec: serial DenseOp vs pool-sharded ParDenseOp.
     // At n = 2048 the O(n²) row work dominates fork/join overhead; on
     // ≥ 4 cores the sharded path should win clearly (same row order, so
-    // results are bitwise identical to serial).
+    // results are bitwise identical to serial). Repeated calls on one
+    // operator exercise the parked-scratch reuse: after the first matvec
+    // the operand copy recycles a single allocation instead of paying a
+    // fresh Arc<Vec> heap round-trip per call, so the steady-state rows
+    // below measure pure compute + copy.
     let mut g = BenchGroup::new("linalg — parallel dense matvec (n = 2048)")
         .with_config(BenchConfig { warmup: 2, iters: 20, max_seconds: 60.0 });
     {

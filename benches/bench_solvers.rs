@@ -5,11 +5,9 @@
 use krr::linalg::mat::Mat;
 use krr::runtime::engine::{Engine, Tensor};
 use krr::runtime::ops::EngineKernel;
-use krr::solvers::cg::{self, CgConfig};
-use krr::solvers::defcg;
 use krr::solvers::recycle::{RecycleConfig, RecycleManager};
 use krr::solvers::ritz::{extract, RitzConfig, RitzSelect};
-use krr::solvers::DenseOp;
+use krr::solvers::{self, DenseOp, SolveSpec};
 use krr::util::bench::{BenchConfig, BenchGroup};
 use krr::util::rng::Rng;
 use std::sync::Arc;
@@ -22,12 +20,7 @@ fn main() {
     let op = DenseOp::new(&a);
 
     // Recycled basis for the def-CG cases.
-    let run = cg::solve(
-        &op,
-        &b,
-        None,
-        &CgConfig { tol: 1e-8, max_iters: 0, store_l: 12, ..Default::default() },
-    );
+    let run = solvers::solve(&op, &b, &SolveSpec::cg().with_tol(1e-8).with_store_l(12));
     let (defl, _) = extract(
         None,
         &run.stored,
@@ -36,19 +29,25 @@ fn main() {
     )
     .expect("ritz");
 
+    // One entry point, four policies: the specs are the benchmark matrix.
+    let cg_spec = SolveSpec::cg().with_tol(1e-6);
+    let pcg_spec = SolveSpec::pcg().with_jacobi(&op).with_tol(1e-6);
+    let def_spec = SolveSpec::defcg().with_deflation(defl).with_tol(1e-6);
+    let composed_spec = def_spec.clone().with_jacobi(&op);
+
     let mut g = BenchGroup::new("solvers — single-system costs (n = 512)")
         .with_config(BenchConfig { warmup: 1, iters: 8, max_seconds: 90.0 });
     g.bench("cg tol=1e-6", || {
-        std::hint::black_box(cg::solve(&op, &b, None, &CgConfig::with_tol(1e-6)));
+        std::hint::black_box(solvers::solve(&op, &b, &cg_spec));
+    });
+    g.bench("pcg-jacobi tol=1e-6", || {
+        std::hint::black_box(solvers::solve(&op, &b, &pcg_spec));
     });
     g.bench("def-cg(8) tol=1e-6", || {
-        std::hint::black_box(defcg::solve(
-            &op,
-            &b,
-            None,
-            Some(&defl),
-            &CgConfig::with_tol(1e-6),
-        ));
+        std::hint::black_box(solvers::solve(&op, &b, &def_spec));
+    });
+    g.bench("def-cg(8)+jacobi tol=1e-6", || {
+        std::hint::black_box(solvers::solve(&op, &b, &composed_spec));
     });
     g.bench("ritz extraction k=8 l=12", || {
         std::hint::black_box(extract(
@@ -61,7 +60,7 @@ fn main() {
     g.bench("recycle manager 4-system sequence", || {
         let mut mgr = RecycleManager::new(RecycleConfig { k: 8, l: 12, ..Default::default() });
         for _ in 0..4 {
-            std::hint::black_box(mgr.solve_next(&op, &b, None, &CgConfig::with_tol(1e-6)));
+            std::hint::black_box(mgr.solve_next(&op, &b, None, &SolveSpec::defcg().with_tol(1e-6)));
         }
     });
     g.report();

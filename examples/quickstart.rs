@@ -1,19 +1,20 @@
-//! Quickstart: solve a sequence of related SPD systems with recycling.
+//! Quickstart: one solve API, four policies, plus recycling across a
+//! sequence of related SPD systems.
 //!
 //! ```text
 //! cargo run --release --example quickstart
 //! ```
 //!
 //! Builds a slowly drifting sequence of SPD matrices (the shape any outer
-//! optimization loop produces), solves it three ways — plain CG, def-CG
-//! with recycling, and def-CG through the coordinator service — and prints
-//! the per-system iteration counts. The recycled runs need visibly fewer
-//! iterations from the second system on.
+//! optimization loop produces) and solves it four ways through the single
+//! `SolveSpec` entry point — plain CG, Jacobi-PCG, def-CG with recycling,
+//! and def-CG through the coordinator service — printing the per-system
+//! iteration counts. The recycled runs need visibly fewer iterations from
+//! the second system on.
 
 use krr::linalg::mat::Mat;
-use krr::solvers::cg::{self, CgConfig};
 use krr::solvers::recycle::{RecycleConfig, RecycleManager};
-use krr::solvers::{DenseOp, SpdOperator};
+use krr::solvers::{self, DenseOp, SolveSpec, SpdOperator};
 use krr::util::rng::Rng;
 
 fn main() {
@@ -38,27 +39,41 @@ fn main() {
         })
         .collect();
     let b: Vec<f64> = (0..n).map(|i| 1.0 + ((i * 7) % 11) as f64).collect();
-    let cfg = CgConfig::with_tol(1e-8);
 
     // 1) Plain CG: every system starts from scratch.
+    let cg_spec = SolveSpec::cg().with_tol(1e-8);
     let cg_iters: Vec<usize> = seq
         .iter()
-        .map(|a| cg::solve(&DenseOp::new(a), &b, None, &cfg).iterations)
+        .map(|a| solvers::solve(&DenseOp::new(a), &b, &cg_spec).iterations)
         .collect();
     println!("plain CG      iterations/system: {cg_iters:?}");
 
-    // 2) def-CG(8, 12) with the recycle manager carrying W across systems.
+    // 2) Jacobi-PCG: same entry point, the preconditioner is data on the
+    //    spec (built from the operator's exact diagonal).
+    let pcg_iters: Vec<usize> = seq
+        .iter()
+        .map(|a| {
+            let op = DenseOp::new(a);
+            let spec = SolveSpec::pcg().with_jacobi(&op).with_tol(1e-8);
+            solvers::solve(&op, &b, &spec).iterations
+        })
+        .collect();
+    println!("jacobi PCG    iterations/system: {pcg_iters:?}");
+
+    // 3) def-CG(8, 12) with the recycle manager carrying W across systems.
+    let def_spec = SolveSpec::defcg().with_tol(1e-8);
     let mut mgr = RecycleManager::new(RecycleConfig { k: 8, l: 12, ..Default::default() });
     let def_iters: Vec<usize> = seq
         .iter()
-        .map(|a| mgr.solve_next(&DenseOp::new(a), &b, None, &cfg).iterations)
+        .map(|a| mgr.solve_next(&DenseOp::new(a), &b, None, &def_spec).iterations)
         .collect();
     println!(
         "def-CG(8,12)  iterations/system: {def_iters:?}   (recycled k={})",
         mgr.k_active()
     );
 
-    // 3) The same through the coordinator service (the deployable shape).
+    // 4) The same through the coordinator service (the deployable shape):
+    //    every submit carries its own SolveSpec.
     struct Owned(Mat);
     impl SpdOperator for Owned {
         fn n(&self) -> usize {
@@ -77,7 +92,7 @@ fn main() {
                 std::sync::Arc::new(Owned(a.clone())),
                 b.clone(),
                 None,
-                cfg.clone(),
+                def_spec.clone(),
             )
         })
         .collect();

@@ -15,9 +15,8 @@ use krr::coordinator::SolveService;
 use krr::gp::kernel::RbfKernel;
 use krr::data::digits::{generate, DigitsConfig};
 use krr::linalg::mat::Mat;
-use krr::solvers::cg::CgConfig;
 use krr::solvers::recycle::RecycleConfig;
-use krr::solvers::SpdOperator;
+use krr::solvers::{SolveSpec, SpdOperator};
 use krr::util::rng::Rng;
 use std::sync::Arc;
 use std::time::Instant;
@@ -69,7 +68,7 @@ fn main() {
                     .collect();
                 let op = Arc::new(NewtonOp { k: k.clone(), s });
                 let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-                seq.submit(op, b, None, CgConfig::with_tol(1e-6))
+                seq.submit(op, b, None, SolveSpec::defcg().with_tol(1e-6))
             })
             .collect();
         handles.push((c, seq, tickets));
@@ -91,13 +90,15 @@ fn main() {
     }
 
     let wall = start.elapsed().as_secs_f64();
-    let (solves, iters, matvecs, solve_secs, seqs) = svc.metrics().snapshot();
+    let m = svc.metrics().snapshot();
     println!(
-        "\nmetrics: {solves} solves / {seqs} sequences, {iters} iterations, {matvecs} matvecs"
+        "\nmetrics: {}/{} solves completed, {} matvecs, {} sequences still active",
+        m.completed, m.submitted, m.total_matvecs, m.active_sequences
     );
     println!(
-        "wall = {wall:.3}s, cumulative solver time = {solve_secs:.3}s (parallel speedup ×{:.2})",
-        solve_secs / wall
+        "wall = {wall:.3}s, cumulative solver time = {:.3}s (parallel speedup ×{:.2})",
+        m.total_seconds,
+        m.total_seconds / wall
     );
     println!("OK");
 }

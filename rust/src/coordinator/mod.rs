@@ -9,13 +9,15 @@
 //! * [`service::SequenceHandle`]s, one per solve sequence (e.g. one per
 //!   Laplace optimization or per hyperparameter trajectory), each with its
 //!   own [`crate::solvers::recycle::RecycleManager`] state;
+//! * per-request [`crate::solvers::SolveSpec`]s: one sequence queue serves
+//!   heterogeneous workloads (plain CG, Jacobi-PCG, deflated, block CG);
 //! * strict FIFO ordering *within* a sequence (recycling is inherently
 //!   sequential) and parallelism *across* sequences;
-//! * service-level metrics (solves, iterations, matvecs, wall time).
+//! * service-level metrics ([`service::MetricsSnapshot`]).
 //!
 //! This is the shape a GP-serving system would use: many concurrent model
 //! fits, each a sequence of related systems, sharing one compute engine.
 
 pub mod service;
 
-pub use service::{SequenceHandle, ServiceMetrics, SolveService};
+pub use service::{MetricsSnapshot, SequenceHandle, ServiceMetrics, SolveService};

@@ -1,20 +1,25 @@
 //! The solve-service implementation.
+//!
+//! Every request carries its own [`SolveSpec`], so one sequence queue can
+//! serve a heterogeneous workload — plain CG, Jacobi-preconditioned,
+//! deflated, and block requests interleave freely while the sequence's
+//! [`RecycleManager`] carries the recycled subspace across them.
 
 use crate::linalg::mat::Mat;
-use crate::solvers::cg::CgConfig;
+use crate::solvers::api::SolveSpec;
 use crate::solvers::recycle::{RecycleConfig, RecycleManager, SystemStats};
 use crate::solvers::{ParDenseOp, SolveResult, SpdOperator};
 use crate::util::pool::ThreadPool;
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
-/// A solve request: operator + right-hand side (+ per-solve config).
+/// A solve request: operator + right-hand side + per-request spec.
 struct Task {
     op: Arc<dyn SpdOperator + Send + Sync>,
     b: Vec<f64>,
     x0: Option<Vec<f64>>,
-    cfg: CgConfig,
+    spec: SolveSpec,
     slot: Arc<ResultSlot>,
 }
 
@@ -62,25 +67,72 @@ struct SequenceState {
     closed: bool,
 }
 
-/// Aggregated service counters.
+/// Owns the sequence's slot in the `active_sequences` gauge. Held by the
+/// `SequenceHandle` clones only (NOT by the drainer), so the gauge drops
+/// when the sequence is explicitly closed or every handle is gone —
+/// whichever comes first, exactly once.
+struct SeqCloser {
+    metrics: Arc<ServiceMetrics>,
+    retired: AtomicBool,
+}
+
+impl SeqCloser {
+    fn retire(&self) {
+        if !self.retired.swap(true, Ordering::Relaxed) {
+            self.metrics.active_sequences.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+}
+
+impl Drop for SeqCloser {
+    fn drop(&mut self) {
+        self.retire();
+    }
+}
+
+/// Aggregated service counters (lock-free atomics; see
+/// [`ServiceMetrics::snapshot`] for a consistent-enough named view).
 #[derive(Debug, Default)]
 pub struct ServiceMetrics {
-    pub solves: AtomicUsize,
-    pub iterations: AtomicUsize,
+    pub submitted: AtomicUsize,
+    pub completed: AtomicUsize,
+    pub active_sequences: AtomicUsize,
     pub matvecs: AtomicUsize,
     pub solve_nanos: AtomicU64,
-    pub sequences_opened: AtomicUsize,
+}
+
+/// A named point-in-time view of the service counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    /// Requests accepted by [`SequenceHandle::submit`].
+    pub submitted: usize,
+    /// Requests whose solve has finished (ticket resolvable).
+    pub completed: usize,
+    /// Sequences opened and not yet retired (a sequence retires when it
+    /// is explicitly closed or when its last handle is dropped).
+    pub active_sequences: usize,
+    /// Cumulative wall-clock seconds spent inside solvers.
+    pub total_seconds: f64,
+    /// Cumulative operator applications across all solves.
+    pub total_matvecs: usize,
+}
+
+impl MetricsSnapshot {
+    /// Requests accepted but not yet finished.
+    pub fn in_flight(&self) -> usize {
+        self.submitted.saturating_sub(self.completed)
+    }
 }
 
 impl ServiceMetrics {
-    pub fn snapshot(&self) -> (usize, usize, usize, f64, usize) {
-        (
-            self.solves.load(Ordering::Relaxed),
-            self.iterations.load(Ordering::Relaxed),
-            self.matvecs.load(Ordering::Relaxed),
-            self.solve_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
-            self.sequences_opened.load(Ordering::Relaxed),
-        )
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            active_sequences: self.active_sequences.load(Ordering::Relaxed),
+            total_seconds: self.solve_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
+            total_matvecs: self.matvecs.load(Ordering::Relaxed),
+        }
     }
 }
 
@@ -124,9 +176,12 @@ impl SolveService {
         Arc::new(ParDenseOp::new(Arc::new(a), self.compute_pool()))
     }
 
-    /// Open a new sequence with its own recycled-subspace state.
+    /// Open a new sequence with its own recycled-subspace state. Each
+    /// request submitted to the handle carries its own [`SolveSpec`]; the
+    /// `cfg` here fixes the sequence-level recycling hyperparameters
+    /// (k, ℓ, AW policy).
     pub fn open_sequence(&self, cfg: RecycleConfig) -> SequenceHandle {
-        self.metrics.sequences_opened.fetch_add(1, Ordering::Relaxed);
+        self.metrics.active_sequences.fetch_add(1, Ordering::Relaxed);
         SequenceHandle {
             state: Arc::new(Mutex::new(SequenceState {
                 mgr: RecycleManager::new(cfg),
@@ -136,6 +191,10 @@ impl SolveService {
             })),
             pool: self.pool.clone(),
             metrics: self.metrics.clone(),
+            closer: Arc::new(SeqCloser {
+                metrics: self.metrics.clone(),
+                retired: AtomicBool::new(false),
+            }),
         }
     }
 }
@@ -148,22 +207,27 @@ pub struct SequenceHandle {
     state: Arc<Mutex<SequenceState>>,
     pool: Arc<ThreadPool>,
     metrics: Arc<ServiceMetrics>,
+    closer: Arc<SeqCloser>,
 }
 
 impl SequenceHandle {
-    /// Submit the next system of this sequence. Returns a ticket that can
-    /// be waited on; submissions may be pipelined without waiting.
+    /// Submit the next system of this sequence with its own per-request
+    /// [`SolveSpec`] (method, tolerance, preconditioner, …). Returns a
+    /// ticket that can be waited on; submissions may be pipelined without
+    /// waiting. See [`RecycleManager::solve_next`] for how each method
+    /// interacts with the sequence's recycled basis.
     pub fn submit(
         &self,
         op: Arc<dyn SpdOperator + Send + Sync>,
         b: Vec<f64>,
         x0: Option<Vec<f64>>,
-        cfg: CgConfig,
+        spec: SolveSpec,
     ) -> SolveTicket {
         let slot = ResultSlot::new();
-        let task = Task { op, b, x0, cfg, slot: slot.clone() };
+        let task = Task { op, b, x0, spec, slot: slot.clone() };
         let mut st = self.state.lock().unwrap();
         assert!(!st.closed, "submit on closed sequence");
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         st.queue.push_back(task);
         if !st.running {
             st.running = true;
@@ -193,12 +257,9 @@ impl SequenceHandle {
             let result = {
                 let mut st = state.lock().unwrap();
                 st.mgr
-                    .solve_next(task.op.as_ref(), &task.b, task.x0.as_deref(), &task.cfg)
+                    .solve_next(task.op.as_ref(), &task.b, task.x0.as_deref(), &task.spec)
             };
-            metrics.solves.fetch_add(1, Ordering::Relaxed);
-            metrics
-                .iterations
-                .fetch_add(result.iterations, Ordering::Relaxed);
+            metrics.completed.fetch_add(1, Ordering::Relaxed);
             metrics.matvecs.fetch_add(result.matvecs, Ordering::Relaxed);
             metrics
                 .solve_nanos
@@ -217,9 +278,12 @@ impl SequenceHandle {
         self.state.lock().unwrap().mgr.k_active()
     }
 
-    /// Close the sequence (subsequent submits panic).
+    /// Close the sequence (subsequent submits panic) and retire it from
+    /// the `active_sequences` gauge. Idempotent; dropping the last handle
+    /// without closing retires the gauge slot too.
     pub fn close(&self) {
         self.state.lock().unwrap().closed = true;
+        self.closer.retire();
     }
 }
 
@@ -253,9 +317,9 @@ mod tests {
         let seq = svc.open_sequence(RecycleConfig { k: 6, l: 10, ..Default::default() });
         let op = spd(60, 1);
         let b = vec![1.0; 60];
-        let cfg = CgConfig::with_tol(1e-8);
+        let spec = SolveSpec::defcg().with_tol(1e-8);
         let tickets: Vec<_> = (0..4)
-            .map(|_| seq.submit(op.clone(), b.clone(), None, cfg.clone()))
+            .map(|_| seq.submit(op.clone(), b.clone(), None, spec.clone()))
             .collect();
         let results: Vec<_> = tickets.into_iter().map(|t| t.wait()).collect();
         for r in &results {
@@ -271,26 +335,73 @@ mod tests {
     #[test]
     fn sequences_run_concurrently_and_keep_state_separate() {
         let svc = SolveService::new(4);
-        let cfg = CgConfig::with_tol(1e-6);
+        let spec = SolveSpec::defcg().with_tol(1e-6);
         let mut handles = Vec::new();
         for s in 0..3 {
             let seq = svc.open_sequence(RecycleConfig { k: 4, l: 6, ..Default::default() });
             let op = spd(40, 100 + s);
             let b: Vec<f64> = (0..40).map(|i| (i + s as usize) as f64).collect();
-            let t1 = seq.submit(op.clone(), b.clone(), None, cfg.clone());
-            let t2 = seq.submit(op, b, None, cfg.clone());
+            let t1 = seq.submit(op.clone(), b.clone(), None, spec.clone());
+            let t2 = seq.submit(op, b, None, spec.clone());
             handles.push((seq, t1, t2));
         }
+        assert_eq!(svc.metrics().snapshot().active_sequences, 3);
         for (seq, t1, t2) in handles {
             assert_eq!(t1.wait().stop, StopReason::Converged);
             assert_eq!(t2.wait().stop, StopReason::Converged);
             assert_eq!(seq.history().len(), 2);
         }
-        let (solves, iters, matvecs, secs, seqs) = svc.metrics().snapshot();
-        assert_eq!(solves, 6);
-        assert_eq!(seqs, 3);
-        assert!(iters > 0 && matvecs >= iters);
-        assert!(secs >= 0.0);
+        let snap = svc.metrics().snapshot();
+        assert_eq!(snap.submitted, 6);
+        assert_eq!(snap.completed, 6);
+        assert_eq!(snap.in_flight(), 0);
+        // The consume loop dropped every handle: the sequences retired.
+        assert_eq!(snap.active_sequences, 0);
+        assert!(snap.total_matvecs > 0);
+        assert!(snap.total_seconds >= 0.0);
+    }
+
+    #[test]
+    fn mixed_method_workload_through_one_sequence_queue() {
+        // The heterogeneous-workload promise: plain, Jacobi-preconditioned,
+        // deflated, and block requests interleave through ONE sequence
+        // queue, sharing (or bypassing) the recycled basis per method.
+        let svc = SolveService::new(2);
+        let seq = svc.open_sequence(RecycleConfig { k: 6, l: 10, ..Default::default() });
+        let op = spd(70, 5);
+        let b = vec![1.0; 70];
+        let jacobi = SolveSpec::pcg().with_jacobi(op.as_ref()).with_tol(1e-8);
+        let specs = vec![
+            SolveSpec::defcg().with_tol(1e-8), // seeds the basis
+            SolveSpec::cg().with_tol(1e-8),    // plain, still feeds W
+            jacobi,                            // preconditioned
+            SolveSpec::defcg().with_tol(1e-8), // consumes the basis
+            SolveSpec::blockcg().with_tol(1e-8), // passes through
+        ];
+        let tickets: Vec<_> = specs
+            .into_iter()
+            .map(|spec| seq.submit(op.clone(), b.clone(), None, spec))
+            .collect();
+        let results: Vec<_> = tickets.into_iter().map(|t| t.wait()).collect();
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.stop, StopReason::Converged, "request {i}");
+        }
+        // The deflated request after the feeders beats the cold one.
+        assert!(
+            results[3].iterations < results[0].iterations,
+            "recycled def-CG {} >= cold def-CG {}",
+            results[3].iterations,
+            results[0].iterations
+        );
+        assert_eq!(seq.history().len(), 5);
+        let snap = svc.metrics().snapshot();
+        assert_eq!(snap.submitted, 5);
+        assert_eq!(snap.completed, 5);
+        assert_eq!(snap.active_sequences, 1);
+        seq.close();
+        assert_eq!(svc.metrics().snapshot().active_sequences, 0);
+        seq.close(); // idempotent
+        assert_eq!(svc.metrics().snapshot().active_sequences, 0);
     }
 
     #[test]
@@ -301,7 +412,7 @@ mod tests {
         let tickets: Vec<_> = (0..8)
             .map(|i| {
                 let b: Vec<f64> = (0..30).map(|j| ((i + j) % 5) as f64 + 1.0).collect();
-                seq.submit(op.clone(), b, None, CgConfig::with_tol(1e-6))
+                seq.submit(op.clone(), b, None, SolveSpec::defcg().with_tol(1e-6))
             })
             .collect();
         for t in tickets {
@@ -317,7 +428,7 @@ mod tests {
         let seq = svc.open_sequence(RecycleConfig::default());
         seq.close();
         let op = spd(5, 9);
-        let _ = seq.submit(op, vec![1.0; 5], None, CgConfig::default());
+        let _ = seq.submit(op, vec![1.0; 5], None, SolveSpec::defcg());
     }
 
     #[test]
@@ -327,16 +438,16 @@ mod tests {
         let n = 300; // above ParDenseOp::PAR_THRESHOLD: shards for real
         let a = Mat::rand_spd(n, 1e4, &mut rng);
         let b: Vec<f64> = (0..n).map(|i| 1.0 + (i % 9) as f64).collect();
-        let cfg = CgConfig::with_tol(1e-10);
+        let spec = SolveSpec::defcg().with_tol(1e-10);
 
         let par = svc.par_operator(a.clone());
         let seq = svc.open_sequence(RecycleConfig { k: 6, l: 10, ..Default::default() });
-        let r_par = seq.submit(par, b.clone(), None, cfg.clone()).wait();
+        let r_par = seq.submit(par, b.clone(), None, spec.clone()).wait();
         assert_eq!(r_par.stop, StopReason::Converged);
 
         // Serial reference through a fresh sequence (same recycle state).
         let seq2 = svc.open_sequence(RecycleConfig { k: 6, l: 10, ..Default::default() });
-        let r_ser = seq2.submit(spd_mat(a), b, None, cfg).wait();
+        let r_ser = seq2.submit(spd_mat(a), b, None, spec).wait();
         assert_eq!(r_ser.stop, StopReason::Converged);
 
         // Bitwise-identical matvecs => identical CG trajectories.
@@ -358,11 +469,11 @@ mod tests {
         let b = vec![2.0; 20];
         // First solve to get solution, then warm start from it.
         let x = seq
-            .submit(op.clone(), b.clone(), None, CgConfig::with_tol(1e-10))
+            .submit(op.clone(), b.clone(), None, SolveSpec::defcg().with_tol(1e-10))
             .wait()
             .x;
         let warm = seq
-            .submit(op, b, Some(x), CgConfig::with_tol(1e-10))
+            .submit(op, b, Some(x), SolveSpec::defcg().with_tol(1e-10))
             .wait();
         assert!(warm.iterations <= 2, "warm start took {}", warm.iterations);
     }

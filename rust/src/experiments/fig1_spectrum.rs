@@ -14,9 +14,8 @@ use crate::gp::likelihood::Logistic;
 use crate::linalg::cholesky::Cholesky;
 use crate::linalg::eig::sym_eig;
 use crate::linalg::mat::Mat;
-use crate::solvers::cg::{self, CgConfig};
 use crate::solvers::ritz::{extract, RitzConfig, RitzSelect};
-use crate::solvers::DenseOp;
+use crate::solvers::{self, DenseOp, SolveSpec};
 use crate::util::table::{sci, Align, Table};
 
 pub struct Fig1Result {
@@ -49,8 +48,8 @@ pub fn compute(w: &Workload, o: &ExpOpts) -> Fig1Result {
     // First solve with plain CG, storing ℓ directions; extract k Ritz
     // vectors for the largest eigenvalues (the paper's Fig. 1 choice).
     let b: Vec<f64> = w.data.y.iter().map(|&v| v * 0.5).collect();
-    let cfg = CgConfig { tol: o.tol, max_iters: 0, store_l: o.l, ..Default::default() };
-    let r = cg::solve(&DenseOp::new(&a), &b, None, &cfg);
+    let spec = SolveSpec::cg().with_tol(o.tol).with_store_l(o.l);
+    let r = solvers::solve(&DenseOp::new(&a), &b, &spec);
     let (defl, _) = extract(
         None,
         &r.stored,

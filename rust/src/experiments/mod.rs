@@ -86,9 +86,8 @@ fn demo_digits(rest: &[String]) {
 fn serve_demo() {
     use crate::coordinator::SolveService;
     use crate::linalg::mat::Mat;
-    use crate::solvers::cg::CgConfig;
     use crate::solvers::recycle::RecycleConfig;
-    use crate::solvers::SpdOperator;
+    use crate::solvers::{SolveSpec, SpdOperator};
     use crate::util::rng::Rng;
     use std::sync::Arc;
 
@@ -112,7 +111,7 @@ fn serve_demo() {
         let tickets: Vec<_> = (0..6)
             .map(|i| {
                 let b: Vec<f64> = (0..200).map(|j| ((i + j) % 9) as f64 + 1.0).collect();
-                seq.submit(op.clone(), b, None, CgConfig::with_tol(1e-6))
+                seq.submit(op.clone(), b, None, SolveSpec::defcg().with_tol(1e-6))
             })
             .collect();
         handles.push((seq, tickets));
@@ -121,6 +120,9 @@ fn serve_demo() {
         let iters: Vec<usize> = tickets.into_iter().map(|t| t.wait().iterations).collect();
         println!("  sequence {s}: iterations/system = {iters:?} (k={})", seq.k_active());
     }
-    let (solves, iters, matvecs, secs, seqs) = svc.metrics().snapshot();
-    println!("metrics: {solves} solves, {iters} iters, {matvecs} matvecs, {secs:.3}s solve time, {seqs} sequences");
+    let m = svc.metrics().snapshot();
+    println!(
+        "metrics: {}/{} solves completed, {} matvecs, {:.3}s solve time, {} active sequences",
+        m.completed, m.submitted, m.total_matvecs, m.total_seconds, m.active_sequences
+    );
 }

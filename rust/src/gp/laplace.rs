@@ -22,7 +22,7 @@ use crate::gp::likelihood::Logistic;
 use crate::linalg::cholesky::Cholesky;
 use crate::linalg::mat::Mat;
 use crate::linalg::vec_ops::dot;
-use crate::solvers::cg::{self, CgConfig};
+use crate::solvers::api::{self, SolveSpec};
 use crate::solvers::recycle::{RecycleConfig, RecycleManager};
 use crate::solvers::{ParDenseOp, SolveResult, SpdOperator};
 use crate::util::pool::ThreadPool;
@@ -115,15 +115,35 @@ impl<'a> SpdOperator for LaplaceOperator<'a> {
             y[i] = x[i] + self.s[i] * ky[i];
         }
     }
+
+    /// Exact diagonal `a_ii = 1 + sᵢ² K_ii` when the kernel exposes a
+    /// dense Gram matrix; falls back to basis-vector probing otherwise
+    /// (see the [`SpdOperator::diag`] contract).
+    fn diag(&self, out: &mut [f64]) {
+        match self.k.dense() {
+            Some(km) => {
+                km.diag_into(out);
+                for (o, si) in out.iter_mut().zip(self.s) {
+                    *o = 1.0 + si * si * *o;
+                }
+            }
+            None => crate::solvers::probe_diag(self, out),
+        }
+    }
 }
 
-/// Which linear solver runs inside each Newton step.
+/// Which linear solver runs inside each Newton step. Iterative backends
+/// are dispatched through the unified [`SolveSpec`] API.
 #[derive(Clone, Debug)]
 pub enum SolverBackend {
     /// Dense Cholesky on the materialized `A` — the paper's exact column.
     Cholesky,
     /// Plain conjugate gradients.
     Cg,
+    /// Jacobi-preconditioned CG. Uses the Newton operator's exact diagonal
+    /// `1 + sᵢ² K_ii`; an ablation baseline — the paper's point (§2.1) is
+    /// that this diagonal is nearly constant, so Jacobi helps little here.
+    Pcg,
     /// Deflated CG(k, ℓ) with harmonic-Ritz recycling across Newton steps.
     DefCg(RecycleConfig),
 }
@@ -133,6 +153,7 @@ impl SolverBackend {
         match self {
             SolverBackend::Cholesky => "cholesky".into(),
             SolverBackend::Cg => "cg".into(),
+            SolverBackend::Pcg => "pcg-jacobi".into(),
             SolverBackend::DefCg(c) => format!("def-cg(k={},l={})", c.k, c.l),
         }
     }
@@ -317,26 +338,32 @@ impl<'a> LaplaceGpc<'a> {
             }
             SolverBackend::Cg => {
                 let op = LaplaceOperator::new(self.k, s);
-                let cfg = CgConfig {
-                    tol: self.cfg.solve_tol,
-                    max_iters: self.cfg.max_solver_iters,
-                    store_l: 0,
-                    ..Default::default()
-                };
-                let r = cg::solve(&op, rhs, None, &cfg);
+                let spec = SolveSpec::cg()
+                    .with_tol(self.cfg.solve_tol)
+                    .with_max_iters(self.cfg.max_solver_iters);
+                let r = api::solve(&op, rhs, &spec);
+                (r.x.clone(), InnerStats::from(&r, 0))
+            }
+            SolverBackend::Pcg => {
+                let op = LaplaceOperator::new(self.k, s);
+                // Jacobi from the exact Newton-operator diagonal (O(n)
+                // thanks to the `diag` override; S changes per Newton
+                // step, so the preconditioner is rebuilt each time).
+                let spec = SolveSpec::pcg()
+                    .with_jacobi(&op)
+                    .with_tol(self.cfg.solve_tol)
+                    .with_max_iters(self.cfg.max_solver_iters);
+                let r = api::solve(&op, rhs, &spec);
                 (r.x.clone(), InnerStats::from(&r, 0))
             }
             SolverBackend::DefCg(_) => {
                 let op = LaplaceOperator::new(self.k, s);
-                let cfg = CgConfig {
-                    tol: self.cfg.solve_tol,
-                    max_iters: self.cfg.max_solver_iters,
-                    store_l: 0, // manager overrides with its ℓ
-                    ..Default::default()
-                };
+                let spec = SolveSpec::defcg()
+                    .with_tol(self.cfg.solve_tol)
+                    .with_max_iters(self.cfg.max_solver_iters);
                 let mgr = self.recycler.as_mut().expect("recycler present for DefCg");
                 let dim = mgr.k_active();
-                let r = mgr.solve_next(&op, rhs, None, &cfg);
+                let r = mgr.solve_next(&op, rhs, None, &spec);
                 (r.x.clone(), InnerStats::from(&r, dim))
             }
         }
@@ -423,27 +450,43 @@ mod tests {
     fn all_backends_agree_on_the_mode() {
         let chol = fit_with(SolverBackend::Cholesky, 50, 2);
         let cg = fit_with(SolverBackend::Cg, 50, 2);
+        let pcg = fit_with(SolverBackend::Pcg, 50, 2);
         let defcg = fit_with(
             SolverBackend::DefCg(RecycleConfig { k: 4, l: 8, ..Default::default() }),
             50,
             2,
         );
         let ll = chol.final_log_lik();
-        assert!(
-            (cg.final_log_lik() - ll).abs() / ll.abs() < 1e-5,
-            "cg {} vs chol {}",
-            cg.final_log_lik(),
-            ll
-        );
-        assert!(
-            (defcg.final_log_lik() - ll).abs() / ll.abs() < 1e-5,
-            "defcg {} vs chol {}",
-            defcg.final_log_lik(),
-            ll
-        );
+        for (name, fit) in [("cg", &cg), ("pcg", &pcg), ("defcg", &defcg)] {
+            assert!(
+                (fit.final_log_lik() - ll).abs() / ll.abs() < 1e-5,
+                "{name} {} vs chol {}",
+                fit.final_log_lik(),
+                ll
+            );
+        }
         // Modes agree pointwise.
         for (u, v) in chol.f_hat.iter().zip(&cg.f_hat) {
             assert!((u - v).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn laplace_operator_diag_is_exact() {
+        let (_x, _y, k) = toy_problem(30, 7);
+        let kern = DenseKernel::new(k.clone());
+        let s: Vec<f64> = (0..30).map(|i| 0.1 + 0.01 * i as f64).collect();
+        let op = LaplaceOperator::new(&kern, &s);
+        let mut fast = vec![0.0; 30];
+        op.diag(&mut fast);
+        let mut probed = vec![0.0; 30];
+        crate::solvers::probe_diag(&op, &mut probed);
+        for (f, p) in fast.iter().zip(&probed) {
+            assert!((f - p).abs() < 1e-12, "exact {f} vs probed {p}");
+        }
+        // And it matches the closed form directly.
+        for i in 0..30 {
+            assert_eq!(fast[i], 1.0 + s[i] * s[i] * k[(i, i)]);
         }
     }
 

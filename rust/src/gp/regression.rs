@@ -16,7 +16,7 @@ use crate::gp::kernel::RbfKernel;
 use crate::linalg::cholesky::Cholesky;
 use crate::linalg::mat::Mat;
 use crate::linalg::vec_ops::dot;
-use crate::solvers::cg::CgConfig;
+use crate::solvers::api::SolveSpec;
 use crate::solvers::recycle::{RecycleConfig, RecycleManager};
 use crate::solvers::SpdOperator;
 
@@ -52,6 +52,14 @@ impl<'a> SpdOperator for RegularizedKernelOp<'a> {
             y[i] += self.sigma2 * x[i];
         }
     }
+
+    /// Exact diagonal `K_ii + σ²` (see the [`SpdOperator::diag`] contract).
+    fn diag(&self, out: &mut [f64]) {
+        self.k.diag_into(out);
+        for o in out.iter_mut() {
+            *o += self.sigma2;
+        }
+    }
 }
 
 /// A fitted regression state for one hyperparameter setting.
@@ -80,7 +88,7 @@ pub struct GpRegression<'a> {
     x: &'a Mat,
     y: &'a [f64],
     mgr: RecycleManager,
-    solve_cfg: CgConfig,
+    spec: SolveSpec,
 }
 
 impl<'a> GpRegression<'a> {
@@ -90,7 +98,7 @@ impl<'a> GpRegression<'a> {
             x,
             y,
             mgr: RecycleManager::new(recycle),
-            solve_cfg: CgConfig::with_tol(tol),
+            spec: SolveSpec::defcg().with_tol(tol),
         }
     }
 
@@ -100,7 +108,7 @@ impl<'a> GpRegression<'a> {
         let kernel = RbfKernel::new(p.amplitude, p.lengthscale);
         let k = kernel.gram(self.x);
         let op = RegularizedKernelOp::new(&k, p.noise);
-        let r = self.mgr.solve_next(&op, self.y, None, &self.solve_cfg);
+        let r = self.mgr.solve_next(&op, self.y, None, &self.spec);
         let data_fit = -0.5 * dot(self.y, &r.x);
         RegressionFit {
             params: p,

@@ -12,8 +12,11 @@
 //! (Morgan, 1995).
 //!
 //! Layer map (see DESIGN.md):
-//! * [`solvers`] — CG, def-CG(k, ℓ), Cholesky, Lanczos, recycling state,
-//!   and the pool-sharded parallel dense operator (`ParDenseOp`).
+//! * [`solvers`] — the unified [`solvers::SolveSpec`] API (one
+//!   `solve(op, b, &spec)` entry point across CG / PCG / def-CG /
+//!   block CG, with preconditioning and deflation as data), the
+//!   underlying kernels, Cholesky, Lanczos, recycling state, and the
+//!   pool-sharded parallel dense operator (`ParDenseOp`).
 //! * [`gp`] — GP classification with Laplace/Newton (the paper's workload).
 //! * [`coordinator`] — the solve-service that owns recycling across a
 //!   sequence and dispatches matvec traffic.

@@ -223,6 +223,49 @@ impl Mat {
         y
     }
 
+    /// Copy the main diagonal into `out` (square matrices only) — the
+    /// exact-`diag` building block shared by the dense operator overrides
+    /// of `SpdOperator::diag`.
+    pub fn diag_into(&self, out: &mut [f64]) {
+        assert!(self.is_square(), "diag_into needs a square matrix");
+        assert_eq!(out.len(), self.rows, "diag dimension mismatch");
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = self[(i, i)];
+        }
+    }
+
+    /// y += Σⱼ coef[j] · colⱼ — the skinny update at the heart of the
+    /// deflated solvers (`x += W γ`). Zero coefficients skip their column
+    /// entirely, which keeps the common sparse-γ case cheap and leaves the
+    /// float sequence identical to the hand-rolled loops it replaces.
+    pub fn add_scaled_cols(&self, coef: &[f64], y: &mut [f64]) {
+        assert_eq!(coef.len(), self.cols, "add_scaled_cols dim");
+        assert_eq!(y.len(), self.rows, "add_scaled_cols dim");
+        for j in 0..self.cols {
+            let c = coef[j];
+            if c != 0.0 {
+                for i in 0..self.rows {
+                    y[i] += c * self[(i, j)];
+                }
+            }
+        }
+    }
+
+    /// y −= Σⱼ coef[j] · colⱼ — the Jacobi-deflation composition helper
+    /// (direction deflection `p −= W μ`). See [`Mat::add_scaled_cols`].
+    pub fn sub_scaled_cols(&self, coef: &[f64], y: &mut [f64]) {
+        assert_eq!(coef.len(), self.cols, "sub_scaled_cols dim");
+        assert_eq!(y.len(), self.rows, "sub_scaled_cols dim");
+        for j in 0..self.cols {
+            let c = coef[j];
+            if c != 0.0 {
+                for i in 0..self.rows {
+                    y[i] -= c * self[(i, j)];
+                }
+            }
+        }
+    }
+
     /// C = A · B, blocked i-k-j loop order (B rows stream through cache).
     pub fn matmul(&self, b: &Mat) -> Mat {
         assert_eq!(self.cols, b.rows, "matmul dim {}x{} · {}x{}", self.rows, self.cols, b.rows, b.cols);
@@ -391,5 +434,21 @@ mod tests {
         let a = Mat::zeros(2, 3);
         let b = Mat::zeros(2, 3);
         let _ = a.matmul(&b);
+    }
+
+    #[test]
+    fn scaled_cols_helpers_match_naive() {
+        let w = Mat::from_vec(3, 2, vec![1., 4., 2., 5., 3., 6.]); // cols [1,2,3], [4,5,6]
+        let coef = [2.0, -1.0];
+        let mut y = vec![10.0, 10.0, 10.0];
+        w.add_scaled_cols(&coef, &mut y); // y += 2*[1,2,3] - [4,5,6]
+        assert_eq!(y, vec![8.0, 9.0, 10.0]);
+        w.sub_scaled_cols(&coef, &mut y);
+        assert_eq!(y, vec![10.0, 10.0, 10.0]);
+        // Zero coefficients leave y bit-identical (columns are skipped).
+        let mut z = vec![1.25, -0.5, 3.0];
+        let before = z.clone();
+        w.add_scaled_cols(&[0.0, 0.0], &mut z);
+        assert_eq!(z, before);
     }
 }

@@ -12,7 +12,7 @@
 use crate::gp::laplace::{LaplaceFit, NewtonStepStats};
 use crate::runtime::error::Result;
 use crate::runtime::ops::{EngineKernel, EngineSpdOperator};
-use crate::solvers::cg::CgConfig;
+use crate::solvers::api::{self, SolveSpec};
 use crate::solvers::recycle::{RecycleConfig, RecycleManager};
 use std::time::Instant;
 
@@ -57,24 +57,23 @@ pub fn fit(kernel: &EngineKernel, y: &[f64], cfg: &EngineLaplaceConfig) -> Resul
         let (rhs, s, b_rw, _loglik_pre) = kernel.newton_stats(&f, y)?;
 
         // Inner solve on the fused A = I + SKS artifact operator, with the
-        // f32-floor guards on (see solvers::cg docs).
+        // f32-floor guards on (see solvers::cg docs); the plain-CG path
+        // additionally runs residual replacement every 25 iterations.
         let solve_start = Instant::now();
         let op = EngineSpdOperator::new(kernel, &s);
-        let solve_cfg = CgConfig {
-            tol: cfg.solve_tol.max(2e-7), // f32 floor
-            max_iters: 0,
-            store_l: 0,
-            stall_window: 60,
-            recompute_every: 25,
+        let knobs = |spec: SolveSpec| {
+            spec.with_tol(cfg.solve_tol.max(2e-7)) // f32 floor
+                .with_stall_window(60)
+                .with_recompute_every(25)
         };
         let (z, iters, matvecs, trace, defl_dim) = match recycler.as_mut() {
             Some(mgr) => {
                 let dim = mgr.k_active();
-                let r = mgr.solve_next(&op, &rhs, None, &solve_cfg);
+                let r = mgr.solve_next(&op, &rhs, None, &knobs(SolveSpec::defcg()));
                 (r.x, r.iterations, r.matvecs, r.residuals, dim)
             }
             None => {
-                let r = crate::solvers::cg::solve(&op, &rhs, None, &solve_cfg);
+                let r = api::solve(&op, &rhs, &knobs(SolveSpec::cg()));
                 (r.x, r.iterations, r.matvecs, r.residuals, 0)
             }
         };

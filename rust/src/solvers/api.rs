@@ -1,0 +1,540 @@
+//! The unified solve API: one entry point across every solver family.
+//!
+//! The paper frames deflation, preconditioning, and augmentation as
+//! interchangeable *policies* over one abstract solve (de Roos & Hennig
+//! 2017 §2; Soodhalter, de Sturler & Kilmer 2020). This module makes that
+//! literal: method choice, preconditioning, deflation, and the
+//! storage/stall knobs are all **data** on a single request type,
+//! [`SolveSpec`], dispatched through [`solve`] / [`solve_with_x0`]:
+//!
+//! ```no_run
+//! use krr::linalg::mat::Mat;
+//! use krr::solvers::{self, DenseOp, SolveSpec};
+//! use krr::util::rng::Rng;
+//!
+//! let mut rng = Rng::new(0);
+//! let a = Mat::rand_spd(100, 1e4, &mut rng);
+//! let b = vec![1.0; 100];
+//! // Plain CG, Jacobi-PCG, and deflated CG are the same call with a
+//! // different spec:
+//! let op = DenseOp::new(&a);
+//! let plain = solvers::solve(&op, &b, &SolveSpec::cg().with_tol(1e-8));
+//! let jacobi = solvers::solve(&op, &b, &SolveSpec::pcg().with_jacobi(&op).with_tol(1e-8));
+//! assert!(plain.final_residual() <= 1e-8 && jacobi.final_residual() <= 1e-8);
+//! ```
+//!
+//! Dispatch semantics per [`Method`]:
+//!
+//! * [`Method::Cg`] — the plain Hestenes–Stiefel kernel ([`crate::solvers::cg`]).
+//!   Any preconditioner or deflation basis on the spec is deliberately
+//!   **not** applied (a plain request stays plain even on a spec cloned
+//!   from a richer one).
+//! * [`Method::Pcg`] — preconditioned CG. With no preconditioner set this
+//!   degenerates to plain CG (the identity preconditioner changes
+//!   nothing); with a deflation basis it runs the composed
+//!   deflated-preconditioned kernel.
+//! * [`Method::DefCg`] — deflated CG (Saad et al. 2000), optionally
+//!   composed with the spec's preconditioner. With an empty/no basis it
+//!   reduces exactly to (P)CG.
+//! * [`Method::BlockCg`] — block CG (O'Leary 1980). Through the
+//!   single-RHS entry point the right-hand side becomes a 1-column block;
+//!   use [`solve_block`] for genuine multi-RHS workloads. Warm starts
+//!   shift to the residual system `A d = b − A x₀` (one extra matvec,
+//!   same ‖b − A x‖/‖b‖ stopping rule). Only `tol` and `max_iters` reach
+//!   the block kernel: preconditioning, deflation, `store_l` (block runs
+//!   return empty [`StoredDirections`]), `stall_window`, and
+//!   `recompute_every` are ignored.
+
+use crate::linalg::mat::Mat;
+use crate::solvers::blockcg::{self, BlockSolveResult};
+use crate::solvers::cg::{self, CgConfig};
+use crate::solvers::defcg::{self, Deflation};
+use crate::solvers::{SolveResult, SpdOperator, StoredDirections};
+use std::sync::Arc;
+
+/// Which solver family a [`SolveSpec`] requests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// Plain conjugate gradients.
+    Cg,
+    /// Preconditioned CG (the spec's preconditioner; identity if unset).
+    Pcg,
+    /// Deflated CG, optionally composed with a preconditioner.
+    DefCg,
+    /// Block CG (multi-RHS; single-RHS requests become 1-column blocks).
+    BlockCg,
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Cg => "cg",
+            Method::Pcg => "pcg",
+            Method::DefCg => "def-cg",
+            Method::BlockCg => "block-cg",
+        }
+    }
+}
+
+/// A symmetric positive definite preconditioner `M ≈ A`, applied as
+/// `z = M⁻¹ r`.
+///
+/// Implementations must be cheap relative to a matvec (the CG loop
+/// applies them once per iteration) and must be *fixed* for the duration
+/// of a solve — CG's three-term recurrence assumes a constant M.
+pub trait Preconditioner: Send + Sync {
+    /// z = M⁻¹ r. `z.len() == r.len()`.
+    fn apply(&self, r: &[f64], z: &mut [f64]);
+
+    /// Short human-readable tag for logs and metrics.
+    fn name(&self) -> &'static str {
+        "custom"
+    }
+}
+
+/// The identity preconditioner: `z = r`. Turns PCG into plain CG
+/// (bit-for-bit: copying r and multiplying by nothing changes no float).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Identity;
+
+impl Preconditioner for Identity {
+    fn apply(&self, r: &[f64], z: &mut [f64]) {
+        z.copy_from_slice(r);
+    }
+
+    fn name(&self) -> &'static str {
+        "identity"
+    }
+}
+
+/// Jacobi (diagonal) preconditioning: `z_i = r_i / a_ii`.
+///
+/// Build it from an explicit diagonal ([`Jacobi::new`]) or straight from
+/// an operator ([`Jacobi::from_op`]), which uses [`SpdOperator::diag`] —
+/// exact for operators that override `diag`, n probing matvecs otherwise.
+#[derive(Clone, Debug)]
+pub struct Jacobi {
+    inv_diag: Vec<f64>,
+}
+
+impl Jacobi {
+    /// From the diagonal of A (must be strictly positive — any SPD matrix
+    /// has one, so a non-positive entry means the operator is not SPD or
+    /// the diagonal is wrong).
+    pub fn new(diag: &[f64]) -> Jacobi {
+        assert!(
+            diag.iter().all(|&d| d > 0.0),
+            "Jacobi needs a positive diagonal"
+        );
+        Jacobi {
+            inv_diag: diag.iter().map(|&d| 1.0 / d).collect(),
+        }
+    }
+
+    /// From an operator via [`SpdOperator::diag`]. Cost: free for exact
+    /// overrides (`DenseOp`, `ParDenseOp`, the GPC Newton operator), n
+    /// matvecs for the probing default.
+    pub fn from_op(a: &dyn SpdOperator) -> Jacobi {
+        let mut d = vec![0.0; a.n()];
+        a.diag(&mut d);
+        Jacobi::new(&d)
+    }
+
+    pub fn n(&self) -> usize {
+        self.inv_diag.len()
+    }
+}
+
+impl Preconditioner for Jacobi {
+    fn apply(&self, r: &[f64], z: &mut [f64]) {
+        assert_eq!(r.len(), self.inv_diag.len());
+        assert_eq!(z.len(), self.inv_diag.len());
+        for i in 0..r.len() {
+            z[i] = r[i] * self.inv_diag[i];
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "jacobi"
+    }
+}
+
+/// One solve request: the method plus every policy knob, as plain data.
+///
+/// Built with the builder methods and handed to [`solve`] /
+/// [`solve_with_x0`], to [`crate::solvers::recycle::RecycleManager::solve_next`],
+/// or to [`crate::coordinator::SequenceHandle::submit`] — the same type end
+/// to end from library callers through the coordinator. Cloning is cheap:
+/// the preconditioner and deflation basis are `Arc`-shared.
+#[derive(Clone)]
+pub struct SolveSpec {
+    /// Solver family to dispatch to.
+    pub method: Method,
+    /// Stop when ‖r‖/‖b‖ ≤ tol.
+    pub tol: f64,
+    /// Iteration cap (0 means `10 n`).
+    pub max_iters: usize,
+    /// Store the first ℓ (direction, A·direction) pairs for recycling.
+    pub store_l: usize,
+    /// Stagnation window (0 disables; see [`CgConfig::stall_window`]).
+    pub stall_window: usize,
+    /// Residual replacement period (0 disables; see
+    /// [`CgConfig::recompute_every`]; honored by the plain-CG kernel).
+    pub recompute_every: usize,
+    /// Optional preconditioner (used by `Pcg` and `DefCg`).
+    pub precond: Option<Arc<dyn Preconditioner>>,
+    /// Optional deflation basis (used by `DefCg` and `Pcg`). Inside a
+    /// recycled sequence the manager's basis takes precedence over this.
+    pub deflation: Option<Arc<Deflation>>,
+}
+
+impl Default for SolveSpec {
+    fn default() -> Self {
+        SolveSpec::cg()
+    }
+}
+
+impl SolveSpec {
+    /// A spec for `method` with the default CG knobs (tol 1e-5, auto cap).
+    pub fn new(method: Method) -> SolveSpec {
+        let d = CgConfig::default();
+        SolveSpec {
+            method,
+            tol: d.tol,
+            max_iters: d.max_iters,
+            store_l: d.store_l,
+            stall_window: d.stall_window,
+            recompute_every: d.recompute_every,
+            precond: None,
+            deflation: None,
+        }
+    }
+
+    /// Plain CG request.
+    pub fn cg() -> SolveSpec {
+        SolveSpec::new(Method::Cg)
+    }
+
+    /// Preconditioned-CG request (attach a preconditioner with
+    /// [`SolveSpec::with_precond`] / [`SolveSpec::with_jacobi`]).
+    pub fn pcg() -> SolveSpec {
+        SolveSpec::new(Method::Pcg)
+    }
+
+    /// Deflated-CG request (attach a basis with
+    /// [`SolveSpec::with_deflation`], or let a
+    /// [`crate::solvers::recycle::RecycleManager`] supply one).
+    pub fn defcg() -> SolveSpec {
+        SolveSpec::new(Method::DefCg)
+    }
+
+    /// Block-CG request.
+    pub fn blockcg() -> SolveSpec {
+        SolveSpec::new(Method::BlockCg)
+    }
+
+    pub fn with_tol(mut self, tol: f64) -> SolveSpec {
+        self.tol = tol;
+        self
+    }
+
+    pub fn with_max_iters(mut self, max_iters: usize) -> SolveSpec {
+        self.max_iters = max_iters;
+        self
+    }
+
+    pub fn with_store_l(mut self, store_l: usize) -> SolveSpec {
+        self.store_l = store_l;
+        self
+    }
+
+    pub fn with_stall_window(mut self, stall_window: usize) -> SolveSpec {
+        self.stall_window = stall_window;
+        self
+    }
+
+    pub fn with_recompute_every(mut self, recompute_every: usize) -> SolveSpec {
+        self.recompute_every = recompute_every;
+        self
+    }
+
+    /// Attach a preconditioner.
+    pub fn with_precond(mut self, p: Arc<dyn Preconditioner>) -> SolveSpec {
+        self.precond = Some(p);
+        self
+    }
+
+    /// Attach a Jacobi preconditioner built from `a`'s diagonal
+    /// (exact where [`SpdOperator::diag`] is overridden, probed otherwise).
+    pub fn with_jacobi(self, a: &dyn SpdOperator) -> SolveSpec {
+        self.with_precond(Arc::new(Jacobi::from_op(a)))
+    }
+
+    /// Attach a deflation basis.
+    pub fn with_deflation(mut self, d: Deflation) -> SolveSpec {
+        self.deflation = Some(Arc::new(d));
+        self
+    }
+
+    /// Attach an already-shared deflation basis.
+    pub fn with_deflation_arc(mut self, d: Arc<Deflation>) -> SolveSpec {
+        self.deflation = Some(d);
+        self
+    }
+
+    /// The scalar knobs as the legacy per-kernel config.
+    pub fn cg_config(&self) -> CgConfig {
+        CgConfig {
+            tol: self.tol,
+            max_iters: self.max_iters,
+            store_l: self.store_l,
+            stall_window: self.stall_window,
+            recompute_every: self.recompute_every,
+        }
+    }
+
+}
+
+impl std::fmt::Debug for SolveSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SolveSpec")
+            .field("method", &self.method)
+            .field("tol", &self.tol)
+            .field("max_iters", &self.max_iters)
+            .field("store_l", &self.store_l)
+            .field("stall_window", &self.stall_window)
+            .field("recompute_every", &self.recompute_every)
+            .field("precond", &self.precond.as_ref().map(|p| p.name()))
+            .field("deflation_k", &self.deflation.as_ref().map(|d| d.k()))
+            .finish()
+    }
+}
+
+/// Solve `A x = b` according to `spec`, starting from zeros.
+///
+/// This is the single entry point across all four solver families; the
+/// per-family free functions remain as thin shims over the same kernels.
+pub fn solve(a: &dyn SpdOperator, b: &[f64], spec: &SolveSpec) -> SolveResult {
+    dispatch(a, b, None, spec, spec.deflation.as_deref())
+}
+
+/// Like [`solve`], starting from `x0`.
+pub fn solve_with_x0(
+    a: &dyn SpdOperator,
+    b: &[f64],
+    x0: &[f64],
+    spec: &SolveSpec,
+) -> SolveResult {
+    dispatch(a, b, Some(x0), spec, spec.deflation.as_deref())
+}
+
+/// Multi-RHS entry point: solve `A X = B` with block CG using the spec's
+/// tolerance and iteration cap. The other spec fields (method,
+/// preconditioner, deflation) do not apply to the block kernel.
+pub fn solve_block(a: &dyn SpdOperator, b: &Mat, spec: &SolveSpec) -> BlockSolveResult {
+    blockcg::solve(a, b, spec.tol, spec.max_iters)
+}
+
+/// Shared dispatch used by [`solve`]/[`solve_with_x0`] and the recycle
+/// manager (which substitutes its own basis for `defl`).
+pub(crate) fn dispatch(
+    a: &dyn SpdOperator,
+    b: &[f64],
+    x0: Option<&[f64]>,
+    spec: &SolveSpec,
+    defl: Option<&Deflation>,
+) -> SolveResult {
+    let cfg = spec.cg_config();
+    match spec.method {
+        Method::Cg => cg::solve(a, b, x0, &cfg),
+        Method::Pcg | Method::DefCg => {
+            defcg::solve_precond(a, b, x0, defl, spec.precond.as_deref(), &cfg)
+        }
+        Method::BlockCg => {
+            let n = a.n();
+            assert_eq!(b.len(), n, "rhs dimension mismatch");
+            let bnorm = crate::linalg::vec_ops::norm2(b);
+            let denom = if bnorm > 0.0 { bnorm } else { 1.0 };
+            // The block kernel has no warm-start parameter; a warm start
+            // shifts to the residual system A d = b − A x₀ with the
+            // tolerance rescaled so the stopping rule is still
+            // ‖b − A x‖/‖b‖ ≤ tol (this must never panic: block requests
+            // flow through the coordinator's drainer threads).
+            let (rhs, shift_matvecs) = match x0 {
+                None => (b.to_vec(), 0),
+                Some(x0) => {
+                    assert_eq!(x0.len(), n);
+                    let ax = a.matvec_alloc(x0);
+                    let rhs: Vec<f64> =
+                        b.iter().zip(&ax).map(|(bi, axi)| bi - axi).collect();
+                    (rhs, 1)
+                }
+            };
+            let rnorm = crate::linalg::vec_ops::norm2(&rhs);
+            let tol = if rnorm > 0.0 { spec.tol * denom / rnorm } else { spec.tol };
+            let mut bm = Mat::zeros(n, 1);
+            bm.set_col(0, &rhs);
+            let r = blockcg::solve(a, &bm, tol, spec.max_iters);
+            let mut x = r.x.col(0);
+            if let Some(x0) = x0 {
+                for (xi, x0i) in x.iter_mut().zip(x0) {
+                    *xi += x0i;
+                }
+            }
+            // Re-express the trace relative to ‖b‖ (the kernel reports it
+            // relative to its own right-hand side, here ‖b − A x₀‖).
+            let rescale = rnorm / denom;
+            SolveResult {
+                x,
+                residuals: r.residuals.iter().map(|v| v * rescale).collect(),
+                iterations: r.iterations,
+                // s = 1: one block matvec is one matvec.
+                matvecs: r.block_matvecs + shift_matvecs,
+                stop: r.stop,
+                stored: StoredDirections::default(),
+                seconds: r.seconds,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::ritz::{extract, RitzConfig, RitzSelect};
+    use crate::solvers::{DenseOp, StopReason};
+    use crate::util::rng::Rng;
+
+    fn system(n: usize, seed: u64) -> (Mat, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let a = Mat::rand_spd(n, 1e4, &mut rng);
+        let b: Vec<f64> = (0..n).map(|i| 1.0 + (i % 7) as f64).collect();
+        (a, b)
+    }
+
+    #[test]
+    fn every_method_converges_through_the_single_entry_point() {
+        let (a, b) = system(60, 1);
+        let op = DenseOp::new(&a);
+        // Basis for the deflated request.
+        let prior = solve(&op, &b, &SolveSpec::cg().with_tol(1e-10).with_store_l(10));
+        let (defl, _) = extract(
+            None,
+            &prior.stored,
+            60,
+            &RitzConfig { k: 6, select: RitzSelect::Largest, min_col_norm: 1e-12 },
+        )
+        .unwrap();
+        let specs = [
+            SolveSpec::cg().with_tol(1e-9),
+            SolveSpec::pcg().with_jacobi(&op).with_tol(1e-9),
+            SolveSpec::defcg().with_deflation(defl).with_tol(1e-9),
+            SolveSpec::blockcg().with_tol(1e-9),
+        ];
+        for spec in &specs {
+            let r = solve(&op, &b, spec);
+            assert_eq!(r.stop, StopReason::Converged, "{spec:?}");
+            let ax = a.matvec(&r.x);
+            let res: f64 = ax.iter().zip(&b).map(|(u, v)| (u - v) * (u - v)).sum();
+            assert!(
+                res.sqrt() / crate::linalg::vec_ops::norm2(&b) < 1e-8,
+                "{spec:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn pcg_without_preconditioner_degenerates_to_plain_cg() {
+        let (a, b) = system(40, 2);
+        let op = DenseOp::new(&a);
+        let plain = solve(&op, &b, &SolveSpec::cg().with_tol(1e-9));
+        let pcg = solve(&op, &b, &SolveSpec::pcg().with_tol(1e-9));
+        assert_eq!(plain.iterations, pcg.iterations);
+        assert_eq!(plain.x, pcg.x);
+    }
+
+    #[test]
+    fn cg_method_ignores_attached_policies() {
+        // A plain request stays plain even if the spec carries a
+        // preconditioner (e.g. cloned from a richer spec).
+        let (a, b) = system(40, 3);
+        let op = DenseOp::new(&a);
+        let plain = solve(&op, &b, &SolveSpec::cg().with_tol(1e-9));
+        let decorated = solve(&op, &b, &SolveSpec::cg().with_jacobi(&op).with_tol(1e-9));
+        assert_eq!(plain.x, decorated.x);
+        assert_eq!(plain.iterations, decorated.iterations);
+    }
+
+    #[test]
+    fn jacobi_from_op_matches_explicit_diagonal() {
+        let (a, _b) = system(30, 4);
+        let op = DenseOp::new(&a);
+        let diag: Vec<f64> = (0..30).map(|i| a[(i, i)]).collect();
+        let from_diag = Jacobi::new(&diag);
+        let from_op = Jacobi::from_op(&op);
+        let r: Vec<f64> = (0..30).map(|i| (i as f64) - 14.0).collect();
+        let mut z1 = vec![0.0; 30];
+        let mut z2 = vec![0.0; 30];
+        from_diag.apply(&r, &mut z1);
+        from_op.apply(&r, &mut z2);
+        assert_eq!(z1, z2, "DenseOp::diag must be exact");
+    }
+
+    #[test]
+    #[should_panic(expected = "positive diagonal")]
+    fn jacobi_rejects_nonpositive_diagonal() {
+        let _ = Jacobi::new(&[1.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn identity_preconditioner_copies() {
+        let r = [1.0, -2.0, 3.5];
+        let mut z = [0.0; 3];
+        Identity.apply(&r, &mut z);
+        assert_eq!(z, r);
+        assert_eq!(Identity.name(), "identity");
+    }
+
+    #[test]
+    fn blockcg_warm_start_shifts_instead_of_panicking() {
+        // Block requests with x0 flow through the coordinator's drainer
+        // threads, so they must be handled, not asserted away.
+        let (a, b) = system(40, 7);
+        let op = DenseOp::new(&a);
+        let spec = SolveSpec::blockcg().with_tol(1e-9);
+        let cold = solve(&op, &b, &spec);
+        assert_eq!(cold.stop, StopReason::Converged);
+        // Warm start from the (near-)solution: converges immediately-ish
+        // and the answer still satisfies the ORIGINAL system to tol·‖b‖.
+        let warm = solve_with_x0(&op, &b, &cold.x, &spec);
+        assert_eq!(warm.stop, StopReason::Converged);
+        assert!(warm.iterations <= 2, "warm block start took {}", warm.iterations);
+        let ax = a.matvec(&warm.x);
+        let res: f64 = ax.iter().zip(&b).map(|(u, v)| (u - v) * (u - v)).sum();
+        assert!(res.sqrt() / crate::linalg::vec_ops::norm2(&b) <= 1e-9);
+        // Warm-starting from an already-converged solution stops at once.
+        let again = solve_with_x0(&op, &b, &warm.x, &spec);
+        assert_eq!(again.stop, StopReason::Converged);
+        assert_eq!(again.iterations, 0);
+    }
+
+    #[test]
+    fn solve_block_handles_multiple_rhs() {
+        let mut rng = Rng::new(5);
+        let n = 40;
+        let a = Mat::rand_spd(n, 1e3, &mut rng);
+        let x_true = Mat::randn(n, 3, &mut rng);
+        let b = a.matmul(&x_true);
+        let r = solve_block(&DenseOp::new(&a), &b, &SolveSpec::blockcg().with_tol(1e-10));
+        assert_eq!(r.stop, StopReason::Converged);
+        assert!(r.x.max_abs_diff(&x_true) < 1e-5);
+    }
+
+    #[test]
+    fn spec_debug_is_readable() {
+        let (a, _b) = system(10, 6);
+        let op = DenseOp::new(&a);
+        let s = format!("{:?}", SolveSpec::pcg().with_jacobi(&op));
+        assert!(s.contains("Pcg") && s.contains("jacobi"), "{s}");
+    }
+}

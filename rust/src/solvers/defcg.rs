@@ -22,8 +22,9 @@
 use crate::linalg::cholesky::Cholesky;
 use crate::linalg::mat::Mat;
 use crate::linalg::vec_ops::{axpy, dot, norm2};
+use crate::solvers::api::{Identity, Preconditioner};
 use crate::solvers::cg::CgConfig;
-use crate::solvers::{SolveResult, SpdOperator, StopReason, StoredDirections};
+use crate::solvers::{pcg, SolveResult, SpdOperator, StopReason, StoredDirections};
 use std::time::Instant;
 
 /// The recycled subspace handed to a deflated solve: the basis `W` and its
@@ -109,11 +110,53 @@ impl Deflation {
 /// Deflated-CG solve. With `defl = None` (or an empty basis) this reduces
 /// exactly to plain CG. `cfg.store_l` controls how many directions are
 /// recorded for the next harmonic-Ritz extraction.
+///
+/// Thin shim over [`solve_precond`] without a preconditioner — prefer
+/// building a [`SolveSpec`] and calling [`crate::solvers::solve`] in new
+/// code.
+///
+/// [`SolveSpec`]: crate::solvers::SolveSpec
 pub fn solve(
     a: &dyn SpdOperator,
     b: &[f64],
     x0: Option<&[f64]>,
     defl: Option<&Deflation>,
+    cfg: &CgConfig,
+) -> SolveResult {
+    solve_precond(a, b, x0, defl, None, cfg)
+}
+
+/// Fallback when the basis is unusable: plain CG, or PCG when a
+/// preconditioner is in play.
+fn undeflated(
+    a: &dyn SpdOperator,
+    b: &[f64],
+    x0: Option<&[f64]>,
+    precond: Option<&dyn Preconditioner>,
+    cfg: &CgConfig,
+) -> SolveResult {
+    match precond {
+        Some(m) => pcg::solve_with(a, b, m, x0, cfg),
+        None => crate::solvers::cg::solve(a, b, x0, cfg),
+    }
+}
+
+/// Deflated CG composed with an optional preconditioner `M` — the
+/// "interchangeable policies" kernel behind [`crate::solvers::solve`].
+///
+/// The iteration is the standard deflated-PCG recurrence: the start shift
+/// and the `Wᵀr = 0` constraint are exactly Saad's Algorithm 1, while the
+/// direction recursion runs on the preconditioned residual
+/// `z = M⁻¹ r` (`p ← β p + z − W μ`, `WᵀAW μ = (AW)ᵀ z`). With
+/// `precond = None` every float operation matches the historical
+/// unpreconditioned def-CG bit-for-bit (the identity preconditioner only
+/// copies `r`); with an empty basis it reduces to (P)CG.
+pub fn solve_precond(
+    a: &dyn SpdOperator,
+    b: &[f64],
+    x0: Option<&[f64]>,
+    defl: Option<&Deflation>,
+    precond: Option<&dyn Preconditioner>,
     cfg: &CgConfig,
 ) -> SolveResult {
     let start = Instant::now();
@@ -122,10 +165,12 @@ pub fn solve(
 
     let empty = defl.map(|d| d.k() == 0).unwrap_or(true);
     if empty {
-        // Plain CG path; keep a single implementation of the inner loop.
-        return crate::solvers::cg::solve(a, b, x0, cfg);
+        // Undeflated path; keep a single implementation of the inner loop.
+        return undeflated(a, b, x0, precond, cfg);
     }
     let defl = defl.unwrap();
+    let ident = Identity;
+    let m: &dyn Preconditioner = precond.unwrap_or(&ident);
     let (w, aw) = (&defl.w, &defl.aw);
     let k = defl.k();
     assert_eq!(w.rows(), n, "deflation basis dimension mismatch");
@@ -136,17 +181,17 @@ pub fn solve(
 
     // WᵀAW (k×k, SPD for SPD A and full-rank W) factored once per solve.
     let wtaw = {
-        let mut m = w.t_matmul(aw);
-        m.symmetrize();
-        m
+        let mut g = w.t_matmul(aw);
+        g.symmetrize();
+        g
     };
     let wtaw_ch = match Cholesky::factor(&wtaw) {
         Ok(ch) => ch,
         Err(_) => {
-            // Degenerate recycled basis — fall back to plain CG rather than
-            // dividing by a singular projector.
+            // Degenerate recycled basis — fall back to an undeflated solve
+            // rather than dividing by a singular projector.
             crate::log_warn!("WᵀAW not SPD (k={k}); falling back to undeflated CG");
-            return crate::solvers::cg::solve(a, b, x0, cfg);
+            return undeflated(a, b, x0, precond, cfg);
         }
     };
 
@@ -171,14 +216,7 @@ pub fn solve(
     let x_pre_shift = x.clone();
     let r_pre_norm = norm2(&r);
     let gamma = wtaw_ch.solve(&w.matvec_t(&r));
-    for j in 0..k {
-        let g = gamma[j];
-        if g != 0.0 {
-            for i in 0..n {
-                x[i] += g * w[(i, j)];
-            }
-        }
-    }
+    w.add_scaled_cols(&gamma, &mut x);
     // r₀ = b − A x₀ recomputed EXACTLY (one matvec). Saad's update
     // r₀ = r₋₁ − AW γ is free but silently wrong when AW is stale (the
     // recycled basis comes from system i−1): the solver would then
@@ -203,7 +241,7 @@ pub fn solve(
             r_pre_norm,
             norm2(&r)
         );
-        let mut result = crate::solvers::cg::solve(a, b, Some(&x_pre_shift), cfg);
+        let mut result = undeflated(a, b, Some(&x_pre_shift), precond, cfg);
         result.matvecs += matvecs;
         return result;
     }
@@ -223,30 +261,28 @@ pub fn solve(
         };
     }
 
-    // Line 3: p₀ = r₀ − W μ₀ with WᵀAW μ₀ = WᵀA r₀ = (AW)ᵀ r₀.
-    let deflect = |r: &[f64]| -> Vec<f64> { wtaw_ch.solve(&aw.matvec_t(r)) };
+    // Preconditioned residual z = M⁻¹ r (a plain copy of r under the
+    // identity, so the unpreconditioned path is arithmetically unchanged).
+    let mut z = vec![0.0; n];
+    m.apply(&r, &mut z);
+
+    // Line 3: p₀ = z₀ − W μ₀ with WᵀAW μ₀ = WᵀA z₀ = (AW)ᵀ z₀.
+    let deflect = |v: &[f64]| -> Vec<f64> { wtaw_ch.solve(&aw.matvec_t(v)) };
     let mut p = {
-        let mu = deflect(&r);
-        let mut p = r.clone();
-        for j in 0..k {
-            let m = mu[j];
-            if m != 0.0 {
-                for i in 0..n {
-                    p[i] -= m * w[(i, j)];
-                }
-            }
-        }
+        let mu = deflect(&z);
+        let mut p = z.clone();
+        w.sub_scaled_cols(&mu, &mut p);
         p
     };
 
-    let mut rr = dot(&r, &r);
+    let mut rz = dot(&r, &z);
     let mut ap = vec![0.0; n];
     let max_iters = cfg.effective_max_iters(n);
     let mut stop = StopReason::MaxIters;
     let mut iterations = 0;
 
     for _j in 0..max_iters {
-        // Lines 6–10: the standard CG sweep.
+        // Lines 6–10: the standard (P)CG sweep.
         a.matvec(&p, &mut ap);
         matvecs += 1;
         let d = dot(&p, &ap);
@@ -262,12 +298,12 @@ pub fn solve(
                 stored.ap.push(ap.iter().map(|v| v * inv).collect());
             }
         }
-        let alpha = rr / d;
+        let alpha = rz / d;
         axpy(alpha, &p, &mut x);
         axpy(-alpha, &ap, &mut r);
-        let rr_new = dot(&r, &r);
         iterations += 1;
-        residuals.push(rr_new.sqrt() / denom);
+        // Convergence is judged on the unpreconditioned residual.
+        residuals.push(norm2(&r) / denom);
         if *residuals.last().unwrap() <= cfg.tol {
             stop = StopReason::Converged;
             break;
@@ -276,21 +312,16 @@ pub fn solve(
             stop = StopReason::Stagnated;
             break;
         }
-        let beta = rr_new / rr;
-        rr = rr_new;
-        // Line 11: p = β p + r − W μ,  WᵀAW μ = (AW)ᵀ r.
-        let mu = deflect(&r);
+        m.apply(&r, &mut z);
+        let rz_new = dot(&r, &z);
+        let beta = rz_new / rz;
+        rz = rz_new;
+        // Line 11: p = β p + z − W μ,  WᵀAW μ = (AW)ᵀ z.
+        let mu = deflect(&z);
         for i in 0..n {
-            p[i] = beta * p[i] + r[i];
+            p[i] = beta * p[i] + z[i];
         }
-        for j in 0..k {
-            let m = mu[j];
-            if m != 0.0 {
-                for i in 0..n {
-                    p[i] -= m * w[(i, j)];
-                }
-            }
-        }
+        w.sub_scaled_cols(&mu, &mut p);
     }
 
     SolveResult {
@@ -496,6 +527,58 @@ mod tests {
         let cost = d.refresh(&DenseOp::new(&a2));
         assert_eq!(cost, 3);
         assert!(d.aw.max_abs_diff(&a2.matmul(&w)) < 1e-12);
+    }
+
+    #[test]
+    fn composed_jacobi_deflation_solves_and_keeps_w_orthogonality() {
+        // The Jacobi-deflation composition: a badly diagonal-scaled matrix
+        // (where Jacobi matters) with a few dominant eigenvalues deflated.
+        // The composed kernel must converge to the right answer and keep
+        // the deflation constraint Wᵀ r ≈ 0 at every stopping point.
+        use crate::solvers::api::Jacobi;
+        let mut rng = Rng::new(21);
+        let n = 50;
+        let base = Mat::rand_spd(n, 1e3, &mut rng);
+        let scales: Vec<f64> = (0..n).map(|i| 10f64.powf((i % 4) as f64)).collect();
+        let a = Mat::from_fn(n, n, |i, j| base[(i, j)] * scales[i].sqrt() * scales[j].sqrt());
+        let diag: Vec<f64> = (0..n).map(|i| a[(i, i)]).collect();
+        let jac = Jacobi::new(&diag);
+        let defl = exact_deflation(&a, 4);
+        let b: Vec<f64> = (0..n).map(|i| 1.0 + (i % 6) as f64).collect();
+        for cap in [2, 5, 0] {
+            let cfg = CgConfig { tol: 1e-10, max_iters: cap, ..Default::default() };
+            let r = solve_precond(&DenseOp::new(&a), &b, None, Some(&defl), Some(&jac), &cfg);
+            let ax = a.matvec(&r.x);
+            let res: Vec<f64> = b.iter().zip(&ax).map(|(bi, axi)| bi - axi).collect();
+            let wtr = defl.w.matvec_t(&res);
+            let rel = crate::linalg::vec_ops::norm2(&wtr)
+                / crate::linalg::vec_ops::norm2(&res).max(1e-300);
+            if cap != 0 {
+                assert!(rel < 1e-6, "‖Wᵀr‖/‖r‖ = {rel} after {cap} iters");
+            } else {
+                assert_eq!(r.stop, StopReason::Converged);
+                assert!(r.final_residual() <= 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn precond_none_matches_legacy_defcg_bitwise() {
+        // The generalized kernel under the identity must be float-for-float
+        // the historical unpreconditioned def-CG.
+        let mut rng = Rng::new(22);
+        let n = 40;
+        let a = Mat::rand_spd(n, 1e4, &mut rng);
+        let b: Vec<f64> = (0..n).map(|i| (i as f64).cos() + 2.0).collect();
+        let defl = exact_deflation(&a, 5);
+        let cfg = CgConfig::with_tol(1e-10);
+        let shim = solve(&DenseOp::new(&a), &b, None, Some(&defl), &cfg);
+        let ident = crate::solvers::api::Identity;
+        let explicit =
+            solve_precond(&DenseOp::new(&a), &b, None, Some(&defl), Some(&ident), &cfg);
+        assert_eq!(shim.iterations, explicit.iterations);
+        assert_eq!(shim.x, explicit.x);
+        assert_eq!(shim.residuals, explicit.residuals);
     }
 
     #[test]

@@ -16,7 +16,14 @@
 //! * [`lanczos`] — plain Lanczos tridiagonalization, an alternative Ritz
 //!   source and a spectrum-estimation tool;
 //! * [`direct`] — dense Cholesky baseline (the paper's exact reference).
+//!
+//! All four iterative families are reachable through the **unified solve
+//! API** in [`api`]: build a [`SolveSpec`] (method + tolerance +
+//! preconditioner + deflation as data) and call [`solve`] /
+//! [`solve_with_x0`]. The per-family free functions remain as thin shims
+//! over the same kernels.
 
+pub mod api;
 pub mod blockcg;
 pub mod cg;
 pub mod defcg;
@@ -26,9 +33,13 @@ pub mod pcg;
 pub mod recycle;
 pub mod ritz;
 
+pub use api::{
+    solve, solve_block, solve_with_x0, Identity, Jacobi, Method, Preconditioner, SolveSpec,
+};
+
 use crate::linalg::mat::Mat;
 use crate::util::pool::ThreadPool;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Abstract SPD operator `y = A x`.
 ///
@@ -47,6 +58,50 @@ pub trait SpdOperator: Sync {
         let mut y = vec![0.0; self.n()];
         self.matvec(x, &mut y);
         y
+    }
+
+    /// Write the diagonal of A into `out` (`out.len() == n`).
+    ///
+    /// # Contract: exact vs probed
+    ///
+    /// The **default implementation probes**: it applies the operator to
+    /// each standard basis vector `eᵢ` and reads `out[i] = (A eᵢ)ᵢ` —
+    /// always correct, but it costs **n matvecs** (`O(n³)` on a dense
+    /// operator). Implementations that can read their diagonal directly
+    /// MUST override this with an exact `O(n)` version; in-repo overrides:
+    ///
+    /// * [`DenseOp`] / [`ParDenseOp`] — `a[(i,i)]`;
+    /// * `gp::laplace::LaplaceOperator` (the GPC Newton operator
+    ///   `A = I + SKS`) — `1 + sᵢ² K_ii` when the kernel is dense, the
+    ///   probing fallback otherwise;
+    /// * `gp::regression::RegularizedKernelOp` — `K_ii + σ²`.
+    ///
+    /// The result feeds [`api::Jacobi::from_op`]; callers building a
+    /// Jacobi preconditioner in a hot loop should make sure their
+    /// operator overrides this, or amortize the probe across solves.
+    fn diag(&self, out: &mut [f64]) {
+        probe_diag_with(self.n(), &mut |x, y| self.matvec(x, y), out)
+    }
+}
+
+/// Probe the diagonal of an abstract operator with n basis matvecs.
+///
+/// This is the [`SpdOperator::diag`] default; it is also exposed so that
+/// overrides with a partial fast path (e.g. the Newton operator over a
+/// matrix-free kernel) can fall back to probing explicitly.
+pub fn probe_diag(a: &dyn SpdOperator, out: &mut [f64]) {
+    probe_diag_with(a.n(), &mut |x, y| a.matvec(x, y), out)
+}
+
+fn probe_diag_with(n: usize, matvec: &mut dyn FnMut(&[f64], &mut [f64]), out: &mut [f64]) {
+    assert_eq!(out.len(), n, "diag dimension mismatch");
+    let mut e = vec![0.0; n];
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        e[i] = 1.0;
+        matvec(&e, &mut y);
+        out[i] = y[i];
+        e[i] = 0.0;
     }
 }
 
@@ -70,6 +125,10 @@ impl<'a> SpdOperator for DenseOp<'a> {
     fn matvec(&self, x: &[f64], y: &mut [f64]) {
         self.a.matvec_into(x, y);
     }
+
+    fn diag(&self, out: &mut [f64]) {
+        self.a.diag_into(out);
+    }
 }
 
 /// Dense SPD operator with a row-sharded **parallel** matvec.
@@ -88,6 +147,14 @@ impl<'a> SpdOperator for DenseOp<'a> {
 pub struct ParDenseOp {
     a: Arc<Mat>,
     pool: Arc<ThreadPool>,
+    /// Reusable shared copy of the matvec operand. The sharded path must
+    /// hand every worker an owned handle to `x`, but allocating a fresh
+    /// `Arc<Vec<f64>>` per call made every matvec pay a heap round-trip
+    /// (visible in `bench_linalg`'s ParDenseOp rows). Instead the one
+    /// allocation is parked here between calls and recycled whenever it
+    /// is no longer shared; concurrent matvecs on the same operator fall
+    /// back to a fresh allocation, so results are unaffected.
+    scratch: Mutex<Arc<Vec<f64>>>,
 }
 
 impl ParDenseOp {
@@ -96,7 +163,7 @@ impl ParDenseOp {
 
     pub fn new(a: Arc<Mat>, pool: Arc<ThreadPool>) -> Self {
         assert!(a.is_square(), "ParDenseOp needs a square matrix");
-        ParDenseOp { a, pool }
+        ParDenseOp { a, pool, scratch: Mutex::new(Arc::new(Vec::new())) }
     }
 
     pub fn mat(&self) -> &Mat {
@@ -105,6 +172,22 @@ impl ParDenseOp {
 
     pub fn pool(&self) -> &Arc<ThreadPool> {
         &self.pool
+    }
+
+    /// Copy `x` into the parked scratch allocation (reusing it when no
+    /// previous call still holds it) and return a shareable handle.
+    fn shared_input(&self, x: &[f64]) -> Arc<Vec<f64>> {
+        let mut g = self.scratch.lock().unwrap();
+        match Arc::get_mut(&mut *g) {
+            Some(buf) => {
+                buf.clear();
+                buf.extend_from_slice(x);
+            }
+            // A concurrent matvec is still reading the parked buffer:
+            // don't block on it, take a fresh allocation.
+            None => *g = Arc::new(x.to_vec()),
+        }
+        g.clone()
     }
 }
 
@@ -124,7 +207,7 @@ impl SpdOperator for ParDenseOp {
         }
         let blocks = workers.min(n);
         let bs = n.div_ceil(blocks);
-        let xs: Arc<Vec<f64>> = Arc::new(x.to_vec());
+        let xs = self.shared_input(x);
         let handles: Vec<_> = (0..blocks)
             .map(|bi| {
                 let a = self.a.clone();
@@ -145,6 +228,10 @@ impl SpdOperator for ParDenseOp {
             let block = h.join();
             y[lo..lo + block.len()].copy_from_slice(&block);
         }
+    }
+
+    fn diag(&self, out: &mut [f64]) {
+        self.a.diag_into(out);
     }
 }
 
@@ -275,6 +362,55 @@ mod tests {
         let ax = a.matvec(&r.x);
         let num: f64 = ax.iter().zip(&b).map(|(u, v)| (u - v) * (u - v)).sum();
         assert!(num.sqrt() / crate::linalg::vec_ops::norm2(&b) < 1e-9);
+    }
+
+    #[test]
+    fn par_dense_op_scratch_reuse_keeps_results_correct() {
+        // Consecutive sharded matvecs with different operands reuse the
+        // parked input buffer; each result must still match serial.
+        let mut rng = Rng::new(10);
+        let n = 300;
+        let a = Arc::new(Mat::rand_spd(n, 1e3, &mut rng));
+        let par = ParDenseOp::new(a.clone(), Arc::new(ThreadPool::new(4)));
+        for pass in 0..3u64 {
+            let x: Vec<f64> = (0..n)
+                .map(|i| ((i as u64 * 7 + pass * 13) % 19) as f64 - 9.0)
+                .collect();
+            let mut yp = vec![0.0; n];
+            par.matvec(&x, &mut yp);
+            assert_eq!(yp, a.matvec(&x), "pass {pass}");
+        }
+    }
+
+    #[test]
+    fn diag_default_probes_and_overrides_are_exact() {
+        // An operator without an override probes with basis matvecs; the
+        // dense operators read a[(i,i)] directly. Both must agree.
+        struct Plain<'a>(&'a Mat);
+        impl<'a> SpdOperator for Plain<'a> {
+            fn n(&self) -> usize {
+                self.0.rows()
+            }
+            fn matvec(&self, x: &[f64], y: &mut [f64]) {
+                self.0.matvec_into(x, y);
+            }
+        }
+        let mut rng = Rng::new(11);
+        let a = Mat::rand_spd(20, 100.0, &mut rng);
+        let want: Vec<f64> = (0..20).map(|i| a[(i, i)]).collect();
+        let mut probed = vec![0.0; 20];
+        Plain(&a).diag(&mut probed);
+        assert_eq!(probed, want, "probing default must recover the diagonal");
+        let mut exact = vec![0.0; 20];
+        DenseOp::new(&a).diag(&mut exact);
+        assert_eq!(exact, want);
+        let mut par = vec![0.0; 20];
+        ParDenseOp::new(Arc::new(a.clone()), Arc::new(ThreadPool::new(2))).diag(&mut par);
+        assert_eq!(par, want);
+        // The free-function probe matches the trait default.
+        let mut free = vec![0.0; 20];
+        probe_diag(&Plain(&a), &mut free);
+        assert_eq!(free, want);
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Jacobi-preconditioned conjugate gradients.
+//! Preconditioned conjugate gradients.
 //!
 //! The classic *non-singular* preconditioning the paper contrasts
 //! deflation against (§2.1: a preconditioner reshapes the whole spectrum,
@@ -6,14 +6,27 @@
 //! untouched). Included as an ablation baseline: for the GPC systems
 //! `A = I + SKS` the diagonal is nearly constant, so Jacobi helps little —
 //! which is exactly why the paper reaches for deflation instead.
+//!
+//! [`solve_with`] is the general kernel over any
+//! [`Preconditioner`]; the legacy [`solve`] signature (explicit Jacobi
+//! diagonal) remains as a thin shim. Like plain CG, the kernel stores the
+//! first ℓ normalized `(p, A·p)` pairs when `cfg.store_l > 0`, so PCG runs
+//! can seed harmonic-Ritz recycling too.
 
 use crate::linalg::vec_ops::{axpy, dot, norm2};
+use crate::solvers::api::{Jacobi, Preconditioner};
 use crate::solvers::cg::CgConfig;
 use crate::solvers::{SolveResult, SpdOperator, StopReason, StoredDirections};
 use std::time::Instant;
 
 /// Solve `A x = b` with Jacobi (diagonal) preconditioning. `diag` is the
 /// diagonal of A (must be strictly positive).
+///
+/// Thin shim over [`solve_with`] — prefer building a [`SolveSpec`]
+/// (`SolveSpec::pcg().with_jacobi(..)`) and calling
+/// [`crate::solvers::solve`] in new code.
+///
+/// [`SolveSpec`]: crate::solvers::SolveSpec
 pub fn solve(
     a: &dyn SpdOperator,
     b: &[f64],
@@ -21,12 +34,23 @@ pub fn solve(
     x0: Option<&[f64]>,
     cfg: &CgConfig,
 ) -> SolveResult {
+    assert_eq!(diag.len(), a.n());
+    solve_with(a, b, &Jacobi::new(diag), x0, cfg)
+}
+
+/// Solve `A x = b` with the preconditioner `m` (`z = M⁻¹ r` once per
+/// iteration). Convergence is still judged on the *unpreconditioned*
+/// relative residual ‖r‖/‖b‖.
+pub fn solve_with(
+    a: &dyn SpdOperator,
+    b: &[f64],
+    m: &dyn Preconditioner,
+    x0: Option<&[f64]>,
+    cfg: &CgConfig,
+) -> SolveResult {
     let start = Instant::now();
     let n = a.n();
     assert_eq!(b.len(), n);
-    assert_eq!(diag.len(), n);
-    assert!(diag.iter().all(|&d| d > 0.0), "Jacobi needs a positive diagonal");
-    let minv: Vec<f64> = diag.iter().map(|&d| 1.0 / d).collect();
 
     let mut x = match x0 {
         Some(x0) => x0.to_vec(),
@@ -44,6 +68,7 @@ pub fn solve(
     let bnorm = norm2(b);
     let denom = if bnorm > 0.0 { bnorm } else { 1.0 };
     let mut residuals = vec![norm2(&r) / denom];
+    let mut stored = StoredDirections::default();
     if residuals[0] <= cfg.tol {
         return SolveResult {
             x,
@@ -51,13 +76,14 @@ pub fn solve(
             iterations: 0,
             matvecs,
             stop: StopReason::Converged,
-            stored: StoredDirections::default(),
+            stored,
             seconds: start.elapsed().as_secs_f64(),
         };
     }
 
     // z = M⁻¹ r; p = z.
-    let mut z: Vec<f64> = r.iter().zip(&minv).map(|(ri, mi)| ri * mi).collect();
+    let mut z = vec![0.0; n];
+    m.apply(&r, &mut z);
     let mut p = z.clone();
     let mut rz = dot(&r, &z);
     let mut ap = vec![0.0; n];
@@ -73,6 +99,16 @@ pub fn solve(
             stop = StopReason::Breakdown;
             break;
         }
+        if stored.len() < cfg.store_l {
+            // Store normalized direction and matching A·p scaling, exactly
+            // like plain CG — the raw material for harmonic-Ritz recycling.
+            let pn = norm2(&p);
+            if pn > 0.0 {
+                let inv = 1.0 / pn;
+                stored.p.push(p.iter().map(|v| v * inv).collect());
+                stored.ap.push(ap.iter().map(|v| v * inv).collect());
+            }
+        }
         let alpha = rz / d;
         axpy(alpha, &p, &mut x);
         axpy(-alpha, &ap, &mut r);
@@ -86,9 +122,7 @@ pub fn solve(
             stop = StopReason::Stagnated;
             break;
         }
-        for i in 0..n {
-            z[i] = r[i] * minv[i];
-        }
+        m.apply(&r, &mut z);
         let rz_new = dot(&r, &z);
         let beta = rz_new / rz;
         rz = rz_new;
@@ -103,7 +137,7 @@ pub fn solve(
         iterations,
         matvecs,
         stop,
-        stored: StoredDirections::default(),
+        stored,
         seconds: start.elapsed().as_secs_f64(),
     }
 }
@@ -165,6 +199,65 @@ mod tests {
         let plain = cg::solve(&DenseOp::new(&a), &b, None, &cfg);
         let pre = solve(&DenseOp::new(&a), &b, &diag, None, &cfg);
         assert_eq!(plain.iterations, pre.iterations);
+    }
+
+    #[test]
+    fn stores_directions_for_recycling() {
+        // Regression: PCG used to return StoredDirections::default() even
+        // with store_l > 0, so preconditioned runs could never seed
+        // harmonic-Ritz recycling.
+        let mut rng = Rng::new(4);
+        let n = 30;
+        let a = Mat::rand_spd(n, 1e3, &mut rng);
+        let diag: Vec<f64> = (0..n).map(|i| a[(i, i)]).collect();
+        let b: Vec<f64> = (0..n).map(|i| i as f64 + 1.0).collect();
+        let cfg = CgConfig { tol: 1e-10, max_iters: 0, store_l: 6, ..Default::default() };
+        let r = solve(&DenseOp::new(&a), &b, &diag, None, &cfg);
+        assert_eq!(r.stop, StopReason::Converged);
+        assert_eq!(r.stored.len(), 6.min(r.iterations));
+        assert!(!r.stored.is_empty(), "PCG must store (p, Ap) pairs");
+        for (p, ap) in r.stored.p.iter().zip(&r.stored.ap) {
+            assert!((norm2(p) - 1.0).abs() < 1e-12, "directions are normalized");
+            let want = a.matvec(p);
+            for (u, v) in ap.iter().zip(&want) {
+                assert!((u - v).abs() < 1e-10, "ap must equal A·p");
+            }
+        }
+    }
+
+    #[test]
+    fn stored_pcg_directions_seed_ritz_extraction() {
+        // End-to-end: a PCG run's stored pairs produce a usable deflation
+        // basis that speeds up the next (identical) system.
+        use crate::solvers::ritz::{extract, RitzConfig, RitzSelect};
+        let mut rng = Rng::new(5);
+        let n = 90;
+        let a = Mat::rand_spd(n, 1e5, &mut rng);
+        let diag: Vec<f64> = (0..n).map(|i| a[(i, i)]).collect();
+        let b = vec![1.0; n];
+        let cfg = CgConfig { tol: 1e-8, max_iters: 0, store_l: 12, ..Default::default() };
+        let first = solve(&DenseOp::new(&a), &b, &diag, None, &cfg);
+        let (defl, _) = extract(
+            None,
+            &first.stored,
+            n,
+            &RitzConfig { k: 8, select: RitzSelect::Largest, min_col_norm: 1e-12 },
+        )
+        .expect("PCG-stored directions must be extractable");
+        let plain = cg::solve(&DenseOp::new(&a), &b, None, &CgConfig::with_tol(1e-8));
+        let deflated = crate::solvers::defcg::solve(
+            &DenseOp::new(&a),
+            &b,
+            None,
+            Some(&defl),
+            &CgConfig::with_tol(1e-8),
+        );
+        assert!(
+            deflated.iterations < plain.iterations,
+            "deflated {} >= plain {}",
+            deflated.iterations,
+            plain.iterations
+        );
     }
 
     #[test]

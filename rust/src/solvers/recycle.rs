@@ -13,8 +13,8 @@
 //!   issue the paper blames for late-sequence stagnation).
 
 use crate::linalg::qr::mgs_orthonormalize;
-use crate::solvers::cg::CgConfig;
-use crate::solvers::defcg::{self, Deflation};
+use crate::solvers::api::{self, Method, SolveSpec};
+use crate::solvers::defcg::Deflation;
 use crate::solvers::ritz::{self, RitzConfig, RitzValue};
 use crate::solvers::{SolveResult, SpdOperator};
 
@@ -123,25 +123,70 @@ impl RecycleManager {
         self.history.clear();
     }
 
-    /// Solve the next system in the sequence with def-CG(k, ℓ) using the
-    /// current recycled basis, then update the basis from the stored
-    /// directions. Returns the solver result.
+    /// Solve the next system in the sequence according to `spec`, then
+    /// update the recycled basis from the run's stored directions.
+    ///
+    /// The manager is **method-aware** — one recycled sequence can serve a
+    /// heterogeneous stream of requests:
+    ///
+    /// * [`Method::DefCg`] consumes the recycled basis and honors the
+    ///   spec's preconditioner, running the composed deflated-PCG kernel.
+    ///   The manager's state supersedes an explicit `spec.deflation`;
+    ///   before the first extraction (empty state) an explicit spec basis
+    ///   is used as the seed.
+    /// * [`Method::Cg`] / [`Method::Pcg`] never consume the *manager's*
+    ///   basis (a plain request stays plain; a `Pcg` spec carrying its own
+    ///   explicit basis composes exactly as it would through
+    ///   [`crate::solvers::solve`]) but still **feed** it: the manager
+    ///   overrides `store_l` with its own ℓ so every CG-family run
+    ///   contributes directions to the next harmonic-Ritz extraction.
+    /// * [`Method::BlockCg`] passes through: the block kernel neither
+    ///   consumes nor feeds the basis (it stores no directions), but the
+    ///   solve is still recorded in the sequence history.
+    ///
+    /// For every CG-family request, the AW-consistency policy (refresh /
+    /// stabilize) runs whenever a basis is held: the extraction folds the
+    /// prior `(W, AW)` into its Gram matrices, so it must stay consistent
+    /// under the current operator even for requests that do not deflate.
+    /// Block requests skip it (they return before any extraction), so a
+    /// basis can sit stale across block traffic until the next CG-family
+    /// request refreshes it.
     pub fn solve_next(
         &mut self,
         a: &dyn SpdOperator,
         b: &[f64],
         x0: Option<&[f64]>,
-        solve_cfg: &CgConfig,
+        spec: &SolveSpec,
     ) -> SolveResult {
         let n = a.n();
-        let mut extra_matvecs = 0usize;
 
-        // Policy: refresh AW under the new operator if requested.
+        if spec.method == Method::BlockCg {
+            let result = api::dispatch(a, b, x0, spec, None);
+            self.history.push(SystemStats {
+                index: self.history.len(),
+                iterations: result.iterations,
+                matvecs: result.matvecs,
+                final_residual: result.final_residual(),
+                deflation_dim: 0,
+                ritz_values: Vec::new(),
+                seconds: result.seconds,
+            });
+            return result;
+        }
+
+        let mut extra_matvecs = 0usize;
+        let consumes_basis = spec.method == Method::DefCg;
+
+        // Policy: keep (W, AW) consistent under the *current* operator.
+        // This runs for every CG-family request — not just the ones that
+        // deflate — because the harmonic-Ritz extraction below folds the
+        // prior basis into Z/AZ: a stale AW there would mix data from two
+        // different operators and silently corrupt the next basis.
         if let Some(d) = self.defl.as_mut() {
             let refresh = match self.cfg.aw_policy {
                 AwPolicy::Refresh => true,
                 AwPolicy::Reuse => false,
-                AwPolicy::Auto => solve_cfg.tol < 1e-6,
+                AwPolicy::Auto => spec.tol < 1e-6,
             };
             if refresh {
                 extra_matvecs += d.refresh(a);
@@ -163,8 +208,20 @@ impl RecycleManager {
             }
         }
 
-        let cfg = CgConfig { store_l: self.cfg.l, ..solve_cfg.clone() };
-        let mut result = defcg::solve(a, b, x0, self.defl.as_ref(), &cfg);
+        // Every CG-family run stores ℓ directions for the extraction.
+        // DefCg consumes the manager's basis (falling back to an explicit
+        // basis on the spec before the first extraction); Cg runs plain;
+        // Pcg honors an explicit spec basis (matching `solvers::solve`)
+        // but never the manager's — a preconditioned request only turns
+        // into a recycled one by saying Method::DefCg.
+        let mut inner = spec.clone();
+        inner.store_l = self.cfg.l;
+        let defl = if consumes_basis {
+            self.defl.as_ref().or(spec.deflation.as_deref())
+        } else {
+            spec.deflation.as_deref()
+        };
+        let mut result = api::dispatch(a, b, x0, &inner, defl);
         result.matvecs += extra_matvecs;
 
         // Extract the next basis from this run's stored directions.
@@ -228,16 +285,16 @@ mod tests {
         let n = 90;
         let seq = drifting_sequence(n, 5, 11);
         let b: Vec<f64> = (0..n).map(|i| 1.0 + (i % 7) as f64).collect();
-        let solve_cfg = CgConfig { tol: 1e-8, max_iters: 50_000, store_l: 0, ..Default::default() };
+        let spec = SolveSpec::defcg().with_tol(1e-8).with_max_iters(50_000);
 
         let mut mgr = RecycleManager::new(RecycleConfig { k: 8, l: 12, ..Default::default() });
         let mut plain_iters = Vec::new();
         let mut recycled_iters = Vec::new();
         for a in &seq {
             let op = DenseOp::new(a);
-            let plain = crate::solvers::cg::solve(&op, &b, None, &solve_cfg);
+            let plain = crate::solvers::cg::solve(&op, &b, None, &spec.cg_config());
             assert_eq!(plain.stop, StopReason::Converged);
-            let rec = mgr.solve_next(&op, &b, None, &solve_cfg);
+            let rec = mgr.solve_next(&op, &b, None, &spec);
             assert_eq!(rec.stop, StopReason::Converged);
             plain_iters.push(plain.iterations);
             recycled_iters.push(rec.iterations);
@@ -262,7 +319,7 @@ mod tests {
         let b = vec![1.0; n];
         let mut mgr = RecycleManager::new(RecycleConfig { k: 4, l: 6, ..Default::default() });
         for a in &seq {
-            mgr.solve_next(&DenseOp::new(a), &b, None, &CgConfig::with_tol(1e-6));
+            mgr.solve_next(&DenseOp::new(a), &b, None, &SolveSpec::defcg().with_tol(1e-6));
         }
         assert_eq!(mgr.history().len(), 3);
         assert_eq!(mgr.history()[0].index, 0);
@@ -283,7 +340,7 @@ mod tests {
         };
         let mut mgr = RecycleManager::new(cfg);
         for a in &seq {
-            let r = mgr.solve_next(&DenseOp::new(a), &b, None, &CgConfig::with_tol(1e-8));
+            let r = mgr.solve_next(&DenseOp::new(a), &b, None, &SolveSpec::defcg().with_tol(1e-8));
             assert_eq!(r.stop, StopReason::Converged);
             // solution check
             let ax = a.matvec(&r.x);
@@ -304,7 +361,7 @@ mod tests {
         mgr.seed(&DenseOp::new(&a), w);
         assert_eq!(mgr.k_active(), 6);
         let b = vec![1.0; n];
-        let r = mgr.solve_next(&DenseOp::new(&a), &b, None, &CgConfig::with_tol(1e-8));
+        let r = mgr.solve_next(&DenseOp::new(&a), &b, None, &SolveSpec::defcg().with_tol(1e-8));
         assert_eq!(r.stop, StopReason::Converged);
     }
 
@@ -315,12 +372,55 @@ mod tests {
         let b = vec![1.0; n];
         let mut mgr = RecycleManager::new(RecycleConfig::default());
         for a in &seq {
-            mgr.solve_next(&DenseOp::new(a), &b, None, &CgConfig::with_tol(1e-6));
+            mgr.solve_next(&DenseOp::new(a), &b, None, &SolveSpec::defcg().with_tol(1e-6));
         }
         assert!(mgr.k_active() > 0);
         mgr.reset();
         assert_eq!(mgr.k_active(), 0);
         assert!(mgr.history().is_empty());
+    }
+
+    #[test]
+    fn plain_requests_feed_the_basis_without_consuming_it() {
+        // Method-aware sequence: a Cg request stores directions (feeding
+        // the extraction) but runs undeflated; a following DefCg request
+        // on the same system then converges faster thanks to the basis the
+        // plain run contributed.
+        let n = 90;
+        let mut rng = Rng::new(17);
+        let a = Mat::rand_spd(n, 1e5, &mut rng);
+        let b = vec![1.0; n];
+        let mut mgr = RecycleManager::new(RecycleConfig { k: 8, l: 12, ..Default::default() });
+        let plain = mgr.solve_next(&DenseOp::new(&a), &b, None, &SolveSpec::cg().with_tol(1e-8));
+        assert_eq!(plain.stop, StopReason::Converged);
+        assert!(mgr.k_active() > 0, "plain run must feed the basis");
+        let deflated =
+            mgr.solve_next(&DenseOp::new(&a), &b, None, &SolveSpec::defcg().with_tol(1e-8));
+        assert_eq!(deflated.stop, StopReason::Converged);
+        assert!(
+            deflated.iterations < plain.iterations,
+            "deflated {} >= plain {}",
+            deflated.iterations,
+            plain.iterations
+        );
+    }
+
+    #[test]
+    fn block_requests_pass_through_without_touching_the_basis() {
+        let n = 60;
+        let mut rng = Rng::new(18);
+        let a = Mat::rand_spd(n, 1e4, &mut rng);
+        let b = vec![1.0; n];
+        let mut mgr = RecycleManager::new(RecycleConfig { k: 6, l: 10, ..Default::default() });
+        // Seed the basis with a def-CG run, then interleave a block request.
+        mgr.solve_next(&DenseOp::new(&a), &b, None, &SolveSpec::defcg().with_tol(1e-8));
+        let k_before = mgr.k_active();
+        assert!(k_before > 0);
+        let blk = mgr.solve_next(&DenseOp::new(&a), &b, None, &SolveSpec::blockcg().with_tol(1e-8));
+        assert_eq!(blk.stop, StopReason::Converged);
+        assert_eq!(mgr.k_active(), k_before, "block runs must not perturb W");
+        assert_eq!(mgr.history().len(), 2);
+        assert_eq!(mgr.history()[1].deflation_dim, 0);
     }
 
     #[test]
@@ -331,7 +431,7 @@ mod tests {
         let cfg = RecycleConfig { k: 6, l: 10, stabilize: true, ..Default::default() };
         let mut mgr = RecycleManager::new(cfg);
         for a in &seq {
-            mgr.solve_next(&DenseOp::new(a), &b, None, &CgConfig::with_tol(1e-8));
+            mgr.solve_next(&DenseOp::new(a), &b, None, &SolveSpec::defcg().with_tol(1e-8));
         }
         if let Some(d) = mgr.deflation() {
             let gram = d.w.t_matmul(&d.w);

@@ -9,7 +9,7 @@ use krr::coordinator::SolveService;
 use krr::data::digits::{generate, DigitsConfig};
 use krr::gp::kernel::RbfKernel;
 use krr::gp::laplace::{DenseKernel, LaplaceConfig, LaplaceGpc, SolverBackend};
-use krr::solvers::cg::CgConfig;
+use krr::solvers::SolveSpec;
 use krr::solvers::recycle::RecycleConfig;
 use krr::solvers::SpdOperator;
 use std::sync::Arc;
@@ -112,7 +112,7 @@ fn coordinator_runs_the_newton_sequence() {
         let s: Vec<f64> = (0..N).map(|j| 0.5 - 0.03 * i as f64 + 1e-3 * (j % 7) as f64).collect();
         let op = Arc::new(NewtonOp { k: k.clone(), s });
         let b: Vec<f64> = ds.y.iter().map(|&v| v * 0.5).collect();
-        let r = seq.submit(op, b, None, CgConfig::with_tol(1e-6)).wait();
+        let r = seq.submit(op, b, None, SolveSpec::defcg().with_tol(1e-6)).wait();
         assert_eq!(r.stop, krr::solvers::StopReason::Converged);
         iters.push(r.iterations);
     }
@@ -128,7 +128,7 @@ fn coordinator_parallel_operator_reproduces_serial_sequence() {
     let mut rng = krr::util::rng::Rng::new(31);
     let a = krr::linalg::Mat::rand_spd(n, 1e4, &mut rng);
     let b: Vec<f64> = (0..n).map(|i| 1.0 + (i % 6) as f64).collect();
-    let cfg = CgConfig::with_tol(1e-8);
+    let spec = SolveSpec::defcg().with_tol(1e-8);
     let svc = SolveService::new(2);
 
     struct Owned(krr::linalg::Mat);
@@ -146,8 +146,8 @@ fn coordinator_parallel_operator_reproduces_serial_sequence() {
     let par_op = svc.par_operator(a.clone());
     let ser_op = Arc::new(Owned(a));
     for _ in 0..3 {
-        let rp = par_seq.submit(par_op.clone(), b.clone(), None, cfg.clone()).wait();
-        let rs = ser_seq.submit(ser_op.clone(), b.clone(), None, cfg.clone()).wait();
+        let rp = par_seq.submit(par_op.clone(), b.clone(), None, spec.clone()).wait();
+        let rs = ser_seq.submit(ser_op.clone(), b.clone(), None, spec.clone()).wait();
         assert_eq!(rp.stop, krr::solvers::StopReason::Converged);
         assert_eq!(rp.iterations, rs.iterations);
         for (u, v) in rp.x.iter().zip(&rs.x) {

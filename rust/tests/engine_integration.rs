@@ -15,8 +15,7 @@ use krr::gp::laplace::{DenseKernel, KernelOp, LaplaceConfig, LaplaceGpc, SolverB
 use krr::linalg::mat::Mat;
 use krr::runtime::engine::{Engine, Tensor};
 use krr::runtime::ops::{EngineKernel, EngineMatrixFreeKernel, EngineSpdOperator};
-use krr::solvers::cg::{self, CgConfig};
-use krr::solvers::{SpdOperator, StopReason};
+use krr::solvers::{self, SolveSpec, SpdOperator, StopReason};
 use krr::util::rng::Rng;
 use std::sync::Arc;
 
@@ -163,7 +162,7 @@ fn cg_on_engine_operator_converges_and_matches_native_solution() {
     let s: Vec<f64> = (0..N).map(|i| 0.3 + 0.01 * (i as f64)).collect();
     let b: Vec<f64> = (0..N).map(|i| ((i % 7) as f64) - 3.0).collect();
     let op = EngineSpdOperator::new(&ek, &s);
-    let r = cg::solve(&op, &b, None, &CgConfig::with_tol(1e-5));
+    let r = solvers::solve(&op, &b, &SolveSpec::cg().with_tol(1e-5));
     assert_eq!(r.stop, StopReason::Converged);
 
     // Native solve of the same system for reference.

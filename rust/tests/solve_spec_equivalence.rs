@@ -1,0 +1,193 @@
+//! `SolveSpec` equivalence suite.
+//!
+//! The unified API is a *re-plumbing*, not a re-derivation: for a fixed
+//! SPD system, each [`Method`] dispatched through `solvers::solve` must
+//! reproduce the legacy free-function result **bit-for-bit** (same float
+//! sequence, so same iterates, residual trace, and stop reason). On top
+//! of that, the newly-reachable composition (Jacobi + deflation) must
+//! still satisfy the A-norm monotonicity property that
+//! `solver_properties.rs` pins for plain CG — the optimality invariant
+//! that justifies reading iteration counts as convergence progress.
+
+use krr::linalg::cholesky::Cholesky;
+use krr::linalg::eig::sym_eig;
+use krr::linalg::mat::Mat;
+use krr::linalg::vec_ops::dot;
+use krr::solvers::cg::{self, CgConfig};
+use krr::solvers::defcg::{self, Deflation};
+use krr::solvers::{self, blockcg, pcg, DenseOp, Jacobi, SolveSpec, StopReason};
+use krr::util::rng::Rng;
+use std::sync::Arc;
+
+fn fixed_system(n: usize, seed: u64, cond: f64) -> (Mat, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let a = Mat::rand_spd(n, cond, &mut rng);
+    let b: Vec<f64> = (0..n).map(|i| 1.0 + ((i * 5) % 9) as f64).collect();
+    (a, b)
+}
+
+/// Deflation basis from the exact top-k eigenvectors of A.
+fn exact_deflation(a: &Mat, k: usize) -> Deflation {
+    let e = sym_eig(a).unwrap();
+    let n = a.rows();
+    let mut w = Mat::zeros(n, k);
+    for (dst, j) in ((n - k)..n).enumerate() {
+        w.set_col(dst, &e.vectors.col(j));
+    }
+    let aw = a.matmul(&w);
+    Deflation::new(w, aw)
+}
+
+fn assert_identical(api: &krr::solvers::SolveResult, legacy: &krr::solvers::SolveResult) {
+    assert_eq!(api.stop, legacy.stop);
+    assert_eq!(api.iterations, legacy.iterations);
+    assert_eq!(api.matvecs, legacy.matvecs);
+    assert_eq!(api.x, legacy.x, "solution vectors must be bit-identical");
+    assert_eq!(api.residuals, legacy.residuals, "residual traces must match");
+}
+
+#[test]
+fn cg_spec_reproduces_legacy_cg_bitwise() {
+    let (a, b) = fixed_system(50, 1, 1e4);
+    let op = DenseOp::new(&a);
+    let spec = SolveSpec::cg().with_tol(1e-9).with_store_l(6);
+    let api = solvers::solve(&op, &b, &spec);
+    let legacy = cg::solve(&op, &b, None, &spec.cg_config());
+    assert_eq!(api.stop, StopReason::Converged);
+    assert_identical(&api, &legacy);
+    assert_eq!(api.stored.p, legacy.stored.p);
+}
+
+#[test]
+fn pcg_spec_reproduces_legacy_pcg_bitwise() {
+    // Badly scaled diagonal so the preconditioner actually does work.
+    let mut rng = Rng::new(2);
+    let n = 60;
+    let base = Mat::rand_spd(n, 10.0, &mut rng);
+    let scales: Vec<f64> = (0..n).map(|i| 10f64.powf((i % 5) as f64)).collect();
+    let a = Mat::from_fn(n, n, |i, j| base[(i, j)] * scales[i].sqrt() * scales[j].sqrt());
+    let b = vec![1.0; n];
+    let diag: Vec<f64> = (0..n).map(|i| a[(i, i)]).collect();
+    let op = DenseOp::new(&a);
+
+    let spec = SolveSpec::pcg()
+        .with_precond(Arc::new(Jacobi::new(&diag)))
+        .with_tol(1e-9);
+    let api = solvers::solve(&op, &b, &spec);
+    let legacy = pcg::solve(&op, &b, &diag, None, &spec.cg_config());
+    assert_eq!(api.stop, StopReason::Converged);
+    assert_identical(&api, &legacy);
+
+    // `with_jacobi` (operator-diagonal route) is the same preconditioner:
+    // DenseOp::diag is exact, so this too must be bit-identical.
+    let via_op = solvers::solve(&op, &b, &SolveSpec::pcg().with_jacobi(&op).with_tol(1e-9));
+    assert_identical(&via_op, &legacy);
+}
+
+#[test]
+fn defcg_spec_reproduces_legacy_defcg_bitwise() {
+    let (a, b) = fixed_system(70, 3, 1e5);
+    let op = DenseOp::new(&a);
+    let defl = exact_deflation(&a, 6);
+    let spec = SolveSpec::defcg()
+        .with_deflation(defl.clone())
+        .with_tol(1e-9)
+        .with_store_l(8);
+    let api = solvers::solve(&op, &b, &spec);
+    let legacy = defcg::solve(&op, &b, None, Some(&defl), &spec.cg_config());
+    assert_eq!(api.stop, StopReason::Converged);
+    assert_identical(&api, &legacy);
+}
+
+#[test]
+fn blockcg_spec_reproduces_legacy_blockcg_bitwise() {
+    let (a, b) = fixed_system(40, 4, 1e4);
+    let op = DenseOp::new(&a);
+    let spec = SolveSpec::blockcg().with_tol(1e-9);
+    let api = solvers::solve(&op, &b, &spec);
+    let mut bm = Mat::zeros(40, 1);
+    bm.set_col(0, &b);
+    let legacy = blockcg::solve(&op, &bm, 1e-9, 0);
+    assert_eq!(api.stop, legacy.stop);
+    assert_eq!(api.iterations, legacy.iterations);
+    assert_eq!(api.matvecs, legacy.block_matvecs);
+    assert_eq!(api.x, legacy.x.col(0));
+    assert_eq!(api.residuals, legacy.residuals);
+}
+
+#[test]
+fn solve_with_x0_matches_legacy_warm_start_bitwise() {
+    let (a, b) = fixed_system(45, 5, 1e4);
+    let op = DenseOp::new(&a);
+    let x0: Vec<f64> = (0..45).map(|i| 0.1 * (i as f64)).collect();
+    let spec = SolveSpec::cg().with_tol(1e-9);
+    let api = solvers::solve_with_x0(&op, &b, &x0, &spec);
+    let legacy = cg::solve(&op, &b, Some(&x0), &spec.cg_config());
+    assert_identical(&api, &legacy);
+}
+
+#[test]
+fn composed_jacobi_deflation_error_is_monotone_in_the_a_norm() {
+    // The A-norm monotonicity property from solver_properties.rs, now for
+    // the composed Jacobi+deflation kernel: each iterate minimizes the
+    // A-norm error over a nested (deflation ⊕ preconditioned-Krylov)
+    // space, so re-running to increasing iteration caps must produce a
+    // non-increasing error sequence.
+    let mut rng = Rng::new(7);
+    let n = 48;
+    let base = Mat::rand_spd(n, 1e2, &mut rng);
+    let scales: Vec<f64> = (0..n).map(|i| 10f64.powf((i % 3) as f64)).collect();
+    let a = Mat::from_fn(n, n, |i, j| base[(i, j)] * scales[i].sqrt() * scales[j].sqrt());
+    let x_true: Vec<f64> = (0..n).map(|i| ((i * 3) % 11) as f64 - 5.0).collect();
+    let b = a.matvec(&x_true);
+    let x_star = Cholesky::factor(&a).unwrap().solve(&b);
+    let diag: Vec<f64> = (0..n).map(|i| a[(i, i)]).collect();
+    let defl = exact_deflation(&a, 4);
+    let op = DenseOp::new(&a);
+
+    // tol 1e-12 is comfortably achievable at this conditioning; pushing
+    // past the round-off floor (e.g. tol 1e-15) would let accumulated
+    // rounding grow the error again, which is not what this property is
+    // about — monotonicity holds up to convergence.
+    let mut prev = f64::INFINITY;
+    let mut converged = false;
+    for cap in 1..=(2 * n) {
+        let spec = SolveSpec::defcg()
+            .with_deflation(defl.clone())
+            .with_precond(Arc::new(Jacobi::new(&diag)))
+            .with_tol(1e-12)
+            .with_max_iters(cap);
+        let r = solvers::solve(&op, &b, &spec);
+        let e: Vec<f64> = r.x.iter().zip(&x_star).map(|(u, v)| u - v).collect();
+        let ae = a.matvec(&e);
+        let a_norm = dot(&e, &ae).max(0.0).sqrt();
+        assert!(
+            a_norm <= prev * (1.0 + 1e-8) + 1e-10,
+            "A-norm error grew at cap {cap}: {prev} -> {a_norm}"
+        );
+        prev = a_norm;
+        if r.stop == StopReason::Converged {
+            converged = true;
+            break;
+        }
+    }
+    assert!(converged, "composed solve must converge within 2n caps (err {prev})");
+}
+
+#[test]
+fn spec_equivalence_holds_under_nontrivial_knobs() {
+    // The scalar knobs (max_iters, stall_window) must round-trip through
+    // the spec identically too — same early stop, same trace.
+    let (a, b) = fixed_system(64, 8, 1e8);
+    let op = DenseOp::new(&a);
+    let spec = SolveSpec::cg().with_tol(1e-14).with_max_iters(7);
+    let api = solvers::solve(&op, &b, &spec);
+    let legacy = cg::solve(
+        &op,
+        &b,
+        None,
+        &CgConfig { tol: 1e-14, max_iters: 7, ..Default::default() },
+    );
+    assert_eq!(api.stop, StopReason::MaxIters);
+    assert_identical(&api, &legacy);
+}

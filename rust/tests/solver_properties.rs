@@ -21,7 +21,7 @@ use krr::linalg::vec_ops::{dot, norm2};
 use krr::solvers::cg::{self, CgConfig};
 use krr::solvers::defcg::{self, Deflation};
 use krr::solvers::recycle::{RecycleConfig, RecycleManager};
-use krr::solvers::{DenseOp, StopReason};
+use krr::solvers::{DenseOp, SolveSpec, StopReason};
 use krr::util::quickprop::forall;
 use krr::util::rng::Rng;
 
@@ -106,7 +106,7 @@ fn wtaw_stays_spd_through_recycle_updates() {
         let b: Vec<f64> = (0..n).map(|i| 1.0 + (i % 7) as f64).collect();
         let mut mgr = RecycleManager::new(RecycleConfig { k: 6, l: 10, ..Default::default() });
         for (i, a) in seq.iter().enumerate() {
-            let r = mgr.solve_next(&DenseOp::new(a), &b, None, &CgConfig::with_tol(1e-8));
+            let r = mgr.solve_next(&DenseOp::new(a), &b, None, &SolveSpec::defcg().with_tol(1e-8));
             assert_eq!(r.stop, StopReason::Converged, "system {i}");
             if let Some(d) = mgr.deflation() {
                 assert!(d.k() > 0);
