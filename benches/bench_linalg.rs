@@ -125,6 +125,61 @@ fn main() {
     }
     g.report();
 
+    // Block application: apply_block vs the k-matvec column loop, at the
+    // acceptance sizes n = 2048, k ∈ {4, 16, 64}. The block kernels
+    // produce bitwise-identical outputs; the win is pure memory traffic
+    // (each A row streamed once per 16-column panel instead of once per
+    // column, and — for ParDenseOp — one fork/join per block instead of
+    // one per column).
+    let mut g = BenchGroup::new("linalg — apply_block vs matvec loop (n = 2048)")
+        .with_config(BenchConfig { warmup: 1, iters: 10, max_seconds: 120.0 });
+    {
+        let n = 2048;
+        let feats = Mat::randn(n, 32, &mut rng);
+        let mut k = RbfKernel::new(1.0, 5.0).gram(&feats);
+        k.add_diag(1.0);
+        let a = Arc::new(k);
+        let serial = DenseOp::new(&a);
+        let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+        let par = ParDenseOp::new(a.clone(), Arc::new(ThreadPool::new(cores.min(16))));
+        for kcols in [4usize, 16, 64] {
+            let xs = Mat::randn(n, kcols, &mut rng);
+            let mut ys = Mat::zeros(n, kcols);
+            let work = Some(2.0 * (n * n * kcols) as f64);
+            let mut col = vec![0.0; n];
+            let mut y = vec![0.0; n];
+            g.bench_with_work(&format!("matvec-loop DenseOp k={kcols}"), work, &mut || {
+                for j in 0..kcols {
+                    for (i, c) in col.iter_mut().enumerate() {
+                        *c = xs[(i, j)];
+                    }
+                    serial.matvec(&col, &mut y);
+                    ys.set_col(j, &y);
+                }
+                std::hint::black_box(&ys);
+            });
+            g.bench_with_work(&format!("apply_block DenseOp k={kcols}"), work, &mut || {
+                serial.apply_block(&xs, &mut ys);
+                std::hint::black_box(&ys);
+            });
+            g.bench_with_work(&format!("matvec-loop ParDenseOp k={kcols}"), work, &mut || {
+                for j in 0..kcols {
+                    for (i, c) in col.iter_mut().enumerate() {
+                        *c = xs[(i, j)];
+                    }
+                    par.matvec(&col, &mut y);
+                    ys.set_col(j, &y);
+                }
+                std::hint::black_box(&ys);
+            });
+            g.bench_with_work(&format!("apply_block ParDenseOp k={kcols}"), work, &mut || {
+                par.apply_block(&xs, &mut ys);
+                std::hint::black_box(&ys);
+            });
+        }
+    }
+    g.report();
+
     // Gram assembly (the L1 kernel's native counterpart).
     let mut g = BenchGroup::new("linalg — RBF Gram assembly (d = 784)")
         .with_config(BenchConfig { warmup: 1, iters: 5, max_seconds: 60.0 });

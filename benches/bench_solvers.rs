@@ -65,6 +65,49 @@ fn main() {
     });
     g.report();
 
+    // Block paths: the multi-RHS solve and the AW refresh, both driven by
+    // apply_block since the block-first redesign. The per-column matvec
+    // loop baselines are what those paths compiled to before.
+    let mut g = BenchGroup::new("solvers — block application paths (n = 512)")
+        .with_config(BenchConfig { warmup: 1, iters: 8, max_seconds: 90.0 });
+    {
+        let mut rng = Rng::new(4);
+        for s in [4usize, 16] {
+            let bs = Mat::randn(n, s, &mut rng);
+            g.bench(&format!("block-CG s={s} tol=1e-6"), || {
+                std::hint::black_box(solvers::solve_block(
+                    &op,
+                    &bs,
+                    &SolveSpec::blockcg().with_tol(1e-6),
+                ));
+            });
+            g.bench(&format!("{s} independent CG solves tol=1e-6"), || {
+                for j in 0..s {
+                    std::hint::black_box(solvers::solve(&op, &bs.col(j), &cg_spec));
+                }
+            });
+        }
+        // AW refresh: one apply_block over the k-column basis vs the old
+        // per-column loop.
+        use krr::solvers::defcg::Deflation;
+        use krr::solvers::SpdOperator;
+        let w = krr::linalg::qr::Qr::factor(&Mat::randn(n, 8, &mut rng)).thin_q();
+        let mut d = Deflation::new(w.clone(), Mat::zeros(n, 8));
+        g.bench("AW refresh k=8 (apply_block)", || {
+            std::hint::black_box(d.refresh(&op));
+        });
+        let mut aw_loop = Mat::zeros(n, 8);
+        let mut y = vec![0.0; n];
+        g.bench("AW refresh k=8 (matvec loop)", || {
+            for j in 0..8 {
+                op.matvec(&w.col(j), &mut y);
+                aw_loop.set_col(j, &y);
+            }
+            std::hint::black_box(&aw_loop);
+        });
+    }
+    g.report();
+
     // Engine path: PJRT artifacts when built, the native f32 fallback
     // otherwise — the bench runs offline either way.
     {

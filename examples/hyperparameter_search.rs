@@ -4,14 +4,19 @@
 //! cargo run --release --example hyperparameter_search
 //! ```
 //!
-//! Grid-searches the RBF (amplitude, lengthscale) over a synthetic-MNIST
-//! GPC problem. Every grid point runs a full Laplace/Newton fit — itself a
-//! sequence of SPD systems — so the whole search is a *sequence of
-//! sequences*, exactly the workload subspace recycling targets. The run
-//! compares total inner-solver iterations with plain CG vs def-CG.
+//! Two stages over a synthetic-MNIST problem:
+//!
+//! 1. **GPC (amplitude, lengthscale) grid** — every grid point runs a full
+//!    Laplace/Newton fit (itself a sequence of SPD systems), so the search
+//!    is a *sequence of sequences*; compares plain CG vs def-CG totals.
+//! 2. **Regression (amplitude, σ) grid via operator algebra** — at the
+//!    best lengthscale, the entire `(θ, σ)` plane is solved as
+//!    `ShiftedOp(ScaledOp(K, θ²), σ²)` views over ONE Gram matrix: zero
+//!    kernel rebuilds (the old per-point `gram()` was the dominant cost),
+//!    one recycle manager carrying the subspace across the whole plane.
 
 use krr::data::digits::{generate, DigitsConfig};
-use krr::gp::hyper::grid_search;
+use krr::gp::hyper::{grid_search, sigma_grid_search};
 use krr::gp::laplace::SolverBackend;
 use krr::solvers::recycle::RecycleConfig;
 
@@ -61,5 +66,57 @@ fn main() {
         "both backends must find the same optimum"
     );
     assert!(total_def <= total_cg, "recycling should not cost iterations");
+
+    // Stage 2: the (θ, σ) regularization plane at the best lengthscale as
+    // operator views over ONE Gram matrix. σ descends within each θ so
+    // every system inherits a basis from an easier neighbour.
+    let best_ls = cg.best.lengthscale;
+    let amps = [0.5, 1.0, 2.0];
+    let sigmas = [0.8, 0.6, 0.45, 0.35];
+    println!(
+        "\nregression σ-grid at λ = {best_ls}: {}×{} points, ONE gram build \
+         (was {} builds when each point re-materialized θ²K + σ²I)",
+        amps.len(),
+        sigmas.len(),
+        amps.len() * sigmas.len()
+    );
+    let recycled = sigma_grid_search(
+        &data.x,
+        &data.y,
+        best_ls,
+        &amps,
+        &sigmas,
+        RecycleConfig { k: 8, l: 12, ..Default::default() },
+        1e-8,
+    );
+    let plain = sigma_grid_search(
+        &data.x,
+        &data.y,
+        best_ls,
+        &amps,
+        &sigmas,
+        RecycleConfig { k: 0, l: 0, ..Default::default() },
+        1e-8,
+    );
+    println!("   θ    |    σ    |  −½yᵀα   | plain iters | recycled iters | k");
+    println!("--------+---------+----------+-------------+----------------+---");
+    for (p, r) in plain.iter().zip(&recycled) {
+        println!(
+            "{:7.2} | {:7.2} | {:8.2} | {:11} | {:14} | {:2}",
+            r.amplitude, r.noise, r.data_fit, p.solver_iterations, r.solver_iterations,
+            r.deflation_dim
+        );
+    }
+    let tot_plain: usize = plain.iter().skip(1).map(|p| p.solver_iterations).sum();
+    let tot_rec: usize = recycled.iter().skip(1).map(|p| p.solver_iterations).sum();
+    println!(
+        "\nσ-grid totals (points 2..): plain = {tot_plain}, recycled = {tot_rec} \
+         ({:.0}% saved, with zero kernel rebuilds either way)",
+        100.0 * (tot_plain as f64 - tot_rec as f64) / tot_plain as f64
+    );
+    assert!(
+        tot_rec < tot_plain,
+        "recycling across the σ-grid should save iterations"
+    );
     println!("OK");
 }

@@ -10,14 +10,25 @@
 //!   Laplace optimization or per hyperparameter trajectory), each with its
 //!   own [`crate::solvers::recycle::RecycleManager`] state;
 //! * per-request [`crate::solvers::SolveSpec`]s: one sequence queue serves
-//!   heterogeneous workloads (plain CG, Jacobi-PCG, deflated, block CG);
+//!   heterogeneous workloads (plain CG, Jacobi-PCG, deflated, block CG,
+//!   and multi-RHS [`service::SequenceHandle::submit_block`] batches —
+//!   consecutive same-operator block requests coalesce into one block
+//!   solve);
+//! * operator-algebra-friendly submission: operators travel as
+//!   `Arc<dyn SpdOperator + Send + Sync>`, so `solvers::algebra` views
+//!   (shifted / scaled / low-rank-updated) over one shared base submit
+//!   without re-materializing kernels;
 //! * strict FIFO ordering *within* a sequence (recycling is inherently
 //!   sequential) and parallelism *across* sequences;
-//! * service-level metrics ([`service::MetricsSnapshot`]).
+//! * service-level metrics ([`service::MetricsSnapshot`]), with block
+//!   applies counted as one application per column so `total_matvecs`
+//!   stays on one axis across request shapes.
 //!
 //! This is the shape a GP-serving system would use: many concurrent model
 //! fits, each a sequence of related systems, sharing one compute engine.
 
 pub mod service;
 
-pub use service::{MetricsSnapshot, SequenceHandle, ServiceMetrics, SolveService};
+pub use service::{
+    BlockSolveTicket, MetricsSnapshot, SequenceHandle, ServiceMetrics, SolveService, SolveTicket,
+};

@@ -38,6 +38,17 @@ pub trait KernelOp: Sync {
     fn n(&self) -> usize;
     /// y = K v.
     fn matvec(&self, v: &[f64], y: &mut [f64]);
+    /// `Y = K X` for a block of columns — same column-equivalence
+    /// contract as [`SpdOperator::apply_block`]: the default loops
+    /// [`KernelOp::matvec`] over columns, and overrides may only change
+    /// how K is streamed, never the per-column float sequence.
+    /// [`DenseKernel`] overrides with the cache-blocked (and, when
+    /// constructed parallel, pool-sharded) panel kernel; the engine-backed
+    /// kernels in `runtime::ops` keep the default (the artifact surface is
+    /// vector-at-a-time).
+    fn apply_block(&self, xs: &Mat, ys: &mut Mat) {
+        crate::solvers::apply_block_via(self.n(), &mut |x, y| self.matvec(x, y), xs, ys)
+    }
     /// Dense K if this operator has one (native path).
     fn dense(&self) -> Option<&Mat> {
         None
@@ -79,6 +90,13 @@ impl KernelOp for DenseKernel {
         }
     }
 
+    fn apply_block(&self, xs: &Mat, ys: &mut Mat) {
+        match &self.par {
+            Some(p) => p.apply_block(xs, ys),
+            None => self.k.block_matvec_into(xs, ys),
+        }
+    }
+
     fn dense(&self) -> Option<&Mat> {
         Some(self.k.as_ref())
     }
@@ -113,6 +131,35 @@ impl<'a> SpdOperator for LaplaceOperator<'a> {
         self.k.matvec(y, &mut ky);
         for i in 0..n {
             y[i] = x[i] + self.s[i] * ky[i];
+        }
+    }
+
+    /// Fused block form `Y = X + S∘(K(S∘X))`: one block kernel
+    /// application for all columns (the diagonal scalings are `O(nk)` on
+    /// contiguous rows). Per column this performs exactly the
+    /// single-vector float sequence, so the column-equivalence contract
+    /// holds whenever the kernel's [`KernelOp::apply_block`] honors it.
+    fn apply_block(&self, xs: &Mat, ys: &mut Mat) {
+        let n = self.s.len();
+        assert_eq!(xs.rows(), n, "apply_block dim");
+        assert_eq!(ys.rows(), n, "apply_block dim");
+        assert_eq!(xs.cols(), ys.cols(), "apply_block dim");
+        // SX: row i scaled by sᵢ (row-major rows are contiguous).
+        let mut sx = xs.clone();
+        for i in 0..n {
+            let si = self.s[i];
+            for v in sx.row_mut(i) {
+                *v *= si;
+            }
+        }
+        let mut ksx = Mat::zeros(n, xs.cols());
+        self.k.apply_block(&sx, &mut ksx);
+        for i in 0..n {
+            let si = self.s[i];
+            let (xrow, krow) = (xs.row(i), ksx.row(i));
+            for (j, yv) in ys.row_mut(i).iter_mut().enumerate() {
+                *yv = xrow[j] + si * krow[j];
+            }
         }
     }
 

@@ -30,6 +30,11 @@ pub struct RegressionParams {
 }
 
 /// The regularized kernel operator `K + σ²I` (matrix-free over a dense K).
+///
+/// This is the borrowed-`Mat` sibling of
+/// `solvers::algebra::ShiftedOp(DenseOp(K), σ²)` — same arithmetic, same
+/// exact diagonal. Prefer the `ShiftedOp` view when sweeping a σ-grid
+/// over one shared base operator (see `gp::hyper::sigma_grid_search`).
 pub struct RegularizedKernelOp<'a> {
     k: &'a Mat,
     sigma2: f64,
@@ -50,6 +55,16 @@ impl<'a> SpdOperator for RegularizedKernelOp<'a> {
         self.k.matvec_into(x, y);
         for i in 0..x.len() {
             y[i] += self.sigma2 * x[i];
+        }
+    }
+
+    /// Fused block form `K·X + σ²X`: the cache-blocked panel kernel over
+    /// K plus an elementwise shift — per column the exact single-vector
+    /// float sequence.
+    fn apply_block(&self, xs: &Mat, ys: &mut Mat) {
+        self.k.block_matvec_into(xs, ys);
+        for (yv, xv) in ys.data_mut().iter_mut().zip(xs.data()) {
+            *yv += self.sigma2 * xv;
         }
     }
 

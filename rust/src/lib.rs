@@ -15,7 +15,10 @@
 //! * [`solvers`] — the unified [`solvers::SolveSpec`] API (one
 //!   `solve(op, b, &spec)` entry point across CG / PCG / def-CG /
 //!   block CG, with preconditioning and deflation as data), the
-//!   underlying kernels, Cholesky, Lanczos, recycling state, and the
+//!   **block-first** operator trait ([`solvers::SpdOperator`] with
+//!   `apply_block`), the operator algebra ([`solvers::algebra`]:
+//!   shifted / scaled / sum / low-rank views over one base operator),
+//!   the underlying kernels, Cholesky, Lanczos, recycling state, and the
 //!   pool-sharded parallel dense operator (`ParDenseOp`).
 //! * [`gp`] — GP classification with Laplace/Newton (the paper's workload).
 //! * [`coordinator`] — the solve-service that owns recycling across a

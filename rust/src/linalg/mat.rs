@@ -209,6 +209,56 @@ impl Mat {
         }
     }
 
+    /// Column-panel width of [`Mat::block_matvec_into`]: wide enough that
+    /// each streamed A row is reused across many right-hand columns, small
+    /// enough that the gathered panel (`BLOCK_PANEL · rows` doubles) stays
+    /// cache-resident while A streams past it.
+    pub const BLOCK_PANEL: usize = 16;
+
+    /// `ys = A · xs` — the block (multi-vector) matvec behind
+    /// [`crate::solvers::SpdOperator::apply_block`].
+    ///
+    /// Computed in column panels of up to [`Mat::BLOCK_PANEL`]: the panel's
+    /// columns are gathered once into contiguous buffers, then every row of
+    /// A is read **once per panel** and dotted against each of them. Each
+    /// output element is the same `dot(row, column)` the per-column
+    /// [`Mat::matvec_into`] loop computes, so the result is **bitwise
+    /// identical** to `xs.cols()` single matvecs — the block form changes
+    /// memory traffic (A streamed once per panel instead of once per
+    /// column), never the float sequence.
+    pub fn block_matvec_into(&self, xs: &Mat, ys: &mut Mat) {
+        assert_eq!(xs.rows(), self.cols, "block_matvec dim");
+        assert_eq!(ys.rows(), self.rows, "block_matvec dim");
+        assert_eq!(xs.cols(), ys.cols(), "block_matvec dim");
+        let cols: Vec<Vec<f64>> = (0..xs.cols()).map(|j| xs.col(j)).collect();
+        self.block_matvec_rows(0, self.rows, &cols, ys);
+    }
+
+    /// The panel-dot kernel of [`Mat::block_matvec_into`] restricted to
+    /// rows `lo..hi`: `out[i - lo][j] = dot(A.row(i), cols[j])`, with the
+    /// operand columns pre-gathered into contiguous buffers by the
+    /// caller. This single implementation serves both the serial
+    /// [`Mat::block_matvec_into`] (full row range) and the row shards of
+    /// `solvers::ParDenseOp::apply_block`, so the bitwise
+    /// column-equivalence contract lives in exactly one loop nest.
+    pub(crate) fn block_matvec_rows(&self, lo: usize, hi: usize, cols: &[Vec<f64>], out: &mut Mat) {
+        debug_assert!(lo <= hi && hi <= self.rows);
+        assert_eq!(out.rows(), hi - lo, "block_matvec rows dim");
+        assert_eq!(out.cols(), cols.len(), "block_matvec dim");
+        let k = cols.len();
+        let mut j0 = 0;
+        while j0 < k {
+            let jw = (k - j0).min(Self::BLOCK_PANEL);
+            for i in lo..hi {
+                let row = self.row(i);
+                for (jj, col) in cols[j0..j0 + jw].iter().enumerate() {
+                    out[(i - lo, j0 + jj)] = vec_ops::dot(row, col);
+                }
+            }
+            j0 += jw;
+        }
+    }
+
     /// y = Aᵀ x (allocating). Column access: accumulate row-wise to stay
     /// cache-friendly.
     pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
@@ -388,6 +438,34 @@ mod tests {
             let slow = a.transpose().matvec(&x);
             fast.iter().zip(&slow).all(|(u, v)| (u - v).abs() < 1e-10)
         });
+    }
+
+    #[test]
+    fn block_matvec_bitwise_matches_column_loop() {
+        // The contract the whole block-first operator API leans on: the
+        // panel kernel must be float-for-float the per-column matvec loop,
+        // including ragged panels (k not a multiple of BLOCK_PANEL) and
+        // the degenerate k = 1.
+        let mut rng = Rng::new(42);
+        let a = Mat::randn(37, 37, &mut rng);
+        for k in [1usize, 2, Mat::BLOCK_PANEL, Mat::BLOCK_PANEL + 1, 33] {
+            let xs = Mat::randn(37, k, &mut rng);
+            let mut ys = Mat::zeros(37, k);
+            a.block_matvec_into(&xs, &mut ys);
+            for j in 0..k {
+                let want = a.matvec(&xs.col(j));
+                assert_eq!(ys.col(j), want, "k={k} column {j}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "block_matvec dim")]
+    fn block_matvec_dim_mismatch_panics() {
+        let a = Mat::zeros(3, 3);
+        let xs = Mat::zeros(4, 2);
+        let mut ys = Mat::zeros(3, 2);
+        a.block_matvec_into(&xs, &mut ys);
     }
 
     #[test]

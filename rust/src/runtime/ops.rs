@@ -13,6 +13,16 @@
 //! therefore not reachable through this path — use the f64 native solvers
 //! for the paper's Fig. 3 (tol 1e-8) and the engine path for tol ≥ 1e-5
 //! workloads.
+//!
+//! Block applications: the artifact call surface is vector-at-a-time
+//! (`kmatvec`/`amatvec` take one operand), so the engine operators keep
+//! the default column-loop `apply_block` from
+//! [`crate::solvers::SpdOperator`] / [`KernelOp`] — trivially satisfying
+//! the column-equivalence contract. A batched `kmatmat_n{n}` artifact
+//! (one device call for a whole panel, amortizing the per-call transfer)
+//! is the natural next step once the AOT pipeline emits it; consumers
+//! already route through `apply_block`, so it would light up everywhere
+//! without solver changes.
 
 use crate::gp::laplace::KernelOp;
 use crate::runtime::engine::{Buffer, Engine, Tensor};

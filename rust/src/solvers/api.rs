@@ -183,6 +183,16 @@ pub struct SolveSpec {
     pub recompute_every: usize,
     /// Optional preconditioner (used by `Pcg` and `DefCg`).
     pub precond: Option<Arc<dyn Preconditioner>>,
+    /// Ask the solve site to supply a Jacobi preconditioner built from the
+    /// operator's diagonal when `precond` is unset (used by `Pcg` and
+    /// `DefCg`). Unlike [`SolveSpec::with_jacobi`] — which bakes a
+    /// diagonal into the spec at build time — this defers the build to
+    /// whoever runs the solve: [`solve`] builds one per call, while a
+    /// recycled sequence ([`crate::solvers::recycle::RecycleManager`], and
+    /// therefore the coordinator) builds it **once per sequence** and
+    /// reuses it across requests instead of re-deriving the diagonal every
+    /// time.
+    pub auto_jacobi: bool,
     /// Optional deflation basis (used by `DefCg` and `Pcg`). Inside a
     /// recycled sequence the manager's basis takes precedence over this.
     pub deflation: Option<Arc<Deflation>>,
@@ -206,6 +216,7 @@ impl SolveSpec {
             stall_window: d.stall_window,
             recompute_every: d.recompute_every,
             precond: None,
+            auto_jacobi: false,
             deflation: None,
         }
     }
@@ -270,6 +281,15 @@ impl SolveSpec {
         self.with_precond(Arc::new(Jacobi::from_op(a)))
     }
 
+    /// Defer the Jacobi build to the solve site (see
+    /// [`SolveSpec::auto_jacobi`]): [`solve`] derives it from the operator
+    /// per call; a recycled sequence caches one per sequence. Ignored when
+    /// an explicit preconditioner is attached.
+    pub fn with_auto_jacobi(mut self) -> SolveSpec {
+        self.auto_jacobi = true;
+        self
+    }
+
     /// Attach a deflation basis.
     pub fn with_deflation(mut self, d: Deflation) -> SolveSpec {
         self.deflation = Some(Arc::new(d));
@@ -304,6 +324,7 @@ impl std::fmt::Debug for SolveSpec {
             .field("store_l", &self.store_l)
             .field("stall_window", &self.stall_window)
             .field("recompute_every", &self.recompute_every)
+            .field("auto_jacobi", &self.auto_jacobi)
             .field("precond", &self.precond.as_ref().map(|p| p.name()))
             .field("deflation_k", &self.deflation.as_ref().map(|d| d.k()))
             .finish()
@@ -330,7 +351,13 @@ pub fn solve_with_x0(
 
 /// Multi-RHS entry point: solve `A X = B` with block CG using the spec's
 /// tolerance and iteration cap. The other spec fields (method,
-/// preconditioner, deflation) do not apply to the block kernel.
+/// preconditioner, deflation) do not apply to the block kernel. The
+/// iteration drives [`SpdOperator::apply_block`], so operators with a
+/// real block kernel pay one data pass per iteration; the result's
+/// `matvecs` counts each block apply as `b.cols()` applications.
+///
+/// For coalescing same-sequence multi-RHS traffic through the
+/// coordinator, see `coordinator::SequenceHandle::submit_block`.
 pub fn solve_block(a: &dyn SpdOperator, b: &Mat, spec: &SolveSpec) -> BlockSolveResult {
     blockcg::solve(a, b, spec.tol, spec.max_iters)
 }
@@ -348,7 +375,19 @@ pub(crate) fn dispatch(
     match spec.method {
         Method::Cg => cg::solve(a, b, x0, &cfg),
         Method::Pcg | Method::DefCg => {
-            defcg::solve_precond(a, b, x0, defl, spec.precond.as_deref(), &cfg)
+            // auto_jacobi: build the preconditioner here, per call. A
+            // recycled sequence intercepts this earlier and substitutes
+            // its per-sequence cached Jacobi instead.
+            let built = if spec.precond.is_none() && spec.auto_jacobi {
+                Some(Jacobi::from_op(a))
+            } else {
+                None
+            };
+            let precond: Option<&dyn Preconditioner> = spec
+                .precond
+                .as_deref()
+                .or(built.as_ref().map(|j| j as &dyn Preconditioner));
+            defcg::solve_precond(a, b, x0, defl, precond, &cfg)
         }
         Method::BlockCg => {
             let n = a.n();
@@ -388,8 +427,8 @@ pub(crate) fn dispatch(
                 x,
                 residuals: r.residuals.iter().map(|v| v * rescale).collect(),
                 iterations: r.iterations,
-                // s = 1: one block matvec is one matvec.
-                matvecs: r.block_matvecs + shift_matvecs,
+                // The block kernel already counts per column (s = 1 here).
+                matvecs: r.matvecs + shift_matvecs,
                 stop: r.stop,
                 stored: StoredDirections::default(),
                 seconds: r.seconds,
@@ -478,6 +517,30 @@ mod tests {
         from_diag.apply(&r, &mut z1);
         from_op.apply(&r, &mut z2);
         assert_eq!(z1, z2, "DenseOp::diag must be exact");
+    }
+
+    #[test]
+    fn auto_jacobi_matches_explicit_jacobi() {
+        // with_auto_jacobi defers the build to the solve site; through the
+        // direct entry point that must be float-for-float the eagerly
+        // built with_jacobi spec (same operator, same exact diagonal).
+        let (a, b) = system(50, 8);
+        let op = DenseOp::new(&a);
+        let eager = solve(&op, &b, &SolveSpec::pcg().with_jacobi(&op).with_tol(1e-9));
+        let auto = solve(&op, &b, &SolveSpec::pcg().with_auto_jacobi().with_tol(1e-9));
+        assert_eq!(eager.x, auto.x);
+        assert_eq!(eager.iterations, auto.iterations);
+        // An explicit preconditioner wins over the flag.
+        let ident = solve(
+            &op,
+            &b,
+            &SolveSpec::pcg()
+                .with_precond(Arc::new(Identity))
+                .with_auto_jacobi()
+                .with_tol(1e-9),
+        );
+        let plain = solve(&op, &b, &SolveSpec::cg().with_tol(1e-9));
+        assert_eq!(ident.x, plain.x);
     }
 
     #[test]

@@ -26,8 +26,14 @@ pub struct BlockSolveResult {
     /// Max over columns of relative residual, per iteration.
     pub residuals: Vec<f64>,
     pub iterations: usize,
-    /// Block matvecs (each applies A to s vectors).
+    /// Block applications (each applies A to all s columns at once).
     pub block_matvecs: usize,
+    /// Operator applications counted per column: `block_matvecs · s`.
+    /// This is the unit every other solver reports
+    /// ([`crate::solvers::SolveResult::matvecs`]) and the one the
+    /// coordinator's `total_matvecs` aggregates, so block and single-RHS
+    /// work stay comparable on one axis.
+    pub matvecs: usize,
     pub stop: StopReason,
     pub seconds: f64,
 }
@@ -63,22 +69,11 @@ pub fn solve(a: &dyn SpdOperator, b: &Mat, tol: f64, max_iters: usize) -> BlockS
             residuals,
             iterations: 0,
             block_matvecs: 0,
+            matvecs: 0,
             stop: StopReason::Converged,
             seconds: start.elapsed().as_secs_f64(),
         };
     }
-
-    // Apply A column-wise (the operator interface is vector-at-a-time; an
-    // engine backend amortizes through batched artifacts — future work).
-    let apply = |p: &Mat| -> Mat {
-        let mut ap = Mat::zeros(n, s);
-        let mut y = vec![0.0; n];
-        for j in 0..s {
-            a.matvec(&p.col(j), &mut y);
-            ap.set_col(j, &y);
-        }
-        ap
-    };
 
     // Small s×s solve helper with Cholesky → QR-ls fallback.
     let small_solve = |m: &Mat, rhs: &Mat| -> Mat {
@@ -101,9 +96,13 @@ pub fn solve(a: &dyn SpdOperator, b: &Mat, tol: f64, max_iters: usize) -> BlockS
     let mut stop = StopReason::MaxIters;
     let mut iterations = 0;
     let mut block_matvecs = 0;
+    // AP through the block-first operator interface: one apply_block per
+    // iteration (one data pass over A per panel) instead of s column
+    // matvecs; bitwise the same floats by the apply_block contract.
+    let mut ap = Mat::zeros(n, s);
 
     for _ in 0..max_iters {
-        let ap = apply(&p);
+        a.apply_block(&p, &mut ap);
         block_matvecs += 1;
         let mut ptap = p.t_matmul(&ap);
         ptap.symmetrize();
@@ -139,6 +138,7 @@ pub fn solve(a: &dyn SpdOperator, b: &Mat, tol: f64, max_iters: usize) -> BlockS
         residuals,
         iterations,
         block_matvecs,
+        matvecs: block_matvecs * s,
         stop,
         seconds: start.elapsed().as_secs_f64(),
     }
@@ -231,6 +231,18 @@ mod tests {
         for i in 0..n {
             assert!((r.x[(i, 0)] - r.x[(i, 2)]).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn matvec_accounting_counts_k_per_block_apply() {
+        let mut rng = Rng::new(6);
+        let n = 30;
+        let a = Mat::rand_spd(n, 1e3, &mut rng);
+        let b = Mat::randn(n, 4, &mut rng);
+        let r = solve(&DenseOp::new(&a), &b, 1e-8, 0);
+        assert_eq!(r.stop, StopReason::Converged);
+        assert_eq!(r.block_matvecs, r.iterations);
+        assert_eq!(r.matvecs, 4 * r.block_matvecs, "one block apply = s applications");
     }
 
     #[test]

@@ -52,16 +52,17 @@ impl Deflation {
         self.w.cols()
     }
 
-    /// Recompute `AW` exactly under a (new) operator; costs k matvecs.
+    /// Recompute `AW` exactly under a (new) operator with **one block
+    /// application** over all k basis columns ([`SpdOperator::apply_block`]
+    /// — one data pass over A per panel instead of k column matvecs, same
+    /// floats by the block contract). Returns the accounting cost: k
+    /// operator applications.
     pub fn refresh(&mut self, a: &dyn SpdOperator) -> usize {
-        let n = self.w.rows();
-        let mut y = vec![0.0; n];
-        for j in 0..self.w.cols() {
-            let col = self.w.col(j);
-            a.matvec(&col, &mut y);
-            self.aw.set_col(j, &y);
+        let k = self.w.cols();
+        if k > 0 {
+            a.apply_block(&self.w, &mut self.aw);
         }
-        self.w.cols()
+        k
     }
 
     /// Serialize the basis to a byte buffer (own little-endian format:

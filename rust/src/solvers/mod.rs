@@ -22,7 +22,48 @@
 //! preconditioner + deflation as data) and call [`solve`] /
 //! [`solve_with_x0`]. The per-family free functions remain as thin shims
 //! over the same kernels.
+//!
+//! # The block-first operator contract
+//!
+//! The paper's workloads are dominated by *multi-vector* operator
+//! applications: block CG iterates on `A·P` with s columns, the recycle
+//! manager refreshes `AW` (k columns) per system, harmonic-Ritz
+//! extraction consumes stacked `(Z, AZ)`, and diagonal probing applies A
+//! to panels of basis vectors. [`SpdOperator`] therefore exposes two
+//! application methods:
+//!
+//! * [`SpdOperator::matvec`] — `y = A x`, the single-vector primitive;
+//! * [`SpdOperator::apply_block`] — `Y = A X`, the multi-vector form.
+//!   The default loops `matvec` over columns; implementations override it
+//!   when one pass over the operator's data can serve many columns.
+//!
+//! **Contract:** `apply_block` must produce, column for column, the *same
+//! floats* as the matvec loop. Overrides win by reusing operator traffic
+//! across columns (the dense panel kernel streams each A row once per
+//! [`crate::linalg::mat::Mat::BLOCK_PANEL`] columns instead of once per
+//! column), never by reassociating the per-element arithmetic. This keeps
+//! every solver trajectory independent of whether a consumer batched its
+//! applications — recycled sequences, the bit-for-bit parallel/serial
+//! equivalence, and the PR-pinned plain-CG results all survive the block
+//! migration unchanged (`rust/tests/operator_algebra.rs` pins this).
+//!
+//! In-repo overrides: [`DenseOp`] / [`ParDenseOp`] (cache-blocked panel
+//! GEMM, row-sharded on the pool for the parallel op), the GPC Newton
+//! operator `I + SKS` (`gp::laplace`, fused scale–block-K–scale), and
+//! `gp::regression::RegularizedKernelOp` (fused `K·X + σ²X`). The
+//! [`algebra`] composers forward blocks to their base operator.
+//!
+//! # Operator algebra
+//!
+//! Sequences of *related* systems are usually cheap views over one base
+//! operator: `A + σI` across a regularization grid, `c·A` across an
+//! amplitude grid, `A + UUᵀ` after a low-rank model update. The
+//! [`algebra`] module provides [`ShiftedOp`], [`ScaledOp`], [`SumOp`] and
+//! [`LowRankUpdateOp`] wrappers that implement [`SpdOperator`] with exact
+//! [`SpdOperator::diag`] and block forwarding, so hyperparameter and
+//! Newton families never re-materialize kernels.
 
+pub mod algebra;
 pub mod api;
 pub mod blockcg;
 pub mod cg;
@@ -33,6 +74,7 @@ pub mod pcg;
 pub mod recycle;
 pub mod ritz;
 
+pub use algebra::{LowRankUpdateOp, ScaledOp, ShiftedOp, SumOp};
 pub use api::{
     solve, solve_block, solve_with_x0, Identity, Jacobi, Method, Preconditioner, SolveSpec,
 };
@@ -60,48 +102,162 @@ pub trait SpdOperator: Sync {
         y
     }
 
+    /// `Y = A X` — apply the operator to every column of `xs` at once.
+    /// `xs` and `ys` are n-row matrices with the same column count.
+    ///
+    /// # Contract: column equivalence
+    ///
+    /// The result MUST be, column for column, **bitwise identical** to
+    /// calling [`SpdOperator::matvec`] on each column of `xs` — overrides
+    /// may only change how operator data is *streamed* (amortizing one
+    /// pass over many columns), never the per-element float sequence.
+    /// Solver trajectories therefore do not depend on whether a consumer
+    /// batched its applications. The default implementation is exactly
+    /// that column loop; override it whenever a block application pays:
+    ///
+    /// * [`DenseOp`] — cache-blocked panel GEMM
+    ///   ([`Mat::block_matvec_into`]): each A row streamed once per
+    ///   [`Mat::BLOCK_PANEL`] columns instead of once per column;
+    /// * [`ParDenseOp`] — the same panel kernel, row-sharded across the
+    ///   util pool (one fork/join for the whole block, not per column);
+    /// * `gp::laplace::LaplaceOperator` — fused `X + S∘(K(S∘X))` with one
+    ///   block kernel application;
+    /// * `gp::regression::RegularizedKernelOp` — fused `K·X + σ²X`;
+    /// * the [`algebra`] composers — forward the block to their base.
+    ///
+    /// For accounting, one `apply_block` over k columns counts as **k
+    /// operator applications** ([`SolveResult::matvecs`] and the
+    /// coordinator's `total_matvecs` both follow this rule).
+    fn apply_block(&self, xs: &Mat, ys: &mut Mat) {
+        apply_block_via(self.n(), &mut |x, y| self.matvec(x, y), xs, ys)
+    }
+
     /// Write the diagonal of A into `out` (`out.len() == n`).
     ///
     /// # Contract: exact vs probed
     ///
     /// The **default implementation probes**: it applies the operator to
-    /// each standard basis vector `eᵢ` and reads `out[i] = (A eᵢ)ᵢ` —
-    /// always correct, but it costs **n matvecs** (`O(n³)` on a dense
-    /// operator). Implementations that can read their diagonal directly
-    /// MUST override this with an exact `O(n)` version; in-repo overrides:
+    /// panels of standard basis vectors (via [`SpdOperator::apply_block`],
+    /// so operators with a real block kernel amortize the probe) and reads
+    /// `out[i] = (A eᵢ)ᵢ` — always correct, but it costs **n operator
+    /// applications** (`O(n³)` on a dense operator). Implementations that
+    /// can read their diagonal directly MUST override this with an exact
+    /// `O(n)` version; in-repo overrides:
     ///
     /// * [`DenseOp`] / [`ParDenseOp`] — `a[(i,i)]`;
     /// * `gp::laplace::LaplaceOperator` (the GPC Newton operator
     ///   `A = I + SKS`) — `1 + sᵢ² K_ii` when the kernel is dense, the
     ///   probing fallback otherwise;
-    /// * `gp::regression::RegularizedKernelOp` — `K_ii + σ²`.
+    /// * `gp::regression::RegularizedKernelOp` — `K_ii + σ²`;
+    /// * [`ShiftedOp`] — `diag(A) + σ`, [`ScaledOp`] — `c·diag(A)`,
+    ///   [`SumOp`] — `diag(A) + diag(B)`, [`LowRankUpdateOp`] —
+    ///   `diag(A) + ‖uᵢ‖²` rowwise: exact whenever the base diagonal is
+    ///   exact, probing only where the base probes.
     ///
     /// The result feeds [`api::Jacobi::from_op`]; callers building a
     /// Jacobi preconditioner in a hot loop should make sure their
-    /// operator overrides this, or amortize the probe across solves.
+    /// operator overrides this, or amortize the probe across solves (the
+    /// recycle manager caches one Jacobi per sequence for
+    /// [`SolveSpec::with_auto_jacobi`] requests).
     fn diag(&self, out: &mut [f64]) {
-        probe_diag_with(self.n(), &mut |x, y| self.matvec(x, y), out)
+        probe_diag_via(self, out)
     }
 }
 
-/// Probe the diagonal of an abstract operator with n basis matvecs.
+/// Forward every trait method through a shared reference, so operator
+/// composers ([`algebra`]) can wrap borrowed operators (`ShiftedOp::new(&op, σ)`).
+impl<T: SpdOperator + ?Sized> SpdOperator for &T {
+    fn n(&self) -> usize {
+        (**self).n()
+    }
+
+    fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        (**self).matvec(x, y)
+    }
+
+    fn apply_block(&self, xs: &Mat, ys: &mut Mat) {
+        (**self).apply_block(xs, ys)
+    }
+
+    fn diag(&self, out: &mut [f64]) {
+        (**self).diag(out)
+    }
+}
+
+/// Forward through `Arc`, so composed operators can own a share of their
+/// base and travel across threads (`SolveService::submit` takes
+/// `Arc<dyn SpdOperator + Send + Sync>`; wrapping that Arc in a
+/// [`ShiftedOp`] yields another submittable operator).
+impl<T: SpdOperator + Send + Sync + ?Sized> SpdOperator for Arc<T> {
+    fn n(&self) -> usize {
+        (**self).n()
+    }
+
+    fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        (**self).matvec(x, y)
+    }
+
+    fn apply_block(&self, xs: &Mat, ys: &mut Mat) {
+        (**self).apply_block(xs, ys)
+    }
+
+    fn diag(&self, out: &mut [f64]) {
+        (**self).diag(out)
+    }
+}
+
+/// Probe the diagonal of an abstract operator with n basis applications,
+/// batched into [`Mat::BLOCK_PANEL`]-wide [`SpdOperator::apply_block`]
+/// panels so operators with a real block kernel pay one data pass per
+/// panel rather than per basis vector.
 ///
 /// This is the [`SpdOperator::diag`] default; it is also exposed so that
 /// overrides with a partial fast path (e.g. the Newton operator over a
 /// matrix-free kernel) can fall back to probing explicitly.
 pub fn probe_diag(a: &dyn SpdOperator, out: &mut [f64]) {
-    probe_diag_with(a.n(), &mut |x, y| a.matvec(x, y), out)
+    probe_diag_via(a, out)
 }
 
-fn probe_diag_with(n: usize, matvec: &mut dyn FnMut(&[f64], &mut [f64]), out: &mut [f64]) {
-    assert_eq!(out.len(), n, "diag dimension mismatch");
-    let mut e = vec![0.0; n];
+/// The shared column-loop fallback behind the [`SpdOperator::apply_block`]
+/// and `gp::laplace::KernelOp::apply_block` defaults: gather each column
+/// of `xs`, apply `matvec`, scatter into `ys`. One implementation keeps
+/// the column-equivalence contract enforced in exactly one place.
+pub(crate) fn apply_block_via(
+    n: usize,
+    matvec: &mut dyn FnMut(&[f64], &mut [f64]),
+    xs: &Mat,
+    ys: &mut Mat,
+) {
+    assert_eq!(xs.rows(), n, "apply_block dim");
+    assert_eq!(ys.rows(), n, "apply_block dim");
+    assert_eq!(xs.cols(), ys.cols(), "apply_block dim");
+    let mut x = vec![0.0; n];
     let mut y = vec![0.0; n];
-    for i in 0..n {
-        e[i] = 1.0;
-        matvec(&e, &mut y);
-        out[i] = y[i];
-        e[i] = 0.0;
+    for j in 0..xs.cols() {
+        for (i, xi) in x.iter_mut().enumerate() {
+            *xi = xs[(i, j)];
+        }
+        matvec(&x, &mut y);
+        ys.set_col(j, &y);
+    }
+}
+
+fn probe_diag_via<A: SpdOperator + ?Sized>(a: &A, out: &mut [f64]) {
+    let n = a.n();
+    assert_eq!(out.len(), n, "diag dimension mismatch");
+    let mut i0 = 0;
+    while i0 < n {
+        let iw = (n - i0).min(Mat::BLOCK_PANEL);
+        let mut e = Mat::zeros(n, iw);
+        let mut y = Mat::zeros(n, iw);
+        for j in 0..iw {
+            e[(i0 + j, j)] = 1.0;
+        }
+        a.apply_block(&e, &mut y);
+        for j in 0..iw {
+            out[i0 + j] = y[(i0 + j, j)];
+        }
+        i0 += iw;
     }
 }
 
@@ -124,6 +280,12 @@ impl<'a> SpdOperator for DenseOp<'a> {
 
     fn matvec(&self, x: &[f64], y: &mut [f64]) {
         self.a.matvec_into(x, y);
+    }
+
+    /// Cache-blocked panel GEMM ([`Mat::block_matvec_into`]): bitwise the
+    /// column loop, with each A row streamed once per panel.
+    fn apply_block(&self, xs: &Mat, ys: &mut Mat) {
+        self.a.block_matvec_into(xs, ys);
     }
 
     fn diag(&self, out: &mut [f64]) {
@@ -227,6 +389,53 @@ impl SpdOperator for ParDenseOp {
             let lo = (bi * bs).min(n);
             let block = h.join();
             y[lo..lo + block.len()].copy_from_slice(&block);
+        }
+    }
+
+    /// Row-sharded block kernel: the operand columns are gathered once
+    /// into contiguous buffers shared by all shards, then each worker runs
+    /// the same panel-dot kernel as [`Mat::block_matvec_into`] over its
+    /// row range — one fork/join for the whole block instead of one per
+    /// column, each A row read once per panel, and every output element
+    /// the identical `dot(row, column)` of the serial column loop.
+    fn apply_block(&self, xs: &Mat, ys: &mut Mat) {
+        let n = self.a.rows();
+        assert_eq!(xs.rows(), n, "apply_block dim");
+        assert_eq!(ys.rows(), n, "apply_block dim");
+        assert_eq!(xs.cols(), ys.cols(), "apply_block dim");
+        let k = xs.cols();
+        let workers = self.pool.n_workers();
+        if k == 0 {
+            return;
+        }
+        if n < Self::PAR_THRESHOLD || workers < 2 {
+            self.a.block_matvec_into(xs, ys);
+            return;
+        }
+        let cols: Arc<Vec<Vec<f64>>> = Arc::new((0..k).map(|j| xs.col(j)).collect());
+        let blocks = workers.min(n);
+        let bs = n.div_ceil(blocks);
+        let handles: Vec<_> = (0..blocks)
+            .map(|bi| {
+                let a = self.a.clone();
+                let cols = cols.clone();
+                self.pool.spawn(move || {
+                    let lo = (bi * bs).min(n);
+                    let hi = ((bi + 1) * bs).min(n);
+                    let mut out = Mat::zeros(hi - lo, k);
+                    // The same panel-dot loop nest as the serial kernel —
+                    // shared, so the bitwise contract lives in one place.
+                    a.block_matvec_rows(lo, hi, &cols, &mut out);
+                    out
+                })
+            })
+            .collect();
+        for (bi, h) in handles.into_iter().enumerate() {
+            let lo = (bi * bs).min(n);
+            let block = h.join();
+            for r in 0..block.rows() {
+                ys.row_mut(lo + r).copy_from_slice(block.row(r));
+            }
         }
     }
 
@@ -411,6 +620,64 @@ mod tests {
         let mut free = vec![0.0; 20];
         probe_diag(&Plain(&a), &mut free);
         assert_eq!(free, want);
+    }
+
+    #[test]
+    fn apply_block_matches_matvec_loop_bitwise() {
+        // The block-first contract on all three in-module paths: the trait
+        // default (column loop), the DenseOp panel kernel, and the
+        // ParDenseOp sharded kernel must agree bitwise with per-column
+        // matvecs, including ragged panel widths and k = 1.
+        struct Plain<'a>(&'a Mat);
+        impl<'a> SpdOperator for Plain<'a> {
+            fn n(&self) -> usize {
+                self.0.rows()
+            }
+            fn matvec(&self, x: &[f64], y: &mut [f64]) {
+                self.0.matvec_into(x, y);
+            }
+        }
+        let mut rng = Rng::new(20);
+        let n = 300; // above PAR_THRESHOLD: the sharded path runs for real
+        let a = Arc::new(Mat::rand_spd(n, 1e4, &mut rng));
+        let plain = Plain(&a);
+        let dense = DenseOp::new(&a);
+        let par = ParDenseOp::new(a.clone(), Arc::new(ThreadPool::new(4)));
+        for k in [1usize, 3, Mat::BLOCK_PANEL + 1] {
+            let xs = Mat::randn(n, k, &mut rng);
+            let mut want = Mat::zeros(n, k);
+            for j in 0..k {
+                want.set_col(j, &a.matvec(&xs.col(j)));
+            }
+            for (name, op) in [
+                ("default", &plain as &dyn SpdOperator),
+                ("dense", &dense),
+                ("par", &par),
+            ] {
+                let mut ys = Mat::zeros(n, k);
+                op.apply_block(&xs, &mut ys);
+                assert_eq!(ys, want, "{name} apply_block k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn blanket_impls_forward() {
+        let mut rng = Rng::new(21);
+        let a = Mat::rand_spd(12, 100.0, &mut rng);
+        let op = DenseOp::new(&a);
+        let by_ref: &DenseOp<'_> = &op;
+        assert_eq!(by_ref.n(), 12);
+        let x = vec![1.0; 12];
+        assert_eq!(by_ref.matvec_alloc(&x), op.matvec_alloc(&x));
+        let arc: Arc<dyn SpdOperator + Send + Sync> =
+            Arc::new(ParDenseOp::new(Arc::new(a.clone()), Arc::new(ThreadPool::new(2))));
+        assert_eq!(arc.matvec_alloc(&x), op.matvec_alloc(&x));
+        let mut d1 = vec![0.0; 12];
+        let mut d2 = vec![0.0; 12];
+        arc.diag(&mut d1);
+        op.diag(&mut d2);
+        assert_eq!(d1, d2);
     }
 
     #[test]

@@ -13,10 +13,12 @@
 //!   issue the paper blames for late-sequence stagnation).
 
 use crate::linalg::qr::mgs_orthonormalize;
-use crate::solvers::api::{self, Method, SolveSpec};
+use crate::solvers::api::{self, Jacobi, Method, Preconditioner, SolveSpec};
+use crate::solvers::blockcg::BlockSolveResult;
 use crate::solvers::defcg::Deflation;
 use crate::solvers::ritz::{self, RitzConfig, RitzValue};
 use crate::solvers::{SolveResult, SpdOperator};
+use std::sync::Arc;
 
 /// Policy for keeping `AW` consistent across systems.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -83,11 +85,20 @@ pub struct RecycleManager {
     cfg: RecycleConfig,
     defl: Option<Deflation>,
     history: Vec<SystemStats>,
+    /// Per-sequence Jacobi, built lazily for the first
+    /// [`SolveSpec::with_auto_jacobi`] request and reused by every later
+    /// one — the diagonal is derived **once per sequence**, not once per
+    /// request. Consecutive systems in a sequence differ little (the
+    /// paper's premise), and a Jacobi from a nearby operator is still a
+    /// fixed SPD preconditioner, so correctness is untouched; only the
+    /// (marginal) preconditioning quality can drift. [`RecycleManager::reset`]
+    /// drops it with the rest of the sequence state.
+    jacobi: Option<Arc<Jacobi>>,
 }
 
 impl RecycleManager {
     pub fn new(cfg: RecycleConfig) -> Self {
-        RecycleManager { cfg, defl: None, history: Vec::new() }
+        RecycleManager { cfg, defl: None, history: Vec::new(), jacobi: None }
     }
 
     pub fn config(&self) -> &RecycleConfig {
@@ -117,10 +128,22 @@ impl RecycleManager {
         self.defl = Some(d);
     }
 
-    /// Drop the recycled basis (next solve is plain CG).
+    /// Drop the recycled basis (next solve is plain CG) and the cached
+    /// per-sequence Jacobi.
     pub fn reset(&mut self) {
         self.defl = None;
         self.history.clear();
+        self.jacobi = None;
+    }
+
+    /// The sequence's cached Jacobi preconditioner, built from `a` on
+    /// first use (or rebuilt if the sequence dimension changed).
+    fn sequence_jacobi(&mut self, a: &dyn SpdOperator) -> Arc<Jacobi> {
+        let stale = !matches!(&self.jacobi, Some(j) if j.n() == a.n());
+        if stale {
+            self.jacobi = Some(Arc::new(Jacobi::from_op(a)));
+        }
+        self.jacobi.as_ref().unwrap().clone()
     }
 
     /// Solve the next system in the sequence according to `spec`, then
@@ -216,6 +239,15 @@ impl RecycleManager {
         // into a recycled one by saying Method::DefCg.
         let mut inner = spec.clone();
         inner.store_l = self.cfg.l;
+        // auto_jacobi requests resolve to the sequence's cached Jacobi —
+        // built once, reused by every later request of the sequence.
+        if inner.auto_jacobi
+            && inner.precond.is_none()
+            && matches!(inner.method, Method::Pcg | Method::DefCg)
+        {
+            let j: Arc<dyn Preconditioner> = self.sequence_jacobi(a);
+            inner.precond = Some(j);
+        }
         let defl = if consumes_basis {
             self.defl.as_ref().or(spec.deflation.as_deref())
         } else {
@@ -244,6 +276,34 @@ impl RecycleManager {
             final_residual: result.final_residual(),
             deflation_dim: self.k_active(),
             ritz_values,
+            seconds: result.seconds,
+        });
+        result
+    }
+
+    /// Solve a genuine multi-RHS block `A X = B` within the sequence.
+    ///
+    /// Like the [`Method::BlockCg`] pass-through of
+    /// [`RecycleManager::solve_next`], the block kernel neither consumes
+    /// nor feeds the recycled basis (it stores no directions), but the
+    /// solve is recorded in the sequence history — with `matvecs` counted
+    /// per column (`block applies × columns`) so sequence totals stay on
+    /// one axis with the single-RHS requests. This is the entry point
+    /// behind the coordinator's `submit_block` coalescing.
+    pub fn solve_block(
+        &mut self,
+        a: &dyn SpdOperator,
+        b: &crate::linalg::Mat,
+        spec: &SolveSpec,
+    ) -> BlockSolveResult {
+        let result = api::solve_block(a, b, spec);
+        self.history.push(SystemStats {
+            index: self.history.len(),
+            iterations: result.iterations,
+            matvecs: result.matvecs,
+            final_residual: *result.residuals.last().unwrap_or(&f64::NAN),
+            deflation_dim: 0,
+            ritz_values: Vec::new(),
             seconds: result.seconds,
         });
         result
@@ -421,6 +481,60 @@ mod tests {
         assert_eq!(mgr.k_active(), k_before, "block runs must not perturb W");
         assert_eq!(mgr.history().len(), 2);
         assert_eq!(mgr.history()[1].deflation_dim, 0);
+    }
+
+    #[test]
+    fn auto_jacobi_is_built_once_per_sequence() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        struct DiagCounting<'a>(&'a Mat, AtomicUsize);
+        impl<'a> SpdOperator for DiagCounting<'a> {
+            fn n(&self) -> usize {
+                self.0.rows()
+            }
+            fn matvec(&self, x: &[f64], y: &mut [f64]) {
+                self.0.matvec_into(x, y);
+            }
+            fn diag(&self, out: &mut [f64]) {
+                self.1.fetch_add(1, Ordering::Relaxed);
+                self.0.diag_into(out);
+            }
+        }
+        let n = 60;
+        let seq = drifting_sequence(n, 4, 19);
+        let b = vec![1.0; n];
+        let mut mgr = RecycleManager::new(RecycleConfig { k: 4, l: 8, ..Default::default() });
+        let spec = SolveSpec::pcg().with_auto_jacobi().with_tol(1e-8);
+        let ops: Vec<DiagCounting> =
+            seq.iter().map(|a| DiagCounting(a, AtomicUsize::new(0))).collect();
+        for op in &ops {
+            let r = mgr.solve_next(op, &b, None, &spec);
+            assert_eq!(r.stop, StopReason::Converged);
+        }
+        let total: usize = ops.iter().map(|o| o.1.load(Ordering::Relaxed)).sum();
+        assert_eq!(total, 1, "the sequence Jacobi must be derived exactly once");
+        mgr.reset();
+        let r = mgr.solve_next(&ops[0], &b, None, &spec);
+        assert_eq!(r.stop, StopReason::Converged);
+        assert_eq!(ops[0].1.load(Ordering::Relaxed), 2, "reset drops the cache");
+    }
+
+    #[test]
+    fn solve_block_records_history_without_touching_the_basis() {
+        let n = 50;
+        let mut rng = Rng::new(20);
+        let a = Mat::rand_spd(n, 1e4, &mut rng);
+        let b = vec![1.0; n];
+        let mut mgr = RecycleManager::new(RecycleConfig { k: 5, l: 8, ..Default::default() });
+        mgr.solve_next(&DenseOp::new(&a), &b, None, &SolveSpec::defcg().with_tol(1e-8));
+        let k_before = mgr.k_active();
+        assert!(k_before > 0);
+        let rhs = Mat::randn(n, 3, &mut rng);
+        let blk = mgr.solve_block(&DenseOp::new(&a), &rhs, &SolveSpec::blockcg().with_tol(1e-8));
+        assert_eq!(blk.stop, StopReason::Converged);
+        assert_eq!(mgr.k_active(), k_before);
+        assert_eq!(mgr.history().len(), 2);
+        assert_eq!(mgr.history()[1].matvecs, blk.matvecs);
+        assert_eq!(blk.matvecs, 3 * blk.block_matvecs, "per-column accounting");
     }
 
     #[test]

@@ -129,19 +129,32 @@ pub fn extract(
     }
     pairs.truncate(cfg.k);
 
-    // W' = Z U, AW' = AZ U; normalize columns jointly so the basis is
-    // well-scaled (scaling a column of both W and AW preserves AW = A·W).
+    // W' = Z U, AW' = AZ U as two block products (one pass over Z/AZ per
+    // column panel, instead of a per-pair matvec loop), then normalize
+    // columns jointly so the basis is well-scaled (scaling a column of
+    // both W and AW preserves AW = A·W). `block_matvec_into` (not
+    // `matmul`) keeps each output element the same `dot(row, col)` the
+    // per-pair `z.matvec(u)` loop computed, so the extracted basis is
+    // bit-for-bit the pre-block-migration one.
+    let mut u = Mat::zeros(z.cols(), pairs.len());
+    for (c, (_, uvec)) in pairs.iter().enumerate() {
+        u.set_col(c, uvec);
+    }
+    let mut w_all = Mat::zeros(n, pairs.len());
+    let mut aw_all = Mat::zeros(n, pairs.len());
+    z.block_matvec_into(&u, &mut w_all);
+    az.block_matvec_into(&u, &mut aw_all);
     let mut w = Mat::zeros(n, pairs.len());
     let mut aw = Mat::zeros(n, pairs.len());
     let mut vals = Vec::with_capacity(pairs.len());
     let mut dst = 0;
-    for (theta, u) in &pairs {
-        let wcol = z.matvec(u);
+    for (c, (theta, _)) in pairs.iter().enumerate() {
+        let wcol = w_all.col(c);
         let norm = norm2(&wcol);
         if norm < cfg.min_col_norm {
             continue;
         }
-        let awcol = az.matvec(u);
+        let awcol = aw_all.col(c);
         let inv = 1.0 / norm;
         let wcol: Vec<f64> = wcol.iter().map(|v| v * inv).collect();
         let awcol: Vec<f64> = awcol.iter().map(|v| v * inv).collect();
