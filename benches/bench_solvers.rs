@@ -108,6 +108,46 @@ fn main() {
     }
     g.report();
 
+    // Block recycling: deflated vs plain block CG over a drifting
+    // 5-system sequence (the coordinator's coalesced multi-RHS serving
+    // path). The deflated run carries the recycle manager's basis, fed by
+    // the block runs themselves; the plain run restarts cold per system.
+    let mut g = BenchGroup::new("solvers — recycled block sequences (n = 512, 5 systems)")
+        .with_config(BenchConfig { warmup: 1, iters: 4, max_seconds: 120.0 });
+    {
+        let mut rng = Rng::new(9);
+        let mut delta = Mat::randn(n, n, &mut rng);
+        delta.symmetrize();
+        delta.scale_in_place(1e-3 / n as f64);
+        let systems: Vec<Mat> = (0..5)
+            .map(|i| {
+                let mut ai = a.clone();
+                let mut d = delta.clone();
+                d.scale_in_place(1.0 / (1.0 + i as f64));
+                ai.add_in_place(&d);
+                ai.add_diag(1e-6);
+                ai
+            })
+            .collect();
+        for s in [4usize, 16] {
+            let bs = Mat::randn(n, s, &mut rng);
+            let spec = SolveSpec::blockcg().with_tol(1e-6);
+            g.bench(&format!("plain block-CG s={s}, 5-system drift"), || {
+                for ai in &systems {
+                    std::hint::black_box(solvers::solve_block(&DenseOp::new(ai), &bs, &spec));
+                }
+            });
+            g.bench(&format!("deflated block-CG s={s}, 5-system drift (recycled)"), || {
+                let mut mgr =
+                    RecycleManager::new(RecycleConfig { k: 8, l: 12, ..Default::default() });
+                for ai in &systems {
+                    std::hint::black_box(mgr.solve_block(&DenseOp::new(ai), &bs, &spec));
+                }
+            });
+        }
+    }
+    g.report();
+
     // Engine path: PJRT artifacts when built, the native f32 fallback
     // otherwise — the bench runs offline either way.
     {

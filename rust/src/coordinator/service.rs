@@ -11,10 +11,19 @@
 //! kernel.
 //!
 //! Multi-RHS coalescing: consecutive queued `submit_block` requests that
-//! share the same operator (`Arc` identity) and the same tolerance /
-//! iteration cap are drained as **one** block solve — the block Krylov
+//! share the same operator (`Arc` identity) and the same block-relevant
+//! policy set (see `coalescible`) are drained as **one** block solve — the block Krylov
 //! space sees all their columns at once and the operator pays one
-//! `apply_block` data pass per iteration for the whole group.
+//! `apply_block` data pass per iteration for the whole group. Block
+//! solves ride the sequence's recycled basis like every other request
+//! (deflated block CG in, harmonic-Ritz directions out), so a stream of
+//! coalesced block groups converges faster system over system.
+//!
+//! Locking: each sequence keeps its request queue and its solve state
+//! ([`RecycleManager`]) behind **separate** mutexes. Submissions touch
+//! only the queue lock, so they return immediately while a solve is in
+//! flight; the single drainer per sequence serializes solves FIFO under
+//! the solve lock.
 
 use crate::linalg::mat::Mat;
 use crate::solvers::api::SolveSpec;
@@ -32,6 +41,33 @@ struct Task {
     op: Arc<dyn SpdOperator + Send + Sync>,
     spec: SolveSpec,
     payload: Payload,
+}
+
+/// True when two queued block specs may share one coalesced group solve.
+/// Every policy that reaches the block kernel or decides basis
+/// consumption must match — not just tolerance and iteration cap, now
+/// that block requests carry preconditioning, deflation, method, and the
+/// stall window. Preconditioner and deflation compare by `Arc` identity
+/// (same shared policy object), like the operator itself.
+fn coalescible(a: &SolveSpec, b: &SolveSpec) -> bool {
+    let same_precond = match (&a.precond, &b.precond) {
+        (None, None) => true,
+        (Some(x), Some(y)) => Arc::ptr_eq(x, y),
+        _ => false,
+    };
+    let same_defl = match (&a.deflation, &b.deflation) {
+        (None, None) => true,
+        (Some(x), Some(y)) => Arc::ptr_eq(x, y),
+        _ => false,
+    };
+    a.method == b.method
+        && a.tol == b.tol
+        && a.max_iters == b.max_iters
+        && a.stall_window == b.stall_window
+        && a.recompute_every == b.recompute_every
+        && a.auto_jacobi == b.auto_jacobi
+        && same_precond
+        && same_defl
 }
 
 enum Payload {
@@ -85,15 +121,21 @@ impl BlockSolveTicket {
     /// Block until the block solve finishes. When the request was
     /// coalesced with neighbours, the returned `x` holds exactly this
     /// request's columns; `iterations`/`residuals`/`seconds` describe the
-    /// shared group solve, and `matvecs` is this request's per-column
-    /// share (`block applies × own columns`).
+    /// shared group solve, and `matvecs`/`col_matvecs` are this request's
+    /// per-column share — the applies its own columns were active for
+    /// (duplicate or early-converging columns ride nearly free), with the
+    /// group's basis-refresh overhead billed to the group's first ticket.
     pub fn wait(self) -> BlockSolveResult {
         self.slot.take()
     }
 }
 
+/// Queue-side state of a sequence, guarded by a lock that is only ever
+/// held for O(1) pushes/pops — **never across a solve** — so
+/// [`SequenceHandle::submit`] returns immediately even while a solve for
+/// this sequence is in flight (the documented pipelining contract). The
+/// solve-side state ([`RecycleManager`]) lives behind its own mutex.
 struct SequenceState {
-    mgr: RecycleManager,
     queue: VecDeque<Task>,
     running: bool,
     closed: bool,
@@ -216,11 +258,11 @@ impl SolveService {
         self.metrics.active_sequences.fetch_add(1, Ordering::Relaxed);
         SequenceHandle {
             state: Arc::new(Mutex::new(SequenceState {
-                mgr: RecycleManager::new(cfg),
                 queue: VecDeque::new(),
                 running: false,
                 closed: false,
             })),
+            mgr: Arc::new(Mutex::new(RecycleManager::new(cfg))),
             pool: self.pool.clone(),
             metrics: self.metrics.clone(),
             closer: Arc::new(SeqCloser {
@@ -234,9 +276,16 @@ impl SolveService {
 /// Handle to one solve sequence. Submissions are processed strictly FIFO
 /// (recycling transfers state from each solve to the next); distinct
 /// sequences run concurrently on the shared pool.
+///
+/// The queue lock (`state`) and the solve lock (`mgr`) are separate:
+/// submitting only touches the queue, so `submit`/`submit_block` return
+/// immediately even while this sequence's drainer is deep inside a slow
+/// solve. Only `history()`/`k_active()` wait on an in-flight solve (they
+/// read the recycle state itself).
 #[derive(Clone)]
 pub struct SequenceHandle {
     state: Arc<Mutex<SequenceState>>,
+    mgr: Arc<Mutex<RecycleManager>>,
     pool: Arc<ThreadPool>,
     metrics: Arc<ServiceMetrics>,
     closer: Arc<SeqCloser>,
@@ -268,18 +317,26 @@ impl SequenceHandle {
     }
 
     /// Submit a genuine multi-RHS block `A X = B` (one column per RHS) for
-    /// this sequence. The solve runs block CG at the spec's tolerance and
-    /// iteration cap through [`RecycleManager::solve_block`] (the basis is
-    /// neither consumed nor fed — block runs store no directions — but the
-    /// solve lands in the sequence history and metrics, with one block
-    /// apply counted as `columns` operator applications).
+    /// this sequence, solved by rank-adaptive block CG through
+    /// [`RecycleManager::solve_block`]. Block requests are first-class
+    /// recycling citizens: the sequence's basis **deflates** the block
+    /// solve (projected start + per-iteration deflation) and the run's
+    /// stored block directions **feed** the next harmonic-Ritz
+    /// extraction, so coalesced multi-RHS traffic enjoys the same
+    /// iteration decay across a sequence as the single-RHS path. The
+    /// spec's preconditioner (explicit or `auto_jacobi`) is honored too.
     ///
     /// **Coalescing:** consecutive queued block requests on the same
-    /// operator (`Arc` identity) with the same `tol`/`max_iters` are
-    /// drained as a single block solve over their concatenated columns —
+    /// operator (`Arc` identity) with the same block-relevant policy set
+    /// (tolerance, iteration cap, method, stall window,
+    /// residual-replacement period, auto-Jacobi flag, and
+    /// preconditioner/deflation identity) are drained as a single
+    /// block solve over their concatenated columns —
     /// same-sequence multi-RHS traffic shares the block Krylov space and
     /// the per-iteration `apply_block` data pass. Each ticket still
-    /// receives exactly its own solution columns.
+    /// receives exactly its own solution columns, and is billed exactly
+    /// its own columns' operator applications (`col_matvecs` shares):
+    /// duplicate or early-converging columns ride nearly free.
     pub fn submit_block(
         &self,
         op: Arc<dyn SpdOperator + Send + Sync>,
@@ -308,6 +365,7 @@ impl SequenceHandle {
 
     fn spawn_drainer(&self) {
         let state = self.state.clone();
+        let mgr = self.mgr.clone();
         let metrics = self.metrics.clone();
         self.pool.spawn(move || loop {
             let task = {
@@ -322,14 +380,14 @@ impl SequenceHandle {
             };
             match task.payload {
                 Payload::Single { b, x0, slot } => {
-                    // Run the solve outside the sequence lock is NOT
-                    // possible: the recycle manager *is* the sequence
-                    // state. But the lock is per sequence, so other
-                    // sequences proceed in parallel.
+                    // The solve runs under the dedicated solve mutex, NOT
+                    // the queue lock — submissions pipeline freely while
+                    // this solve is in flight, and there is exactly one
+                    // drainer per sequence so FIFO recycling order is
+                    // preserved. Distinct sequences proceed in parallel.
                     let result = {
-                        let mut st = state.lock().unwrap();
-                        st.mgr
-                            .solve_next(task.op.as_ref(), &b, x0.as_deref(), &task.spec)
+                        let mut mg = mgr.lock().unwrap();
+                        mg.solve_next(task.op.as_ref(), &b, x0.as_deref(), &task.spec)
                     };
                     metrics.completed.fetch_add(1, Ordering::Relaxed);
                     metrics.matvecs.fetch_add(result.matvecs, Ordering::Relaxed);
@@ -340,16 +398,15 @@ impl SequenceHandle {
                 }
                 Payload::Block { b, slot } => {
                     // Coalesce: pull every *consecutive* queued block
-                    // request that shares this operator and block-relevant
-                    // knobs into one group solve.
+                    // request that shares this operator and the full
+                    // block-relevant policy set into one group solve.
                     let mut rhs = vec![(b, slot)];
                     {
                         let mut st = state.lock().unwrap();
                         while st.queue.front().is_some_and(|next| {
                             matches!(&next.payload, Payload::Block { .. })
                                 && Arc::ptr_eq(&next.op, &task.op)
-                                && next.spec.tol == task.spec.tol
-                                && next.spec.max_iters == task.spec.max_iters
+                                && coalescible(&next.spec, &task.spec)
                         }) {
                             let next = st.queue.pop_front().unwrap();
                             match next.payload {
@@ -369,8 +426,8 @@ impl SequenceHandle {
                         off += b.cols();
                     }
                     let result = {
-                        let mut st = state.lock().unwrap();
-                        st.mgr.solve_block(task.op.as_ref(), &big, &task.spec)
+                        let mut mg = mgr.lock().unwrap();
+                        mg.solve_block(task.op.as_ref(), &big, &task.spec)
                     };
                     metrics.completed.fetch_add(rhs.len(), Ordering::Relaxed);
                     metrics.matvecs.fetch_add(result.matvecs, Ordering::Relaxed);
@@ -378,21 +435,38 @@ impl SequenceHandle {
                         .solve_nanos
                         .fetch_add((result.seconds * 1e9) as u64, Ordering::Relaxed);
                     // Split the group result back into per-ticket slices.
+                    // Each ticket is billed its own columns' applications
+                    // (rank-dropped columns ride free); the group-level
+                    // overhead that no column owns — the AW-refresh cost
+                    // of the sequence's recycled basis — lands on the
+                    // first ticket so shares still sum to the group total
+                    // the metrics recorded.
+                    let col_share: usize = result.col_matvecs.iter().sum();
+                    let mut overhead = result.matvecs - col_share;
                     let mut off = 0;
                     for (b, slot) in rhs {
                         let cols = b.cols();
                         let mut x = Mat::zeros(n, cols);
+                        let mut col_matvecs = Vec::with_capacity(cols);
                         for j in 0..cols {
                             x.set_col(j, &result.x.col(off + j));
+                            col_matvecs.push(result.col_matvecs[off + j]);
                         }
                         off += cols;
+                        let matvecs =
+                            col_matvecs.iter().sum::<usize>() + std::mem::take(&mut overhead);
                         slot.put(BlockSolveResult {
                             x,
                             residuals: result.residuals.clone(),
                             iterations: result.iterations,
                             block_matvecs: result.block_matvecs,
-                            matvecs: result.block_matvecs * cols,
+                            matvecs,
+                            col_matvecs,
                             stop: result.stop,
+                            // The group's stored directions already fed
+                            // the sequence basis; per-ticket results do
+                            // not re-export them.
+                            stored: Default::default(),
                             seconds: result.seconds,
                         });
                     }
@@ -402,13 +476,14 @@ impl SequenceHandle {
     }
 
     /// Per-system statistics accumulated by this sequence's manager.
+    /// Waits for an in-flight solve (it reads the solve-side state).
     pub fn history(&self) -> Vec<SystemStats> {
-        self.state.lock().unwrap().mgr.history().to_vec()
+        self.mgr.lock().unwrap().history().to_vec()
     }
 
-    /// Current recycled-basis dimension.
+    /// Current recycled-basis dimension. Waits for an in-flight solve.
     pub fn k_active(&self) -> usize {
-        self.state.lock().unwrap().mgr.k_active()
+        self.mgr.lock().unwrap().k_active()
     }
 
     /// Close the sequence (subsequent submits panic) and retire it from
@@ -509,7 +584,7 @@ mod tests {
             SolveSpec::cg().with_tol(1e-8),    // plain, still feeds W
             jacobi,                            // preconditioned
             SolveSpec::defcg().with_tol(1e-8), // consumes the basis
-            SolveSpec::blockcg().with_tol(1e-8), // passes through
+            SolveSpec::blockcg().with_tol(1e-8), // deflated 1-col block, feeds too
         ];
         let tickets: Vec<_> = specs
             .into_iter()
@@ -569,12 +644,17 @@ mod tests {
             .wait();
         assert_eq!(r.stop, StopReason::Converged);
         assert!(r.x.max_abs_diff(&x_true) < 1e-5);
-        assert_eq!(r.matvecs, 3 * r.block_matvecs);
+        // Per-column accounting: the sum of the per-column applies, never
+        // more than the full-block bound (columns that converge early stop
+        // paying).
+        assert_eq!(r.matvecs, r.col_matvecs.iter().sum::<usize>());
+        assert!(r.matvecs <= 3 * r.block_matvecs);
         let snap = svc.metrics().snapshot();
         assert_eq!(snap.submitted, 1);
         assert_eq!(snap.completed, 1);
         assert_eq!(snap.total_matvecs, r.matvecs, "metrics count columns, not block applies");
         assert_eq!(seq.history().len(), 1);
+        assert!(seq.k_active() > 0, "a block solve must feed the sequence basis");
     }
 
     #[test]
@@ -636,13 +716,140 @@ mod tests {
         assert_eq!(hist.len(), 1, "3 block submissions must coalesce into 1 solve");
         assert_eq!(results[0].iterations, results[1].iterations);
         assert_eq!(results[0].residuals, results[2].residuals);
-        // Per-ticket matvec shares sum to the group total in the metrics.
+        // Per-ticket matvec shares sum EXACTLY to the group total in the
+        // metrics, with dropped columns paying only the applies they were
+        // active for.
         let share: usize = results.iter().map(|r| r.matvecs).sum();
-        assert_eq!(share, 5 * results[0].block_matvecs);
+        assert!(share <= 5 * results[0].block_matvecs);
         assert_eq!(hist[0].matvecs, share);
+        for r in &results {
+            assert!(!r.final_residual().is_nan());
+            assert_eq!(r.col_matvecs.len(), r.x.cols());
+        }
         let snap = svc.metrics().snapshot();
         assert_eq!(snap.completed, 3);
         assert_eq!(snap.total_matvecs, share);
+    }
+
+    #[test]
+    fn mismatched_block_policies_do_not_coalesce() {
+        // Same operator and tolerance, but ticket B asks for a stall
+        // window (any block-relevant policy difference would do):
+        // coalescing them would silently run B under A's policy, so they
+        // must drain as two separate group solves.
+        let svc = SolveService::new(1);
+        let seq = svc.open_sequence(RecycleConfig::default());
+        let mut rng = Rng::new(42);
+        let n = 40;
+        let a = Mat::rand_spd(n, 1e3, &mut rng);
+        let b = a.matmul(&Mat::randn(n, 2, &mut rng));
+        let op = spd_mat(a);
+        // Park the single drainer worker so both requests queue first.
+        let gate = Arc::new(AtomicBool::new(false));
+        let held = {
+            let gate = gate.clone();
+            seq.pool.spawn(move || {
+                while !gate.load(Ordering::Relaxed) {
+                    std::thread::yield_now();
+                }
+            })
+        };
+        let spec_a = SolveSpec::blockcg().with_tol(1e-9);
+        let spec_b = SolveSpec::blockcg().with_tol(1e-9).with_stall_window(50);
+        let t1 = seq.submit_block(op.clone(), b.clone(), spec_a.clone());
+        let t2 = seq.submit_block(op.clone(), b.clone(), spec_b);
+        let t3 = seq.submit_block(op.clone(), b.clone(), spec_a);
+        gate.store(true, Ordering::Relaxed);
+        held.join();
+        assert_eq!(t1.wait().stop, StopReason::Converged);
+        assert_eq!(t2.wait().stop, StopReason::Converged);
+        assert_eq!(t3.wait().stop, StopReason::Converged);
+        // 1 and 2 must not merge (different stall window); 2 and 3 must
+        // not merge either — three separate solves in the history.
+        assert_eq!(seq.history().len(), 3, "policy-mismatched blocks must not coalesce");
+    }
+
+    #[test]
+    fn submit_returns_immediately_during_inflight_solve() {
+        // The pipelining contract: `submit` must enqueue and return while
+        // a previous solve of the SAME sequence is still running — the
+        // drainer may not hold the queue lock across a solve. The slow
+        // operator parks its first matvec until released; if submission
+        // blocked on the in-flight solve, the second submit below would
+        // deadlock (watchdog-released after 10 s, failing the assert).
+        struct SlowOp {
+            a: Mat,
+            started: Arc<AtomicBool>,
+            release: Arc<AtomicBool>,
+        }
+        impl SpdOperator for SlowOp {
+            fn n(&self) -> usize {
+                self.a.rows()
+            }
+            fn matvec(&self, x: &[f64], y: &mut [f64]) {
+                self.started.store(true, Ordering::SeqCst);
+                while !self.release.load(Ordering::SeqCst) {
+                    std::thread::yield_now();
+                }
+                self.a.matvec_into(x, y);
+            }
+        }
+        let mut rng = Rng::new(41);
+        let n = 20;
+        let a = Mat::rand_spd(n, 100.0, &mut rng);
+        let started = Arc::new(AtomicBool::new(false));
+        let release = Arc::new(AtomicBool::new(false));
+        let op = Arc::new(SlowOp {
+            a: a.clone(),
+            started: started.clone(),
+            release: release.clone(),
+        });
+        let svc = SolveService::new(1);
+        let seq = svc.open_sequence(RecycleConfig::default());
+        let b = vec![1.0; n];
+        let spec = SolveSpec::cg().with_tol(1e-8);
+        let t1 = seq.submit(op.clone(), b.clone(), None, spec.clone());
+        // Wait until the drainer is provably inside the first solve.
+        while !started.load(Ordering::SeqCst) {
+            std::thread::yield_now();
+        }
+        // Watchdog: if the old queue-lock-across-solve behavior came
+        // back, unblock the solve after a grace period so the test fails
+        // with a message instead of hanging the suite.
+        let watchdog = {
+            let release = release.clone();
+            std::thread::spawn(move || {
+                let t0 = std::time::Instant::now();
+                while !release.load(Ordering::SeqCst) {
+                    if t0.elapsed() > std::time::Duration::from_secs(10) {
+                        release.store(true, Ordering::SeqCst);
+                        break;
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+            })
+        };
+        let t2 = seq.submit(op.clone(), b.clone(), None, spec.clone());
+        let t3 = seq.submit_block(
+            op.clone(),
+            {
+                let mut m = Mat::zeros(n, 2);
+                m.set_col(0, &b);
+                m.set_col(1, &b);
+                m
+            },
+            SolveSpec::blockcg().with_tol(1e-8),
+        );
+        assert!(
+            !release.load(Ordering::SeqCst),
+            "submit/submit_block blocked on the in-flight solve"
+        );
+        release.store(true, Ordering::SeqCst);
+        assert_eq!(t1.wait().stop, StopReason::Converged);
+        assert_eq!(t2.wait().stop, StopReason::Converged);
+        assert_eq!(t3.wait().stop, StopReason::Converged);
+        assert_eq!(seq.history().len(), 3);
+        watchdog.join().unwrap();
     }
 
     #[test]

@@ -41,7 +41,7 @@
 
 use crate::linalg::mat::Mat;
 use crate::linalg::vec_ops::dot;
-use crate::solvers::SpdOperator;
+use crate::solvers::{fingerprint_f64s, SpdOperator};
 
 /// The shifted operator `A + σI` — one regularization-grid member as an
 /// `O(n)`-per-apply view over the base.
@@ -89,6 +89,15 @@ impl<A: SpdOperator> SpdOperator for ShiftedOp<A> {
         for o in out.iter_mut() {
             *o += self.sigma;
         }
+    }
+
+    /// The base's fingerprint combined with σ: two σ-grid points over one
+    /// base are distinguishable, so per-sequence Jacobi caches rebuild
+    /// when the grid moves instead of reusing a diagonal wrong by Δσ.
+    fn diag_fingerprint(&self) -> Option<u64> {
+        self.base
+            .diag_fingerprint()
+            .map(|h| fingerprint_f64s(h ^ 0x5417F7ED, [self.sigma]))
     }
 }
 
@@ -140,6 +149,12 @@ impl<A: SpdOperator> SpdOperator for ScaledOp<A> {
             *o *= self.c;
         }
     }
+
+    fn diag_fingerprint(&self) -> Option<u64> {
+        self.base
+            .diag_fingerprint()
+            .map(|h| fingerprint_f64s(h ^ 0x5CA1ED, [self.c]))
+    }
 }
 
 /// The sum `A + B` of two operators of the same dimension (SPD + SPSD is
@@ -186,6 +201,16 @@ impl<A: SpdOperator, B: SpdOperator> SpdOperator for SumOp<A, B> {
         self.b.diag(&mut t);
         for (o, ti) in out.iter_mut().zip(&t) {
             *o += ti;
+        }
+    }
+
+    /// Identifiable only when **both** summands are.
+    fn diag_fingerprint(&self) -> Option<u64> {
+        match (self.a.diag_fingerprint(), self.b.diag_fingerprint()) {
+            (Some(ha), Some(hb)) => {
+                Some((ha ^ 0x50_AD0D).rotate_left(17) ^ hb.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            }
+            _ => None,
         }
     }
 }
@@ -252,6 +277,19 @@ impl<A: SpdOperator> SpdOperator for LowRankUpdateOp<A> {
             let row = self.u.row(i);
             *o += dot(row, row);
         }
+    }
+
+    /// The base's fingerprint combined with the factor's shape and a few
+    /// strided samples of `U` — enough to tell model updates apart without
+    /// touching all of `U`.
+    fn diag_fingerprint(&self) -> Option<u64> {
+        self.base.diag_fingerprint().map(|h| {
+            let data = self.u.data();
+            let step = (data.len() / 8).max(1);
+            let samples = data.iter().step_by(step).take(8).copied();
+            let seed = h ^ (((self.u.rows() as u64) << 32) | self.u.cols() as u64);
+            fingerprint_f64s(seed ^ 0x10_0BA2, samples)
+        })
     }
 }
 
@@ -482,5 +520,64 @@ mod tests {
         let a = Mat::rand_spd(10, 10.0, &mut rng);
         let m = materialize(&DenseOp::new(&a));
         assert!(m.max_abs_diff(&a) == 0.0);
+    }
+
+    #[test]
+    fn diag_fingerprints_distinguish_views_and_stay_stable() {
+        struct Anon<'a>(&'a Mat);
+        impl<'a> SpdOperator for Anon<'a> {
+            fn n(&self) -> usize {
+                self.0.rows()
+            }
+            fn matvec(&self, x: &[f64], y: &mut [f64]) {
+                self.0.matvec_into(x, y);
+            }
+        }
+        let mut rng = Rng::new(31);
+        let a = Arc::new(Mat::rand_spd(20, 100.0, &mut rng));
+        let op = DenseOp::new(&a);
+        let base_fp = op.diag_fingerprint().expect("dense op must fingerprint");
+        assert_eq!(op.diag_fingerprint().unwrap(), base_fp, "stable across calls");
+        // The parallel wrapper over the same matrix has the same diagonal,
+        // so the same fingerprint — a sequence may swap serial/parallel
+        // operators without invalidating its Jacobi.
+        let par = ParDenseOp::new(a.clone(), Arc::new(ThreadPool::new(2)));
+        assert_eq!(par.diag_fingerprint().unwrap(), base_fp);
+
+        // Shifted views: distinguish grid points, agree within one.
+        let s1 = ShiftedOp::new(DenseOp::new(&a), 0.5);
+        let s2 = ShiftedOp::new(DenseOp::new(&a), 1.5);
+        let s1b = ShiftedOp::new(DenseOp::new(&a), 0.5);
+        assert_ne!(s1.diag_fingerprint(), s2.diag_fingerprint());
+        assert_eq!(s1.diag_fingerprint(), s1b.diag_fingerprint());
+        assert_ne!(s1.diag_fingerprint().unwrap(), base_fp);
+
+        let c1 = ScaledOp::new(DenseOp::new(&a), 2.0);
+        let c2 = ScaledOp::new(DenseOp::new(&a), 3.0);
+        assert_ne!(c1.diag_fingerprint(), c2.diag_fingerprint());
+        assert_ne!(c1.diag_fingerprint().unwrap(), s1.diag_fingerprint().unwrap());
+
+        // A sum is identifiable only when both summands are; an anonymous
+        // operator (no override) degrades the whole composition to None.
+        assert!(Anon(&a).diag_fingerprint().is_none());
+        assert!(SumOp::new(DenseOp::new(&a), Anon(&a)).diag_fingerprint().is_none());
+        assert!(SumOp::new(DenseOp::new(&a), DenseOp::new(&a)).diag_fingerprint().is_some());
+        assert!(ShiftedOp::new(Anon(&a), 1.0).diag_fingerprint().is_none());
+
+        // Low-rank updates with different factors are distinguishable.
+        let u1 = Mat::randn(20, 2, &mut rng);
+        let u2 = Mat::randn(20, 2, &mut rng);
+        let l1 = LowRankUpdateOp::new(DenseOp::new(&a), u1.clone());
+        let l1b = LowRankUpdateOp::new(DenseOp::new(&a), u1);
+        let l2 = LowRankUpdateOp::new(DenseOp::new(&a), u2);
+        assert_ne!(l1.diag_fingerprint(), l2.diag_fingerprint());
+        assert_eq!(l1.diag_fingerprint(), l1b.diag_fingerprint());
+
+        // Blanket impls forward the fingerprint (an Arc'd composed view
+        // submitted to the coordinator must stay identifiable).
+        let arc: Arc<dyn SpdOperator + Send + Sync> =
+            Arc::new(ShiftedOp::new(ParDenseOp::new(a.clone(), Arc::new(ThreadPool::new(2))), 0.5));
+        assert_eq!(arc.diag_fingerprint(), s1.diag_fingerprint());
+        assert_eq!((&arc as &dyn SpdOperator).diag_fingerprint(), s1.diag_fingerprint());
     }
 }

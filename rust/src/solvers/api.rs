@@ -36,20 +36,25 @@
 //! * [`Method::DefCg`] — deflated CG (Saad et al. 2000), optionally
 //!   composed with the spec's preconditioner. With an empty/no basis it
 //!   reduces exactly to (P)CG.
-//! * [`Method::BlockCg`] — block CG (O'Leary 1980). Through the
-//!   single-RHS entry point the right-hand side becomes a 1-column block;
-//!   use [`solve_block`] for genuine multi-RHS workloads. Warm starts
-//!   shift to the residual system `A d = b − A x₀` (one extra matvec,
-//!   same ‖b − A x‖/‖b‖ stopping rule). Only `tol` and `max_iters` reach
-//!   the block kernel: preconditioning, deflation, `store_l` (block runs
-//!   return empty [`StoredDirections`]), `stall_window`, and
-//!   `recompute_every` are ignored.
+//! * [`Method::BlockCg`] — rank-adaptive block CG (O'Leary 1980;
+//!   [`crate::solvers::blockcg::solve_spec`]). Through the single-RHS
+//!   entry point the right-hand side becomes a 1-column block, which runs
+//!   the *same scalar recurrences* as def-CG; use [`solve_block`] for
+//!   genuine multi-RHS workloads. Block requests are first-class policy
+//!   carriers: the spec's **deflation basis, preconditioner (explicit or
+//!   `auto_jacobi`), `store_l` direction storage, and `stall_window`** all
+//!   reach the block kernel, so a block run deflates against a recycled
+//!   basis and feeds directions back to the next extraction exactly like
+//!   the single-RHS methods. Warm starts are native (`X₀` per column, one
+//!   extra block apply for the initial residual), and `recompute_every`
+//!   periodically re-derives the active residuals exactly, as in plain
+//!   CG. No spec knob is silently ignored by block requests anymore.
 
 use crate::linalg::mat::Mat;
 use crate::solvers::blockcg::{self, BlockSolveResult};
 use crate::solvers::cg::{self, CgConfig};
 use crate::solvers::defcg::{self, Deflation};
-use crate::solvers::{SolveResult, SpdOperator, StoredDirections};
+use crate::solvers::{SolveResult, SpdOperator};
 use std::sync::Arc;
 
 /// Which solver family a [`SolveSpec`] requests.
@@ -349,17 +354,57 @@ pub fn solve_with_x0(
     dispatch(a, b, Some(x0), spec, spec.deflation.as_deref())
 }
 
-/// Multi-RHS entry point: solve `A X = B` with block CG using the spec's
-/// tolerance and iteration cap. The other spec fields (method,
-/// preconditioner, deflation) do not apply to the block kernel. The
-/// iteration drives [`SpdOperator::apply_block`], so operators with a
+/// Multi-RHS entry point: solve `A X = B` with rank-adaptive block CG.
+///
+/// The spec is honored like the single-RHS methods honor it: `tol`,
+/// `max_iters`, `stall_window`, `store_l` (block runs return real
+/// [`crate::solvers::StoredDirections`] panels for the next
+/// harmonic-Ritz extraction),
+/// the deflation basis (projected start + per-iteration deflation) and
+/// the preconditioner (explicit, or built from the operator's diagonal
+/// under [`SolveSpec::with_auto_jacobi`]). The `method` field is ignored:
+/// this *is* the block entry point.
+///
+/// The iteration drives [`SpdOperator::apply_block`], so operators with a
 /// real block kernel pay one data pass per iteration; the result's
-/// `matvecs` counts each block apply as `b.cols()` applications.
+/// `matvecs` counts each block apply as its *active* column count
+/// (`col_matvecs` has the per-column split — converged and
+/// linearly-dependent columns stop paying when they drop).
 ///
 /// For coalescing same-sequence multi-RHS traffic through the
-/// coordinator, see `coordinator::SequenceHandle::submit_block`.
+/// coordinator, see `coordinator::SequenceHandle::submit_block`; for a
+/// block solve that consumes and feeds a carried recycled basis, see
+/// [`crate::solvers::recycle::RecycleManager::solve_block`].
 pub fn solve_block(a: &dyn SpdOperator, b: &Mat, spec: &SolveSpec) -> BlockSolveResult {
-    blockcg::solve(a, b, spec.tol, spec.max_iters)
+    solve_block_with(a, b, spec, spec.deflation.as_deref())
+}
+
+/// [`solve_block`] with an externally supplied deflation basis — the
+/// recycle manager substitutes its carried `(W, AW)` here, overriding any
+/// basis on the spec.
+pub(crate) fn solve_block_with(
+    a: &dyn SpdOperator,
+    b: &Mat,
+    spec: &SolveSpec,
+    defl: Option<&Deflation>,
+) -> BlockSolveResult {
+    let cfg = spec.cg_config();
+    let built = build_auto_jacobi(a, spec);
+    let precond: Option<&dyn Preconditioner> = spec
+        .precond
+        .as_deref()
+        .or(built.as_ref().map(|j| j as &dyn Preconditioner));
+    blockcg::solve_spec(a, b, None, defl, precond, &cfg)
+}
+
+/// The per-call `auto_jacobi` build (a recycled sequence intercepts this
+/// earlier and substitutes its per-sequence cached Jacobi instead).
+fn build_auto_jacobi(a: &dyn SpdOperator, spec: &SolveSpec) -> Option<Jacobi> {
+    if spec.precond.is_none() && spec.auto_jacobi {
+        Some(Jacobi::from_op(a))
+    } else {
+        None
+    }
 }
 
 /// Shared dispatch used by [`solve`]/[`solve_with_x0`] and the recycle
@@ -378,11 +423,7 @@ pub(crate) fn dispatch(
             // auto_jacobi: build the preconditioner here, per call. A
             // recycled sequence intercepts this earlier and substitutes
             // its per-sequence cached Jacobi instead.
-            let built = if spec.precond.is_none() && spec.auto_jacobi {
-                Some(Jacobi::from_op(a))
-            } else {
-                None
-            };
+            let built = build_auto_jacobi(a, spec);
             let precond: Option<&dyn Preconditioner> = spec
                 .precond
                 .as_deref()
@@ -390,47 +431,35 @@ pub(crate) fn dispatch(
             defcg::solve_precond(a, b, x0, defl, precond, &cfg)
         }
         Method::BlockCg => {
+            // The block kernel takes warm starts, deflation and
+            // preconditioning natively; a single right-hand side is a
+            // 1-column block running def-CG's scalar recurrences (this
+            // must never panic: block requests flow through the
+            // coordinator's drainer threads).
             let n = a.n();
             assert_eq!(b.len(), n, "rhs dimension mismatch");
-            let bnorm = crate::linalg::vec_ops::norm2(b);
-            let denom = if bnorm > 0.0 { bnorm } else { 1.0 };
-            // The block kernel has no warm-start parameter; a warm start
-            // shifts to the residual system A d = b − A x₀ with the
-            // tolerance rescaled so the stopping rule is still
-            // ‖b − A x‖/‖b‖ ≤ tol (this must never panic: block requests
-            // flow through the coordinator's drainer threads).
-            let (rhs, shift_matvecs) = match x0 {
-                None => (b.to_vec(), 0),
-                Some(x0) => {
-                    assert_eq!(x0.len(), n);
-                    let ax = a.matvec_alloc(x0);
-                    let rhs: Vec<f64> =
-                        b.iter().zip(&ax).map(|(bi, axi)| bi - axi).collect();
-                    (rhs, 1)
-                }
-            };
-            let rnorm = crate::linalg::vec_ops::norm2(&rhs);
-            let tol = if rnorm > 0.0 { spec.tol * denom / rnorm } else { spec.tol };
             let mut bm = Mat::zeros(n, 1);
-            bm.set_col(0, &rhs);
-            let r = blockcg::solve(a, &bm, tol, spec.max_iters);
-            let mut x = r.x.col(0);
-            if let Some(x0) = x0 {
-                for (xi, x0i) in x.iter_mut().zip(x0) {
-                    *xi += x0i;
-                }
-            }
-            // Re-express the trace relative to ‖b‖ (the kernel reports it
-            // relative to its own right-hand side, here ‖b − A x₀‖).
-            let rescale = rnorm / denom;
+            bm.set_col(0, b);
+            let x0m = x0.map(|x0| {
+                assert_eq!(x0.len(), n, "x0 dimension mismatch");
+                let mut m = Mat::zeros(n, 1);
+                m.set_col(0, x0);
+                m
+            });
+            let built = build_auto_jacobi(a, spec);
+            let precond: Option<&dyn Preconditioner> = spec
+                .precond
+                .as_deref()
+                .or(built.as_ref().map(|j| j as &dyn Preconditioner));
+            let r = blockcg::solve_spec(a, &bm, x0m.as_ref(), defl, precond, &cfg);
             SolveResult {
-                x,
-                residuals: r.residuals.iter().map(|v| v * rescale).collect(),
+                x: r.x.col(0),
+                residuals: r.residuals,
                 iterations: r.iterations,
                 // The block kernel already counts per column (s = 1 here).
-                matvecs: r.matvecs + shift_matvecs,
+                matvecs: r.matvecs,
                 stop: r.stop,
-                stored: StoredDirections::default(),
+                stored: r.stored,
                 seconds: r.seconds,
             }
         }

@@ -58,7 +58,10 @@ impl CgConfig {
         }
     }
 
-    /// True if the residual trace shows < 1% improvement over the window.
+    /// True if the residual trace shows < 0.1% improvement over the
+    /// window (`now > 0.999 · then`) — the threshold documented on
+    /// [`CgConfig::stall_window`] and pinned by
+    /// `stagnation_threshold_is_a_tenth_of_a_percent`.
     pub(crate) fn stagnated(&self, residuals: &[f64]) -> bool {
         if self.stall_window == 0 || residuals.len() <= self.stall_window {
             return false;
@@ -315,6 +318,31 @@ mod tests {
         assert_eq!(r.stop, StopReason::MaxIters);
         assert_eq!(r.iterations, 3);
         assert_eq!(r.matvecs, 3);
+    }
+
+    #[test]
+    fn stagnation_threshold_is_a_tenth_of_a_percent() {
+        // The documented rule on `stall_window`: stagnated iff the
+        // residual improved by LESS than 0.1% over the window
+        // (now > 0.999 · then). Pinned on synthetic traces so the doc,
+        // the code, and this test can never drift apart again.
+        let cfg = CgConfig { stall_window: 3, ..Default::default() };
+        // 0.2% improvement over the window: still making progress.
+        assert!(!cfg.stagnated(&[1.0, 1.0, 1.0, 0.998]));
+        // 0.05% improvement: stagnated.
+        assert!(cfg.stagnated(&[1.0, 1.0, 1.0, 0.9995]));
+        // Exactly 0.1%: the strict inequality says NOT stagnated.
+        assert!(!cfg.stagnated(&[1.0, 1.0, 1.0, 0.999]));
+        // Window not yet filled (needs window + 1 trace entries): never.
+        assert!(!cfg.stagnated(&[1.0, 0.9995, 0.9999]));
+        assert!(!cfg.stagnated(&[1.0, 1.0, 1.0]));
+        // Disabled window never stagnates.
+        let off = CgConfig::default();
+        assert!(!off.stagnated(&[1.0, 1.0, 1.0, 1.0, 1.0]));
+        // The comparison is against the entry `window` steps back, not the
+        // global best: a rebound after early progress still counts as
+        // stagnation.
+        assert!(cfg.stagnated(&[1.0, 0.5, 0.499, 0.4999, 0.49995]));
     }
 
     #[test]

@@ -52,6 +52,18 @@ impl Deflation {
         self.w.cols()
     }
 
+    /// Factor the k×k Gram `WᵀAW` (symmetrized against round-off) — the
+    /// small SPD system every deflated kernel solves against, shared by
+    /// the single-RHS kernel ([`solve_precond`]) and the block kernel
+    /// ([`crate::solvers::blockcg::solve_spec`]). Errs when the recycled
+    /// basis is degenerate (rank-deficient `W`, or an indefinite stale
+    /// `AW`), which callers treat as "run undeflated".
+    pub fn factor_wtaw(&self) -> Result<Cholesky, crate::linalg::cholesky::NotSpd> {
+        let mut g = self.w.t_matmul(&self.aw);
+        g.symmetrize();
+        Cholesky::factor(&g)
+    }
+
     /// Recompute `AW` exactly under a (new) operator with **one block
     /// application** over all k basis columns ([`SpdOperator::apply_block`]
     /// — one data pass over A per panel instead of k column matvecs, same
@@ -181,12 +193,7 @@ pub fn solve_precond(
     let mut matvecs = 0usize;
 
     // WᵀAW (k×k, SPD for SPD A and full-rank W) factored once per solve.
-    let wtaw = {
-        let mut g = w.t_matmul(aw);
-        g.symmetrize();
-        g
-    };
-    let wtaw_ch = match Cholesky::factor(&wtaw) {
+    let wtaw_ch = match defl.factor_wtaw() {
         Ok(ch) => ch,
         Err(_) => {
             // Degenerate recycled basis — fall back to an undeflated solve

@@ -162,6 +162,50 @@ pub trait SpdOperator: Sync {
     fn diag(&self, out: &mut [f64]) {
         probe_diag_via(self, out)
     }
+
+    /// An `O(1)` fingerprint identifying this operator's diagonal for
+    /// per-sequence caches (the recycle manager's auto-Jacobi).
+    ///
+    /// # Contract
+    ///
+    /// Two operators whose fingerprints are both `Some` and **differ**
+    /// must have different diagonals (so a cached Jacobi is definitely
+    /// stale); equal fingerprints mean "same operator as far as the
+    /// diagonal is concerned" to within the sampling resolution. `None`
+    /// (the default) means the operator cannot identify itself cheaply —
+    /// callers then fall back to coarser keys (dimension only), which is
+    /// the pre-fingerprint behavior and the right one for anonymous
+    /// drifting sequences.
+    ///
+    /// Implementations must be `O(1)`-ish: hash a few strided diagonal
+    /// samples ([`fingerprint_f64s`]) or combine the base's fingerprint
+    /// with the view parameters ([`algebra`] does `σ`, `c`, `U` samples).
+    /// Never derive the full diagonal here — that is exactly the cost the
+    /// fingerprint exists to avoid.
+    fn diag_fingerprint(&self) -> Option<u64> {
+        None
+    }
+}
+
+/// FNV-1a-style hash over f64 bit patterns, the shared helper behind
+/// [`SpdOperator::diag_fingerprint`] implementations. Start from a
+/// per-type seed so structurally different operators with coincidentally
+/// equal samples stay distinguishable.
+pub fn fingerprint_f64s(seed: u64, vals: impl IntoIterator<Item = f64>) -> u64 {
+    let mut h = seed ^ 0xcbf2_9ce4_8422_2325;
+    for v in vals {
+        h ^= v.to_bits();
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Up to 8 strided diagonal samples of a dense matrix, the shared
+/// fingerprint input for [`DenseOp`] / [`ParDenseOp`].
+fn dense_diag_samples(a: &Mat) -> impl Iterator<Item = f64> + '_ {
+    let n = a.rows();
+    let step = (n / 8).max(1);
+    (0..n).step_by(step).take(8).map(move |i| a[(i, i)])
 }
 
 /// Forward every trait method through a shared reference, so operator
@@ -181,6 +225,10 @@ impl<T: SpdOperator + ?Sized> SpdOperator for &T {
 
     fn diag(&self, out: &mut [f64]) {
         (**self).diag(out)
+    }
+
+    fn diag_fingerprint(&self) -> Option<u64> {
+        (**self).diag_fingerprint()
     }
 }
 
@@ -203,6 +251,10 @@ impl<T: SpdOperator + Send + Sync + ?Sized> SpdOperator for Arc<T> {
 
     fn diag(&self, out: &mut [f64]) {
         (**self).diag(out)
+    }
+
+    fn diag_fingerprint(&self) -> Option<u64> {
+        (**self).diag_fingerprint()
     }
 }
 
@@ -290,6 +342,10 @@ impl<'a> SpdOperator for DenseOp<'a> {
 
     fn diag(&self, out: &mut [f64]) {
         self.a.diag_into(out);
+    }
+
+    fn diag_fingerprint(&self) -> Option<u64> {
+        Some(fingerprint_f64s(self.a.rows() as u64, dense_diag_samples(self.a)))
     }
 }
 
@@ -441,6 +497,10 @@ impl SpdOperator for ParDenseOp {
 
     fn diag(&self, out: &mut [f64]) {
         self.a.diag_into(out);
+    }
+
+    fn diag_fingerprint(&self) -> Option<u64> {
+        Some(fingerprint_f64s(self.a.rows() as u64, dense_diag_samples(&self.a)))
     }
 }
 

@@ -1,8 +1,11 @@
 //! Harmonic-Ritz extraction of approximate eigenvectors (paper §2.3).
 //!
-//! After a (deflated) CG run stored ℓ normalized search directions `P` and
-//! their images `AP`, form `Z = [W, P]` and `AZ = [AW, AP]` and solve the
-//! harmonic projection problem (Morgan, 1995; paper Eq. 7):
+//! After a solver run stored ℓ normalized direction/image pairs — the
+//! first ℓ search directions of a (deflated) CG run, or the first ℓ
+//! *block* direction columns of a rank-adaptive block-CG run
+//! ([`crate::solvers::blockcg::solve_spec`]) — form `Z = [W, P]` and
+//! `AZ = [AW, AP]` and solve the harmonic projection problem
+//! (Morgan, 1995; paper Eq. 7):
 //!
 //! ```text
 //!   (AZ)ᵀ (AZ u − θ Z u) = 0   ⇔   G u = θ F u,
@@ -57,7 +60,11 @@ pub struct RitzValue {
 }
 
 /// Extract a new recycled basis from the previous deflation (may be `None`
-/// on the first system) and the directions stored during the last solve.
+/// on the first system) and the directions stored during the last solve —
+/// single-RHS CG directions and block-CG direction panels alike (block
+/// columns within one iteration are not A-conjugate to each other, only
+/// across iterations; the joint MGS below absorbs that, so multi-RHS
+/// traffic feeds the basis through exactly this entry point).
 ///
 /// Returns the new `Deflation { W, AW }` plus the selected harmonic Ritz
 /// values, or `None` if nothing useful could be extracted (e.g. no stored

@@ -146,8 +146,13 @@ fn blockcg_iterates_through_apply_block_only() {
     assert_eq!(r.stop, StopReason::Converged);
     assert_eq!(op.matvecs.load(Ordering::Relaxed), 0, "no single matvecs in the block loop");
     assert_eq!(op.block_applies.load(Ordering::Relaxed), r.block_matvecs);
-    assert_eq!(op.block_cols.load(Ordering::Relaxed), 4 * r.block_matvecs);
-    assert_eq!(r.matvecs, 4 * r.block_matvecs, "per-column accounting");
+    // The operator saw exactly the active panel widths the result bills:
+    // rank-adaptive dropping means columns that converge early stop being
+    // part of the panels, so the per-column total is bounded by (and for
+    // synchronized columns equal to) the full-block count.
+    assert_eq!(op.block_cols.load(Ordering::Relaxed), r.matvecs);
+    assert_eq!(r.matvecs, r.col_matvecs.iter().sum::<usize>(), "per-column accounting");
+    assert!(r.matvecs <= 4 * r.block_matvecs);
 }
 
 #[test]
