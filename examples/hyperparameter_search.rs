@@ -80,6 +80,10 @@ fn main() {
         sigmas.len(),
         amps.len() * sigmas.len()
     );
+    // The σ-grid runs through the solve service as Priority::Batch
+    // requests with a 10 s per-grid-point deadline: a pathological point
+    // comes back as a DeadlineExceeded partial answer (whose Krylov work
+    // still feeds the recycled basis) instead of stalling the search.
     let recycled = sigma_grid_search(
         &data.x,
         &data.y,
@@ -88,6 +92,7 @@ fn main() {
         &sigmas,
         RecycleConfig { k: 8, l: 12, ..Default::default() },
         1e-8,
+        Some(std::time::Duration::from_secs(10)),
     );
     let plain = sigma_grid_search(
         &data.x,
@@ -97,6 +102,7 @@ fn main() {
         &sigmas,
         RecycleConfig { k: 0, l: 0, ..Default::default() },
         1e-8,
+        Some(std::time::Duration::from_secs(10)),
     );
     println!("   θ    |    σ    |  −½yᵀα   | plain iters | recycled iters | k");
     println!("--------+---------+----------+-------------+----------------+---");

@@ -1,4 +1,4 @@
-//! The coordinator as a service: concurrent solve sequences sharing a pool.
+//! The coordinator as a service: the admission-controlled async API.
 //!
 //! ```text
 //! cargo run --release --example solver_service
@@ -6,20 +6,23 @@
 //!
 //! Simulates a multi-tenant GP-fitting service: several clients each own a
 //! *sequence* of related SPD systems (their model's Newton/hyperparameter
-//! trajectory). Sequences are processed FIFO internally (recycling is
-//! sequential) but run concurrently across clients on the shared worker
-//! pool. The demo measures aggregate throughput and the per-client benefit
-//! of recycling.
+//! trajectory), submitted as **batch** traffic, while an interactive
+//! request arrives late and overtakes the queued batch work. The demo
+//! drives the full request lifecycle — `SolveFuture::poll` progress
+//! polling, mid-queue cancellation, a per-request deadline, and a
+//! `shutdown(Drain)` teardown — and prints the lifecycle metrics
+//! (busy vs span seconds, cancelled/deadline/rejected counters, queue
+//! high-water) next to the per-client recycling benefit.
 
-use krr::coordinator::SolveService;
-use krr::gp::kernel::RbfKernel;
+use krr::coordinator::{Shutdown, SolveService};
 use krr::data::digits::{generate, DigitsConfig};
+use krr::gp::kernel::RbfKernel;
 use krr::linalg::mat::Mat;
 use krr::solvers::recycle::RecycleConfig;
-use krr::solvers::{SolveSpec, SpdOperator};
+use krr::solvers::{SolveSpec, SpdOperator, StopReason};
 use krr::util::rng::Rng;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// The Newton operator A = I + SKS as an owned, shareable object.
 struct NewtonOp {
@@ -46,10 +49,13 @@ fn main() {
     let clients = 4;
     let systems_per_client = 5;
     println!(
-        "solver service: {clients} clients × {systems_per_client} systems, n = {n}, pool = 4 workers\n"
+        "solver service: {clients} batch clients × {systems_per_client} systems + 1 interactive \
+         request, n = {n}, pool = 2 workers\n"
     );
 
-    let svc = SolveService::new(4);
+    // Small pool + modest admission cap: the queue actually builds up, so
+    // priorities and the high-water gauge have something to show.
+    let svc = SolveService::with_queue_cap(2, 64);
     let start = Instant::now();
     let mut handles = Vec::new();
 
@@ -61,26 +67,86 @@ fn main() {
         let mut rng = Rng::new(c as u64);
 
         // Drifting diagonal scalings mimic the Newton H^1/2 trajectory.
-        let tickets: Vec<_> = (0..systems_per_client)
+        // Batch priority: this is pipelined throughput work.
+        let futures: Vec<_> = (0..systems_per_client)
             .map(|i| {
                 let s: Vec<f64> = (0..n)
                     .map(|j| 0.5 - 0.02 * (i as f64) + 0.001 * ((j % 10) as f64))
                     .collect();
                 let op = Arc::new(NewtonOp { k: k.clone(), s });
                 let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-                seq.submit(op, b, None, SolveSpec::defcg().with_tol(1e-6))
+                seq.submit(op, b, None, SolveSpec::defcg().with_tol(1e-6).batch())
             })
             .collect();
-        handles.push((c, seq, tickets));
+        handles.push((c, seq, futures));
     }
 
-    for (c, seq, tickets) in handles {
-        let iters: Vec<usize> = tickets.into_iter().map(|t| t.wait().iterations).collect();
+    // An interactive request lands AFTER all the batch work is queued,
+    // with a hard 5 s deadline — the priority pop serves it ahead of the
+    // queued batch requests of its sequence.
+    let (c0, seq0, _) = &handles[0];
+    let data = generate(&DigitsConfig { n, seed: 50 + *c0 as u64, ..Default::default() });
+    let k0 = RbfKernel::new(1.0, 8.0).gram(&data.x);
+    let interactive = {
+        let s: Vec<f64> = vec![0.5; n];
+        let op = Arc::new(NewtonOp { k: k0, s });
+        seq0.submit(
+            op,
+            vec![1.0; n],
+            None,
+            SolveSpec::defcg()
+                .with_tol(1e-6)
+                .with_deadline(Duration::from_secs(5)),
+        )
+    };
+
+    // A request the caller loses interest in: cancel it right away. If it
+    // is still queued it completes as Cancelled without running a single
+    // matvec; if the drainer already picked it up, it stops within one
+    // operator application with the partial iterate.
+    let doomed = {
+        let s: Vec<f64> = vec![0.4; n];
+        let data = generate(&DigitsConfig { n, seed: 99, ..Default::default() });
+        let k = RbfKernel::new(1.0, 9.0).gram(&data.x);
+        let seq = svc.open_sequence(RecycleConfig::default());
+        let f = seq.submit(
+            Arc::new(NewtonOp { k, s }),
+            vec![1.0; n],
+            None,
+            SolveSpec::defcg().with_tol(1e-10).batch(),
+        );
+        f.cancel();
+        f
+    };
+
+    // Non-blocking progress loop on the interactive future.
+    let (ir, report) = loop {
+        if let Some(out) = interactive.poll_report() {
+            break out;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    };
+    println!(
+        "interactive request: {:?} in {} iterations ({:.1} ms queued, {:.1} ms solving)\n",
+        ir.stop,
+        ir.iterations,
+        report.queue_seconds * 1e3,
+        report.solve_seconds * 1e3
+    );
+    assert_eq!(ir.stop, StopReason::Converged);
+
+    let doomed_stop = doomed.wait().stop;
+    println!("cancelled request resolved as {doomed_stop:?}");
+    assert_eq!(doomed_stop, StopReason::Cancelled);
+
+    for (c, seq, futures) in handles {
+        let iters: Vec<usize> = futures.into_iter().map(|t| t.wait().iterations).collect();
         let first = iters[0];
         let later: f64 =
             iters[1..].iter().sum::<usize>() as f64 / (iters.len() - 1) as f64;
         println!(
-            "client {c}: iterations/system = {iters:?}  (first {first}, later mean {later:.1}, k = {})",
+            "client {c}: iterations/system = {iters:?}  (first {first}, later mean \
+             {later:.1}, k = {})",
             seq.k_active()
         );
         assert!(
@@ -89,16 +155,33 @@ fn main() {
         );
     }
 
+    // Graceful teardown: everything accepted runs to completion, then new
+    // submissions are refused.
+    svc.shutdown(Shutdown::Drain);
     let wall = start.elapsed().as_secs_f64();
     let m = svc.metrics().snapshot();
     println!(
-        "\nmetrics: {}/{} solves completed, {} matvecs, {} sequences still active",
-        m.completed, m.submitted, m.total_matvecs, m.active_sequences
+        "\nmetrics: {}/{} solves completed ({} cancelled, {} deadline-exceeded, {} rejected, \
+         {} failed), {} matvecs",
+        m.completed,
+        m.submitted,
+        m.cancelled,
+        m.deadline_exceeded,
+        m.rejected,
+        m.failed,
+        m.total_matvecs
     );
     println!(
-        "wall = {wall:.3}s, cumulative solver time = {:.3}s (parallel speedup ×{:.2})",
-        m.total_seconds,
-        m.total_seconds / wall
+        "queue: depth {} now, high-water {} (cap 64)",
+        m.queue_depth, m.queue_high_water
     );
+    println!(
+        "wall = {wall:.3}s, solver busy = {:.3}s over a {:.3}s service span \
+         (avg parallelism ×{:.2})",
+        m.busy_seconds,
+        m.span_seconds,
+        m.busy_seconds / m.span_seconds.max(1e-9)
+    );
+    assert_eq!(m.queue_depth, 0, "drain must leave nothing queued");
     println!("OK");
 }

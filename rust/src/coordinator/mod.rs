@@ -1,34 +1,57 @@
-//! L3 coordinator: a concurrent solve-service for sequences of SPD systems.
+//! L3 coordinator: an admission-controlled concurrent solve-service for
+//! sequences of SPD systems.
 //!
 //! The paper's contribution lives at the level of *sequences*: information
 //! flows from system `i` to system `i+1` through the recycled subspace.
-//! This module packages that into a deployable service:
+//! This module packages that into a deployable service with a full
+//! request lifecycle:
 //!
-//! * a [`service::SolveService`] owning a worker pool and (optionally) the
-//!   PJRT engine;
+//! * a [`service::SolveService`] owning a worker pool, the service-wide
+//!   **admission cap** (queued + running requests;
+//!   [`service::SubmitError::QueueFull`] is the backpressure signal), and
+//!   [`service::SolveService::shutdown`] graceful teardown
+//!   ([`service::Shutdown::Drain`] finishes accepted work,
+//!   [`service::Shutdown::Abort`] cancels it);
 //! * [`service::SequenceHandle`]s, one per solve sequence (e.g. one per
 //!   Laplace optimization or per hyperparameter trajectory), each with its
 //!   own [`crate::solvers::recycle::RecycleManager`] state;
-//! * per-request [`crate::solvers::SolveSpec`]s: one sequence queue serves
-//!   heterogeneous workloads (plain CG, Jacobi-PCG, deflated, block CG,
-//!   and multi-RHS [`service::SequenceHandle::submit_block`] batches —
-//!   consecutive same-operator block requests coalesce into one block
-//!   solve);
+//! * asynchronous completion: every submission returns a
+//!   [`service::SolveFuture`] — non-blocking `poll`, blocking `wait` /
+//!   `wait_timeout`, `cancel` via a shared
+//!   [`crate::solvers::CancelToken`] — and every completion carries a
+//!   structured [`service::SolveReport`] (stop reason, queue/solve
+//!   wall-times, matvec bill, basis size, coalesce group width);
+//! * per-request [`crate::solvers::SolveSpec`]s carrying the numerical
+//!   policies **and** the lifecycle policies: a
+//!   [`crate::solvers::Priority`] class (interactive requests overtake
+//!   queued batch work) and a deadline/cancel
+//!   [`crate::solvers::SolveControl`] that the kernels check once per
+//!   iteration, so cancellation and deadlines take effect mid-solve with
+//!   the partial iterate returned;
 //! * operator-algebra-friendly submission: operators travel as
 //!   `Arc<dyn SpdOperator + Send + Sync>`, so `solvers::algebra` views
 //!   (shifted / scaled / low-rank-updated) over one shared base submit
 //!   without re-materializing kernels;
-//! * strict FIFO ordering *within* a sequence (recycling is inherently
-//!   sequential) and parallelism *across* sequences;
-//! * service-level metrics ([`service::MetricsSnapshot`]), with block
-//!   applies counted as one application per column so `total_matvecs`
-//!   stays on one axis across request shapes.
+//! * FIFO ordering within a priority class *within* a sequence
+//!   (recycling is inherently sequential) and parallelism *across*
+//!   sequences; consecutive same-operator block requests coalesce into
+//!   one block solve under an all-of cancel group;
+//! * worker-panic containment: a panicking solve completes its future as
+//!   [`crate::solvers::StopReason::Failed`] instead of hanging every
+//!   caller behind it;
+//! * service-level metrics ([`service::MetricsSnapshot`]): throughput,
+//!   lifecycle counters (cancelled / deadline-exceeded / rejected /
+//!   failed), the admission gauge and its high-water mark, and the
+//!   `busy_seconds` (summed solver time) vs `span_seconds`
+//!   (first-submit→last-complete wall clock) split.
 //!
 //! This is the shape a GP-serving system would use: many concurrent model
-//! fits, each a sequence of related systems, sharing one compute engine.
+//! fits, each a sequence of related systems, sharing one compute engine
+//! under explicit backpressure.
 
 pub mod service;
 
 pub use service::{
-    BlockSolveTicket, MetricsSnapshot, SequenceHandle, ServiceMetrics, SolveService, SolveTicket,
+    MetricsSnapshot, SequenceHandle, ServiceMetrics, Shutdown, SolveFuture, SolveReport,
+    SolveService, SubmitError,
 };

@@ -1,54 +1,398 @@
-//! The solve-service implementation.
+//! The solve-service implementation: an **admission-controlled async
+//! job API** over per-sequence recycled solves.
+//!
+//! # Request lifecycle
+//!
+//! ```text
+//! try_submit ──► bounded queue ──► priority-aware drainer pop ──► solve
+//!     │Err(QueueFull)                │cancel/deadline dead-on-arrival
+//!     ▼                              ▼
+//!  rejected                 completes without running
+//! ```
+//!
+//! Every submission returns a [`SolveFuture`]: non-blocking
+//! [`SolveFuture::poll`], blocking [`SolveFuture::wait`] /
+//! [`SolveFuture::wait_timeout`], and [`SolveFuture::cancel`] backed by a
+//! shared [`CancelToken`]. Cancellation and per-request deadlines
+//! ([`SolveSpec::with_deadline`]) take effect **mid-solve**: every kernel
+//! checks the spec's control once per iteration, so a cancel returns a
+//! [`StopReason::Cancelled`] partial result within one operator
+//! application, and an expired deadline returns the partial iterate as
+//! [`StopReason::DeadlineExceeded`] — whose stored directions still feed
+//! the sequence's recycle basis (partial Krylov work is kept; only
+//! *cancelled* runs are never absorbed, so cancellation can never corrupt
+//! a sequence's basis).
+//!
+//! # Admission and scheduling
+//!
+//! [`SolveService`] bounds the number of queued-plus-running requests
+//! ([`SolveService::with_queue_cap`]); [`SequenceHandle::try_submit`]
+//! refuses over-cap work with [`SubmitError::QueueFull`] instead of
+//! buffering unboundedly. Each request carries a
+//! [`Priority`](crate::solvers::Priority): the drainer serves the most
+//! urgent class present and is FIFO within a class, so `Interactive`
+//! requests overtake queued `Batch` work (strict two-class priority:
+//! under a *sustained* interactive stream, batch work waits — `Batch`
+//! means "yield to every interactive request" by design; there is no
+//! aging). Priority pops pull interactive singles *out* of batch block
+//! runs, leaving those adjacent — coalescing groups stay intact.
+//! [`SolveService::shutdown`] supports graceful teardown:
+//! [`Shutdown::Drain`] completes all queued work, [`Shutdown::Abort`]
+//! cancels queued requests and raises the cancel flag of in-flight ones;
+//! both then wait for the service to go idle and reject new submissions.
+//!
+//! Every completion carries a structured [`SolveReport`] (stop reason,
+//! queue/solve wall-times, matvec bill, active basis size, coalesce
+//! group size) alongside the numerical result.
+//!
+//! # Worker-panic safety
+//!
+//! A panic inside a solve (a poisoned operator, an internal assert) no
+//! longer hangs the pipeline: the drainer catches the unwind, completes
+//! that request's future with [`StopReason::Failed`] (start iterate,
+//! infinite residual), recovers the possibly-poisoned sequence state,
+//! and keeps draining — queued futures behind a failure still complete.
+//!
+//! # Heterogeneous workloads and coalescing
 //!
 //! Every request carries its own [`SolveSpec`], so one sequence queue can
-//! serve a heterogeneous workload — plain CG, Jacobi-preconditioned,
-//! deflated, block, and multi-RHS [`SequenceHandle::submit_block`]
-//! requests interleave freely while the sequence's [`RecycleManager`]
-//! carries the recycled subspace across them. Operators are behind
-//! `Arc<dyn SpdOperator + Send + Sync>`, so the `solvers::algebra` views
-//! (`ShiftedOp(base.clone(), σ)` etc.) submit directly — a σ-grid is a
-//! stream of requests over one shared base operator, never a rebuilt
-//! kernel.
+//! serve plain CG, Jacobi-preconditioned, deflated, block, and multi-RHS
+//! [`SequenceHandle::submit_block`] requests interleaved, while the
+//! sequence's [`RecycleManager`] carries the recycled subspace across
+//! them. Operators are behind `Arc<dyn SpdOperator + Send + Sync>`, so
+//! `solvers::algebra` views (`ShiftedOp(base.clone(), σ)` etc.) submit
+//! directly — a σ-grid is a stream of requests over one shared base
+//! operator, never a rebuilt kernel.
 //!
-//! Multi-RHS coalescing: consecutive queued `submit_block` requests that
-//! share the same operator (`Arc` identity) and the same block-relevant
-//! policy set (see `coalescible`) are drained as **one** block solve — the block Krylov
-//! space sees all their columns at once and the operator pays one
-//! `apply_block` data pass per iteration for the whole group. Block
-//! solves ride the sequence's recycled basis like every other request
-//! (deflated block CG in, harmonic-Ritz directions out), so a stream of
-//! coalesced block groups converges faster system over system.
+//! Consecutive queued `submit_block` requests that share the same
+//! operator (`Arc` identity) and the same block-relevant policy set (see
+//! `coalescible` — now including priority and deadline) are drained as
+//! **one** block solve. The shared solve runs under an *all-of* cancel
+//! group: one member's cancel cannot abort its neighbours' work; a
+//! member cancelled while still queued is simply left out of the group.
 //!
-//! Locking: each sequence keeps its request queue and its solve state
+//! # Locking
+//!
+//! Each sequence keeps its request queue and its solve state
 //! ([`RecycleManager`]) behind **separate** mutexes. Submissions touch
 //! only the queue lock, so they return immediately while a solve is in
-//! flight; the single drainer per sequence serializes solves FIFO under
-//! the solve lock.
+//! flight; the single drainer per sequence serializes solves under the
+//! solve lock, FIFO within a priority class.
 
 use crate::linalg::mat::Mat;
-use crate::solvers::api::SolveSpec;
+use crate::solvers::api::{Priority, SolveSpec};
 use crate::solvers::blockcg::BlockSolveResult;
+use crate::solvers::control::{CancelToken, SolveControl};
 use crate::solvers::recycle::{RecycleConfig, RecycleManager, SystemStats};
-use crate::solvers::{ParDenseOp, SolveResult, SpdOperator};
+use crate::solvers::{ParDenseOp, SolveResult, SpdOperator, StopReason, StoredDirections};
 use crate::util::pool::ThreadPool;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, Weak};
+use std::time::{Duration, Instant};
 
-/// A solve request: operator + per-request spec + payload (single RHS or
-/// a multi-RHS block).
+/// Recover a mutex guard even when a previous holder panicked mid-solve:
+/// the coordinator must keep serving the queue after a worker failure
+/// (the failed request completes as [`StopReason::Failed`]; the recycle
+/// state it may have half-updated is still structurally valid — basis
+/// absorption is transactional, it happens only after a solve returns).
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Why a submission was not accepted.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The service's admission cap (queued + running requests) is
+    /// reached. Back off, shed load, or retry later — this is the
+    /// backpressure signal that replaces unbounded buffering.
+    QueueFull,
+    /// This sequence was [`SequenceHandle::close`]d.
+    SequenceClosed,
+    /// [`SolveService::shutdown`] was called; no new work is accepted.
+    ShuttingDown,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull => write!(f, "full admission queue"),
+            SubmitError::SequenceClosed => write!(f, "closed sequence"),
+            SubmitError::ShuttingDown => write!(f, "shutting-down service"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Graceful-teardown mode for [`SolveService::shutdown`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Shutdown {
+    /// Stop admitting work, finish everything already accepted, then
+    /// return.
+    Drain,
+    /// Stop admitting work, complete still-queued requests as
+    /// [`StopReason::Cancelled`] without running them, raise the cancel
+    /// flag of in-flight solves (they stop within one operator
+    /// application and complete as `Cancelled` partial results), then
+    /// wait for the service to go idle.
+    Abort,
+}
+
+/// Structured completion record carried by every [`SolveFuture`]
+/// alongside the numerical result ([`SolveFuture::wait_report`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SolveReport {
+    /// How the solve ended (includes the lifecycle stops `Cancelled`,
+    /// `DeadlineExceeded`, `Failed`).
+    pub stop: StopReason,
+    /// Wall-clock seconds the request spent queued before its drainer
+    /// picked it up (0 for requests completed at submission time).
+    pub queue_seconds: f64,
+    /// Wall-clock seconds inside the solver (the shared group solve for
+    /// coalesced members; 0 for requests that never ran).
+    pub solve_seconds: f64,
+    /// Operator applications billed to this request (a coalesced
+    /// member's per-column share, like the result's `matvecs`).
+    pub matvecs: usize,
+    /// Recycled-basis dimension of the sequence right after this
+    /// completion (0 for requests that never reached the solve state).
+    pub k_active: usize,
+    /// Number of requests served by the same coalesced block solve
+    /// (1 for single-RHS requests and uncoalesced blocks).
+    pub group_size: usize,
+}
+
+/// Internal state of a future's one-shot result slot.
+enum SlotState<T> {
+    Pending,
+    Ready(T, SolveReport),
+    Taken,
+}
+
+/// One-shot result slot (mini oneshot channel) shared by a future and
+/// the drainer that completes it.
+struct Slot<T> {
+    state: Mutex<SlotState<T>>,
+    cv: Condvar,
+}
+
+impl<T> Slot<T> {
+    fn new() -> Arc<Self> {
+        Arc::new(Slot { state: Mutex::new(SlotState::Pending), cv: Condvar::new() })
+    }
+
+    fn put(&self, value: T, report: SolveReport) {
+        *lock_unpoisoned(&self.state) = SlotState::Ready(value, report);
+        self.cv.notify_all();
+    }
+
+    /// Non-blocking: the result if it is ready and not yet taken.
+    fn try_take(&self) -> Option<(T, SolveReport)> {
+        let mut g = lock_unpoisoned(&self.state);
+        match std::mem::replace(&mut *g, SlotState::Taken) {
+            SlotState::Ready(v, r) => Some((v, r)),
+            SlotState::Pending => {
+                *g = SlotState::Pending;
+                None
+            }
+            SlotState::Taken => None,
+        }
+    }
+
+    /// Block until the result is ready; panics if it was already taken
+    /// by a successful [`Slot::try_take`] (each future yields its result
+    /// exactly once).
+    fn take(&self) -> (T, SolveReport) {
+        let mut g = lock_unpoisoned(&self.state);
+        loop {
+            match std::mem::replace(&mut *g, SlotState::Taken) {
+                SlotState::Ready(v, r) => return (v, r),
+                SlotState::Taken => panic!("solve-future result already taken"),
+                SlotState::Pending => {
+                    *g = SlotState::Pending;
+                    g = self.cv.wait(g).unwrap_or_else(|e| e.into_inner());
+                }
+            }
+        }
+    }
+
+    /// Block until the result is ready or `timeout` elapses.
+    fn take_timeout(&self, timeout: Duration) -> Option<(T, SolveReport)> {
+        let until = Instant::now() + timeout;
+        let mut g = lock_unpoisoned(&self.state);
+        loop {
+            match std::mem::replace(&mut *g, SlotState::Taken) {
+                SlotState::Ready(v, r) => return Some((v, r)),
+                SlotState::Taken => return None,
+                SlotState::Pending => {
+                    *g = SlotState::Pending;
+                }
+            }
+            let now = Instant::now();
+            if now >= until {
+                return None;
+            }
+            let (g2, _) = self
+                .cv
+                .wait_timeout(g, until - now)
+                .unwrap_or_else(|e| e.into_inner());
+            g = g2;
+        }
+    }
+}
+
+/// Handle to a pending solve: the async half of the request-lifecycle
+/// API, returned by [`SequenceHandle::submit`] / `submit_block` (and
+/// their `try_` variants). `T` is [`SolveResult`] for single-RHS
+/// requests and [`BlockSolveResult`] for block requests.
+///
+/// The future yields its result **exactly once** — through whichever of
+/// [`SolveFuture::poll`] / [`SolveFuture::wait`] /
+/// [`SolveFuture::wait_timeout`] gets it first.
+pub struct SolveFuture<T> {
+    slot: Arc<Slot<T>>,
+    token: CancelToken,
+}
+
+impl<T> SolveFuture<T> {
+    /// Non-blocking: `Some(result)` once the solve completed (taking the
+    /// result; later calls return `None`), `None` while it is still
+    /// queued or running.
+    pub fn poll(&self) -> Option<T> {
+        self.slot.try_take().map(|(v, _)| v)
+    }
+
+    /// Non-blocking variant that also yields the [`SolveReport`].
+    pub fn poll_report(&self) -> Option<(T, SolveReport)> {
+        self.slot.try_take()
+    }
+
+    /// Block until the solve finishes.
+    ///
+    /// # Panics
+    /// If the result was already taken by an earlier successful
+    /// `poll`/`wait_timeout`.
+    pub fn wait(self) -> T {
+        self.slot.take().0
+    }
+
+    /// [`SolveFuture::wait`], also yielding the [`SolveReport`].
+    pub fn wait_report(self) -> (T, SolveReport) {
+        self.slot.take()
+    }
+
+    /// Block for at most `timeout`; `None` if the solve is still running
+    /// (the request keeps running — pair with [`SolveFuture::cancel`] to
+    /// give up on it).
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<T> {
+        self.slot.take_timeout(timeout).map(|(v, _)| v)
+    }
+
+    /// Raise the request's cancel flag. A queued request completes as
+    /// [`StopReason::Cancelled`] without ever running; a running one
+    /// stops at its next per-iteration check (within one operator
+    /// application) and returns its partial iterate. A member of a
+    /// coalesced block group only stops the shared solve once **every**
+    /// member cancelled. Idempotent; a completed request is unaffected.
+    pub fn cancel(&self) {
+        self.token.cancel();
+    }
+
+    /// The shared [`CancelToken`] behind [`SolveFuture::cancel`] — clone
+    /// it into watchdogs or drop-guards that may outlive the future.
+    pub fn cancel_token(&self) -> CancelToken {
+        self.token.clone()
+    }
+}
+
+/// A solve request: operator + per-request spec + cancel token + payload
+/// (single RHS or a multi-RHS block).
 struct Task {
     op: Arc<dyn SpdOperator + Send + Sync>,
     spec: SolveSpec,
+    token: CancelToken,
+    submitted_at: Instant,
     payload: Payload,
+}
+
+enum Payload {
+    Single { b: Vec<f64>, x0: Option<Vec<f64>>, slot: Arc<Slot<SolveResult>> },
+    Block { b: Mat, slot: Arc<Slot<BlockSolveResult>> },
+}
+
+impl Task {
+    /// Complete this request **without running it** (cancelled or
+    /// deadline-dead while queued, or swept by `shutdown(Abort)`): the
+    /// start iterate is passed through and no recycle state is touched.
+    /// The reported relative residual is the **unit placeholder 1.0**
+    /// regardless of any `x0` — exact for the zero start, while the true
+    /// residual of a warm start would cost the one operator application
+    /// a dead request must never pay; callers that care must recompute
+    /// `‖b − A·x‖/‖b‖` themselves.
+    fn complete_unrun(self, stop: StopReason, metrics: &ServiceMetrics, queue_seconds: f64) {
+        let report = SolveReport {
+            stop,
+            queue_seconds,
+            solve_seconds: 0.0,
+            matvecs: 0,
+            k_active: 0,
+            group_size: 1,
+        };
+        let n = self.op.n();
+        metrics.note_completion(stop);
+        match self.payload {
+            Payload::Single { x0, slot, .. } => {
+                slot.put(
+                    SolveResult {
+                        x: x0.unwrap_or_else(|| vec![0.0; n]),
+                        residuals: vec![1.0],
+                        iterations: 0,
+                        matvecs: 0,
+                        stop,
+                        stored: StoredDirections::default(),
+                        seconds: 0.0,
+                    },
+                    report,
+                );
+            }
+            Payload::Block { b, slot } => {
+                let cols = b.cols();
+                slot.put(
+                    BlockSolveResult {
+                        x: Mat::zeros(n, cols),
+                        residuals: vec![1.0],
+                        iterations: 0,
+                        block_matvecs: 0,
+                        matvecs: 0,
+                        col_matvecs: vec![0; cols],
+                        stop,
+                        stored: StoredDirections::default(),
+                        seconds: 0.0,
+                    },
+                    report,
+                );
+            }
+        }
+    }
+}
+
+/// A member of a coalesced block group, carried from the gather phase to
+/// result splitting.
+struct BlockMember {
+    b: Mat,
+    slot: Arc<Slot<BlockSolveResult>>,
+    queue_seconds: f64,
 }
 
 /// True when two queued block specs may share one coalesced group solve.
 /// Every policy that reaches the block kernel or decides basis
-/// consumption must match — not just tolerance and iteration cap, now
-/// that block requests carry preconditioning, deflation, method, and the
-/// stall window. Preconditioner and deflation compare by `Arc` identity
-/// (same shared policy object), like the operator itself.
+/// consumption must match — including, since the async redesign, the
+/// scheduling class and the deadline (members share one solve, so they
+/// must share its time budget; cancel tokens do NOT block coalescing —
+/// the group runs under an all-of cancel set instead). Preconditioner
+/// and deflation compare by `Arc` identity (same shared policy object),
+/// like the operator itself.
 fn coalescible(a: &SolveSpec, b: &SolveSpec) -> bool {
     let same_precond = match (&a.precond, &b.precond) {
         (None, None) => true,
@@ -66,72 +410,14 @@ fn coalescible(a: &SolveSpec, b: &SolveSpec) -> bool {
         && a.stall_window == b.stall_window
         && a.recompute_every == b.recompute_every
         && a.auto_jacobi == b.auto_jacobi
+        && a.priority == b.priority
+        && a.control.deadline == b.control.deadline
         && same_precond
         && same_defl
 }
 
-enum Payload {
-    Single { b: Vec<f64>, x0: Option<Vec<f64>>, slot: Arc<Slot<SolveResult>> },
-    Block { b: Mat, slot: Arc<Slot<BlockSolveResult>> },
-}
-
-/// One-shot result slot (mini oneshot channel).
-struct Slot<T> {
-    value: Mutex<Option<T>>,
-    cv: Condvar,
-}
-
-impl<T> Slot<T> {
-    fn new() -> Arc<Self> {
-        Arc::new(Slot { value: Mutex::new(None), cv: Condvar::new() })
-    }
-
-    fn put(&self, r: T) {
-        *self.value.lock().unwrap() = Some(r);
-        self.cv.notify_all();
-    }
-
-    fn take(&self) -> T {
-        let mut g = self.value.lock().unwrap();
-        while g.is_none() {
-            g = self.cv.wait(g).unwrap();
-        }
-        g.take().unwrap()
-    }
-}
-
-/// Pending future for a submitted solve.
-pub struct SolveTicket {
-    slot: Arc<Slot<SolveResult>>,
-}
-
-impl SolveTicket {
-    /// Block until the solve finishes.
-    pub fn wait(self) -> SolveResult {
-        self.slot.take()
-    }
-}
-
-/// Pending future for a submitted multi-RHS block solve.
-pub struct BlockSolveTicket {
-    slot: Arc<Slot<BlockSolveResult>>,
-}
-
-impl BlockSolveTicket {
-    /// Block until the block solve finishes. When the request was
-    /// coalesced with neighbours, the returned `x` holds exactly this
-    /// request's columns; `iterations`/`residuals`/`seconds` describe the
-    /// shared group solve, and `matvecs`/`col_matvecs` are this request's
-    /// per-column share — the applies its own columns were active for
-    /// (duplicate or early-converging columns ride nearly free), with the
-    /// group's basis-refresh overhead billed to the group's first ticket.
-    pub fn wait(self) -> BlockSolveResult {
-        self.slot.take()
-    }
-}
-
 /// Queue-side state of a sequence, guarded by a lock that is only ever
-/// held for O(1) pushes/pops — **never across a solve** — so
+/// held for O(1)-ish pushes/pops — **never across a solve** — so
 /// [`SequenceHandle::submit`] returns immediately even while a solve for
 /// this sequence is in flight (the documented pipelining contract). The
 /// solve-side state ([`RecycleManager`]) lives behind its own mutex.
@@ -139,6 +425,10 @@ struct SequenceState {
     queue: VecDeque<Task>,
     running: bool,
     closed: bool,
+    /// Cancel tokens of the request(s) currently on the drainer (all
+    /// members of a coalesced group). `shutdown(Abort)` raises these to
+    /// stop in-flight solves mid-iteration.
+    inflight: Vec<CancelToken>,
 }
 
 /// Owns the sequence's slot in the `active_sequences` gauge. Held by the
@@ -164,31 +454,203 @@ impl Drop for SeqCloser {
     }
 }
 
+/// Service-wide admission policy shared by every sequence handle.
+struct Admission {
+    /// Bound on queued-plus-running requests across the whole service.
+    queue_cap: usize,
+    /// Set by [`SolveService::shutdown`]; rejects new submissions.
+    closed: AtomicBool,
+}
+
 /// Aggregated service counters (lock-free atomics; see
 /// [`ServiceMetrics::snapshot`] for a consistent-enough named view).
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct ServiceMetrics {
     pub submitted: AtomicUsize,
     pub completed: AtomicUsize,
+    /// Submissions refused at admission (queue full / closed sequence /
+    /// shutting down).
+    pub rejected: AtomicUsize,
+    /// Completions with [`StopReason::Cancelled`].
+    pub cancelled: AtomicUsize,
+    /// Completions with [`StopReason::DeadlineExceeded`].
+    pub deadline_exceeded: AtomicUsize,
+    /// Completions with [`StopReason::Failed`] (worker panic).
+    pub failed: AtomicUsize,
     pub active_sequences: AtomicUsize,
     pub matvecs: AtomicUsize,
-    pub solve_nanos: AtomicU64,
+    /// Summed per-solve wall time (overlapping concurrent solves each
+    /// contribute their full duration — see `busy_seconds`).
+    pub busy_nanos: AtomicU64,
+    /// Requests currently queued or running (the admission gauge).
+    pub queue_depth: AtomicUsize,
+    /// High-water mark of `queue_depth`.
+    pub queue_high_water: AtomicUsize,
+    /// Time origin for the span stamps below.
+    epoch: Instant,
+    /// Nanos-since-epoch (+1, 0 = unset) of the first accepted submit.
+    first_submit_nanos: AtomicU64,
+    /// Nanos-since-epoch (+1, 0 = none) of the latest completion.
+    last_complete_nanos: AtomicU64,
+    /// Wakes `wait_idle` (shutdown/drain waiters) on completions.
+    idle: Mutex<()>,
+    idle_cv: Condvar,
+}
+
+impl ServiceMetrics {
+    fn new() -> Self {
+        ServiceMetrics {
+            submitted: AtomicUsize::new(0),
+            completed: AtomicUsize::new(0),
+            rejected: AtomicUsize::new(0),
+            cancelled: AtomicUsize::new(0),
+            deadline_exceeded: AtomicUsize::new(0),
+            failed: AtomicUsize::new(0),
+            active_sequences: AtomicUsize::new(0),
+            matvecs: AtomicUsize::new(0),
+            busy_nanos: AtomicU64::new(0),
+            queue_depth: AtomicUsize::new(0),
+            queue_high_water: AtomicUsize::new(0),
+            epoch: Instant::now(),
+            first_submit_nanos: AtomicU64::new(0),
+            last_complete_nanos: AtomicU64::new(0),
+            idle: Mutex::new(()),
+            idle_cv: Condvar::new(),
+        }
+    }
+
+    fn stamp(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64 + 1
+    }
+
+    fn note_submitted(&self) {
+        self.submitted.fetch_add(1, Ordering::SeqCst);
+        let _ = self.first_submit_nanos.compare_exchange(
+            0,
+            self.stamp(),
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+        );
+    }
+
+    fn note_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one request completion (it left the queue-or-running set):
+    /// stop-reason counters, the span stamp, the admission gauge, and
+    /// the idle wakeup for `shutdown` waiters.
+    fn note_completion(&self, stop: StopReason) {
+        match stop {
+            StopReason::Cancelled => {
+                self.cancelled.fetch_add(1, Ordering::Relaxed);
+            }
+            StopReason::DeadlineExceeded => {
+                self.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+            }
+            StopReason::Failed => {
+                self.failed.fetch_add(1, Ordering::Relaxed);
+            }
+            _ => {}
+        }
+        self.last_complete_nanos.fetch_max(self.stamp(), Ordering::Relaxed);
+        self.queue_depth.fetch_sub(1, Ordering::SeqCst);
+        self.completed.fetch_add(1, Ordering::SeqCst);
+        // Lock-then-notify so a `wait_idle` waiter between its pending
+        // check and its wait cannot miss the wakeup.
+        let _g = lock_unpoisoned(&self.idle);
+        self.idle_cv.notify_all();
+    }
+
+    /// Solver busy time + matvec bill (once per *solve*: a coalesced
+    /// group contributes its shared wall time once, while each member's
+    /// completion is counted by [`ServiceMetrics::note_completion`]).
+    fn add_busy(&self, seconds: f64, matvecs: usize) {
+        self.matvecs.fetch_add(matvecs, Ordering::Relaxed);
+        self.busy_nanos
+            .fetch_add((seconds * 1e9) as u64, Ordering::Relaxed);
+    }
+
+    /// Block until no request is queued or running. The 50 ms re-check
+    /// is a belt-and-braces bound on any lost wakeup.
+    fn wait_idle(&self) {
+        let mut g = lock_unpoisoned(&self.idle);
+        loop {
+            let submitted = self.submitted.load(Ordering::SeqCst);
+            let completed = self.completed.load(Ordering::SeqCst);
+            if submitted.saturating_sub(completed) == 0 {
+                return;
+            }
+            let (g2, _) = self
+                .idle_cv
+                .wait_timeout(g, Duration::from_millis(50))
+                .unwrap_or_else(|e| e.into_inner());
+            g = g2;
+        }
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let first = self.first_submit_nanos.load(Ordering::Relaxed);
+        let last = self.last_complete_nanos.load(Ordering::Relaxed);
+        MetricsSnapshot {
+            submitted: self.submitted.load(Ordering::SeqCst),
+            completed: self.completed.load(Ordering::SeqCst),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            cancelled: self.cancelled.load(Ordering::Relaxed),
+            deadline_exceeded: self.deadline_exceeded.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            active_sequences: self.active_sequences.load(Ordering::Relaxed),
+            busy_seconds: self.busy_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
+            span_seconds: if first > 0 && last >= first {
+                (last - first) as f64 * 1e-9
+            } else {
+                0.0
+            },
+            total_matvecs: self.matvecs.load(Ordering::Relaxed),
+            queue_depth: self.queue_depth.load(Ordering::SeqCst),
+            queue_high_water: self.queue_high_water.load(Ordering::Relaxed),
+        }
+    }
 }
 
 /// A named point-in-time view of the service counters.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct MetricsSnapshot {
-    /// Requests accepted by [`SequenceHandle::submit`].
+    /// Requests accepted by `submit`/`try_submit` (rejections excluded).
     pub submitted: usize,
-    /// Requests whose solve has finished (ticket resolvable).
+    /// Requests whose future has been completed (any stop reason).
     pub completed: usize,
+    /// Submissions refused at admission (queue full, closed sequence,
+    /// shutting down).
+    pub rejected: usize,
+    /// Completions that ended as [`StopReason::Cancelled`].
+    pub cancelled: usize,
+    /// Completions that ended as [`StopReason::DeadlineExceeded`].
+    pub deadline_exceeded: usize,
+    /// Completions that ended as [`StopReason::Failed`] (worker panic).
+    pub failed: usize,
     /// Sequences opened and not yet retired (a sequence retires when it
     /// is explicitly closed or when its last handle is dropped).
     pub active_sequences: usize,
-    /// Cumulative wall-clock seconds spent inside solvers.
-    pub total_seconds: f64,
-    /// Cumulative operator applications across all solves.
+    /// **Summed** wall-clock seconds inside solvers: two solves running
+    /// concurrently for 1 s each contribute 2 s. The utilization /
+    /// cost axis — compare against `span_seconds × workers`.
+    pub busy_seconds: f64,
+    /// Wall-clock seconds from the first accepted submission to the
+    /// latest completion — real elapsed service time, never
+    /// double-counted. `busy_seconds / span_seconds` is the average
+    /// solver parallelism. (The old `total_seconds` field summed like
+    /// `busy_seconds` while reading like `span_seconds`; the split
+    /// removes the ambiguity.)
+    pub span_seconds: f64,
+    /// Cumulative operator applications across all solves (block applies
+    /// counted per active column).
     pub total_matvecs: usize,
+    /// Requests currently queued or running (the admission gauge).
+    pub queue_depth: usize,
+    /// High-water mark of `queue_depth` — how close the service came to
+    /// its admission cap.
+    pub queue_high_water: usize,
 }
 
 impl MetricsSnapshot {
@@ -198,19 +660,8 @@ impl MetricsSnapshot {
     }
 }
 
-impl ServiceMetrics {
-    pub fn snapshot(&self) -> MetricsSnapshot {
-        MetricsSnapshot {
-            submitted: self.submitted.load(Ordering::Relaxed),
-            completed: self.completed.load(Ordering::Relaxed),
-            active_sequences: self.active_sequences.load(Ordering::Relaxed),
-            total_seconds: self.solve_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
-            total_matvecs: self.matvecs.load(Ordering::Relaxed),
-        }
-    }
-}
-
-/// The service: a shared pool plus per-sequence recycling state.
+/// The service: a shared pool, per-sequence recycling state, and the
+/// service-wide admission policy.
 pub struct SolveService {
     pool: Arc<ThreadPool>,
     /// Lazily-built pool for sharded dense matvecs ([`ParDenseOp`]).
@@ -219,14 +670,30 @@ pub struct SolveService {
     /// pool would deadlock (nested fork/join).
     compute: Mutex<Option<Arc<ThreadPool>>>,
     metrics: Arc<ServiceMetrics>,
+    admission: Arc<Admission>,
+    /// Weak registry of sequence queues, for `shutdown(Abort)` sweeps.
+    sequences: Mutex<Vec<Weak<Mutex<SequenceState>>>>,
 }
 
 impl SolveService {
+    /// Default admission cap (queued + running requests).
+    pub const DEFAULT_QUEUE_CAP: usize = 4096;
+
     pub fn new(workers: usize) -> Self {
+        Self::with_queue_cap(workers, Self::DEFAULT_QUEUE_CAP)
+    }
+
+    /// A service whose admission cap is `queue_cap`: once that many
+    /// requests are queued or running, [`SequenceHandle::try_submit`]
+    /// returns [`SubmitError::QueueFull`] (and `submit` panics).
+    pub fn with_queue_cap(workers: usize, queue_cap: usize) -> Self {
+        assert!(queue_cap >= 1, "admission cap must admit at least one request");
         SolveService {
             pool: Arc::new(ThreadPool::new(workers)),
             compute: Mutex::new(None),
-            metrics: Arc::new(ServiceMetrics::default()),
+            metrics: Arc::new(ServiceMetrics::new()),
+            admission: Arc::new(Admission { queue_cap, closed: AtomicBool::new(false) }),
+            sequences: Mutex::new(Vec::new()),
         }
     }
 
@@ -237,7 +704,7 @@ impl SolveService {
     /// The dedicated compute pool for matvec sharding (created on first
     /// use, sized to the machine).
     pub fn compute_pool(&self) -> Arc<ThreadPool> {
-        let mut g = self.compute.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.compute);
         if g.is_none() {
             *g = Some(Arc::new(ThreadPool::default_size()));
         }
@@ -256,25 +723,82 @@ impl SolveService {
     /// (k, ℓ, AW policy).
     pub fn open_sequence(&self, cfg: RecycleConfig) -> SequenceHandle {
         self.metrics.active_sequences.fetch_add(1, Ordering::Relaxed);
+        let state = Arc::new(Mutex::new(SequenceState {
+            queue: VecDeque::new(),
+            running: false,
+            closed: false,
+            inflight: Vec::new(),
+        }));
+        {
+            let mut seqs = lock_unpoisoned(&self.sequences);
+            seqs.retain(|w| w.strong_count() > 0); // prune retired sequences
+            seqs.push(Arc::downgrade(&state));
+        }
         SequenceHandle {
-            state: Arc::new(Mutex::new(SequenceState {
-                queue: VecDeque::new(),
-                running: false,
-                closed: false,
-            })),
+            state,
             mgr: Arc::new(Mutex::new(RecycleManager::new(cfg))),
             pool: self.pool.clone(),
             metrics: self.metrics.clone(),
+            admission: self.admission.clone(),
             closer: Arc::new(SeqCloser {
                 metrics: self.metrics.clone(),
                 retired: AtomicBool::new(false),
             }),
         }
     }
+
+    /// Graceful teardown. Both modes first stop admitting new work
+    /// (subsequent `try_submit`s return [`SubmitError::ShuttingDown`]),
+    /// then block until no request is queued or running:
+    ///
+    /// * [`Shutdown::Drain`] lets everything already accepted run to
+    ///   completion;
+    /// * [`Shutdown::Abort`] completes still-queued requests as
+    ///   [`StopReason::Cancelled`] without running them and raises the
+    ///   cancel flag of every in-flight solve, which stops within one
+    ///   operator application and completes as a `Cancelled` partial
+    ///   result.
+    ///
+    /// Idempotent; safe to call from any thread (not from a drainer).
+    pub fn shutdown(&self, mode: Shutdown) {
+        self.admission.closed.store(true, Ordering::SeqCst);
+        // Barrier: acquire every sequence's queue lock once AFTER setting
+        // the flag. An enqueue that passed its under-lock closed check
+        // before the store completes its push + submitted-count while
+        // still holding that lock, so it is visible to `wait_idle` once
+        // the barrier has passed; an enqueue locking after the barrier
+        // observes `closed` and is rejected. Without this, a racing
+        // submit could be accepted after `wait_idle` already returned.
+        let states: Vec<_> = lock_unpoisoned(&self.sequences)
+            .iter()
+            .filter_map(|w| w.upgrade())
+            .collect();
+        for state in &states {
+            let (tasks, inflight) = {
+                let mut st = lock_unpoisoned(state);
+                match mode {
+                    Shutdown::Drain => (Vec::new(), Vec::new()),
+                    Shutdown::Abort => {
+                        (st.queue.drain(..).collect::<Vec<_>>(), st.inflight.clone())
+                    }
+                }
+            };
+            for t in &inflight {
+                t.cancel();
+            }
+            for task in tasks {
+                let qsec = task.submitted_at.elapsed().as_secs_f64();
+                task.token.cancel();
+                task.complete_unrun(StopReason::Cancelled, &self.metrics, qsec);
+            }
+        }
+        self.metrics.wait_idle();
+    }
 }
 
-/// Handle to one solve sequence. Submissions are processed strictly FIFO
-/// (recycling transfers state from each solve to the next); distinct
+/// Handle to one solve sequence. Within a priority class, submissions
+/// are processed FIFO (recycling transfers state from each solve to the
+/// next); `Interactive` requests overtake queued `Batch` ones. Distinct
 /// sequences run concurrently on the shared pool.
 ///
 /// The queue lock (`state`) and the solve lock (`mgr`) are separate:
@@ -288,14 +812,17 @@ pub struct SequenceHandle {
     mgr: Arc<Mutex<RecycleManager>>,
     pool: Arc<ThreadPool>,
     metrics: Arc<ServiceMetrics>,
+    admission: Arc<Admission>,
     closer: Arc<SeqCloser>,
 }
 
 impl SequenceHandle {
     /// Submit the next system of this sequence with its own per-request
-    /// [`SolveSpec`] (method, tolerance, preconditioner, …). Returns a
-    /// ticket that can be waited on; submissions may be pipelined without
-    /// waiting. See [`RecycleManager::solve_next`] for how each method
+    /// [`SolveSpec`] (method, tolerance, preconditioner, priority,
+    /// deadline, …). Returns a [`SolveFuture`]; submissions may be
+    /// pipelined without waiting. Panics when the request is not
+    /// admitted — use [`SequenceHandle::try_submit`] for backpressure
+    /// handling. See [`RecycleManager::solve_next`] for how each method
     /// interacts with the sequence's recycled basis.
     pub fn submit(
         &self,
@@ -303,17 +830,44 @@ impl SequenceHandle {
         b: Vec<f64>,
         x0: Option<Vec<f64>>,
         spec: SolveSpec,
-    ) -> SolveTicket {
-        // Validate at the call site: a panic inside the drainer would
-        // poison the sequence mutex and leave the ticket waiting forever.
+    ) -> SolveFuture<SolveResult> {
+        match self.try_submit(op, b, x0, spec) {
+            Ok(f) => f,
+            Err(e) => panic!("submit on {e}"),
+        }
+    }
+
+    /// Admission-checked [`SequenceHandle::submit`]: returns the future,
+    /// or a [`SubmitError`] when the service's queue cap is reached, the
+    /// sequence is closed, or the service is shutting down. A spec that
+    /// already carries a [`CancelToken`] ([`SolveSpec::with_cancel`])
+    /// keeps it as the future's token; otherwise a fresh one is created.
+    pub fn try_submit(
+        &self,
+        op: Arc<dyn SpdOperator + Send + Sync>,
+        b: Vec<f64>,
+        x0: Option<Vec<f64>>,
+        mut spec: SolveSpec,
+    ) -> Result<SolveFuture<SolveResult>, SubmitError> {
+        // Validate at the call site: a panic inside the drainer is a
+        // Failed completion, but a dimension mismatch is a caller bug
+        // and should fail loudly where it was made.
         assert_eq!(b.len(), op.n(), "rhs dimension mismatch");
         if let Some(x0) = &x0 {
             assert_eq!(x0.len(), op.n(), "x0 dimension mismatch");
         }
+        let token = spec.control.token().cloned().unwrap_or_default();
+        spec.control.set_token(token.clone());
         let slot = Slot::new();
-        let task = Task { op, spec, payload: Payload::Single { b, x0, slot: slot.clone() } };
-        self.enqueue(task);
-        SolveTicket { slot }
+        let task = Task {
+            op,
+            spec,
+            token: token.clone(),
+            submitted_at: Instant::now(),
+            payload: Payload::Single { b, x0, slot: slot.clone() },
+        };
+        self.enqueue(task)?;
+        Ok(SolveFuture { slot, token })
     }
 
     /// Submit a genuine multi-RHS block `A X = B` (one column per RHS) for
@@ -325,42 +879,98 @@ impl SequenceHandle {
     /// extraction, so coalesced multi-RHS traffic enjoys the same
     /// iteration decay across a sequence as the single-RHS path. The
     /// spec's preconditioner (explicit or `auto_jacobi`) is honored too.
+    /// Panics when the request is not admitted — use
+    /// [`SequenceHandle::try_submit_block`] for backpressure handling.
     ///
     /// **Coalescing:** consecutive queued block requests on the same
     /// operator (`Arc` identity) with the same block-relevant policy set
     /// (tolerance, iteration cap, method, stall window,
-    /// residual-replacement period, auto-Jacobi flag, and
-    /// preconditioner/deflation identity) are drained as a single
-    /// block solve over their concatenated columns —
+    /// residual-replacement period, auto-Jacobi flag, priority,
+    /// deadline, and preconditioner/deflation identity) are drained as a
+    /// single block solve over their concatenated columns —
     /// same-sequence multi-RHS traffic shares the block Krylov space and
-    /// the per-iteration `apply_block` data pass. Each ticket still
+    /// the per-iteration `apply_block` data pass. Each future still
     /// receives exactly its own solution columns, and is billed exactly
     /// its own columns' operator applications (`col_matvecs` shares):
-    /// duplicate or early-converging columns ride nearly free.
+    /// duplicate or early-converging columns ride nearly free, with the
+    /// group's basis-refresh overhead billed to the group's first
+    /// member. Cancelling one member never aborts the shared solve; the
+    /// group stops early only when every member cancelled.
     pub fn submit_block(
         &self,
         op: Arc<dyn SpdOperator + Send + Sync>,
         b: Mat,
         spec: SolveSpec,
-    ) -> BlockSolveTicket {
-        assert_eq!(b.rows(), op.n(), "rhs block dimension mismatch");
-        assert!(b.cols() >= 1, "rhs block needs at least one column");
-        let slot = Slot::new();
-        let task = Task { op, spec, payload: Payload::Block { b, slot: slot.clone() } };
-        self.enqueue(task);
-        BlockSolveTicket { slot }
+    ) -> SolveFuture<BlockSolveResult> {
+        match self.try_submit_block(op, b, spec) {
+            Ok(f) => f,
+            Err(e) => panic!("submit on {e}"),
+        }
     }
 
-    fn enqueue(&self, task: Task) {
-        let mut st = self.state.lock().unwrap();
-        assert!(!st.closed, "submit on closed sequence");
-        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+    /// Admission-checked [`SequenceHandle::submit_block`].
+    pub fn try_submit_block(
+        &self,
+        op: Arc<dyn SpdOperator + Send + Sync>,
+        b: Mat,
+        mut spec: SolveSpec,
+    ) -> Result<SolveFuture<BlockSolveResult>, SubmitError> {
+        assert_eq!(b.rows(), op.n(), "rhs block dimension mismatch");
+        assert!(b.cols() >= 1, "rhs block needs at least one column");
+        let token = spec.control.token().cloned().unwrap_or_default();
+        spec.control.set_token(token.clone());
+        let slot = Slot::new();
+        let task = Task {
+            op,
+            spec,
+            token: token.clone(),
+            submitted_at: Instant::now(),
+            payload: Payload::Block { b, slot: slot.clone() },
+        };
+        self.enqueue(task)?;
+        Ok(SolveFuture { slot, token })
+    }
+
+    fn enqueue(&self, task: Task) -> Result<(), SubmitError> {
+        if self.admission.closed.load(Ordering::SeqCst) {
+            self.metrics.note_rejected();
+            return Err(SubmitError::ShuttingDown);
+        }
+        // Reserve an admission slot (queued and running requests both
+        // occupy one until their completion releases it).
+        let depth = self.metrics.queue_depth.fetch_add(1, Ordering::SeqCst) + 1;
+        if depth > self.admission.queue_cap {
+            self.metrics.queue_depth.fetch_sub(1, Ordering::SeqCst);
+            self.metrics.note_rejected();
+            return Err(SubmitError::QueueFull);
+        }
+        self.metrics.queue_high_water.fetch_max(depth, Ordering::Relaxed);
+        let mut st = lock_unpoisoned(&self.state);
+        // Re-check shutdown UNDER the queue lock: `shutdown(Abort)` sweeps
+        // each sequence queue under this same lock after setting the flag,
+        // so a submit racing the sweep either lands before it (and is
+        // swept to a Cancelled completion) or observes `closed` here and
+        // is rejected — never accepted-and-run after shutdown returned.
+        if self.admission.closed.load(Ordering::SeqCst) {
+            drop(st);
+            self.metrics.queue_depth.fetch_sub(1, Ordering::SeqCst);
+            self.metrics.note_rejected();
+            return Err(SubmitError::ShuttingDown);
+        }
+        if st.closed {
+            drop(st);
+            self.metrics.queue_depth.fetch_sub(1, Ordering::SeqCst);
+            self.metrics.note_rejected();
+            return Err(SubmitError::SequenceClosed);
+        }
+        self.metrics.note_submitted();
         st.queue.push_back(task);
         if !st.running {
             st.running = true;
             drop(st);
             self.spawn_drainer();
         }
+        Ok(())
     }
 
     fn spawn_drainer(&self) {
@@ -368,107 +978,245 @@ impl SequenceHandle {
         let mgr = self.mgr.clone();
         let metrics = self.metrics.clone();
         self.pool.spawn(move || loop {
-            let task = {
-                let mut st = state.lock().unwrap();
-                match st.queue.pop_front() {
-                    Some(t) => t,
-                    None => {
-                        st.running = false;
-                        return;
-                    }
+            // Priority-aware pop: serve the most urgent class present,
+            // FIFO within the class. With exactly two classes this is
+            // one early-exiting scan — the first Interactive task wins,
+            // else the front (oldest Batch). Worst case O(queue), which
+            // the admission cap bounds; the lock is never held across a
+            // solve. `idx` is remembered so a block leader can coalesce
+            // with the requests right behind it.
+            let (task, idx) = {
+                let mut st = lock_unpoisoned(&state);
+                if st.queue.is_empty() {
+                    st.running = false;
+                    st.inflight.clear();
+                    return;
                 }
+                let idx = st
+                    .queue
+                    .iter()
+                    .position(|t| t.spec.priority == Priority::Interactive)
+                    .unwrap_or(0);
+                let task = st.queue.remove(idx).expect("index valid under the lock");
+                st.inflight = vec![task.token.clone()];
+                (task, idx)
             };
-            match task.payload {
+            let dequeued = Instant::now();
+            let queue_seconds =
+                dequeued.saturating_duration_since(task.submitted_at).as_secs_f64();
+            // Dead on arrival: cancelled or deadline-expired while
+            // queued — complete without touching the solve state (no
+            // matvecs, no history entry, no basis change).
+            if task.token.is_cancelled() {
+                task.complete_unrun(StopReason::Cancelled, &metrics, queue_seconds);
+                continue;
+            }
+            if task.spec.control.deadline.is_some_and(|d| dequeued >= d) {
+                task.complete_unrun(StopReason::DeadlineExceeded, &metrics, queue_seconds);
+                continue;
+            }
+            let Task { op, spec, token, payload, .. } = task;
+            match payload {
                 Payload::Single { b, x0, slot } => {
                     // The solve runs under the dedicated solve mutex, NOT
                     // the queue lock — submissions pipeline freely while
-                    // this solve is in flight, and there is exactly one
-                    // drainer per sequence so FIFO recycling order is
-                    // preserved. Distinct sequences proceed in parallel.
-                    let result = {
-                        let mut mg = mgr.lock().unwrap();
-                        mg.solve_next(task.op.as_ref(), &b, x0.as_deref(), &task.spec)
-                    };
-                    metrics.completed.fetch_add(1, Ordering::Relaxed);
-                    metrics.matvecs.fetch_add(result.matvecs, Ordering::Relaxed);
-                    metrics
-                        .solve_nanos
-                        .fetch_add((result.seconds * 1e9) as u64, Ordering::Relaxed);
-                    slot.put(result);
+                    // this solve is in flight. A panicking solve (operator
+                    // bug) is caught: the future completes as Failed and
+                    // the drainer keeps going, so no caller ever waits on
+                    // a dead worker.
+                    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        let mut mg = lock_unpoisoned(&mgr);
+                        mg.solve_next(op.as_ref(), &b, x0.as_deref(), &spec)
+                    }));
+                    match outcome {
+                        Ok(result) => {
+                            let k_active = lock_unpoisoned(&mgr).k_active();
+                            metrics.add_busy(result.seconds, result.matvecs);
+                            let report = SolveReport {
+                                stop: result.stop,
+                                queue_seconds,
+                                solve_seconds: result.seconds,
+                                matvecs: result.matvecs,
+                                k_active,
+                                group_size: 1,
+                            };
+                            metrics.note_completion(result.stop);
+                            slot.put(result, report);
+                        }
+                        Err(_) => {
+                            let report = SolveReport {
+                                stop: StopReason::Failed,
+                                queue_seconds,
+                                solve_seconds: 0.0,
+                                matvecs: 0,
+                                k_active: 0,
+                                group_size: 1,
+                            };
+                            metrics.note_completion(StopReason::Failed);
+                            slot.put(
+                                SolveResult {
+                                    x: x0.unwrap_or_else(|| vec![0.0; op.n()]),
+                                    residuals: vec![f64::INFINITY],
+                                    iterations: 0,
+                                    matvecs: 0,
+                                    stop: StopReason::Failed,
+                                    stored: StoredDirections::default(),
+                                    seconds: 0.0,
+                                },
+                                report,
+                            );
+                        }
+                    }
                 }
                 Payload::Block { b, slot } => {
                     // Coalesce: pull every *consecutive* queued block
-                    // request that shares this operator and the full
-                    // block-relevant policy set into one group solve.
-                    let mut rhs = vec![(b, slot)];
+                    // request (consecutive within this priority class —
+                    // the leader was the first task of the best class,
+                    // so its successors start right at `idx`) that
+                    // shares this operator and the full block-relevant
+                    // policy set into one group solve. Members already
+                    // cancelled are left queued; their own dequeue
+                    // completes them as Cancelled.
+                    let mut members =
+                        vec![BlockMember { b, slot, queue_seconds }];
+                    let mut tokens = vec![token.clone()];
                     {
-                        let mut st = state.lock().unwrap();
-                        while st.queue.front().is_some_and(|next| {
-                            matches!(&next.payload, Payload::Block { .. })
-                                && Arc::ptr_eq(&next.op, &task.op)
-                                && coalescible(&next.spec, &task.spec)
-                        }) {
-                            let next = st.queue.pop_front().unwrap();
+                        let mut st = lock_unpoisoned(&state);
+                        let mut cursor = idx;
+                        while let Some(next) = st.queue.get(cursor) {
+                            let matches_group = matches!(&next.payload, Payload::Block { .. })
+                                && Arc::ptr_eq(&next.op, &op)
+                                && coalescible(&next.spec, &spec);
+                            if !matches_group {
+                                break;
+                            }
+                            // A member cancelled while still queued is
+                            // skipped (left for its own dequeue, which
+                            // completes it as Cancelled without running)
+                            // WITHOUT breaking the group apart: the
+                            // members behind it still coalesce.
+                            if next.token.is_cancelled() {
+                                cursor += 1;
+                                continue;
+                            }
+                            let next = st.queue.remove(cursor).expect("checked above");
+                            tokens.push(next.token.clone());
+                            let qs = dequeued
+                                .saturating_duration_since(next.submitted_at)
+                                .as_secs_f64();
                             match next.payload {
-                                Payload::Block { b, slot } => rhs.push((b, slot)),
+                                Payload::Block { b, slot } => {
+                                    members.push(BlockMember { b, slot, queue_seconds: qs });
+                                }
                                 Payload::Single { .. } => unreachable!(),
                             }
                         }
+                        st.inflight = tokens.clone();
                     }
-                    let n = task.op.n();
-                    let total: usize = rhs.iter().map(|(b, _)| b.cols()).sum();
+                    // The shared solve runs under an all-of cancel group
+                    // (stops only when every member cancelled) and the
+                    // members' common deadline.
+                    let mut gspec = spec.clone();
+                    gspec.control = SolveControl::all_of(tokens, spec.control.deadline);
+                    let n = op.n();
+                    let total: usize = members.iter().map(|m| m.b.cols()).sum();
                     let mut big = Mat::zeros(n, total);
                     let mut off = 0;
-                    for (b, _) in &rhs {
-                        for j in 0..b.cols() {
-                            big.set_col(off + j, &b.col(j));
+                    for m in &members {
+                        for j in 0..m.b.cols() {
+                            big.set_col(off + j, &m.b.col(j));
                         }
-                        off += b.cols();
+                        off += m.b.cols();
                     }
-                    let result = {
-                        let mut mg = mgr.lock().unwrap();
-                        mg.solve_block(task.op.as_ref(), &big, &task.spec)
-                    };
-                    metrics.completed.fetch_add(rhs.len(), Ordering::Relaxed);
-                    metrics.matvecs.fetch_add(result.matvecs, Ordering::Relaxed);
-                    metrics
-                        .solve_nanos
-                        .fetch_add((result.seconds * 1e9) as u64, Ordering::Relaxed);
-                    // Split the group result back into per-ticket slices.
-                    // Each ticket is billed its own columns' applications
-                    // (rank-dropped columns ride free); the group-level
-                    // overhead that no column owns — the AW-refresh cost
-                    // of the sequence's recycled basis — lands on the
-                    // first ticket so shares still sum to the group total
-                    // the metrics recorded.
-                    let col_share: usize = result.col_matvecs.iter().sum();
-                    let mut overhead = result.matvecs - col_share;
-                    let mut off = 0;
-                    for (b, slot) in rhs {
-                        let cols = b.cols();
-                        let mut x = Mat::zeros(n, cols);
-                        let mut col_matvecs = Vec::with_capacity(cols);
-                        for j in 0..cols {
-                            x.set_col(j, &result.x.col(off + j));
-                            col_matvecs.push(result.col_matvecs[off + j]);
+                    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        let mut mg = lock_unpoisoned(&mgr);
+                        mg.solve_block(op.as_ref(), &big, &gspec)
+                    }));
+                    match outcome {
+                        Ok(result) => {
+                            let k_active = lock_unpoisoned(&mgr).k_active();
+                            metrics.add_busy(result.seconds, result.matvecs);
+                            // Split the group result back into per-member
+                            // slices. Each member is billed its own
+                            // columns' applications (rank-dropped columns
+                            // ride free); the group-level overhead that no
+                            // column owns — the AW-refresh cost of the
+                            // sequence's recycled basis — lands on the
+                            // first member so shares still sum to the
+                            // group total the metrics recorded.
+                            let col_share: usize = result.col_matvecs.iter().sum();
+                            let mut overhead = result.matvecs - col_share;
+                            let group_size = members.len();
+                            let mut off = 0;
+                            for m in members {
+                                let cols = m.b.cols();
+                                let mut x = Mat::zeros(n, cols);
+                                let mut col_matvecs = Vec::with_capacity(cols);
+                                for j in 0..cols {
+                                    x.set_col(j, &result.x.col(off + j));
+                                    col_matvecs.push(result.col_matvecs[off + j]);
+                                }
+                                off += cols;
+                                let matvecs = col_matvecs.iter().sum::<usize>()
+                                    + std::mem::take(&mut overhead);
+                                let report = SolveReport {
+                                    stop: result.stop,
+                                    queue_seconds: m.queue_seconds,
+                                    solve_seconds: result.seconds,
+                                    matvecs,
+                                    k_active,
+                                    group_size,
+                                };
+                                metrics.note_completion(result.stop);
+                                m.slot.put(
+                                    BlockSolveResult {
+                                        x,
+                                        residuals: result.residuals.clone(),
+                                        iterations: result.iterations,
+                                        block_matvecs: result.block_matvecs,
+                                        matvecs,
+                                        col_matvecs,
+                                        stop: result.stop,
+                                        // The group's stored directions
+                                        // already fed the sequence basis;
+                                        // per-member results do not
+                                        // re-export them.
+                                        stored: Default::default(),
+                                        seconds: result.seconds,
+                                    },
+                                    report,
+                                );
+                            }
                         }
-                        off += cols;
-                        let matvecs =
-                            col_matvecs.iter().sum::<usize>() + std::mem::take(&mut overhead);
-                        slot.put(BlockSolveResult {
-                            x,
-                            residuals: result.residuals.clone(),
-                            iterations: result.iterations,
-                            block_matvecs: result.block_matvecs,
-                            matvecs,
-                            col_matvecs,
-                            stop: result.stop,
-                            // The group's stored directions already fed
-                            // the sequence basis; per-ticket results do
-                            // not re-export them.
-                            stored: Default::default(),
-                            seconds: result.seconds,
-                        });
+                        Err(_) => {
+                            let group_size = members.len();
+                            for m in members {
+                                let cols = m.b.cols();
+                                let report = SolveReport {
+                                    stop: StopReason::Failed,
+                                    queue_seconds: m.queue_seconds,
+                                    solve_seconds: 0.0,
+                                    matvecs: 0,
+                                    k_active: 0,
+                                    group_size,
+                                };
+                                metrics.note_completion(StopReason::Failed);
+                                m.slot.put(
+                                    BlockSolveResult {
+                                        x: Mat::zeros(n, cols),
+                                        residuals: vec![f64::INFINITY],
+                                        iterations: 0,
+                                        block_matvecs: 0,
+                                        matvecs: 0,
+                                        col_matvecs: vec![0; cols],
+                                        stop: StopReason::Failed,
+                                        stored: StoredDirections::default(),
+                                        seconds: 0.0,
+                                    },
+                                    report,
+                                );
+                            }
+                        }
                     }
                 }
             }
@@ -477,20 +1225,22 @@ impl SequenceHandle {
 
     /// Per-system statistics accumulated by this sequence's manager.
     /// Waits for an in-flight solve (it reads the solve-side state).
+    /// Requests completed without running (cancelled in queue, swept by
+    /// `shutdown(Abort)`, failed) never appear here.
     pub fn history(&self) -> Vec<SystemStats> {
-        self.mgr.lock().unwrap().history().to_vec()
+        lock_unpoisoned(&self.mgr).history().to_vec()
     }
 
     /// Current recycled-basis dimension. Waits for an in-flight solve.
     pub fn k_active(&self) -> usize {
-        self.mgr.lock().unwrap().k_active()
+        lock_unpoisoned(&self.mgr).k_active()
     }
 
-    /// Close the sequence (subsequent submits panic) and retire it from
-    /// the `active_sequences` gauge. Idempotent; dropping the last handle
-    /// without closing retires the gauge slot too.
+    /// Close the sequence (subsequent submits are rejected) and retire
+    /// it from the `active_sequences` gauge. Idempotent; dropping the
+    /// last handle without closing retires the gauge slot too.
     pub fn close(&self) {
-        self.state.lock().unwrap().closed = true;
+        lock_unpoisoned(&self.state).closed = true;
         self.closer.retire();
     }
 }
@@ -519,6 +1269,49 @@ mod tests {
         Arc::new(OwnedDense(Mat::rand_spd(n, 1e4, &mut rng)))
     }
 
+    fn spd_mat(a: Mat) -> Arc<OwnedDense> {
+        Arc::new(OwnedDense(a))
+    }
+
+    /// Operator that parks every matvec until released, recording how
+    /// many applications started — the deterministic probe for
+    /// mid-solve cancellation and pipelining tests.
+    struct SlowOp {
+        a: Mat,
+        started: Arc<AtomicBool>,
+        release: Arc<AtomicBool>,
+        calls: Arc<AtomicUsize>,
+    }
+
+    impl SlowOp {
+        fn new(a: Mat) -> (Arc<Self>, Arc<AtomicBool>, Arc<AtomicBool>, Arc<AtomicUsize>) {
+            let started = Arc::new(AtomicBool::new(false));
+            let release = Arc::new(AtomicBool::new(false));
+            let calls = Arc::new(AtomicUsize::new(0));
+            let op = Arc::new(SlowOp {
+                a,
+                started: started.clone(),
+                release: release.clone(),
+                calls: calls.clone(),
+            });
+            (op, started, release, calls)
+        }
+    }
+
+    impl SpdOperator for SlowOp {
+        fn n(&self) -> usize {
+            self.a.rows()
+        }
+        fn matvec(&self, x: &[f64], y: &mut [f64]) {
+            self.calls.fetch_add(1, Ordering::SeqCst);
+            self.started.store(true, Ordering::SeqCst);
+            while !self.release.load(Ordering::SeqCst) {
+                std::thread::yield_now();
+            }
+            self.a.matvec_into(x, y);
+        }
+    }
+
     #[test]
     fn single_sequence_solves_in_order_with_recycling() {
         let svc = SolveService::new(2);
@@ -526,10 +1319,10 @@ mod tests {
         let op = spd(60, 1);
         let b = vec![1.0; 60];
         let spec = SolveSpec::defcg().with_tol(1e-8);
-        let tickets: Vec<_> = (0..4)
+        let futures: Vec<_> = (0..4)
             .map(|_| seq.submit(op.clone(), b.clone(), None, spec.clone()))
             .collect();
-        let results: Vec<_> = tickets.into_iter().map(|t| t.wait()).collect();
+        let results: Vec<_> = futures.into_iter().map(|t| t.wait()).collect();
         for r in &results {
             assert_eq!(r.stop, StopReason::Converged);
         }
@@ -563,10 +1356,16 @@ mod tests {
         assert_eq!(snap.submitted, 6);
         assert_eq!(snap.completed, 6);
         assert_eq!(snap.in_flight(), 0);
+        assert_eq!(snap.queue_depth, 0, "completions release their admission slots");
+        assert!(snap.queue_high_water >= 2);
         // The consume loop dropped every handle: the sequences retired.
         assert_eq!(snap.active_sequences, 0);
         assert!(snap.total_matvecs > 0);
-        assert!(snap.total_seconds >= 0.0);
+        assert!(snap.busy_seconds >= 0.0);
+        assert!(
+            snap.span_seconds > 0.0,
+            "first-submit→last-complete span must be recorded"
+        );
     }
 
     #[test]
@@ -586,11 +1385,11 @@ mod tests {
             SolveSpec::defcg().with_tol(1e-8), // consumes the basis
             SolveSpec::blockcg().with_tol(1e-8), // deflated 1-col block, feeds too
         ];
-        let tickets: Vec<_> = specs
+        let futures: Vec<_> = specs
             .into_iter()
             .map(|spec| seq.submit(op.clone(), b.clone(), None, spec))
             .collect();
-        let results: Vec<_> = tickets.into_iter().map(|t| t.wait()).collect();
+        let results: Vec<_> = futures.into_iter().map(|t| t.wait()).collect();
         for (i, r) in results.iter().enumerate() {
             assert_eq!(r.stop, StopReason::Converged, "request {i}");
         }
@@ -617,13 +1416,13 @@ mod tests {
         let svc = SolveService::new(2);
         let seq = svc.open_sequence(RecycleConfig::default());
         let op = spd(30, 7);
-        let tickets: Vec<_> = (0..8)
+        let futures: Vec<_> = (0..8)
             .map(|i| {
                 let b: Vec<f64> = (0..30).map(|j| ((i + j) % 5) as f64 + 1.0).collect();
                 seq.submit(op.clone(), b, None, SolveSpec::defcg().with_tol(1e-6))
             })
             .collect();
-        for t in tickets {
+        for t in futures {
             assert_eq!(t.wait().stop, StopReason::Converged);
         }
         assert_eq!(seq.history().len(), 8);
@@ -639,9 +1438,9 @@ mod tests {
         let x_true = Mat::randn(n, 3, &mut rng);
         let b = a.matmul(&x_true);
         let op = spd_mat(a);
-        let r = seq
+        let (r, report) = seq
             .submit_block(op, b, SolveSpec::blockcg().with_tol(1e-10))
-            .wait();
+            .wait_report();
         assert_eq!(r.stop, StopReason::Converged);
         assert!(r.x.max_abs_diff(&x_true) < 1e-5);
         // Per-column accounting: the sum of the per-column applies, never
@@ -649,6 +1448,13 @@ mod tests {
         // paying).
         assert_eq!(r.matvecs, r.col_matvecs.iter().sum::<usize>());
         assert!(r.matvecs <= 3 * r.block_matvecs);
+        // The structured report mirrors the result and the queue stats.
+        assert_eq!(report.stop, StopReason::Converged);
+        assert_eq!(report.matvecs, r.matvecs);
+        assert_eq!(report.group_size, 1);
+        assert!(report.queue_seconds >= 0.0);
+        assert!(report.solve_seconds >= 0.0);
+        assert!(report.k_active > 0, "the block solve fed the basis");
         let snap = svc.metrics().snapshot();
         assert_eq!(snap.submitted, 1);
         assert_eq!(snap.completed, 1);
@@ -681,7 +1487,7 @@ mod tests {
             })
         };
         let spec = SolveSpec::blockcg().with_tol(1e-9);
-        let tickets: Vec<_> = (0..3)
+        let futures: Vec<_> = (0..3)
             .map(|g| {
                 let cols: Vec<usize> = match g {
                     0 => vec![0, 1],
@@ -697,11 +1503,14 @@ mod tests {
             .collect();
         gate.store(true, Ordering::Relaxed);
         held.join();
-        let results: Vec<_> = tickets.into_iter().map(|t| t.wait()).collect();
-        for (g, r) in results.iter().enumerate() {
+        let results: Vec<_> = futures.into_iter().map(|t| t.wait_report()).collect();
+        for (g, (r, report)) in results.iter().enumerate() {
             assert_eq!(r.stop, StopReason::Converged, "group {g}");
+            assert_eq!(report.group_size, 3, "group {g} must report the coalesce width");
+            assert_eq!(report.matvecs, r.matvecs);
         }
-        // Each ticket got exactly its own columns back.
+        let results: Vec<_> = results.into_iter().map(|(r, _)| r).collect();
+        // Each future got exactly its own columns back.
         assert!((results[0].x.col(0)[0] - x_true[(0, 0)]).abs() < 1e-4);
         assert!(results[0].x.max_abs_diff(&{
             let mut m = Mat::zeros(n, 2);
@@ -716,7 +1525,7 @@ mod tests {
         assert_eq!(hist.len(), 1, "3 block submissions must coalesce into 1 solve");
         assert_eq!(results[0].iterations, results[1].iterations);
         assert_eq!(results[0].residuals, results[2].residuals);
-        // Per-ticket matvec shares sum EXACTLY to the group total in the
+        // Per-future matvec shares sum EXACTLY to the group total in the
         // metrics, with dropped columns paying only the applies they were
         // active for.
         let share: usize = results.iter().map(|r| r.matvecs).sum();
@@ -770,6 +1579,272 @@ mod tests {
     }
 
     #[test]
+    fn mismatched_deadlines_do_not_coalesce() {
+        // A deadline is part of the block-relevant policy set: members
+        // share one solve, so they must share its time budget.
+        let svc = SolveService::new(1);
+        let seq = svc.open_sequence(RecycleConfig::default());
+        let mut rng = Rng::new(43);
+        let n = 40;
+        let a = Mat::rand_spd(n, 1e3, &mut rng);
+        let b = a.matmul(&Mat::randn(n, 2, &mut rng));
+        let op = spd_mat(a);
+        let gate = Arc::new(AtomicBool::new(false));
+        let held = {
+            let gate = gate.clone();
+            seq.pool.spawn(move || {
+                while !gate.load(Ordering::Relaxed) {
+                    std::thread::yield_now();
+                }
+            })
+        };
+        let spec = SolveSpec::blockcg().with_tol(1e-9);
+        let t1 = seq.submit_block(op.clone(), b.clone(), spec.clone());
+        let t2 = seq.submit_block(
+            op.clone(),
+            b.clone(),
+            spec.clone().with_deadline(Duration::from_secs(3600)),
+        );
+        gate.store(true, Ordering::Relaxed);
+        held.join();
+        assert_eq!(t1.wait().stop, StopReason::Converged);
+        assert_eq!(t2.wait().stop, StopReason::Converged);
+        assert_eq!(seq.history().len(), 2, "different deadlines must not coalesce");
+    }
+
+    #[test]
+    fn queued_cancelled_member_is_skipped_without_splitting_the_group() {
+        // A member cancelled while still queued is left out of the group
+        // but must NOT break it apart: the members behind it still
+        // coalesce into the leader's solve (one history entry), and the
+        // cancelled one completes unrun at its own dequeue.
+        let svc = SolveService::new(1);
+        let seq = svc.open_sequence(RecycleConfig::default());
+        let mut rng = Rng::new(48);
+        let n = 40;
+        let a = Mat::rand_spd(n, 1e3, &mut rng);
+        let b = a.matmul(&Mat::randn(n, 2, &mut rng));
+        let op = spd_mat(a);
+        let gate = Arc::new(AtomicBool::new(false));
+        let held = {
+            let gate = gate.clone();
+            seq.pool.spawn(move || {
+                while !gate.load(Ordering::Relaxed) {
+                    std::thread::yield_now();
+                }
+            })
+        };
+        let spec = SolveSpec::blockcg().with_tol(1e-9);
+        let t1 = seq.submit_block(op.clone(), b.clone(), spec.clone());
+        let t2 = seq.submit_block(op.clone(), b.clone(), spec.clone());
+        let t3 = seq.submit_block(op.clone(), b.clone(), spec.clone());
+        t2.cancel(); // cancelled while provably still queued (drainer parked)
+        gate.store(true, Ordering::Relaxed);
+        held.join();
+        let (r1, rep1) = t1.wait_report();
+        let r2 = t2.wait();
+        let (r3, rep3) = t3.wait_report();
+        assert_eq!(r1.stop, StopReason::Converged);
+        assert_eq!(r3.stop, StopReason::Converged);
+        assert_eq!(r2.stop, StopReason::Cancelled);
+        assert_eq!(r2.matvecs, 0, "the queued-cancelled member never ran");
+        assert_eq!(rep1.group_size, 2, "members 1 and 3 still form ONE group");
+        assert_eq!(rep3.group_size, 2);
+        assert_eq!(
+            seq.history().len(),
+            1,
+            "skipping a cancelled member must not split the group into two solves"
+        );
+        assert_eq!(svc.metrics().snapshot().cancelled, 1);
+    }
+
+    #[test]
+    fn coalesced_member_cancel_needs_every_member() {
+        // All-of cancel semantics: with two members coalesced into one
+        // group solve, cancelling ONE future must not abort the shared
+        // solve — the other member still converges. (Cancelling a member
+        // while it is still queued instead excludes it from the group.)
+        let mut rng = Rng::new(44);
+        let n = 30;
+        let a = Mat::rand_spd(n, 1e3, &mut rng);
+        let b = a.matmul(&Mat::randn(n, 2, &mut rng));
+        let (op, started, release, _calls) = SlowOp::new(a);
+        let svc = SolveService::new(1);
+        let seq = svc.open_sequence(RecycleConfig::default());
+        // Park the drainer worker so both requests queue, then coalesce.
+        let gate = Arc::new(AtomicBool::new(false));
+        let held = {
+            let gate = gate.clone();
+            seq.pool.spawn(move || {
+                while !gate.load(Ordering::Relaxed) {
+                    std::thread::yield_now();
+                }
+            })
+        };
+        let spec = SolveSpec::blockcg().with_tol(1e-9);
+        let t1 = seq.submit_block(op.clone(), b.clone(), spec.clone());
+        let t2 = seq.submit_block(op.clone(), b.clone(), spec.clone());
+        gate.store(true, Ordering::Relaxed);
+        held.join();
+        // Wait until the group solve is provably inside the operator,
+        // cancel ONE member, then release the operator.
+        while !started.load(Ordering::SeqCst) {
+            std::thread::yield_now();
+        }
+        t2.cancel();
+        release.store(true, Ordering::SeqCst);
+        let (r1, rep1) = t1.wait_report();
+        let r2 = t2.wait();
+        assert_eq!(rep1.group_size, 2, "the two requests coalesced");
+        assert_eq!(r1.stop, StopReason::Converged, "one cancel must not abort the group");
+        // The cancelled member rode the same group solve to completion
+        // (its flag was raised too late to exclude it from the group).
+        assert_eq!(r2.stop, StopReason::Converged);
+        assert_eq!(seq.history().len(), 1);
+    }
+
+    #[test]
+    fn coalesced_group_stops_when_every_member_cancels() {
+        let mut rng = Rng::new(45);
+        let n = 30;
+        let a = Mat::rand_spd(n, 1e5, &mut rng);
+        let b = a.matmul(&Mat::randn(n, 2, &mut rng));
+        let (op, started, release, calls) = SlowOp::new(a);
+        let svc = SolveService::new(1);
+        let seq = svc.open_sequence(RecycleConfig::default());
+        let gate = Arc::new(AtomicBool::new(false));
+        let held = {
+            let gate = gate.clone();
+            seq.pool.spawn(move || {
+                while !gate.load(Ordering::Relaxed) {
+                    std::thread::yield_now();
+                }
+            })
+        };
+        let spec = SolveSpec::blockcg().with_tol(1e-12);
+        let t1 = seq.submit_block(op.clone(), b.clone(), spec.clone());
+        let t2 = seq.submit_block(op.clone(), b.clone(), spec.clone());
+        gate.store(true, Ordering::Relaxed);
+        held.join();
+        while !started.load(Ordering::SeqCst) {
+            std::thread::yield_now();
+        }
+        t1.cancel();
+        t2.cancel();
+        let at_cancel = calls.load(Ordering::SeqCst);
+        release.store(true, Ordering::SeqCst);
+        let r1 = t1.wait();
+        let r2 = t2.wait();
+        assert_eq!(r1.stop, StopReason::Cancelled);
+        assert_eq!(r2.stop, StopReason::Cancelled);
+        // Within one *block* application of the (complete) cancel: the
+        // in-flight apply_block finishes its remaining columns (≤ 4
+        // here), then the per-iteration check stops the group.
+        assert!(
+            calls.load(Ordering::SeqCst) <= at_cancel + 4,
+            "group kept applying the operator after every member cancelled"
+        );
+        // Cancelled work is never absorbed into the sequence basis.
+        assert_eq!(seq.k_active(), 0);
+        let snap = svc.metrics().snapshot();
+        assert_eq!(snap.cancelled, 2);
+    }
+
+    #[test]
+    fn interactive_requests_jump_batch_queue() {
+        // Priority-aware pop: with batch work queued first, a later
+        // interactive request must run first once the drainer frees up.
+        struct TagOp {
+            a: Mat,
+            tag: usize,
+            log: Arc<Mutex<Vec<usize>>>,
+            logged: AtomicBool,
+        }
+        impl SpdOperator for TagOp {
+            fn n(&self) -> usize {
+                self.a.rows()
+            }
+            fn matvec(&self, x: &[f64], y: &mut [f64]) {
+                if !self.logged.swap(true, Ordering::SeqCst) {
+                    lock_unpoisoned(&self.log).push(self.tag);
+                }
+                self.a.matvec_into(x, y);
+            }
+        }
+        let mut rng = Rng::new(46);
+        let a = Mat::rand_spd(25, 1e3, &mut rng);
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let mk = |tag: usize| {
+            Arc::new(TagOp {
+                a: a.clone(),
+                tag,
+                log: log.clone(),
+                logged: AtomicBool::new(false),
+            })
+        };
+        let svc = SolveService::new(1);
+        let seq = svc.open_sequence(RecycleConfig::default());
+        // Park the one worker so the queue builds up before draining.
+        let gate = Arc::new(AtomicBool::new(false));
+        let held = {
+            let gate = gate.clone();
+            seq.pool.spawn(move || {
+                while !gate.load(Ordering::Relaxed) {
+                    std::thread::yield_now();
+                }
+            })
+        };
+        let b = vec![1.0; 25];
+        let batch = SolveSpec::cg().with_tol(1e-8).batch();
+        let t1 = seq.submit(mk(1), b.clone(), None, batch.clone());
+        let t2 = seq.submit(mk(2), b.clone(), None, batch);
+        let t3 = seq.submit(mk(3), b.clone(), None, SolveSpec::cg().with_tol(1e-8));
+        gate.store(true, Ordering::Relaxed);
+        held.join();
+        assert_eq!(t1.wait().stop, StopReason::Converged);
+        assert_eq!(t2.wait().stop, StopReason::Converged);
+        assert_eq!(t3.wait().stop, StopReason::Converged);
+        assert_eq!(
+            *lock_unpoisoned(&log),
+            vec![3, 1, 2],
+            "interactive overtakes queued batch work; batch stays FIFO"
+        );
+    }
+
+    #[test]
+    fn try_submit_applies_backpressure_at_the_admission_cap() {
+        let svc = SolveService::with_queue_cap(1, 2);
+        let seq = svc.open_sequence(RecycleConfig::default());
+        let mut rng = Rng::new(47);
+        let (op, started, release, _calls) = SlowOp::new(Mat::rand_spd(20, 100.0, &mut rng));
+        let b = vec![1.0; 20];
+        let spec = SolveSpec::cg().with_tol(1e-8);
+        let t1 = seq.try_submit(op.clone(), b.clone(), None, spec.clone()).unwrap();
+        while !started.load(Ordering::SeqCst) {
+            std::thread::yield_now();
+        }
+        // Slot 1 is running, slot 2 queues, slot 3 must be refused.
+        let t2 = seq.try_submit(op.clone(), b.clone(), None, spec.clone()).unwrap();
+        let err = seq
+            .try_submit(op.clone(), b.clone(), None, spec.clone())
+            .unwrap_err();
+        assert_eq!(err, SubmitError::QueueFull);
+        let snap = svc.metrics().snapshot();
+        assert_eq!(snap.rejected, 1);
+        assert_eq!(snap.queue_depth, 2);
+        assert_eq!(snap.queue_high_water, 2);
+        assert_eq!(snap.submitted, 2, "rejected requests are not counted as submitted");
+        release.store(true, Ordering::SeqCst);
+        assert_eq!(t1.wait().stop, StopReason::Converged);
+        assert_eq!(t2.wait().stop, StopReason::Converged);
+        // Completions released their admission slots.
+        assert_eq!(svc.metrics().snapshot().queue_depth, 0);
+        // With the queue drained, admission works again.
+        let t4 = seq.try_submit(op, b, None, spec).unwrap();
+        assert_eq!(t4.wait().stop, StopReason::Converged);
+    }
+
+    #[test]
     fn submit_returns_immediately_during_inflight_solve() {
         // The pipelining contract: `submit` must enqueue and return while
         // a previous solve of the SAME sequence is still running — the
@@ -777,33 +1852,10 @@ mod tests {
         // operator parks its first matvec until released; if submission
         // blocked on the in-flight solve, the second submit below would
         // deadlock (watchdog-released after 10 s, failing the assert).
-        struct SlowOp {
-            a: Mat,
-            started: Arc<AtomicBool>,
-            release: Arc<AtomicBool>,
-        }
-        impl SpdOperator for SlowOp {
-            fn n(&self) -> usize {
-                self.a.rows()
-            }
-            fn matvec(&self, x: &[f64], y: &mut [f64]) {
-                self.started.store(true, Ordering::SeqCst);
-                while !self.release.load(Ordering::SeqCst) {
-                    std::thread::yield_now();
-                }
-                self.a.matvec_into(x, y);
-            }
-        }
         let mut rng = Rng::new(41);
         let n = 20;
         let a = Mat::rand_spd(n, 100.0, &mut rng);
-        let started = Arc::new(AtomicBool::new(false));
-        let release = Arc::new(AtomicBool::new(false));
-        let op = Arc::new(SlowOp {
-            a: a.clone(),
-            started: started.clone(),
-            release: release.clone(),
-        });
+        let (op, started, release, _calls) = SlowOp::new(a);
         let svc = SolveService::new(1);
         let seq = svc.open_sequence(RecycleConfig::default());
         let b = vec![1.0; n];
@@ -863,6 +1915,20 @@ mod tests {
     }
 
     #[test]
+    fn closed_sequence_try_submit_returns_error() {
+        let svc = SolveService::new(1);
+        let seq = svc.open_sequence(RecycleConfig::default());
+        seq.close();
+        let op = spd(5, 10);
+        let err = seq
+            .try_submit(op, vec![1.0; 5], None, SolveSpec::defcg())
+            .unwrap_err();
+        assert_eq!(err, SubmitError::SequenceClosed);
+        assert_eq!(svc.metrics().snapshot().rejected, 1);
+        assert_eq!(svc.metrics().snapshot().queue_depth, 0, "rejection released its slot");
+    }
+
+    #[test]
     fn par_operator_matches_serial_solves() {
         let svc = SolveService::new(2);
         let mut rng = Rng::new(21);
@@ -888,10 +1954,6 @@ mod tests {
         }
     }
 
-    fn spd_mat(a: Mat) -> Arc<OwnedDense> {
-        Arc::new(OwnedDense(a))
-    }
-
     #[test]
     fn warm_start_passthrough() {
         let svc = SolveService::new(1);
@@ -907,5 +1969,85 @@ mod tests {
             .submit(op, b, Some(x), SolveSpec::defcg().with_tol(1e-10))
             .wait();
         assert!(warm.iterations <= 2, "warm start took {}", warm.iterations);
+    }
+
+    #[test]
+    fn worker_panic_completes_future_as_failed_and_keeps_draining() {
+        // The wait-forever fix: an operator that panics mid-solve used to
+        // kill the drainer loop, leaving this and every queued future
+        // hanging. Now the panicking request completes as Failed and the
+        // requests behind it still run.
+        struct PanickingOp(usize);
+        impl SpdOperator for PanickingOp {
+            fn n(&self) -> usize {
+                self.0
+            }
+            fn matvec(&self, _x: &[f64], _y: &mut [f64]) {
+                panic!("injected operator failure");
+            }
+        }
+        let svc = SolveService::new(1);
+        let seq = svc.open_sequence(RecycleConfig::default());
+        let n = 20;
+        let bad = Arc::new(PanickingOp(n));
+        let good = spd(n, 12);
+        let b = vec![1.0; n];
+        // Queue the failing request AND a healthy one behind it before
+        // either runs.
+        let t_bad = seq.submit(bad, b.clone(), None, SolveSpec::cg().with_tol(1e-8));
+        let t_good = seq.submit(good.clone(), b.clone(), None, SolveSpec::cg().with_tol(1e-8));
+        let (r_bad, rep_bad) = t_bad.wait_report();
+        assert_eq!(r_bad.stop, StopReason::Failed);
+        assert_eq!(rep_bad.stop, StopReason::Failed);
+        assert!(r_bad.final_residual().is_infinite(), "a failed solve must not look converged");
+        assert_eq!(r_bad.x, vec![0.0; n], "start iterate passed through");
+        let r_good = t_good.wait();
+        assert_eq!(r_good.stop, StopReason::Converged, "queued work behind a panic still runs");
+        // And the sequence keeps accepting + solving after the failure.
+        let again = seq.submit(good, b, None, SolveSpec::cg().with_tol(1e-8)).wait();
+        assert_eq!(again.stop, StopReason::Converged);
+        let snap = svc.metrics().snapshot();
+        assert_eq!(snap.failed, 1);
+        assert_eq!(snap.completed, 3);
+        assert_eq!(snap.queue_depth, 0);
+    }
+
+    #[test]
+    fn block_worker_panic_fails_every_group_member() {
+        struct PanickingOp(usize);
+        impl SpdOperator for PanickingOp {
+            fn n(&self) -> usize {
+                self.0
+            }
+            fn matvec(&self, _x: &[f64], _y: &mut [f64]) {
+                panic!("injected block operator failure");
+            }
+        }
+        let svc = SolveService::new(1);
+        let seq = svc.open_sequence(RecycleConfig::default());
+        let n = 10;
+        let op = Arc::new(PanickingOp(n));
+        let gate = Arc::new(AtomicBool::new(false));
+        let held = {
+            let gate = gate.clone();
+            seq.pool.spawn(move || {
+                while !gate.load(Ordering::Relaxed) {
+                    std::thread::yield_now();
+                }
+            })
+        };
+        let spec = SolveSpec::blockcg().with_tol(1e-8);
+        let ones = |cols: usize| Mat::from_fn(n, cols, |_, _| 1.0);
+        let t1 = seq.submit_block(op.clone(), ones(2), spec.clone());
+        let t2 = seq.submit_block(op.clone(), ones(1), spec);
+        gate.store(true, Ordering::Relaxed);
+        held.join();
+        let r1 = t1.wait();
+        let r2 = t2.wait();
+        assert_eq!(r1.stop, StopReason::Failed);
+        assert_eq!(r2.stop, StopReason::Failed);
+        assert_eq!(r1.x.cols(), 2, "each member still gets its own-shaped result");
+        assert_eq!(r2.x.cols(), 1);
+        assert_eq!(svc.metrics().snapshot().failed, 2);
     }
 }

@@ -122,7 +122,8 @@ fn serve_demo() {
     }
     let m = svc.metrics().snapshot();
     println!(
-        "metrics: {}/{} solves completed, {} matvecs, {:.3}s solve time, {} active sequences",
-        m.completed, m.submitted, m.total_matvecs, m.total_seconds, m.active_sequences
+        "metrics: {}/{} solves completed, {} matvecs, {:.3}s busy / {:.3}s span, {} active sequences",
+        m.completed, m.submitted, m.total_matvecs, m.busy_seconds, m.span_seconds,
+        m.active_sequences
     );
 }

@@ -19,18 +19,20 @@
 //!   over a *fixed* lengthscale. Here no grid point needs its own kernel:
 //!   `θ²K + σ²I = ShiftedOp(ScaledOp(K, θ²), σ²)` is a cheap operator
 //!   view over ONE unit-amplitude Gram matrix (built once), and a single
-//!   [`RecycleManager`] carries the recycled subspace across the whole
+//!   [`crate::solvers::recycle::RecycleManager`] carries the recycled subspace across the whole
 //!   plane of views — the paper's "sequence of parameter estimates"
 //!   scenario with zero kernel re-materialization.
 
+use crate::coordinator::SolveService;
 use crate::data::digits::Digits;
 use crate::gp::kernel::RbfKernel;
 use crate::gp::laplace::{DenseKernel, LaplaceConfig, LaplaceGpc, SolverBackend};
 use crate::linalg::mat::Mat;
 use crate::linalg::vec_ops::dot;
-use crate::solvers::recycle::{RecycleConfig, RecycleManager};
-use crate::solvers::{DenseOp, ScaledOp, ShiftedOp, SolveSpec};
-use std::time::Instant;
+use crate::solvers::recycle::RecycleConfig;
+use crate::solvers::{ScaledOp, ShiftedOp, SolveSpec, SpdOperator, StopReason};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// One evaluated grid point.
 #[derive(Clone, Debug)]
@@ -106,11 +108,16 @@ pub struct SigmaPoint {
     pub noise: f64,
     /// Data-fit part of the log marginal likelihood, `−½ yᵀα`.
     pub data_fit: f64,
-    /// α = (θ²K + σ²I)⁻¹ y for this grid point.
+    /// α = (θ²K + σ²I)⁻¹ y for this grid point (the partial iterate when
+    /// the point's deadline expired — see `stop`).
     pub alpha: Vec<f64>,
     pub solver_iterations: usize,
     /// Recycled-basis dimension active at this point.
     pub deflation_dim: usize,
+    /// How the point's solve ended: `Converged`, or `DeadlineExceeded`
+    /// when the per-point budget ran out (the partial solve still fed
+    /// its directions to the basis, so the next point benefits anyway).
+    pub stop: StopReason,
 }
 
 /// Grid-search the `(amplitude, σ)` regularization plane of GP
@@ -121,7 +128,9 @@ pub struct SigmaPoint {
 /// `(θ, σ)` then solves `(θ²K + σ²I) α = y` through
 /// `ShiftedOp(ScaledOp(K, θ²), σ²)` — `O(n)` extra work per application,
 /// exact `O(n)` diagonal (so Jacobi stays cheap), and **no kernel
-/// rebuild**. All solves share one [`RecycleManager`]: neighbouring grid
+/// rebuild**. All solves share one recycled sequence
+/// ([`crate::solvers::recycle::RecycleManager`] behind a
+/// [`SolveService`] handle): neighbouring grid
 /// points have nearby spectra (a scaled-and-shifted family even shares
 /// eigenvectors along the σ axis), so the recycled subspace transfers
 /// across the whole grid and later points converge in fewer iterations.
@@ -129,6 +138,16 @@ pub struct SigmaPoint {
 /// Grid order is amplitude-major, σ descending within each amplitude —
 /// descending σ makes each system slightly *harder* than the last, the
 /// regime where carrying a basis from the easier neighbour pays most.
+///
+/// The grid runs through a [`SolveService`] sequence: every point is a
+/// [`crate::solvers::Priority::Batch`] request (a grid search is
+/// throughput work — interactive traffic sharing the service overtakes
+/// it), and `point_budget` arms a **per-grid-point deadline**. A point
+/// whose budget expires comes back as
+/// [`StopReason::DeadlineExceeded`] with the partial `α` it reached —
+/// and because deadline-stopped runs still feed their direction panel to
+/// the recycle basis, the budget caps tail latency without throwing the
+/// partial Krylov work away.
 pub fn sigma_grid_search(
     x: &Mat,
     y: &[f64],
@@ -137,24 +156,35 @@ pub fn sigma_grid_search(
     noises: &[f64],
     recycle: RecycleConfig,
     tol: f64,
+    point_budget: Option<Duration>,
 ) -> Vec<SigmaPoint> {
     assert_eq!(x.rows(), y.len());
     assert!(!amplitudes.is_empty() && !noises.is_empty());
-    // The ONE kernel assembly of the whole search.
+    // The ONE kernel assembly of the whole search, shared by every grid
+    // point as an Arc'd base operator.
     let k = RbfKernel::new(1.0, lengthscale).gram(x);
-    let base = DenseOp::new(&k);
-    let mut mgr = RecycleManager::new(recycle);
-    let spec = SolveSpec::defcg().with_tol(tol);
+    let svc = SolveService::new(1);
+    let base = svc.par_operator(k); // bitwise-equal to the serial DenseOp
+    let seq = svc.open_sequence(recycle);
     let mut out = Vec::with_capacity(amplitudes.len() * noises.len());
     for &amp in amplitudes {
         for &noise in noises {
-            let op = ShiftedOp::new(ScaledOp::new(&base, amp * amp), noise * noise);
-            // Read BEFORE the solve: solve_next feeds the basis, so
-            // reading after would report the dimension available to the
-            // NEXT grid point (the first, undeflated point would show a
-            // nonzero k).
-            let deflation_dim = mgr.k_active();
-            let r = mgr.solve_next(&op, y, None, &spec);
+            let op: Arc<dyn SpdOperator + Send + Sync> =
+                Arc::new(ShiftedOp::new(ScaledOp::new(base.clone(), amp * amp), noise * noise));
+            // Read BEFORE the solve: a completed solve feeds the basis,
+            // so reading after would report the dimension available to
+            // the NEXT grid point (the first, undeflated point would
+            // show a nonzero k).
+            let deflation_dim = seq.k_active();
+            // Batch priority + a deadline armed per request (the
+            // deadline is absolute, so it is built here, not once
+            // outside the loop). Submit-then-wait keeps the recycling
+            // order explicit and gives each point its full budget.
+            let mut spec = SolveSpec::defcg().with_tol(tol).batch();
+            if let Some(budget) = point_budget {
+                spec = spec.with_deadline(budget);
+            }
+            let r = seq.submit(op, y.to_vec(), None, spec).wait();
             out.push(SigmaPoint {
                 amplitude: amp,
                 noise,
@@ -162,9 +192,11 @@ pub fn sigma_grid_search(
                 alpha: r.x,
                 solver_iterations: r.iterations,
                 deflation_dim,
+                stop: r.stop,
             });
         }
     }
+    seq.close();
     out
 }
 
@@ -201,8 +233,12 @@ mod tests {
             &[0.6, 0.4],
             RecycleConfig { k: 6, l: 10, ..Default::default() },
             1e-10,
+            None,
         );
         assert_eq!(pts.len(), 4);
+        for p in &pts {
+            assert_eq!(p.stop, StopReason::Converged);
+        }
         let k1 = RbfKernel::new(1.0, 10.0).gram(&ds.x);
         for p in &pts {
             // Materialize θ²K + σ²I and solve directly.
@@ -230,6 +266,9 @@ mod tests {
             &noises,
             RecycleConfig { k: 8, l: 12, ..Default::default() },
             1e-8,
+            // A generous per-point budget: exercises the deadline plumbing
+            // without ever firing on a healthy run.
+            Some(std::time::Duration::from_secs(60)),
         );
         let without = sigma_grid_search(
             &ds.x,
@@ -239,6 +278,7 @@ mod tests {
             &noises,
             RecycleConfig { k: 0, l: 0, ..Default::default() },
             1e-8,
+            None,
         );
         let tot = |pts: &[SigmaPoint]| -> usize {
             pts.iter().skip(1).map(|p| p.solver_iterations).sum()

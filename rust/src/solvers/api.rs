@@ -49,13 +49,40 @@
 //!   extra block apply for the initial residual), and `recompute_every`
 //!   periodically re-derives the active residuals exactly, as in plain
 //!   CG. No spec knob is silently ignored by block requests anymore.
+//!
+//! Beyond the numerical policies, a spec carries the request's
+//! **lifecycle** policies: a [`Priority`] class for admission-controlled
+//! queues, and a [`SolveControl`] (cancel token + absolute deadline —
+//! [`SolveSpec::with_cancel`] / [`SolveSpec::with_deadline`]) that every
+//! kernel checks once per iteration, so cancellation and deadlines take
+//! effect *mid-solve* with the partial iterate returned.
 
 use crate::linalg::mat::Mat;
 use crate::solvers::blockcg::{self, BlockSolveResult};
 use crate::solvers::cg::{self, CgConfig};
+use crate::solvers::control::{CancelToken, SolveControl};
 use crate::solvers::defcg::{self, Deflation};
 use crate::solvers::{SolveResult, SpdOperator};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Scheduling class of a request in an admission-controlled queue
+/// (`coordinator::SolveService`). Within one sequence queue the drainer
+/// pops the most urgent class first, FIFO within a class; the library
+/// entry points ([`solve`] etc.) ignore it.
+///
+/// The derived order makes *smaller* more urgent
+/// (`Interactive < Batch`), so `min()` over a queue picks the class to
+/// serve.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    /// Latency-sensitive (the default): a user is waiting on the result.
+    #[default]
+    Interactive,
+    /// Throughput work (grid searches, refits): yields to interactive
+    /// traffic, runs FIFO among itself.
+    Batch,
+}
 
 /// Which solver family a [`SolveSpec`] requests.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -201,6 +228,17 @@ pub struct SolveSpec {
     /// Optional deflation basis (used by `DefCg` and `Pcg`). Inside a
     /// recycled sequence the manager's basis takes precedence over this.
     pub deflation: Option<Arc<Deflation>>,
+    /// Scheduling class in an admission-controlled queue (ignored by the
+    /// direct library entry points). Defaults to
+    /// [`Priority::Interactive`].
+    pub priority: Priority,
+    /// Cooperative cancellation and wall-clock deadline, checked once
+    /// per iteration by every kernel (so both take effect *mid-solve*,
+    /// within one operator application, returning the partial iterate).
+    /// The coordinator injects each request's future token here; direct
+    /// callers attach their own with [`SolveSpec::with_cancel`] /
+    /// [`SolveSpec::with_deadline`].
+    pub control: SolveControl,
 }
 
 impl Default for SolveSpec {
@@ -223,6 +261,8 @@ impl SolveSpec {
             precond: None,
             auto_jacobi: false,
             deflation: None,
+            priority: Priority::default(),
+            control: SolveControl::none(),
         }
     }
 
@@ -307,7 +347,52 @@ impl SolveSpec {
         self
     }
 
-    /// The scalar knobs as the legacy per-kernel config.
+    /// Set the scheduling class for admission-controlled queues.
+    pub fn with_priority(mut self, priority: Priority) -> SolveSpec {
+        self.priority = priority;
+        self
+    }
+
+    /// Shorthand for [`SolveSpec::with_priority`]`(Priority::Batch)`.
+    pub fn batch(self) -> SolveSpec {
+        self.with_priority(Priority::Batch)
+    }
+
+    /// Attach a cancellation token. Raising it from any thread stops the
+    /// solve at its next per-iteration check with
+    /// [`crate::solvers::StopReason::Cancelled`] and the partial iterate
+    /// returned. Submitting a spec that already carries a token through
+    /// the coordinator reuses it as the future's token (so the same flag
+    /// cancels whether raised directly or via `SolveFuture::cancel`).
+    pub fn with_cancel(mut self, token: CancelToken) -> SolveSpec {
+        self.control.set_token(token);
+        self
+    }
+
+    /// Give the request `budget` of wall clock from **now**. The
+    /// deadline is absolute: in a queued service, waiting in the queue
+    /// counts against it (an admission-controlled system must bound the
+    /// caller's total latency, not just the solver's share) — build or
+    /// re-arm the spec at submission time, once per request. When it
+    /// expires mid-solve, the kernel stops with
+    /// [`crate::solvers::StopReason::DeadlineExceeded`] within one
+    /// operator application and returns the partial iterate; a queued
+    /// request whose deadline passed before it was dequeued completes
+    /// without running at all.
+    pub fn with_deadline(mut self, budget: Duration) -> SolveSpec {
+        self.control.deadline = Some(Instant::now() + budget);
+        self
+    }
+
+    /// Like [`SolveSpec::with_deadline`], with an explicit absolute
+    /// instant.
+    pub fn with_deadline_at(mut self, at: Instant) -> SolveSpec {
+        self.control.deadline = Some(at);
+        self
+    }
+
+    /// The scalar knobs (plus the control handle) as the legacy
+    /// per-kernel config.
     pub fn cg_config(&self) -> CgConfig {
         CgConfig {
             tol: self.tol,
@@ -315,9 +400,9 @@ impl SolveSpec {
             store_l: self.store_l,
             stall_window: self.stall_window,
             recompute_every: self.recompute_every,
+            control: self.control.clone(),
         }
     }
-
 }
 
 impl std::fmt::Debug for SolveSpec {
@@ -332,6 +417,8 @@ impl std::fmt::Debug for SolveSpec {
             .field("auto_jacobi", &self.auto_jacobi)
             .field("precond", &self.precond.as_ref().map(|p| p.name()))
             .field("deflation_k", &self.deflation.as_ref().map(|d| d.k()))
+            .field("priority", &self.priority)
+            .field("deadline", &self.control.deadline)
             .finish()
     }
 }
@@ -620,6 +707,54 @@ mod tests {
         let r = solve_block(&DenseOp::new(&a), &b, &SolveSpec::blockcg().with_tol(1e-10));
         assert_eq!(r.stop, StopReason::Converged);
         assert!(r.x.max_abs_diff(&x_true) < 1e-5);
+    }
+
+    #[test]
+    fn every_method_honors_cancellation_through_the_entry_point() {
+        // A pre-cancelled spec must stop every family as Cancelled with
+        // zero iterations and the start iterate — including the block
+        // path, whose entry check must fire before the initial block
+        // apply.
+        use crate::solvers::control::CancelToken;
+        let (a, b) = system(30, 9);
+        let op = DenseOp::new(&a);
+        let token = CancelToken::new();
+        token.cancel();
+        for make in [SolveSpec::cg, SolveSpec::pcg, SolveSpec::defcg, SolveSpec::blockcg] {
+            let spec = make().with_tol(1e-10).with_cancel(token.clone());
+            let r = solve(&op, &b, &spec);
+            assert_eq!(r.stop, StopReason::Cancelled, "{spec:?}");
+            assert_eq!(r.iterations, 0, "{spec:?}");
+            assert_eq!(r.matvecs, 0, "{spec:?}");
+            assert_eq!(r.x, vec![0.0; 30], "{spec:?}");
+        }
+        let r = solve_block(
+            &op,
+            &{
+                let mut m = Mat::zeros(30, 2);
+                m.set_col(0, &b);
+                m.set_col(1, &b);
+                m
+            },
+            &SolveSpec::blockcg().with_tol(1e-10).with_cancel(token.clone()),
+        );
+        assert_eq!(r.stop, StopReason::Cancelled);
+        assert_eq!(r.matvecs, 0);
+        assert_eq!(r.block_matvecs, 0);
+    }
+
+    #[test]
+    fn deadline_in_the_past_stops_each_method_immediately() {
+        use std::time::{Duration, Instant};
+        let (a, b) = system(30, 10);
+        let op = DenseOp::new(&a);
+        let past = Instant::now() - Duration::from_millis(1);
+        for make in [SolveSpec::cg, SolveSpec::pcg, SolveSpec::defcg, SolveSpec::blockcg] {
+            let spec = make().with_tol(1e-10).with_deadline_at(past);
+            let r = solve(&op, &b, &spec);
+            assert_eq!(r.stop, StopReason::DeadlineExceeded, "{spec:?}");
+            assert_eq!(r.iterations, 0, "{spec:?}");
+        }
     }
 
     #[test]

@@ -174,6 +174,31 @@ pub fn solve_spec(
     let mut block_matvecs = 0usize;
     let mut col_matvecs = vec![0usize; s];
 
+    // Entry check: a request that is already cancelled/expired must not
+    // pay even the initial-residual block apply (this is also what keeps
+    // the deferred-column follow-up solves below free once the main loop
+    // stopped on a cancel — they re-enter here with the same control).
+    // The reported residuals are those of the untouched start block.
+    if let Some(reason) = cfg.control.check() {
+        let rels: Vec<f64> = (0..s).map(|j| norm2(&r_cols[j]) / denoms[j]).collect();
+        let residuals = vec![rels.iter().fold(0.0f64, |m, &v| m.max(v))];
+        let mut x = Mat::zeros(n, s);
+        for (j, c) in x_cols.iter().enumerate() {
+            x.set_col(j, c);
+        }
+        return BlockSolveResult {
+            x,
+            residuals,
+            iterations: 0,
+            block_matvecs: 0,
+            matvecs: 0,
+            col_matvecs,
+            stop: reason,
+            stored: StoredDirections::default(),
+            seconds: start.elapsed().as_secs_f64(),
+        };
+    }
+
     // One block apply over all s columns, billed to every column.
     let apply_all = |cols: &[Vec<f64>],
                      block_matvecs: &mut usize,
@@ -515,6 +540,14 @@ pub fn solve_spec(
         .collect();
 
     'outer: for _ in 0..max_iters {
+        // Cooperative cancel/deadline check, before the block apply (see
+        // `cg::solve` — identical placement in every kernel). Frozen,
+        // passenger, and active columns are all at a consistent iterate
+        // here, so the partial X is returned as-is.
+        if let Some(reason) = cfg.control.check() {
+            stop = reason;
+            break 'outer;
+        }
         let a_cnt = active.len();
         // Q = A P through the block-first operator interface: one
         // apply_block over the active panel per iteration.
@@ -788,7 +821,16 @@ pub fn solve_spec(
     // in (the extra applies bill the deferred column); the trace gains
     // one summary entry over ALL columns so `final_residual` is honest.
     // A one-column recursion can never defer again, so this terminates.
-    if !deferred.is_empty() {
+    //
+    // Exception: a Cancelled/DeadlineExceeded main stop skips the
+    // follow-ups entirely. Their entry check would fire immediately
+    // anyway (the same expired control), but *before* the warm-start
+    // residual is derived — so the no-op sub-result would report the
+    // unit start residual and clobber `rels`/the trace with a bogus 1.0
+    // on a partial solve whose iterates only ever improved.
+    if !deferred.is_empty()
+        && !matches!(stop, StopReason::Cancelled | StopReason::DeadlineExceeded)
+    {
         for &j in &deferred {
             let mut bj = Mat::zeros(n, 1);
             bj.set_col(0, &b_cols[j]);

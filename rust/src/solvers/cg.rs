@@ -7,6 +7,7 @@
 //! (§2.3) — at zero extra matvec cost.
 
 use crate::linalg::vec_ops::{axpy, dot, norm2, xpby};
+use crate::solvers::control::SolveControl;
 use crate::solvers::{SolveResult, SpdOperator, StopReason, StoredDirections};
 use std::time::Instant;
 
@@ -37,11 +38,25 @@ pub struct CgConfig {
     /// replacement exposes the floor so `stall_window` can stop the solve.
     /// 0 (default) disables.
     pub recompute_every: usize,
+    /// Cooperative cancellation / wall-clock deadline, checked once per
+    /// iteration **before** the operator application — a raised cancel
+    /// or expired deadline stops the solve within one application, with
+    /// the partial iterate returned ([`StopReason::Cancelled`] /
+    /// [`StopReason::DeadlineExceeded`]). The inert default costs one
+    /// branch per iteration.
+    pub control: SolveControl,
 }
 
 impl Default for CgConfig {
     fn default() -> Self {
-        CgConfig { tol: 1e-5, max_iters: 0, store_l: 0, stall_window: 0, recompute_every: 0 }
+        CgConfig {
+            tol: 1e-5,
+            max_iters: 0,
+            store_l: 0,
+            stall_window: 0,
+            recompute_every: 0,
+            control: SolveControl::none(),
+        }
     }
 }
 
@@ -95,6 +110,25 @@ pub fn solve(
 
     // r = b - A x
     let mut r = b.to_vec();
+
+    // Entry check: a request that is already cancelled/expired must not
+    // pay even the warm-start residual application. Reports the unit
+    // placeholder residual of the untouched right-hand side (exact for a
+    // zero start; a warm start's true residual would cost the one
+    // application a dead request must never pay).
+    if let Some(reason) = cfg.control.check() {
+        let denom = if bnorm > 0.0 { bnorm } else { 1.0 };
+        return SolveResult {
+            x,
+            residuals: vec![norm2(&r) / denom],
+            iterations: 0,
+            matvecs,
+            stop: reason,
+            stored: StoredDirections::default(),
+            seconds: start.elapsed().as_secs_f64(),
+        };
+    }
+
     if x0.is_some() {
         let ax = a.matvec_alloc(&x);
         matvecs += 1;
@@ -127,6 +161,15 @@ pub fn solve(
     let mut iterations = 0;
 
     for _j in 0..max_iters {
+        // Cancellation/deadline check BEFORE the (possibly expensive)
+        // operator application: a cancel raised while a matvec is in
+        // flight takes effect as soon as it returns, never paying for
+        // another one. The iterate is consistent at this point, so the
+        // partial result (and any stored directions) is usable as-is.
+        if let Some(reason) = cfg.control.check() {
+            stop = reason;
+            break;
+        }
         a.matvec(&p, &mut ap);
         matvecs += 1;
         let d = dot(&p, &ap);
@@ -376,12 +419,82 @@ mod tests {
             store_l: 0,
             stall_window: 60,
             recompute_every: 10,
+            ..Default::default()
         };
         let r = solve(&Noisy(&a, AtomicUsize::new(0)), &b, None, &cfg);
         assert_eq!(r.stop, StopReason::Stagnated, "stopped as {:?}", r.stop);
         assert!(r.iterations < 5000);
         // The solution should still be decent (floor ~1e-6).
         assert!(r.final_residual() < 1e-4);
+    }
+
+    #[test]
+    fn precancelled_control_stops_before_the_first_matvec() {
+        use crate::solvers::control::{CancelToken, SolveControl};
+        let mut rng = Rng::new(30);
+        let a = Mat::rand_spd(20, 1e4, &mut rng);
+        let token = CancelToken::new();
+        token.cancel();
+        let mut control = SolveControl::none();
+        control.set_token(token);
+        let cfg = CgConfig { tol: 1e-12, control, ..Default::default() };
+        let r = solve(&DenseOp::new(&a), &vec![1.0; 20], None, &cfg);
+        assert_eq!(r.stop, StopReason::Cancelled);
+        assert_eq!(r.iterations, 0);
+        assert_eq!(r.matvecs, 0, "a cancelled run must not pay operator applications");
+        assert_eq!(r.x, vec![0.0; 20], "the start iterate is returned untouched");
+        assert!(!r.final_residual().is_nan());
+    }
+
+    #[test]
+    fn expired_deadline_returns_partial_iterate() {
+        // A deadline that expires after a few iterations: the solve must
+        // stop as DeadlineExceeded with a *useful* partial x (smaller
+        // A-norm error than the zero start — CG's A-norm monotonicity)
+        // and consistent stored directions for recycling.
+        use crate::solvers::control::SolveControl;
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        struct CountingSleep<'a>(&'a Mat, AtomicUsize);
+        impl<'a> SpdOperator for CountingSleep<'a> {
+            fn n(&self) -> usize {
+                self.0.rows()
+            }
+            fn matvec(&self, x: &[f64], y: &mut [f64]) {
+                self.1.fetch_add(1, Ordering::SeqCst);
+                std::thread::sleep(std::time::Duration::from_millis(3));
+                self.0.matvec_into(x, y);
+            }
+        }
+        let mut rng = Rng::new(31);
+        let n = 60;
+        let a = Mat::rand_spd(n, 1e6, &mut rng);
+        let x_true: Vec<f64> = (0..n).map(|i| (i as f64).sin()).collect();
+        let b = a.matvec(&x_true);
+        let budget = std::time::Duration::from_millis(90);
+        let control = SolveControl::deadline_at(std::time::Instant::now() + budget);
+        // tol far below what ~30 iterations can reach on cond 1e6: the
+        // deadline must fire first.
+        let cfg = CgConfig { tol: 1e-15, store_l: 8, control, ..Default::default() };
+        let op = CountingSleep(&a, AtomicUsize::new(0));
+        let r = solve(&op, &b, None, &cfg);
+        assert_eq!(r.stop, StopReason::DeadlineExceeded, "stopped as {:?}", r.stop);
+        assert!(r.iterations >= 1, "the budget allowed at least one iteration");
+        assert_eq!(r.matvecs, op.1.load(Ordering::SeqCst));
+        // Partial progress: A-norm error strictly below the zero start's.
+        let a_err = |x: &[f64]| -> f64 {
+            let e: Vec<f64> = x.iter().zip(&x_true).map(|(u, v)| u - v).collect();
+            dot(&e, &a.matvec(&e)).sqrt()
+        };
+        assert!(a_err(&r.x) < a_err(&vec![0.0; n]), "partial x must beat the start");
+        // Stored pairs are consistent (p normalized, ap = A·p).
+        assert!(!r.stored.is_empty());
+        for (p, ap) in r.stored.p.iter().zip(&r.stored.ap) {
+            assert!((norm2(p) - 1.0).abs() < 1e-12);
+            let want = a.matvec(p);
+            for (u, v) in ap.iter().zip(&want) {
+                assert!((u - v).abs() < 1e-10);
+            }
+        }
     }
 
     #[test]

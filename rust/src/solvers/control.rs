@@ -1,0 +1,215 @@
+//! Cooperative mid-solve control: cancellation and deadlines.
+//!
+//! Under service load, a solve is not sacred: the caller may lose
+//! interest (a disconnected client, a superseded hyperparameter
+//! candidate) or may only be able to afford a bounded slice of wall
+//! clock. Krylov iterations are short, so the right granularity for
+//! both is **once per iteration**: every kernel (`cg`, `pcg`, `defcg`,
+//! `blockcg`) calls [`SolveControl::check`] at the top of each
+//! iteration, before the operator application, and stops with
+//! [`StopReason::Cancelled`] / [`StopReason::DeadlineExceeded`] while
+//! returning the **partial iterate** accumulated so far — a cancel or
+//! deadline takes effect within one operator application of being
+//! raised once the iteration is running (every kernel and the recycle
+//! manager also check at *entry*, so a request dead before it starts
+//! pays nothing; a cancel landing exactly during a solve's start-up
+//! pays at most the constant few warm-start/deflated-start
+//! applications), and the work already done is not discarded (a
+//! deadline-stopped run still carries its stored `(p, Ap)` panel, which
+//! the recycle manager absorbs like any other run's).
+//!
+//! The control travels on [`crate::solvers::cg::CgConfig`] (and
+//! therefore on [`crate::solvers::SolveSpec`], which is how requests
+//! reach it): an inert default costs one branch per iteration.
+
+use crate::solvers::StopReason;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Shared cancellation flag for one solve request.
+///
+/// Clones share the flag: the submitting side keeps one clone (the
+/// coordinator's `SolveFuture::cancel` flips it), the kernel polls
+/// another once per iteration. Cancellation is level-triggered and
+/// permanent — there is no un-cancel.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken {
+    flag: Arc<AtomicBool>,
+}
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// Raise the flag. Idempotent; takes effect at the target solve's
+    /// next per-iteration check.
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.flag.load(Ordering::Acquire)
+    }
+}
+
+/// How a control's cancel flag is assembled from tokens.
+///
+/// A plain request carries one token. A *coalesced block group* in the
+/// coordinator carries every member's token under all-of semantics: one
+/// member cancelling must not abort its neighbours' shared solve, but
+/// when every member has given up the group solve is pure waste and
+/// stops.
+#[derive(Clone, Debug, Default)]
+enum Cancel {
+    /// Not cancellable.
+    #[default]
+    None,
+    /// Cancelled when the token is cancelled.
+    Token(CancelToken),
+    /// Cancelled when **every** token is cancelled (empty = never).
+    AllOf(Arc<Vec<CancelToken>>),
+}
+
+/// Per-solve control handle: cancel flag plus absolute wall-clock
+/// deadline, checked once per iteration by every solver kernel.
+///
+/// The deadline is an **absolute** [`Instant`]: queue wait counts
+/// against it (build the spec — or re-arm [`crate::solvers::SolveSpec::with_deadline`]
+/// — when you submit, not once for a whole loop of requests).
+#[derive(Clone, Debug, Default)]
+pub struct SolveControl {
+    cancel: Cancel,
+    /// Stop with [`StopReason::DeadlineExceeded`] once `Instant::now()`
+    /// reaches this.
+    pub deadline: Option<Instant>,
+}
+
+impl SolveControl {
+    /// Inert control: never cancels, never expires.
+    pub fn none() -> SolveControl {
+        SolveControl::default()
+    }
+
+    /// Deadline-only control (no cancel source).
+    pub fn deadline_at(at: Instant) -> SolveControl {
+        SolveControl { cancel: Cancel::None, deadline: Some(at) }
+    }
+
+    /// Control driven by one cancel token (replaces any previous cancel
+    /// source; the deadline is kept).
+    pub fn set_token(&mut self, token: CancelToken) {
+        self.cancel = Cancel::Token(token);
+    }
+
+    /// The single token driving this control, if there is exactly one
+    /// (used by the coordinator to reuse a caller-supplied token as the
+    /// future's token instead of stacking a second one).
+    pub fn token(&self) -> Option<&CancelToken> {
+        match &self.cancel {
+            Cancel::Token(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    /// Group control: cancelled only when **all** tokens are cancelled.
+    /// Used for coalesced block groups so a single member's cancel
+    /// cannot abort work its neighbours still want. An empty list never
+    /// cancels.
+    pub fn all_of(tokens: Vec<CancelToken>, deadline: Option<Instant>) -> SolveControl {
+        SolveControl { cancel: Cancel::AllOf(Arc::new(tokens)), deadline }
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        match &self.cancel {
+            Cancel::None => false,
+            Cancel::Token(t) => t.is_cancelled(),
+            Cancel::AllOf(v) => !v.is_empty() && v.iter().all(|t| t.is_cancelled()),
+        }
+    }
+
+    /// The per-iteration check. Cancellation wins over the deadline when
+    /// both hold (the caller explicitly gave up; "out of time" is the
+    /// weaker statement).
+    pub fn check(&self) -> Option<StopReason> {
+        if self.is_cancelled() {
+            return Some(StopReason::Cancelled);
+        }
+        if let Some(d) = self.deadline {
+            if Instant::now() >= d {
+                return Some(StopReason::DeadlineExceeded);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn inert_control_never_stops() {
+        let c = SolveControl::none();
+        assert!(c.check().is_none());
+        assert!(!c.is_cancelled());
+        assert!(c.token().is_none());
+    }
+
+    #[test]
+    fn token_cancels_and_is_shared_by_clones() {
+        let t = CancelToken::new();
+        let mut c = SolveControl::none();
+        c.set_token(t.clone());
+        let c2 = c.clone();
+        assert!(c.check().is_none());
+        t.cancel();
+        assert_eq!(c.check(), Some(StopReason::Cancelled));
+        assert_eq!(c2.check(), Some(StopReason::Cancelled), "clones share the flag");
+        t.cancel(); // idempotent
+        assert!(t.is_cancelled());
+    }
+
+    #[test]
+    fn deadline_expires() {
+        let c = SolveControl {
+            deadline: Some(Instant::now() - Duration::from_millis(1)),
+            ..SolveControl::none()
+        };
+        assert_eq!(c.check(), Some(StopReason::DeadlineExceeded));
+        let c = SolveControl {
+            deadline: Some(Instant::now() + Duration::from_secs(3600)),
+            ..SolveControl::none()
+        };
+        assert!(c.check().is_none());
+    }
+
+    #[test]
+    fn cancel_wins_over_expired_deadline() {
+        let t = CancelToken::new();
+        t.cancel();
+        let mut c = SolveControl {
+            deadline: Some(Instant::now() - Duration::from_millis(1)),
+            ..SolveControl::none()
+        };
+        c.set_token(t);
+        assert_eq!(c.check(), Some(StopReason::Cancelled));
+    }
+
+    #[test]
+    fn all_of_needs_every_member() {
+        let a = CancelToken::new();
+        let b = CancelToken::new();
+        let c = SolveControl::all_of(vec![a.clone(), b.clone()], None);
+        assert!(c.check().is_none());
+        a.cancel();
+        assert!(c.check().is_none(), "one member must not cancel the group");
+        b.cancel();
+        assert_eq!(c.check(), Some(StopReason::Cancelled));
+        // Empty group: never cancels.
+        let empty = SolveControl::all_of(Vec::new(), None);
+        assert!(empty.check().is_none());
+    }
+}

@@ -69,10 +69,19 @@ impl Deflation {
     /// — one data pass over A per panel instead of k column matvecs, same
     /// floats by the block contract). Returns the accounting cost: k
     /// operator applications.
+    ///
+    /// The refresh is **transactional**: the new image is computed into a
+    /// scratch block and committed only after the full application
+    /// succeeded, so an operator that panics mid-apply (caught by the
+    /// coordinator's worker-panic containment) can never leave `AW` with
+    /// columns mixed between two operators — the basis stays either
+    /// entirely old or entirely new.
     pub fn refresh(&mut self, a: &dyn SpdOperator) -> usize {
         let k = self.w.cols();
         if k > 0 {
-            a.apply_block(&self.w, &mut self.aw);
+            let mut aw = Mat::zeros(self.w.rows(), k);
+            a.apply_block(&self.w, &mut aw);
+            self.aw = aw;
         }
         k
     }
@@ -175,6 +184,25 @@ pub fn solve_precond(
     let start = Instant::now();
     let n = a.n();
     assert_eq!(b.len(), n, "rhs dimension mismatch");
+
+    // Entry check, mirroring `cg::solve`: a dead request must not pay
+    // the deflated-start applications (warm-start residual + exact r₀
+    // recompute) either. The undeflated delegation below re-checks at
+    // its own entry, so this covers only the deflated path's pre-loop
+    // work.
+    if let Some(reason) = cfg.control.check() {
+        let bnorm = norm2(b);
+        let denom = if bnorm > 0.0 { bnorm } else { 1.0 };
+        return SolveResult {
+            x: x0.map(|v| v.to_vec()).unwrap_or_else(|| vec![0.0; n]),
+            residuals: vec![bnorm / denom],
+            iterations: 0,
+            matvecs: 0,
+            stop: reason,
+            stored: StoredDirections::default(),
+            seconds: start.elapsed().as_secs_f64(),
+        };
+    }
 
     let empty = defl.map(|d| d.k() == 0).unwrap_or(true);
     if empty {
@@ -290,6 +318,15 @@ pub fn solve_precond(
     let mut iterations = 0;
 
     for _j in 0..max_iters {
+        // Cooperative cancel/deadline check, before the matvec (see
+        // `cg::solve` — identical placement in every kernel). Stopping
+        // here keeps the `Wᵀr = 0` constraint of the returned partial
+        // iterate intact: the check sits between iterations, never
+        // inside one.
+        if let Some(reason) = cfg.control.check() {
+            stop = reason;
+            break;
+        }
         // Lines 6–10: the standard (P)CG sweep.
         a.matvec(&p, &mut ap);
         matvecs += 1;

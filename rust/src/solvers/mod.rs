@@ -15,7 +15,13 @@
 //!   `i` to system `i+1` (the "computational transfer learning" of §1);
 //! * [`lanczos`] — plain Lanczos tridiagonalization, an alternative Ritz
 //!   source and a spectrum-estimation tool;
-//! * [`direct`] — dense Cholesky baseline (the paper's exact reference).
+//! * [`direct`] — dense Cholesky baseline (the paper's exact reference);
+//! * [`control`] — cooperative request-lifecycle control
+//!   ([`CancelToken`] / [`SolveControl`]): every kernel checks its
+//!   spec's control once per iteration, so cancellation and wall-clock
+//!   deadlines stop a solve mid-run ([`StopReason::Cancelled`] /
+//!   [`StopReason::DeadlineExceeded`]) with the partial iterate
+//!   returned.
 //!
 //! All four iterative families are reachable through the **unified solve
 //! API** in [`api`]: build a [`SolveSpec`] (method + tolerance +
@@ -67,6 +73,7 @@ pub mod algebra;
 pub mod api;
 pub mod blockcg;
 pub mod cg;
+pub mod control;
 pub mod defcg;
 pub mod direct;
 pub mod lanczos;
@@ -76,8 +83,10 @@ pub mod ritz;
 
 pub use algebra::{LowRankUpdateOp, ScaledOp, ShiftedOp, SumOp};
 pub use api::{
-    solve, solve_block, solve_with_x0, Identity, Jacobi, Method, Preconditioner, SolveSpec,
+    solve, solve_block, solve_with_x0, Identity, Jacobi, Method, Preconditioner, Priority,
+    SolveSpec,
 };
+pub use control::{CancelToken, SolveControl};
 
 use crate::linalg::mat::Mat;
 use crate::util::pool::ThreadPool;
@@ -517,6 +526,21 @@ pub enum StopReason {
     /// Residual stopped improving (hit a numerical floor — e.g. the f32
     /// precision of the XLA artifact path, or an inexact deflation basis).
     Stagnated,
+    /// The request's [`CancelToken`] was raised; the result carries the
+    /// partial iterate at the moment the per-iteration check fired. A
+    /// cancelled run's stored directions are **not** absorbed into a
+    /// sequence's recycle basis (the caller abandoned the work).
+    Cancelled,
+    /// The request's wall-clock deadline passed mid-solve; the result
+    /// carries the partial iterate. Unlike [`StopReason::Cancelled`],
+    /// the partial Krylov work is still wanted: stored directions feed
+    /// the recycle basis exactly like a converged run's.
+    DeadlineExceeded,
+    /// The solve did not produce a result at all (a worker panicked —
+    /// e.g. an operator hit an internal assert). The synthetic result
+    /// carries the start iterate and an infinite residual; nothing is
+    /// absorbed into recycling state.
+    Failed,
 }
 
 /// Quantities stored from the first ℓ iterations of a (deflated) CG run,

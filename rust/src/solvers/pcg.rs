@@ -58,6 +58,23 @@ pub fn solve_with(
     };
     let mut matvecs = 0usize;
     let mut r = b.to_vec();
+
+    // Entry check, mirroring `cg::solve`: a dead request pays nothing,
+    // not even the warm-start residual application.
+    if let Some(reason) = cfg.control.check() {
+        let bn = norm2(b);
+        let denom = if bn > 0.0 { bn } else { 1.0 };
+        return SolveResult {
+            x,
+            residuals: vec![norm2(&r) / denom],
+            iterations: 0,
+            matvecs,
+            stop: reason,
+            stored: StoredDirections::default(),
+            seconds: start.elapsed().as_secs_f64(),
+        };
+    }
+
     if x0.is_some() {
         let ax = a.matvec_alloc(&x);
         matvecs += 1;
@@ -92,6 +109,12 @@ pub fn solve_with(
     let mut iterations = 0;
 
     for _ in 0..max_iters {
+        // Cooperative cancel/deadline check, before the matvec (see
+        // `cg::solve` — identical placement in every kernel).
+        if let Some(reason) = cfg.control.check() {
+            stop = reason;
+            break;
+        }
         a.matvec(&p, &mut ap);
         matvecs += 1;
         let d = dot(&p, &ap);

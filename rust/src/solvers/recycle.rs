@@ -25,7 +25,7 @@ use crate::solvers::api::{self, Jacobi, Method, Preconditioner, SolveSpec};
 use crate::solvers::blockcg::BlockSolveResult;
 use crate::solvers::defcg::Deflation;
 use crate::solvers::ritz::{self, RitzConfig, RitzValue};
-use crate::solvers::{SolveResult, SpdOperator, StoredDirections};
+use crate::solvers::{SolveResult, SpdOperator, StopReason, StoredDirections};
 use std::sync::Arc;
 
 /// Policy for keeping `AW` consistent across systems.
@@ -231,6 +231,20 @@ impl RecycleManager {
 
     /// Fold a run's stored directions into the recycled basis via
     /// harmonic-Ritz extraction; returns the selected Ritz values.
+    ///
+    /// # Lifecycle guarantee: cancellation never corrupts the basis
+    ///
+    /// Absorption happens only **after** a run returned, and only for
+    /// runs the caller still wants: converged, iteration-capped,
+    /// stagnated, broken-down, and **deadline-stopped** runs all feed
+    /// their panels (every stored `(p, Ap)` pair is written at an
+    /// iteration boundary, so a partial run's panel is as consistent as
+    /// a full run's — partial Krylov work is not discarded). A
+    /// [`StopReason::Cancelled`] run is the one exception: the caller
+    /// abandoned it, so [`RecycleManager::solve_next`] /
+    /// [`RecycleManager::solve_block`] skip this call entirely and the
+    /// sequence's `(W, AW)` is left byte-for-byte what it was — there is
+    /// no code path that mutates the basis mid-iteration.
     fn absorb(&mut self, stored: &StoredDirections, n: usize) -> Vec<f64> {
         let ritz_cfg = RitzConfig {
             k: self.cfg.k,
@@ -283,6 +297,23 @@ impl RecycleManager {
         let n = a.n();
         let consumes_basis = matches!(spec.method, Method::DefCg | Method::BlockCg);
 
+        // Entry check BEFORE the AW policy work: a request that is
+        // already cancelled/expired must not pay the k-application AW
+        // refresh (or anything else). It leaves no history entry and
+        // touches no state — the same contract as the coordinator's
+        // dead-on-arrival completion.
+        if let Some(reason) = spec.control.check() {
+            return SolveResult {
+                x: x0.map(|v| v.to_vec()).unwrap_or_else(|| vec![0.0; n]),
+                residuals: vec![1.0],
+                iterations: 0,
+                matvecs: 0,
+                stop: reason,
+                stored: StoredDirections::default(),
+                seconds: 0.0,
+            };
+        }
+
         // Policy: keep (W, AW) consistent under the *current* operator.
         // This runs for every request — not just the ones that deflate —
         // because the harmonic-Ritz extraction below folds the prior
@@ -305,8 +336,15 @@ impl RecycleManager {
         let mut result = api::dispatch(a, b, x0, &inner, defl);
         result.matvecs += extra_matvecs;
 
-        // Extract the next basis from this run's stored directions.
-        let ritz_values = self.absorb(&result.stored, n);
+        // Extract the next basis from this run's stored directions — for
+        // every stop reason except Cancelled (abandoned work is never
+        // absorbed; a DeadlineExceeded partial run still feeds its
+        // panel — see `absorb`).
+        let ritz_values = if result.stop == StopReason::Cancelled {
+            Vec::new()
+        } else {
+            self.absorb(&result.stored, n)
+        };
 
         self.history.push(SystemStats {
             index: self.history.len(),
@@ -346,6 +384,22 @@ impl RecycleManager {
     ) -> BlockSolveResult {
         let n = a.n();
         let consumes_basis = matches!(spec.method, Method::DefCg | Method::BlockCg);
+
+        // Entry check BEFORE the AW policy work — see `solve_next`.
+        if let Some(reason) = spec.control.check() {
+            return BlockSolveResult {
+                x: crate::linalg::Mat::zeros(n, b.cols()),
+                residuals: vec![1.0],
+                iterations: 0,
+                block_matvecs: 0,
+                matvecs: 0,
+                col_matvecs: vec![0; b.cols()],
+                stop: reason,
+                stored: StoredDirections::default(),
+                seconds: 0.0,
+            };
+        }
+
         let extra_matvecs = self.sync_basis(a, spec.tol);
         let inner = self.resolve_spec(a, spec, true);
         let defl = if consumes_basis {
@@ -356,7 +410,12 @@ impl RecycleManager {
         let mut result = api::solve_block_with(a, b, &inner, defl);
         result.matvecs += extra_matvecs;
 
-        let ritz_values = self.absorb(&result.stored, n);
+        // Same absorb policy as `solve_next`: everything but Cancelled.
+        let ritz_values = if result.stop == StopReason::Cancelled {
+            Vec::new()
+        } else {
+            self.absorb(&result.stored, n)
+        };
 
         self.history.push(SystemStats {
             index: self.history.len(),
@@ -829,6 +888,129 @@ mod tests {
             );
             assert!(mgr.history()[i].deflation_dim > 0);
         }
+    }
+
+    #[test]
+    fn cancelled_run_never_touches_the_recycle_basis() {
+        // The lifecycle guarantee: a Cancelled solve is not absorbed —
+        // the sequence's (W, AW) stays byte-for-byte what it was, and a
+        // later request still benefits from the pre-cancel basis.
+        use crate::solvers::control::CancelToken;
+        let n = 80;
+        let mut rng = Rng::new(40);
+        let a = Mat::rand_spd(n, 1e5, &mut rng);
+        let b = vec![1.0; n];
+        // Reuse: sync_basis must not refresh AW either, so the state
+        // comparison below is exact.
+        let mut mgr = RecycleManager::new(RecycleConfig {
+            k: 8,
+            l: 12,
+            aw_policy: AwPolicy::Reuse,
+            ..Default::default()
+        });
+        let seeded =
+            mgr.solve_next(&DenseOp::new(&a), &b, None, &SolveSpec::defcg().with_tol(1e-8));
+        assert_eq!(seeded.stop, StopReason::Converged);
+        let w_before = mgr.deflation().unwrap().w.clone();
+        let aw_before = mgr.deflation().unwrap().aw.clone();
+        // Pre-cancelled request: the manager's entry check returns before
+        // even the AW policy runs — no history entry, zero applications.
+        let token = CancelToken::new();
+        token.cancel();
+        let spec = SolveSpec::defcg().with_tol(1e-8).with_cancel(token);
+        let cancelled = mgr.solve_next(&DenseOp::new(&a), &b, None, &spec);
+        assert_eq!(cancelled.stop, StopReason::Cancelled);
+        assert_eq!(cancelled.matvecs, 0, "a dead request must not pay the AW refresh");
+        assert_eq!(mgr.history().len(), 1, "never-run requests leave no history");
+        let d = mgr.deflation().unwrap();
+        assert_eq!(d.w.max_abs_diff(&w_before), 0.0, "W must be untouched");
+        assert_eq!(d.aw.max_abs_diff(&aw_before), 0.0, "AW must be untouched");
+        // Mid-solve cancel (token raised after the first iteration by a
+        // self-cancelling operator): recorded in history, absorb skipped,
+        // basis still byte-identical.
+        struct CancelAfterFirst<'a>(&'a Mat, CancelToken);
+        impl<'a> SpdOperator for CancelAfterFirst<'a> {
+            fn n(&self) -> usize {
+                self.0.rows()
+            }
+            fn matvec(&self, x: &[f64], y: &mut [f64]) {
+                self.0.matvec_into(x, y);
+                self.1.cancel();
+            }
+        }
+        let mid_token = CancelToken::new();
+        let op = CancelAfterFirst(&a, mid_token.clone());
+        let spec = SolveSpec::cg().with_tol(1e-12).with_cancel(mid_token);
+        let mid = mgr.solve_next(&op, &b, None, &spec);
+        assert_eq!(mid.stop, StopReason::Cancelled);
+        assert!(mid.iterations >= 1, "the cancel landed mid-solve");
+        assert_eq!(mgr.history().len(), 2, "a run that started is recorded");
+        assert!(mgr.history()[1].ritz_values.is_empty(), "but never absorbed");
+        let d = mgr.deflation().unwrap();
+        assert_eq!(d.w.max_abs_diff(&w_before), 0.0, "W must still be untouched");
+        assert_eq!(d.aw.max_abs_diff(&aw_before), 0.0, "AW must still be untouched");
+        let after =
+            mgr.solve_next(&DenseOp::new(&a), &b, None, &SolveSpec::defcg().with_tol(1e-8));
+        assert_eq!(after.stop, StopReason::Converged);
+        assert!(after.iterations < seeded.iterations, "the old basis still deflates");
+    }
+
+    #[test]
+    fn deadline_stopped_run_feeds_directions_that_speed_up_the_next_system() {
+        // The acceptance pin: a deadline-bounded solve returns a partial
+        // iterate AND its stored direction panel still reduces the next
+        // system's iteration count — partial Krylov work is not
+        // discarded. The slow operator makes the deadline deterministic:
+        // every application sleeps, so a ~100 ms budget admits a handful
+        // of iterations of a solve that needs hundreds.
+        use std::time::Duration;
+        struct Slow<'a>(&'a Mat);
+        impl<'a> SpdOperator for Slow<'a> {
+            fn n(&self) -> usize {
+                self.0.rows()
+            }
+            fn matvec(&self, x: &[f64], y: &mut [f64]) {
+                std::thread::sleep(Duration::from_millis(2));
+                self.0.matvec_into(x, y);
+            }
+        }
+        let n = 90;
+        let mut rng = Rng::new(41);
+        let a = Mat::rand_spd(n, 1e6, &mut rng);
+        let x_true: Vec<f64> = (0..n).map(|i| (i as f64).cos()).collect();
+        let b = a.matvec(&x_true);
+        let mut mgr = RecycleManager::new(RecycleConfig { k: 8, l: 12, ..Default::default() });
+        // tol far below what the budget can reach: the deadline fires.
+        let spec = SolveSpec::defcg().with_tol(1e-15).with_deadline(Duration::from_millis(150));
+        let partial = mgr.solve_next(&Slow(&a), &b, None, &spec);
+        assert_eq!(partial.stop, StopReason::DeadlineExceeded, "stopped as {:?}", partial.stop);
+        assert!(partial.iterations >= 1, "the budget allowed at least one iteration");
+        // Partial iterate: strictly closer to the solution in A-norm
+        // than the zero start (CG minimizes the A-norm error).
+        let a_err = |x: &[f64]| -> f64 {
+            let e: Vec<f64> = x.iter().zip(&x_true).map(|(u, v)| u - v).collect();
+            crate::linalg::vec_ops::dot(&e, &a.matvec(&e)).sqrt()
+        };
+        assert!(a_err(&partial.x) < a_err(&vec![0.0; n]));
+        // The partial run fed the basis...
+        assert!(mgr.k_active() > 0, "deadline-stopped run must feed the basis");
+        assert!(!mgr.history()[0].ritz_values.is_empty());
+        // ...and that basis reduces iterations on the next system (the
+        // fast operator now — the deadline was the slow op's problem).
+        let cold = crate::solvers::solve(
+            &DenseOp::new(&a),
+            &b,
+            &SolveSpec::defcg().with_tol(1e-8),
+        );
+        assert_eq!(cold.stop, StopReason::Converged);
+        let warm = mgr.solve_next(&DenseOp::new(&a), &b, None, &SolveSpec::defcg().with_tol(1e-8));
+        assert_eq!(warm.stop, StopReason::Converged);
+        assert!(
+            warm.iterations < cold.iterations,
+            "deadline-fed basis {} >= cold {}",
+            warm.iterations,
+            cold.iterations
+        );
     }
 
     #[test]

@@ -1,0 +1,400 @@
+//! Request-lifecycle semantics of the admission-controlled solve
+//! service, end to end through the public API: cancellation before and
+//! during a solve, mid-solve deadlines (with the partial work feeding
+//! recycling), graceful drain vs abort teardown, and the non-blocking
+//! future surface.
+//!
+//! These tests synchronize on operator-level flags (parked matvecs), not
+//! sleeps, so they are deterministic; the CI stress job additionally
+//! runs them single-threaded under a hard timeout so a reintroduced
+//! wait-forever deadlock fails fast instead of hanging the suite.
+
+use krr::coordinator::{Shutdown, SolveService};
+use krr::linalg::mat::Mat;
+use krr::solvers::recycle::RecycleConfig;
+use krr::solvers::{SolveSpec, SpdOperator, StopReason};
+use krr::util::rng::Rng;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Operator that parks every matvec until released, recording how many
+/// applications started.
+struct SlowOp {
+    a: Mat,
+    started: AtomicBool,
+    release: AtomicBool,
+    calls: AtomicUsize,
+}
+
+impl SlowOp {
+    fn new(a: Mat) -> Arc<Self> {
+        Arc::new(SlowOp {
+            a,
+            started: AtomicBool::new(false),
+            release: AtomicBool::new(false),
+            calls: AtomicUsize::new(0),
+        })
+    }
+
+    fn wait_started(&self) {
+        while !self.started.load(Ordering::SeqCst) {
+            std::thread::yield_now();
+        }
+    }
+
+    fn release(&self) {
+        self.release.store(true, Ordering::SeqCst);
+    }
+}
+
+impl SpdOperator for SlowOp {
+    fn n(&self) -> usize {
+        self.a.rows()
+    }
+    fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        self.calls.fetch_add(1, Ordering::SeqCst);
+        self.started.store(true, Ordering::SeqCst);
+        while !self.release.load(Ordering::SeqCst) {
+            std::thread::yield_now();
+        }
+        self.a.matvec_into(x, y);
+    }
+}
+
+/// Plain owned operator with an application counter.
+struct CountingOp {
+    a: Mat,
+    calls: AtomicUsize,
+}
+
+impl CountingOp {
+    fn new(a: Mat) -> Arc<Self> {
+        Arc::new(CountingOp { a, calls: AtomicUsize::new(0) })
+    }
+}
+
+impl SpdOperator for CountingOp {
+    fn n(&self) -> usize {
+        self.a.rows()
+    }
+    fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        self.calls.fetch_add(1, Ordering::SeqCst);
+        self.a.matvec_into(x, y);
+    }
+}
+
+fn spd(n: usize, cond: f64, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::rand_spd(n, cond, &mut rng)
+}
+
+#[test]
+fn cancel_before_dequeue_never_runs_and_skips_history() {
+    let n = 30;
+    let svc = SolveService::new(1);
+    let seq = svc.open_sequence(RecycleConfig::default());
+    let slow = SlowOp::new(spd(n, 100.0, 1));
+    let counted = CountingOp::new(spd(n, 100.0, 2));
+    let b = vec![1.0; n];
+    // First request parks the (single) drainer inside its solve...
+    let t1 = seq.submit(slow.clone(), b.clone(), None, SolveSpec::cg().with_tol(1e-8));
+    slow.wait_started();
+    // ...so the second request is provably still queued when we cancel.
+    let t2 = seq.submit(counted.clone(), b.clone(), None, SolveSpec::cg().with_tol(1e-8));
+    t2.cancel();
+    slow.release();
+    assert_eq!(t1.wait().stop, StopReason::Converged);
+    let (r2, report) = t2.wait_report();
+    assert_eq!(r2.stop, StopReason::Cancelled);
+    assert_eq!(r2.iterations, 0);
+    assert_eq!(r2.matvecs, 0);
+    assert_eq!(
+        counted.calls.load(Ordering::SeqCst),
+        0,
+        "a request cancelled before dequeue must never touch its operator"
+    );
+    assert_eq!(report.stop, StopReason::Cancelled);
+    assert_eq!(report.solve_seconds, 0.0);
+    // Never-run requests leave no trace in the sequence history.
+    assert_eq!(seq.history().len(), 1);
+    let snap = svc.metrics().snapshot();
+    assert_eq!(snap.cancelled, 1);
+    assert_eq!(snap.completed, 2);
+    assert_eq!(snap.queue_depth, 0);
+}
+
+#[test]
+fn cancel_mid_solve_returns_within_one_operator_application() {
+    // The acceptance pin: a cancel issued against a solve parked inside
+    // its operator returns a Cancelled partial result without paying
+    // more than the one in-flight application.
+    let n = 40;
+    let svc = SolveService::new(1);
+    let seq = svc.open_sequence(RecycleConfig::default());
+    let slow = SlowOp::new(spd(n, 1e6, 3));
+    let b = vec![1.0; n];
+    let fut = seq.submit(slow.clone(), b, None, SolveSpec::cg().with_tol(1e-12));
+    slow.wait_started();
+    fut.cancel();
+    let at_cancel = slow.calls.load(Ordering::SeqCst);
+    slow.release();
+    let (r, report) = fut.wait_report();
+    assert_eq!(r.stop, StopReason::Cancelled, "stopped as {:?}", r.stop);
+    assert!(
+        slow.calls.load(Ordering::SeqCst) <= at_cancel + 1,
+        "cancel must take effect within one operator application \
+         ({} applications after the cancel)",
+        slow.calls.load(Ordering::SeqCst) - at_cancel
+    );
+    assert_eq!(report.stop, StopReason::Cancelled);
+    // Cancelled work is never absorbed: the sequence basis stays empty.
+    assert_eq!(seq.k_active(), 0);
+    let snap = svc.metrics().snapshot();
+    assert_eq!(snap.cancelled, 1);
+}
+
+#[test]
+fn deadline_mid_solve_returns_partial_x_that_feeds_recycling() {
+    // Deadline semantics through the service: a tight per-request budget
+    // on a sleeping operator stops the solve as DeadlineExceeded with a
+    // partial iterate whose A-norm error beats the start (CG's A-norm
+    // descent is monotone, so the partial trace can only have improved),
+    // and whose stored directions cut the iteration count of the next
+    // system in the sequence.
+    struct SleepOp {
+        a: Mat,
+        calls: AtomicUsize,
+    }
+    impl SpdOperator for SleepOp {
+        fn n(&self) -> usize {
+            self.a.rows()
+        }
+        fn matvec(&self, x: &[f64], y: &mut [f64]) {
+            self.calls.fetch_add(1, Ordering::SeqCst);
+            std::thread::sleep(Duration::from_millis(2));
+            self.a.matvec_into(x, y);
+        }
+    }
+    let n = 90;
+    let a = spd(n, 1e6, 4);
+    let x_true: Vec<f64> = (0..n).map(|i| (i as f64).sin()).collect();
+    let b = a.matvec(&x_true);
+    let svc = SolveService::new(1);
+    let seq = svc.open_sequence(RecycleConfig { k: 8, l: 12, ..Default::default() });
+    let slow = Arc::new(SleepOp { a: a.clone(), calls: AtomicUsize::new(0) });
+    // tol far below what ~75 sleepy iterations can reach on cond 1e6:
+    // the deadline must fire mid-solve.
+    let spec = SolveSpec::defcg()
+        .with_tol(1e-15)
+        .with_deadline(Duration::from_millis(150));
+    let (r, report) = seq.submit(slow.clone(), b.clone(), None, spec).wait_report();
+    assert_eq!(r.stop, StopReason::DeadlineExceeded, "stopped as {:?}", r.stop);
+    assert!(r.iterations >= 1, "the budget allowed at least one iteration");
+    assert_eq!(report.stop, StopReason::DeadlineExceeded);
+    assert!(report.k_active > 0, "the partial run must feed the basis");
+    // Partial x: strictly closer to the solution in A-norm than the
+    // zero start.
+    let a_err = |x: &[f64]| -> f64 {
+        let e: Vec<f64> = x.iter().zip(&x_true).map(|(u, v)| u - v).collect();
+        let ae = a.matvec(&e);
+        e.iter().zip(&ae).map(|(u, v)| u * v).sum::<f64>().sqrt()
+    };
+    assert!(a_err(&r.x) < a_err(&vec![0.0; n]), "partial x must beat the start");
+    // The residual trace is real (one entry per completed iteration).
+    assert_eq!(r.residuals.len(), r.iterations + 1);
+    // Next system (same matrix behind a fast operator, no deadline):
+    // the deadline-fed basis must cut iterations vs a cold solve.
+    let cold = krr::solvers::solve(
+        &krr::solvers::DenseOp::new(&a),
+        &b,
+        &SolveSpec::defcg().with_tol(1e-8),
+    );
+    assert_eq!(cold.stop, StopReason::Converged);
+    let fast = CountingOp::new(a.clone());
+    let warm = seq
+        .submit(fast, b, None, SolveSpec::defcg().with_tol(1e-8))
+        .wait();
+    assert_eq!(warm.stop, StopReason::Converged);
+    assert!(
+        warm.iterations < cold.iterations,
+        "deadline-fed basis {} >= cold {}",
+        warm.iterations,
+        cold.iterations
+    );
+    assert_eq!(svc.metrics().snapshot().deadline_exceeded, 1);
+}
+
+#[test]
+fn deadline_expired_in_queue_completes_without_running() {
+    let n = 25;
+    let svc = SolveService::new(1);
+    let seq = svc.open_sequence(RecycleConfig::default());
+    let slow = SlowOp::new(spd(n, 100.0, 5));
+    let counted = CountingOp::new(spd(n, 100.0, 6));
+    let b = vec![1.0; n];
+    let t1 = seq.submit(slow.clone(), b.clone(), None, SolveSpec::cg().with_tol(1e-8));
+    slow.wait_started();
+    // Queued behind the parked solve with an already-short budget: by
+    // the time the drainer reaches it, the deadline has passed.
+    let t2 = seq.submit(
+        counted.clone(),
+        b.clone(),
+        None,
+        SolveSpec::cg().with_tol(1e-8).with_deadline(Duration::from_millis(30)),
+    );
+    std::thread::sleep(Duration::from_millis(60)); // let the deadline lapse
+    slow.release();
+    assert_eq!(t1.wait().stop, StopReason::Converged);
+    let r2 = t2.wait();
+    assert_eq!(r2.stop, StopReason::DeadlineExceeded);
+    assert_eq!(
+        counted.calls.load(Ordering::SeqCst),
+        0,
+        "a request whose deadline lapsed in the queue must not run"
+    );
+    assert_eq!(seq.history().len(), 1, "never-run requests leave no history");
+    assert_eq!(svc.metrics().snapshot().deadline_exceeded, 1);
+}
+
+#[test]
+fn shutdown_drain_completes_queued_work_then_rejects() {
+    let n = 30;
+    let svc = SolveService::new(1);
+    let seq = svc.open_sequence(RecycleConfig::default());
+    let slow = SlowOp::new(spd(n, 100.0, 7));
+    let good = CountingOp::new(spd(n, 100.0, 8));
+    let b = vec![1.0; n];
+    let t1 = seq.submit(slow.clone(), b.clone(), None, SolveSpec::cg().with_tol(1e-8));
+    slow.wait_started();
+    let t2 = seq.submit(good.clone(), b.clone(), None, SolveSpec::cg().with_tol(1e-8));
+    let t3 = seq.submit(good.clone(), b.clone(), None, SolveSpec::cg().with_tol(1e-8));
+    // Unblock the in-flight solve shortly after the drain starts waiting.
+    let release_thread = {
+        let slow = slow.clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(40));
+            slow.release();
+        })
+    };
+    svc.shutdown(Shutdown::Drain);
+    release_thread.join().unwrap();
+    // Drain ran everything that was accepted...
+    assert_eq!(t1.wait().stop, StopReason::Converged);
+    assert_eq!(t2.wait().stop, StopReason::Converged);
+    assert_eq!(t3.wait().stop, StopReason::Converged);
+    assert_eq!(seq.history().len(), 3, "queued work must complete under Drain");
+    // ...and the service no longer admits work.
+    let err = seq
+        .try_submit(good, b, None, SolveSpec::cg().with_tol(1e-8))
+        .unwrap_err();
+    assert_eq!(err, krr::coordinator::SubmitError::ShuttingDown);
+    let snap = svc.metrics().snapshot();
+    assert_eq!(snap.completed, 3);
+    assert_eq!(snap.cancelled, 0);
+    assert_eq!(snap.rejected, 1);
+    assert_eq!(snap.queue_depth, 0);
+}
+
+#[test]
+fn shutdown_abort_cancels_queued_and_inflight_work() {
+    let n = 30;
+    let svc = SolveService::new(1);
+    let seq = svc.open_sequence(RecycleConfig::default());
+    let slow = SlowOp::new(spd(n, 1e6, 9));
+    let counted = CountingOp::new(spd(n, 100.0, 10));
+    let b = vec![1.0; n];
+    let t1 = seq.submit(slow.clone(), b.clone(), None, SolveSpec::cg().with_tol(1e-12));
+    slow.wait_started();
+    let t2 = seq.submit(counted.clone(), b.clone(), None, SolveSpec::cg().with_tol(1e-8));
+    let t3 = seq.submit(counted.clone(), b.clone(), None, SolveSpec::cg().with_tol(1e-8));
+    // Abort blocks until idle; the in-flight solve only observes its
+    // cancel once its parked matvec returns, so release it from aside.
+    let release_thread = {
+        let slow = slow.clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(40));
+            slow.release();
+        })
+    };
+    svc.shutdown(Shutdown::Abort);
+    release_thread.join().unwrap();
+    // The in-flight solve was cancelled mid-iteration; the queued ones
+    // never ran at all.
+    assert_eq!(t1.wait().stop, StopReason::Cancelled);
+    assert_eq!(t2.wait().stop, StopReason::Cancelled);
+    assert_eq!(t3.wait().stop, StopReason::Cancelled);
+    assert_eq!(
+        counted.calls.load(Ordering::SeqCst),
+        0,
+        "Abort must cancel queued work without running it"
+    );
+    let snap = svc.metrics().snapshot();
+    assert_eq!(snap.cancelled, 3);
+    assert_eq!(snap.completed, 3);
+    assert_eq!(snap.queue_depth, 0);
+    // And nothing cancelled was absorbed into the recycle basis.
+    assert_eq!(seq.k_active(), 0);
+}
+
+#[test]
+fn poll_and_wait_timeout_are_nonblocking_while_running() {
+    let n = 20;
+    let svc = SolveService::new(1);
+    let seq = svc.open_sequence(RecycleConfig::default());
+    let slow = SlowOp::new(spd(n, 100.0, 11));
+    let fut = seq.submit(slow.clone(), vec![1.0; n], None, SolveSpec::cg().with_tol(1e-8));
+    slow.wait_started();
+    assert!(fut.poll().is_none(), "poll must not block on a running solve");
+    assert!(
+        fut.wait_timeout(Duration::from_millis(20)).is_none(),
+        "wait_timeout must give up on a running solve"
+    );
+    slow.release();
+    // Blocking wait still resolves after the failed poll attempts.
+    assert_eq!(fut.wait().stop, StopReason::Converged);
+}
+
+#[test]
+fn poll_yields_the_result_exactly_once() {
+    let n = 20;
+    let svc = SolveService::new(1);
+    let seq = svc.open_sequence(RecycleConfig::default());
+    let op = CountingOp::new(spd(n, 100.0, 12));
+    let fut = seq.submit(op, vec![1.0; n], None, SolveSpec::cg().with_tol(1e-8));
+    // Spin-poll to completion.
+    let r = loop {
+        if let Some(r) = fut.poll() {
+            break r;
+        }
+        std::thread::yield_now();
+    };
+    assert_eq!(r.stop, StopReason::Converged);
+    assert!(fut.poll().is_none(), "the result is yielded exactly once");
+}
+
+#[test]
+fn caller_supplied_cancel_token_is_the_futures_token() {
+    // A spec built with with_cancel keeps that token through submission:
+    // raising the caller's own handle cancels the queued request.
+    let n = 25;
+    let svc = SolveService::new(1);
+    let seq = svc.open_sequence(RecycleConfig::default());
+    let slow = SlowOp::new(spd(n, 100.0, 13));
+    let counted = CountingOp::new(spd(n, 100.0, 14));
+    let b = vec![1.0; n];
+    let t1 = seq.submit(slow.clone(), b.clone(), None, SolveSpec::cg().with_tol(1e-8));
+    slow.wait_started();
+    let token = krr::solvers::CancelToken::new();
+    let t2 = seq.submit(
+        counted.clone(),
+        b.clone(),
+        None,
+        SolveSpec::cg().with_tol(1e-8).with_cancel(token.clone()),
+    );
+    token.cancel(); // the caller's handle, not the future's
+    slow.release();
+    assert_eq!(t1.wait().stop, StopReason::Converged);
+    assert_eq!(t2.wait().stop, StopReason::Cancelled);
+    assert_eq!(counted.calls.load(Ordering::SeqCst), 0);
+}
