@@ -83,7 +83,7 @@ use crate::linalg::mat::Mat;
 use crate::solvers::api::{Priority, SolveSpec};
 use crate::solvers::blockcg::BlockSolveResult;
 use crate::solvers::control::{CancelToken, SolveControl};
-use crate::solvers::recycle::{RecycleConfig, RecycleManager, SystemStats};
+use crate::solvers::recycle::{AbsorbStats, RecycleConfig, RecycleManager, SystemStats};
 use crate::solvers::{ParDenseOp, SolveResult, SpdOperator, StopReason, StoredDirections};
 use crate::util::pool::ThreadPool;
 use std::collections::VecDeque;
@@ -161,6 +161,15 @@ pub struct SolveReport {
     /// Number of requests served by the same coalesced block solve
     /// (1 for single-RHS requests and uncoalesced blocks).
     pub group_size: usize,
+    /// Columns removed by budget enforcement while absorbing this run
+    /// (basis columns dropped by residual-optimal truncation plus panel
+    /// columns removed by A-weighted compression; see
+    /// [`crate::solvers::recycle::RecycleBudget`]). 0 when nothing was
+    /// truncated or the request never reached the solve state.
+    pub truncated_cols: usize,
+    /// This run found its sequence's basis evicted by the service-wide
+    /// byte accountant and ran degraded (plain CG re-warming the basis).
+    pub post_eviction: bool,
 }
 
 /// Internal state of a future's one-shot result slot.
@@ -338,6 +347,8 @@ impl Task {
             matvecs: 0,
             k_active: 0,
             group_size: 1,
+            truncated_cols: 0,
+            post_eviction: false,
         };
         let n = self.op.n();
         metrics.note_completion(stop);
@@ -462,6 +473,122 @@ struct Admission {
     closed: AtomicBool,
 }
 
+/// One sequence's row in the [`ByteAccountant`] ledger.
+struct AccountEntry {
+    id: u64,
+    /// Weak: the accountant must never keep a retired sequence's recycle
+    /// state alive just to account for it.
+    mgr: Weak<Mutex<RecycleManager>>,
+    /// [`RecycleManager::bytes_held`] as of this sequence's last settled
+    /// solve (or last eviction).
+    bytes: usize,
+    /// Logical-clock tick of the last settled solve — the recency axis.
+    last_used: u64,
+    /// Observed iteration savings of this sequence's basis (cold-start
+    /// iterations minus latest iterations, floored at 0) — the
+    /// payoff-weighted tiebreak: between two equally cold sequences, the
+    /// one whose basis demonstrably saves more work is evicted later.
+    payoff: f64,
+}
+
+/// Service-wide recycling-memory accountant: tracks
+/// [`RecycleManager::bytes_held`] per sequence and, when the total
+/// exceeds the global cap, evicts cold sequences' bases (LRU by settle
+/// tick, payoff-weighted: score = staleness / (1 + payoff)). Eviction is
+/// graceful by construction — [`RecycleManager::evict_basis`] only drops
+/// the basis and cached Jacobi, so the victim's next solve runs plain CG
+/// and re-warms through the normal extraction; no request ever fails
+/// because its sequence was evicted.
+///
+/// # Locking
+///
+/// Drainers call [`ByteAccountant::settle`] **after** releasing their
+/// sequence's solve lock; `settle` holds the ledger lock and only ever
+/// `try_lock`s victim managers. A victim mid-solve is therefore simply
+/// skipped (it is demonstrably not cold), and the blocking-lock edge
+/// "ledger → manager" never exists, so no lock-order cycle with the
+/// drainers' "manager, then ledger" sequence is possible.
+struct ByteAccountant {
+    /// Global cap on summed `bytes_held` (`usize::MAX` = unbounded).
+    cap: usize,
+    /// Logical settle clock (one tick per settled solve).
+    clock: AtomicU64,
+    entries: Mutex<Vec<AccountEntry>>,
+}
+
+impl ByteAccountant {
+    fn new(cap: usize) -> Self {
+        ByteAccountant { cap, clock: AtomicU64::new(0), entries: Mutex::new(Vec::new()) }
+    }
+
+    fn register(&self, id: u64, mgr: &Arc<Mutex<RecycleManager>>) {
+        lock_unpoisoned(&self.entries).push(AccountEntry {
+            id,
+            mgr: Arc::downgrade(mgr),
+            bytes: 0,
+            last_used: 0,
+            payoff: 0.0,
+        });
+    }
+
+    /// Record sequence `id`'s post-solve footprint and, if the global
+    /// total now exceeds the cap, evict cold sequences until it does not
+    /// (or no evictable candidate remains). The settling sequence itself
+    /// is never a victim — it is by definition the hottest, and evicting
+    /// it would only force an immediate re-warm.
+    fn settle(&self, id: u64, bytes: usize, payoff: f64, metrics: &ServiceMetrics) {
+        let now = self.clock.fetch_add(1, Ordering::Relaxed) + 1;
+        let mut entries = lock_unpoisoned(&self.entries);
+        // Retired sequences (every handle dropped) freed their manager —
+        // drop their rows instead of counting ghost bytes.
+        entries.retain(|e| e.mgr.strong_count() > 0);
+        if let Some(e) = entries.iter_mut().find(|e| e.id == id) {
+            e.bytes = bytes;
+            e.last_used = now;
+            e.payoff = payoff;
+        }
+        let mut total: usize = entries.iter().map(|e| e.bytes).sum();
+        if total > self.cap {
+            // Coldest first: highest staleness discounted by observed
+            // payoff. One pass over a score-ordered candidate list —
+            // busy victims (solve in flight) are skipped, not waited on.
+            let score = |e: &AccountEntry| (now - e.last_used) as f64 / (1.0 + e.payoff);
+            let mut order: Vec<usize> = (0..entries.len())
+                .filter(|&i| entries[i].id != id && entries[i].bytes > 0)
+                .collect();
+            order.sort_by(|&a, &b| score(&entries[b]).total_cmp(&score(&entries[a])));
+            for i in order {
+                if total <= self.cap {
+                    break;
+                }
+                let Some(m) = entries[i].mgr.upgrade() else {
+                    total -= entries[i].bytes;
+                    entries[i].bytes = 0;
+                    continue;
+                };
+                if let Ok(mut mg) = m.try_lock() {
+                    let freed = mg.evict_basis();
+                    let remaining = mg.bytes_held();
+                    drop(mg);
+                    total = total - entries[i].bytes + remaining;
+                    entries[i].bytes = remaining;
+                    // A victim that held only history frees nothing —
+                    // that is bookkeeping, not an eviction.
+                    if freed > 0 {
+                        metrics.basis_evictions.fetch_add(1, Ordering::Relaxed);
+                        crate::log_debug!(
+                            "byte accountant evicted sequence {} basis ({} bytes held globally)",
+                            entries[i].id,
+                            total
+                        );
+                    }
+                }
+            }
+        }
+        metrics.bytes_held.store(total, Ordering::Relaxed);
+    }
+}
+
 /// Aggregated service counters (lock-free atomics; see
 /// [`ServiceMetrics::snapshot`] for a consistent-enough named view).
 #[derive(Debug)]
@@ -486,6 +613,20 @@ pub struct ServiceMetrics {
     pub queue_depth: AtomicUsize,
     /// High-water mark of `queue_depth`.
     pub queue_high_water: AtomicUsize,
+    /// Gauge: recycling bytes currently held across all live sequences
+    /// (basis + cached Jacobi + history, by the audited
+    /// [`RecycleManager::bytes_held`] formula), refreshed by the byte
+    /// accountant after every settled solve.
+    pub bytes_held: AtomicUsize,
+    /// Recycled bases dropped by the service-wide byte accountant.
+    pub basis_evictions: AtomicUsize,
+    /// Budget-enforcement events inside the managers (basis truncations
+    /// plus panel compressions).
+    pub truncations: AtomicUsize,
+    /// Post-eviction solves that needed more iterations than the solve
+    /// right before them in their sequence — the observable cost of an
+    /// eviction decision.
+    pub post_eviction_iter_regressions: AtomicUsize,
     /// Time origin for the span stamps below.
     epoch: Instant,
     /// Nanos-since-epoch (+1, 0 = unset) of the first accepted submit.
@@ -511,6 +652,10 @@ impl ServiceMetrics {
             busy_nanos: AtomicU64::new(0),
             queue_depth: AtomicUsize::new(0),
             queue_high_water: AtomicUsize::new(0),
+            bytes_held: AtomicUsize::new(0),
+            basis_evictions: AtomicUsize::new(0),
+            truncations: AtomicUsize::new(0),
+            post_eviction_iter_regressions: AtomicUsize::new(0),
             epoch: Instant::now(),
             first_submit_nanos: AtomicU64::new(0),
             last_complete_nanos: AtomicU64::new(0),
@@ -553,7 +698,11 @@ impl ServiceMetrics {
             }
             _ => {}
         }
-        self.last_complete_nanos.fetch_max(self.stamp(), Ordering::Relaxed);
+        // SeqCst, matching `snapshot`'s reads: once a snapshot observes
+        // this completion in `completed`, it must also observe the span
+        // stamp (otherwise busy time lands inside a span that excludes
+        // the solve that produced it).
+        self.last_complete_nanos.fetch_max(self.stamp(), Ordering::SeqCst);
         self.queue_depth.fetch_sub(1, Ordering::SeqCst);
         self.completed.fetch_add(1, Ordering::SeqCst);
         // Lock-then-notify so a `wait_idle` waiter between its pending
@@ -567,8 +716,9 @@ impl ServiceMetrics {
     /// completion is counted by [`ServiceMetrics::note_completion`]).
     fn add_busy(&self, seconds: f64, matvecs: usize) {
         self.matvecs.fetch_add(matvecs, Ordering::Relaxed);
-        self.busy_nanos
-            .fetch_add((seconds * 1e9) as u64, Ordering::Relaxed);
+        // SeqCst pairs with `snapshot` reading busy FIRST: any busy time
+        // a snapshot sees was added strictly before its span reads.
+        self.busy_nanos.fetch_add((seconds * 1e9) as u64, Ordering::SeqCst);
     }
 
     /// Block until no request is queued or running. The 50 ms re-check
@@ -590,17 +740,35 @@ impl ServiceMetrics {
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let first = self.first_submit_nanos.load(Ordering::Relaxed);
-        let last = self.last_complete_nanos.load(Ordering::Relaxed);
+        // Read order is load-bearing for the `busy_seconds ≤
+        // span_seconds × workers` invariant. The completion path writes
+        // busy (`add_busy`), then the span stamp, then `completed` — so
+        // the snapshot reads them in the REVERSE order: busy first, so
+        // every nanosecond of busy time it reports was recorded before
+        // the span reads; then completed/submitted; then the stamps.
+        // A solve that has added busy time but not yet stamped its
+        // completion is still in flight by the counters
+        // (submitted > completed), and the span end is extended to *now*,
+        // which is at or after that solve's true end — the old relaxed,
+        // busy-last reads could instead pair fresh busy time with a stale
+        // span and report utilization above the worker count.
+        let busy = self.busy_nanos.load(Ordering::SeqCst);
+        let completed = self.completed.load(Ordering::SeqCst);
+        let submitted = self.submitted.load(Ordering::SeqCst);
+        let first = self.first_submit_nanos.load(Ordering::SeqCst);
+        let mut last = self.last_complete_nanos.load(Ordering::SeqCst);
+        if submitted > completed {
+            last = last.max(self.stamp());
+        }
         MetricsSnapshot {
-            submitted: self.submitted.load(Ordering::SeqCst),
-            completed: self.completed.load(Ordering::SeqCst),
+            submitted,
+            completed,
             rejected: self.rejected.load(Ordering::Relaxed),
             cancelled: self.cancelled.load(Ordering::Relaxed),
             deadline_exceeded: self.deadline_exceeded.load(Ordering::Relaxed),
             failed: self.failed.load(Ordering::Relaxed),
             active_sequences: self.active_sequences.load(Ordering::Relaxed),
-            busy_seconds: self.busy_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
+            busy_seconds: busy as f64 * 1e-9,
             span_seconds: if first > 0 && last >= first {
                 (last - first) as f64 * 1e-9
             } else {
@@ -609,6 +777,12 @@ impl ServiceMetrics {
             total_matvecs: self.matvecs.load(Ordering::Relaxed),
             queue_depth: self.queue_depth.load(Ordering::SeqCst),
             queue_high_water: self.queue_high_water.load(Ordering::Relaxed),
+            bytes_held: self.bytes_held.load(Ordering::Relaxed),
+            basis_evictions: self.basis_evictions.load(Ordering::Relaxed),
+            truncations: self.truncations.load(Ordering::Relaxed),
+            post_eviction_iter_regressions: self
+                .post_eviction_iter_regressions
+                .load(Ordering::Relaxed),
         }
     }
 }
@@ -651,6 +825,20 @@ pub struct MetricsSnapshot {
     /// High-water mark of `queue_depth` — how close the service came to
     /// its admission cap.
     pub queue_high_water: usize,
+    /// Recycling bytes currently held across live sequences (basis +
+    /// cached Jacobi + history, the audited
+    /// [`RecycleManager::bytes_held`] formula), as of the last settled
+    /// solve.
+    pub bytes_held: usize,
+    /// Recycled bases dropped by the service-wide byte accountant to get
+    /// back under its global cap.
+    pub basis_evictions: usize,
+    /// Budget-enforcement events inside the sequence managers (basis
+    /// truncations plus stored-panel compressions).
+    pub truncations: usize,
+    /// Post-eviction solves that regressed in iteration count relative
+    /// to the solve right before them in their sequence.
+    pub post_eviction_iter_regressions: usize,
 }
 
 impl MetricsSnapshot {
@@ -673,6 +861,10 @@ pub struct SolveService {
     admission: Arc<Admission>,
     /// Weak registry of sequence queues, for `shutdown(Abort)` sweeps.
     sequences: Mutex<Vec<Weak<Mutex<SequenceState>>>>,
+    /// Service-wide recycling-memory ledger (cap `usize::MAX` unless
+    /// built with [`SolveService::with_byte_cap`]).
+    accountant: Arc<ByteAccountant>,
+    next_seq_id: AtomicU64,
 }
 
 impl SolveService {
@@ -687,6 +879,21 @@ impl SolveService {
     /// requests are queued or running, [`SequenceHandle::try_submit`]
     /// returns [`SubmitError::QueueFull`] (and `submit` panics).
     pub fn with_queue_cap(workers: usize, queue_cap: usize) -> Self {
+        Self::with_byte_cap(workers, queue_cap, usize::MAX)
+    }
+
+    /// A service that additionally bounds the **summed recycling
+    /// footprint** across all sequences: once the total of every live
+    /// sequence's [`RecycleManager::bytes_held`] exceeds
+    /// `max_recycle_bytes`, the service evicts cold sequences' recycled
+    /// bases (LRU with a payoff-weighted tiebreak) until it is back
+    /// under the cap. Evicted sequences degrade gracefully — their next
+    /// solve runs plain CG and re-warms the basis; no request errors.
+    /// Eviction decisions are visible as
+    /// [`MetricsSnapshot::basis_evictions`] /
+    /// [`MetricsSnapshot::bytes_held`] and per-request as
+    /// [`SolveReport::post_eviction`].
+    pub fn with_byte_cap(workers: usize, queue_cap: usize, max_recycle_bytes: usize) -> Self {
         assert!(queue_cap >= 1, "admission cap must admit at least one request");
         SolveService {
             pool: Arc::new(ThreadPool::new(workers)),
@@ -694,6 +901,8 @@ impl SolveService {
             metrics: Arc::new(ServiceMetrics::new()),
             admission: Arc::new(Admission { queue_cap, closed: AtomicBool::new(false) }),
             sequences: Mutex::new(Vec::new()),
+            accountant: Arc::new(ByteAccountant::new(max_recycle_bytes)),
+            next_seq_id: AtomicU64::new(0),
         }
     }
 
@@ -734,9 +943,12 @@ impl SolveService {
             seqs.retain(|w| w.strong_count() > 0); // prune retired sequences
             seqs.push(Arc::downgrade(&state));
         }
+        let mgr = Arc::new(Mutex::new(RecycleManager::new(cfg)));
+        let seq_id = self.next_seq_id.fetch_add(1, Ordering::Relaxed);
+        self.accountant.register(seq_id, &mgr);
         SequenceHandle {
             state,
-            mgr: Arc::new(Mutex::new(RecycleManager::new(cfg))),
+            mgr,
             pool: self.pool.clone(),
             metrics: self.metrics.clone(),
             admission: self.admission.clone(),
@@ -744,6 +956,8 @@ impl SolveService {
                 metrics: self.metrics.clone(),
                 retired: AtomicBool::new(false),
             }),
+            accountant: self.accountant.clone(),
+            seq_id,
         }
     }
 
@@ -814,6 +1028,8 @@ pub struct SequenceHandle {
     metrics: Arc<ServiceMetrics>,
     admission: Arc<Admission>,
     closer: Arc<SeqCloser>,
+    accountant: Arc<ByteAccountant>,
+    seq_id: u64,
 }
 
 impl SequenceHandle {
@@ -977,6 +1193,8 @@ impl SequenceHandle {
         let state = self.state.clone();
         let mgr = self.mgr.clone();
         let metrics = self.metrics.clone();
+        let accountant = self.accountant.clone();
+        let seq_id = self.seq_id;
         self.pool.spawn(move || loop {
             // Priority-aware pop: serve the most urgent class present,
             // FIFO within the class. With exactly two classes this is
@@ -1016,6 +1234,10 @@ impl SequenceHandle {
                 continue;
             }
             let Task { op, spec, token, payload, .. } = task;
+            // Budget-event baseline: the manager's truncation counter is
+            // monotone, so the delta across the solve is what THIS run's
+            // budget enforcement did.
+            let trunc_before = lock_unpoisoned(&mgr).truncations();
             match payload {
                 Payload::Single { b, x0, slot } => {
                     // The solve runs under the dedicated solve mutex, NOT
@@ -1030,15 +1252,22 @@ impl SequenceHandle {
                     }));
                     match outcome {
                         Ok(result) => {
-                            let k_active = lock_unpoisoned(&mgr).k_active();
+                            let post = sample_post_solve(&lock_unpoisoned(&mgr));
+                            post.note(&metrics, trunc_before);
+                            // Settle AFTER the solve lock is released:
+                            // the accountant only ever try_locks managers.
+                            accountant.settle(seq_id, post.bytes, post.payoff, &metrics);
                             metrics.add_busy(result.seconds, result.matvecs);
                             let report = SolveReport {
                                 stop: result.stop,
                                 queue_seconds,
                                 solve_seconds: result.seconds,
                                 matvecs: result.matvecs,
-                                k_active,
+                                k_active: post.k_active,
                                 group_size: 1,
+                                truncated_cols: post.absorb.truncated_cols
+                                    + post.absorb.compressed_cols,
+                                post_eviction: post.absorb.post_eviction,
                             };
                             metrics.note_completion(result.stop);
                             slot.put(result, report);
@@ -1051,6 +1280,8 @@ impl SequenceHandle {
                                 matvecs: 0,
                                 k_active: 0,
                                 group_size: 1,
+                                truncated_cols: 0,
+                                post_eviction: false,
                             };
                             metrics.note_completion(StopReason::Failed);
                             slot.put(
@@ -1134,7 +1365,9 @@ impl SequenceHandle {
                     }));
                     match outcome {
                         Ok(result) => {
-                            let k_active = lock_unpoisoned(&mgr).k_active();
+                            let post = sample_post_solve(&lock_unpoisoned(&mgr));
+                            post.note(&metrics, trunc_before);
+                            accountant.settle(seq_id, post.bytes, post.payoff, &metrics);
                             metrics.add_busy(result.seconds, result.matvecs);
                             // Split the group result back into per-member
                             // slices. Each member is billed its own
@@ -1164,8 +1397,11 @@ impl SequenceHandle {
                                     queue_seconds: m.queue_seconds,
                                     solve_seconds: result.seconds,
                                     matvecs,
-                                    k_active,
+                                    k_active: post.k_active,
                                     group_size,
+                                    truncated_cols: post.absorb.truncated_cols
+                                        + post.absorb.compressed_cols,
+                                    post_eviction: post.absorb.post_eviction,
                                 };
                                 metrics.note_completion(result.stop);
                                 m.slot.put(
@@ -1199,6 +1435,8 @@ impl SequenceHandle {
                                     matvecs: 0,
                                     k_active: 0,
                                     group_size,
+                                    truncated_cols: 0,
+                                    post_eviction: false,
                                 };
                                 metrics.note_completion(StopReason::Failed);
                                 m.slot.put(
@@ -1242,6 +1480,56 @@ impl SequenceHandle {
     pub fn close(&self) {
         lock_unpoisoned(&self.state).closed = true;
         self.closer.retire();
+    }
+}
+
+/// Everything a drainer needs from the manager right after a solve,
+/// sampled in ONE acquisition of the solve lock (report fields, metric
+/// deltas, and the byte accountant's inputs).
+struct PostSolve {
+    k_active: usize,
+    absorb: AbsorbStats,
+    bytes: usize,
+    truncations: u64,
+    /// Observed iteration savings of this sequence's basis: cold-start
+    /// iterations minus the latest run's — the accountant's eviction
+    /// tiebreak.
+    payoff: f64,
+    /// This was a post-eviction run AND it needed more iterations than
+    /// the run before it: the observable cost of the eviction decision.
+    regressed: bool,
+}
+
+fn sample_post_solve(mg: &RecycleManager) -> PostSolve {
+    let h = mg.history();
+    let payoff = match (h.first(), h.last()) {
+        (Some(first), Some(last)) => (first.iterations as f64 - last.iterations as f64).max(0.0),
+        _ => 0.0,
+    };
+    let absorb = mg.last_absorb();
+    let regressed = absorb.post_eviction
+        && h.len() >= 2
+        && h[h.len() - 1].iterations > h[h.len() - 2].iterations;
+    PostSolve {
+        k_active: mg.k_active(),
+        absorb,
+        bytes: mg.bytes_held(),
+        truncations: mg.truncations(),
+        payoff,
+        regressed,
+    }
+}
+
+impl PostSolve {
+    /// Fold this run's budget events into the service counters.
+    fn note(&self, metrics: &ServiceMetrics, trunc_before: u64) {
+        let delta = self.truncations.saturating_sub(trunc_before) as usize;
+        if delta > 0 {
+            metrics.truncations.fetch_add(delta, Ordering::Relaxed);
+        }
+        if self.regressed {
+            metrics.post_eviction_iter_regressions.fetch_add(1, Ordering::Relaxed);
+        }
     }
 }
 
@@ -2049,5 +2337,99 @@ mod tests {
         assert_eq!(r1.x.cols(), 2, "each member still gets its own-shaped result");
         assert_eq!(r2.x.cols(), 1);
         assert_eq!(svc.metrics().snapshot().failed, 2);
+    }
+
+    /// Service-wide byte cap: with 8 active sequences and a cap that fits
+    /// roughly one recycled basis, the accountant evicts cold sequences
+    /// (eviction counter > 0), every solve still converges, and an
+    /// evicted sequence degrades to plain CG for one solve and then
+    /// re-warms its basis. Each sequence gets its own dimension, so any
+    /// cross-sequence `(W, AW)` leak would break a solve outright.
+    #[test]
+    fn global_byte_cap_evicts_cold_sequences_but_all_solves_converge() {
+        let cap = 5_000; // ≈ one k=6 basis at these dimensions
+        let svc = SolveService::with_byte_cap(2, SolveService::DEFAULT_QUEUE_CAP, cap);
+        let cfg = RecycleConfig { k: 6, l: 10, ..Default::default() };
+        let seqs: Vec<_> = (0..8).map(|_| svc.open_sequence(cfg.clone())).collect();
+        let spec = SolveSpec::defcg().with_tol(1e-8);
+
+        for (i, seq) in seqs.iter().enumerate() {
+            let n = 40 + 2 * i;
+            let op = spd(n, 100 + i as u64);
+            let b = vec![1.0; n];
+            for _ in 0..3 {
+                let (r, report) =
+                    seq.submit(op.clone(), b.clone(), None, spec.clone()).wait_report();
+                assert_eq!(r.stop, StopReason::Converged);
+                assert!(!report.post_eviction, "no eviction before the cap is hit twice over");
+            }
+        }
+
+        let snap = svc.metrics().snapshot();
+        assert!(snap.basis_evictions > 0, "global cap never evicted anything");
+        assert!(snap.bytes_held > 0);
+        // The cap fits one basis: every sequence except the last settler
+        // was evicted, and each kept its (cheap) history.
+        for (i, seq) in seqs.iter().enumerate() {
+            assert_eq!(seq.history().len(), 3);
+            if i < 7 {
+                assert_eq!(seq.k_active(), 0, "sequence {i} should have been evicted");
+            }
+        }
+        assert!(seqs[7].k_active() > 0, "the settling sequence is never its own victim");
+
+        // The evicted sequence 0 degrades gracefully: its next solve is
+        // plain CG (flagged post-eviction in the report), converges, and
+        // re-warms the basis from its own panel.
+        let n = 40;
+        let op = spd(n, 100);
+        let (r, report) = seqs[0].submit(op, vec![1.0; n], None, spec).wait_report();
+        assert_eq!(r.stop, StopReason::Converged);
+        assert!(report.post_eviction, "first post-eviction solve must be flagged");
+        assert!(seqs[0].k_active() > 0, "basis re-warms from the degraded run's panel");
+    }
+
+    /// Hammer `snapshot` from another thread while a 1-worker service
+    /// solves a stream of requests: the reported utilization must never
+    /// exceed the worker count, i.e. `busy_seconds ≤ span_seconds` here.
+    /// (The old relaxed busy-last read order could pair fresh busy time
+    /// with a stale span and report busy > span.)
+    #[test]
+    fn snapshot_never_reports_busy_exceeding_span_on_one_worker() {
+        let svc = Arc::new(SolveService::new(1));
+        let seq = svc.open_sequence(RecycleConfig { k: 4, l: 6, ..Default::default() });
+        let n = 60;
+        let op = spd(n, 9);
+        let b = vec![1.0; n];
+        let spec = SolveSpec::defcg().with_tol(1e-10);
+
+        let done = Arc::new(AtomicBool::new(false));
+        let violations = Arc::new(AtomicUsize::new(0));
+        let reader = {
+            let svc = svc.clone();
+            let done = done.clone();
+            let violations = violations.clone();
+            std::thread::spawn(move || {
+                while !done.load(Ordering::SeqCst) {
+                    let snap = svc.metrics().snapshot();
+                    // 1 µs of slack for the nanos→f64 conversions.
+                    if snap.busy_seconds > snap.span_seconds + 1e-6 {
+                        violations.fetch_add(1, Ordering::SeqCst);
+                    }
+                }
+            })
+        };
+
+        for _ in 0..60 {
+            let r = seq.submit(op.clone(), b.clone(), None, spec.clone()).wait();
+            assert_eq!(r.stop, StopReason::Converged);
+        }
+        done.store(true, Ordering::SeqCst);
+        reader.join().unwrap();
+        assert_eq!(
+            violations.load(Ordering::SeqCst),
+            0,
+            "snapshot reported busy_seconds > span_seconds on a 1-worker service"
+        );
     }
 }

@@ -261,9 +261,16 @@ pub fn gen_sym_eig(g_mat: &Mat, f_mat: &Mat) -> Result<Vec<(f64, Vec<f64>)>, Str
             }
             u[i] = t / l[(i, i)];
         }
-        out.push((1.0 / mu, u));
+        let theta = 1.0 / mu;
+        if !theta.is_finite() {
+            continue; // μ denormal enough to overflow θ — as useless as μ = 0
+        }
+        out.push((theta, u));
     }
-    out.sort_by(|a, b| b.0.abs().partial_cmp(&a.0.abs()).unwrap());
+    // total_cmp: a non-finite θ slipping through (e.g. NaN from a
+    // degenerate backsolve) must never panic the caller's thread — the
+    // callers run on service drainers.
+    out.sort_by(|a, b| b.0.abs().total_cmp(&a.0.abs()));
     Ok(out)
 }
 

@@ -62,6 +62,7 @@ use crate::solvers::blockcg::{self, BlockSolveResult};
 use crate::solvers::cg::{self, CgConfig};
 use crate::solvers::control::{CancelToken, SolveControl};
 use crate::solvers::defcg::{self, Deflation};
+use crate::solvers::recycle::RecycleBudget;
 use crate::solvers::{SolveResult, SpdOperator};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -239,6 +240,13 @@ pub struct SolveSpec {
     /// callers attach their own with [`SolveSpec::with_cancel`] /
     /// [`SolveSpec::with_deadline`].
     pub control: SolveControl,
+    /// Per-request override of the sequence's
+    /// [`crate::solvers::recycle::RecycleBudget`]: inside a recycled
+    /// sequence, `Some` takes precedence over
+    /// [`crate::solvers::recycle::RecycleConfig::budget`]. Ignored by the
+    /// direct (manager-less) entry points, which hold no recycling state
+    /// to bound.
+    pub budget: Option<RecycleBudget>,
 }
 
 impl Default for SolveSpec {
@@ -263,6 +271,7 @@ impl SolveSpec {
             deflation: None,
             priority: Priority::default(),
             control: SolveControl::none(),
+            budget: None,
         }
     }
 
@@ -391,6 +400,13 @@ impl SolveSpec {
         self
     }
 
+    /// Override the sequence's [`RecycleBudget`] for this request (see
+    /// [`SolveSpec::budget`]).
+    pub fn with_budget(mut self, budget: RecycleBudget) -> SolveSpec {
+        self.budget = Some(budget);
+        self
+    }
+
     /// The scalar knobs (plus the control handle) as the legacy
     /// per-kernel config.
     pub fn cg_config(&self) -> CgConfig {
@@ -419,6 +435,7 @@ impl std::fmt::Debug for SolveSpec {
             .field("deflation_k", &self.deflation.as_ref().map(|d| d.k()))
             .field("priority", &self.priority)
             .field("deadline", &self.control.deadline)
+            .field("budget", &self.budget)
             .finish()
     }
 }

@@ -564,6 +564,14 @@ impl StoredDirections {
         self.p.is_empty()
     }
 
+    /// Logical f64 payload in bytes (both panels, `len × 8` per column) —
+    /// the quantity `RecycleBudget::max_stored_bytes` caps.
+    pub fn bytes(&self) -> usize {
+        let p: usize = self.p.iter().map(|c| 8 * c.len()).sum();
+        let ap: usize = self.ap.iter().map(|c| 8 * c.len()).sum();
+        p + ap
+    }
+
     /// Stack stored directions as matrix columns: returns (P, AP).
     pub fn as_mats(&self, n: usize) -> (Mat, Mat) {
         let l = self.p.len();

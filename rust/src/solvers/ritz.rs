@@ -57,6 +57,11 @@ impl Default for RitzConfig {
 #[derive(Clone, Debug)]
 pub struct RitzValue {
     pub theta: f64,
+    /// Relative eigenresidual `‖AW·e_j − θ_j W·e_j‖ / (1 + |θ_j|)` of the
+    /// normalized pair — small means well-converged. Budget enforcement
+    /// keeps the smallest-residual pairs when truncating
+    /// (residual-optimal truncation, see `RecycleBudget`).
+    pub resid: f64,
 }
 
 /// Extract a new recycled basis from the previous deflation (may be `None`
@@ -76,8 +81,25 @@ pub fn extract(
     cfg: &RitzConfig,
 ) -> Option<(Deflation, Vec<RitzValue>)> {
     let k_prev = prev.map(|d| d.k()).unwrap_or(0);
-    let l = stored.len();
-    let m = k_prev + l;
+    // Drop non-finite stored pairs before anything touches them: a
+    // near-breakdown run can record Inf/NaN direction columns, and a
+    // single one poisons the Gram matrices — an Inf column even turns
+    // into NaN inside the MGS normalization (‖v‖ = ∞ rescales by 0) —
+    // long before any θ-level filter could catch it. The extraction
+    // degrades to the surviving columns instead of panicking the caller.
+    let finite: Vec<usize> = (0..stored.len())
+        .filter(|&j| {
+            stored.p[j].iter().all(|v| v.is_finite())
+                && stored.ap[j].iter().all(|v| v.is_finite())
+        })
+        .collect();
+    if finite.len() < stored.len() {
+        crate::log_warn!(
+            "dropping {} non-finite stored direction pair(s) before Ritz extraction",
+            stored.len() - finite.len()
+        );
+    }
+    let m = k_prev + finite.len();
     if m == 0 || cfg.k == 0 {
         return None;
     }
@@ -91,9 +113,9 @@ pub fn extract(
             az.set_col(j, &d.aw.col(j));
         }
     }
-    for j in 0..l {
-        z.set_col(k_prev + j, &stored.p[j]);
-        az.set_col(k_prev + j, &stored.ap[j]);
+    for (dst, &j) in finite.iter().enumerate() {
+        z.set_col(k_prev + dst, &stored.p[j]);
+        az.set_col(k_prev + dst, &stored.ap[j]);
     }
 
     // Joint modified Gram–Schmidt on (Z, AZ): orthonormalize Z's columns,
@@ -124,6 +146,11 @@ pub fn extract(
             return None;
         }
     };
+    // A non-finite pair (θ or eigenvector entries) would previously panic
+    // the `partial_cmp(..).unwrap()` sort below — on the service that
+    // takes down the drainer thread. Filter, then sort with the total
+    // order, so a contaminated extraction degrades instead of panicking.
+    pairs.retain(|(theta, u)| theta.is_finite() && u.iter().all(|v| v.is_finite()));
     if pairs.is_empty() {
         return None;
     }
@@ -131,8 +158,8 @@ pub fn extract(
     // gen_sym_eig returns |θ| descending. For SPD A all θ should be
     // positive; order by signed value according to the selection rule.
     match cfg.select {
-        RitzSelect::Largest => pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap()),
-        RitzSelect::Smallest => pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap()),
+        RitzSelect::Largest => pairs.sort_by(|a, b| b.0.total_cmp(&a.0)),
+        RitzSelect::Smallest => pairs.sort_by(|a, b| a.0.total_cmp(&b.0)),
     }
     pairs.truncate(cfg.k);
 
@@ -158,16 +185,25 @@ pub fn extract(
     for (c, (theta, _)) in pairs.iter().enumerate() {
         let wcol = w_all.col(c);
         let norm = norm2(&wcol);
-        if norm < cfg.min_col_norm {
+        if !norm.is_finite() || norm < cfg.min_col_norm {
             continue;
         }
         let awcol = aw_all.col(c);
         let inv = 1.0 / norm;
         let wcol: Vec<f64> = wcol.iter().map(|v| v * inv).collect();
         let awcol: Vec<f64> = awcol.iter().map(|v| v * inv).collect();
+        // Pair quality for residual-optimal truncation: the relative
+        // eigenresidual of the normalized pair. Costs one fused pass —
+        // no extra matvec (AW·e_j is already in hand).
+        let mut rq = 0.0;
+        for (wv, av) in wcol.iter().zip(awcol.iter()) {
+            let d = av - theta * wv;
+            rq += d * d;
+        }
+        let resid = rq.sqrt() / (1.0 + theta.abs());
         w.set_col(dst, &wcol);
         aw.set_col(dst, &awcol);
-        vals.push(RitzValue { theta: *theta });
+        vals.push(RitzValue { theta: *theta, resid });
         dst += 1;
     }
     if dst == 0 {
@@ -339,6 +375,63 @@ mod tests {
         assert_eq!(vals.len(), d2.k());
         let want = a.matmul(&d2.w);
         assert!(d2.aw.max_abs_diff(&want) < 1e-7);
+    }
+
+    #[test]
+    fn nan_contaminated_panel_degrades_instead_of_panicking() {
+        // A near-breakdown run can hand the extraction Inf/NaN direction
+        // columns. Before the total_cmp/filter fix this panicked in the
+        // selection sort (`partial_cmp(..).unwrap()`) — on the service
+        // that killed the drainer thread. Now the poisoned columns are
+        // dropped and the surviving ones still produce a usable basis.
+        let mut rng = Rng::new(7);
+        let n = 40;
+        let a = Mat::rand_spd(n, 1e4, &mut rng);
+        let b: Vec<f64> = (0..n).map(|i| 1.0 + (i % 3) as f64).collect();
+        let cfg = CgConfig { tol: 1e-10, max_iters: 0, store_l: 10, ..Default::default() };
+        let r = cg::solve(&DenseOp::new(&a), &b, None, &cfg);
+        let mut stored = r.stored.clone();
+        assert!(stored.len() >= 6);
+        // Poison three pairs three different ways: NaN in p, NaN in Ap,
+        // and an all-Inf direction (the case that turns into NaN inside
+        // MGS normalization if not filtered up front).
+        stored.p[0][n / 2] = f64::NAN;
+        stored.ap[2][0] = f64::NAN;
+        for v in stored.p[4].iter_mut() {
+            *v = f64::INFINITY;
+        }
+        let ritz_cfg = RitzConfig { k: 6, select: RitzSelect::Largest, min_col_norm: 1e-12 };
+        let (defl, vals) = extract(None, &stored, n, &ritz_cfg)
+            .expect("surviving columns must still yield a basis");
+        assert!(defl.k() > 0 && defl.k() <= 6);
+        assert_eq!(vals.len(), defl.k());
+        for v in &vals {
+            assert!(v.theta.is_finite(), "selected θ must be finite");
+            assert!(v.resid.is_finite() && v.resid >= 0.0);
+        }
+        // The degraded basis is still numerically consistent: AW == A·W.
+        let want = a.matmul(&defl.w);
+        assert!(defl.aw.max_abs_diff(&want) < 1e-7);
+        // Smallest-selection path takes the other sort branch.
+        let small_cfg = RitzConfig { k: 3, select: RitzSelect::Smallest, min_col_norm: 1e-12 };
+        let (_, small) = extract(None, &stored, n, &small_cfg).unwrap();
+        assert!(small.iter().all(|v| v.theta.is_finite()));
+    }
+
+    #[test]
+    fn resid_flags_converged_pairs() {
+        // The eigenresidual must be small for a pair CG has converged
+        // (the top of the spectrum after many iterations) and must be
+        // monotone evidence: a fully resolved invariant subspace has
+        // resid ≈ 0 while a half-baked one does not.
+        let mut rng = Rng::new(8);
+        let a = Mat::rand_spd(50, 1e5, &mut rng);
+        let (_, vals) = run_and_extract(&a, 14, 4, RitzSelect::Largest);
+        let best = vals.iter().map(|v| v.resid).fold(f64::MAX, f64::min);
+        assert!(best < 1e-3, "best pair should be well-converged, resid = {best}");
+        for v in &vals {
+            assert!(v.resid.is_finite() && v.resid >= 0.0);
+        }
     }
 
     #[test]
