@@ -6,7 +6,7 @@
 
 use krr::experiments::common::{ExpOpts, Workload};
 use krr::solvers::recycle::{AwPolicy, RecycleConfig};
-use krr::solvers::ritz::RitzSelect;
+use krr::solvers::strategy::StrategyChoice;
 use krr::gp::laplace::SolverBackend;
 use krr::util::bench::{BenchConfig, BenchGroup};
 
@@ -60,13 +60,17 @@ fn main() {
             ));
         });
     }
-    for (sel, name) in [(RitzSelect::Largest, "largest"), (RitzSelect::Smallest, "smallest")] {
+    for (sel, name) in [
+        (StrategyChoice::HarmonicLargest, "largest"),
+        (StrategyChoice::RitzSmallest, "smallest"),
+    ] {
         g.bench(&format!("ritz={name}"), || {
+            let strategy = sel.clone();
             std::hint::black_box(w.fit(
                 SolverBackend::DefCg(RecycleConfig {
                     k: 8,
                     l: 12,
-                    select: sel,
+                    strategy,
                     ..Default::default()
                 }),
                 &o,

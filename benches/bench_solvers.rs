@@ -7,6 +7,7 @@ use krr::runtime::engine::{Engine, Tensor};
 use krr::runtime::ops::EngineKernel;
 use krr::solvers::recycle::{RecycleBudget, RecycleConfig, RecycleManager};
 use krr::solvers::ritz::{extract, RitzConfig, RitzSelect};
+use krr::solvers::strategy::StrategyChoice;
 use krr::solvers::{self, DenseOp, SolveSpec};
 use krr::util::bench::{BenchConfig, BenchGroup};
 use krr::util::json::Json;
@@ -107,11 +108,75 @@ fn recycle_memory_report(n: usize) {
     println!("  wrote BENCH_recycle_memory.json");
 }
 
+/// Strategy comparison over the drifting 5-system sequence: every
+/// selection rule (plus adaptive sizing) runs the same sequence under
+/// the same k/ℓ, and the report records per-system iterations, total
+/// matvecs, the final basis size, and the last strategy decision
+/// (k chosen vs offered, predicted savings) — emitted as
+/// `BENCH_strategy.json` for CI to archive.
+fn strategy_report(n: usize) {
+    let systems = drifting_systems(n, 5, 9);
+    let b: Vec<f64> = (0..n).map(|i| 1.0 + (i % 7) as f64).collect();
+    let spec = SolveSpec::defcg().with_tol(1e-6);
+    let strategies = [
+        ("harmonic-largest", StrategyChoice::HarmonicLargest),
+        ("ritz-smallest", StrategyChoice::RitzSmallest),
+        ("two-sided", StrategyChoice::TwoSided),
+        ("adaptive-k", StrategyChoice::Auto),
+    ];
+    let mut rows = Vec::new();
+    println!("strategy comparison (n = {n}, 5-system drift, tol 1e-6, k=8 l=12):");
+    for (name, choice) in strategies {
+        let mut mgr = RecycleManager::new(RecycleConfig {
+            k: 8,
+            l: 12,
+            strategy: choice,
+            ..Default::default()
+        });
+        let mut iters = Vec::new();
+        let mut matvecs = 0usize;
+        for a in &systems {
+            let r = mgr.solve_next(&DenseOp::new(a), &b, None, &spec);
+            assert_eq!(r.stop, krr::solvers::StopReason::Converged);
+            iters.push(r.iterations as f64);
+            matvecs += r.matvecs;
+        }
+        let d = mgr.last_decision();
+        println!(
+            "  {name:<16} iters {iters:?}, {matvecs} matvecs, k {} of {} offered",
+            d.k_chosen, d.k_offered
+        );
+        rows.push(Json::obj(vec![
+            ("strategy", Json::str(name)),
+            ("iterations", Json::arr_num(&iters)),
+            ("total_matvecs", Json::num(matvecs as f64)),
+            ("final_k_active", Json::num(mgr.k_active() as f64)),
+            ("k_offered", Json::num(d.k_offered as f64)),
+            ("k_chosen", Json::num(d.k_chosen as f64)),
+            ("predicted_savings", Json::num(d.predicted_savings())),
+            ("strategy_shrinks", Json::num(mgr.strategy_shrinks() as f64)),
+        ]));
+    }
+    let doc = Json::obj(vec![
+        ("bench", Json::str("strategy")),
+        ("n", Json::num(n as f64)),
+        ("systems", Json::num(systems.len() as f64)),
+        ("tol", Json::num(1e-6)),
+        ("k", Json::num(8.0)),
+        ("l", Json::num(12.0)),
+        ("strategies", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_strategy.json", doc.to_string_pretty())
+        .expect("write BENCH_strategy.json");
+    println!("  wrote BENCH_strategy.json");
+}
+
 fn main() {
-    // `--smoke` (CI's release-mode check) runs only the memory
-    // measurement at a CI-sized n and skips the timed groups.
+    // `--smoke` (CI's release-mode check) runs only the memory and
+    // strategy measurements at a CI-sized n and skips the timed groups.
     let smoke = std::env::args().any(|a| a == "--smoke");
     recycle_memory_report(if smoke { 192 } else { 512 });
+    strategy_report(if smoke { 192 } else { 512 });
     if smoke {
         return;
     }

@@ -84,6 +84,7 @@ use crate::solvers::api::{Priority, SolveSpec};
 use crate::solvers::blockcg::BlockSolveResult;
 use crate::solvers::control::{CancelToken, SolveControl};
 use crate::solvers::recycle::{AbsorbStats, RecycleConfig, RecycleManager, SystemStats};
+use crate::solvers::strategy::StrategyDecision;
 use crate::solvers::{ParDenseOp, SolveResult, SpdOperator, StopReason, StoredDirections};
 use crate::util::pool::ThreadPool;
 use std::collections::VecDeque;
@@ -170,6 +171,23 @@ pub struct SolveReport {
     /// This run found its sequence's basis evicted by the service-wide
     /// byte accountant and ran degraded (plain CG re-warming the basis).
     pub post_eviction: bool,
+    /// Name of the recycle-space strategy that sized the basis absorbed
+    /// from this run (see [`crate::solvers::strategy`]); empty for
+    /// requests that never reached the solve state or sequences before
+    /// their first extraction.
+    pub strategy: &'static str,
+    /// Candidates the extraction offered the strategy (post budget
+    /// truncation) while absorbing this run.
+    pub k_offered: usize,
+    /// Candidates the strategy retained (0 = fall back to plain CG).
+    pub k_chosen: usize,
+    /// Net iteration savings the strategy's κ-bound model predicted for
+    /// the retained basis (0 when nothing was retained).
+    pub predicted_savings: f64,
+    /// Realized iteration savings of this run against the sequence's
+    /// cold start (oldest retained history entry minus this run — the
+    /// same payoff signal the byte accountant's evictor uses).
+    pub realized_savings: f64,
 }
 
 /// Internal state of a future's one-shot result slot.
@@ -349,6 +367,11 @@ impl Task {
             group_size: 1,
             truncated_cols: 0,
             post_eviction: false,
+            strategy: "",
+            k_offered: 0,
+            k_chosen: 0,
+            predicted_savings: 0.0,
+            realized_savings: 0.0,
         };
         let n = self.op.n();
         metrics.note_completion(stop);
@@ -423,6 +446,7 @@ fn coalescible(a: &SolveSpec, b: &SolveSpec) -> bool {
         && a.auto_jacobi == b.auto_jacobi
         && a.priority == b.priority
         && a.control.deadline == b.control.deadline
+        && a.strategy == b.strategy
         && same_precond
         && same_defl
 }
@@ -627,6 +651,18 @@ pub struct ServiceMetrics {
     /// right before them in their sequence — the observable cost of an
     /// eviction decision.
     pub post_eviction_iter_regressions: AtomicUsize,
+    /// Harmonic-Ritz extractions that failed numerically inside the
+    /// managers (the basis survives; the candidate batch is dropped).
+    pub extraction_failures: AtomicU64,
+    /// Strategy decisions that kept fewer columns than the budget
+    /// offered (including shrinks all the way to k = 0 / plain CG).
+    pub strategy_shrinks: AtomicU64,
+    /// Predicted iteration savings summed over strategy decisions that
+    /// kept a basis, in milli-iterations (÷1e3 at snapshot time).
+    predicted_saved_milli_iters: AtomicU64,
+    /// Realized iteration savings (cold-start iterations minus this
+    /// solve's, clamped at 0) in milli-iterations (÷1e3 at snapshot).
+    realized_saved_milli_iters: AtomicU64,
     /// Time origin for the span stamps below.
     epoch: Instant,
     /// Nanos-since-epoch (+1, 0 = unset) of the first accepted submit.
@@ -656,6 +692,10 @@ impl ServiceMetrics {
             basis_evictions: AtomicUsize::new(0),
             truncations: AtomicUsize::new(0),
             post_eviction_iter_regressions: AtomicUsize::new(0),
+            extraction_failures: AtomicU64::new(0),
+            strategy_shrinks: AtomicU64::new(0),
+            predicted_saved_milli_iters: AtomicU64::new(0),
+            realized_saved_milli_iters: AtomicU64::new(0),
             epoch: Instant::now(),
             first_submit_nanos: AtomicU64::new(0),
             last_complete_nanos: AtomicU64::new(0),
@@ -783,6 +823,16 @@ impl ServiceMetrics {
             post_eviction_iter_regressions: self
                 .post_eviction_iter_regressions
                 .load(Ordering::Relaxed),
+            extraction_failures: self.extraction_failures.load(Ordering::Relaxed)
+                as usize,
+            strategy_shrinks: self.strategy_shrinks.load(Ordering::Relaxed) as usize,
+            predicted_saved_iters: self
+                .predicted_saved_milli_iters
+                .load(Ordering::Relaxed) as f64
+                * 1e-3,
+            realized_saved_iters: self.realized_saved_milli_iters.load(Ordering::Relaxed)
+                as f64
+                * 1e-3,
         }
     }
 }
@@ -839,6 +889,20 @@ pub struct MetricsSnapshot {
     /// Post-eviction solves that regressed in iteration count relative
     /// to the solve right before them in their sequence.
     pub post_eviction_iter_regressions: usize,
+    /// Harmonic-Ritz extractions that failed numerically inside the
+    /// sequence managers (candidate batch dropped, basis kept).
+    pub extraction_failures: usize,
+    /// Strategy decisions that kept fewer basis columns than the budget
+    /// offered — how often predictive sizing is actively trimming.
+    pub strategy_shrinks: usize,
+    /// Predicted iteration savings summed over strategy decisions that
+    /// kept a basis (the κ-bound model's promise; compare with
+    /// `realized_saved_iters` to audit the payoff model).
+    pub predicted_saved_iters: f64,
+    /// Realized iteration savings: per settled solve, the sequence's
+    /// cold-start iteration count minus this solve's, clamped at zero,
+    /// summed.
+    pub realized_saved_iters: f64,
 }
 
 impl MetricsSnapshot {
@@ -1234,10 +1298,9 @@ impl SequenceHandle {
                 continue;
             }
             let Task { op, spec, token, payload, .. } = task;
-            // Budget-event baseline: the manager's truncation counter is
-            // monotone, so the delta across the solve is what THIS run's
-            // budget enforcement did.
-            let trunc_before = lock_unpoisoned(&mgr).truncations();
+            // Counter baseline: the manager's counters are monotone, so
+            // the delta across the solve is what THIS run did.
+            let before = CounterBaseline::sample(&lock_unpoisoned(&mgr));
             match payload {
                 Payload::Single { b, x0, slot } => {
                     // The solve runs under the dedicated solve mutex, NOT
@@ -1253,7 +1316,7 @@ impl SequenceHandle {
                     match outcome {
                         Ok(result) => {
                             let post = sample_post_solve(&lock_unpoisoned(&mgr));
-                            post.note(&metrics, trunc_before);
+                            post.note(&metrics, &before);
                             // Settle AFTER the solve lock is released:
                             // the accountant only ever try_locks managers.
                             accountant.settle(seq_id, post.bytes, post.payoff, &metrics);
@@ -1268,6 +1331,11 @@ impl SequenceHandle {
                                 truncated_cols: post.absorb.truncated_cols
                                     + post.absorb.compressed_cols,
                                 post_eviction: post.absorb.post_eviction,
+                                strategy: post.decision.strategy,
+                                k_offered: post.decision.k_offered,
+                                k_chosen: post.decision.k_chosen,
+                                predicted_savings: post.decision.predicted_savings(),
+                                realized_savings: post.payoff,
                             };
                             metrics.note_completion(result.stop);
                             slot.put(result, report);
@@ -1282,6 +1350,11 @@ impl SequenceHandle {
                                 group_size: 1,
                                 truncated_cols: 0,
                                 post_eviction: false,
+                                strategy: "",
+                                k_offered: 0,
+                                k_chosen: 0,
+                                predicted_savings: 0.0,
+                                realized_savings: 0.0,
                             };
                             metrics.note_completion(StopReason::Failed);
                             slot.put(
@@ -1366,7 +1439,7 @@ impl SequenceHandle {
                     match outcome {
                         Ok(result) => {
                             let post = sample_post_solve(&lock_unpoisoned(&mgr));
-                            post.note(&metrics, trunc_before);
+                            post.note(&metrics, &before);
                             accountant.settle(seq_id, post.bytes, post.payoff, &metrics);
                             metrics.add_busy(result.seconds, result.matvecs);
                             // Split the group result back into per-member
@@ -1402,6 +1475,11 @@ impl SequenceHandle {
                                     truncated_cols: post.absorb.truncated_cols
                                         + post.absorb.compressed_cols,
                                     post_eviction: post.absorb.post_eviction,
+                                    strategy: post.decision.strategy,
+                                    k_offered: post.decision.k_offered,
+                                    k_chosen: post.decision.k_chosen,
+                                    predicted_savings: post.decision.predicted_savings(),
+                                    realized_savings: post.payoff,
                                 };
                                 metrics.note_completion(result.stop);
                                 m.slot.put(
@@ -1437,6 +1515,11 @@ impl SequenceHandle {
                                     group_size,
                                     truncated_cols: 0,
                                     post_eviction: false,
+                                    strategy: "",
+                                    k_offered: 0,
+                                    k_chosen: 0,
+                                    predicted_savings: 0.0,
+                                    realized_savings: 0.0,
                                 };
                                 metrics.note_completion(StopReason::Failed);
                                 m.slot.put(
@@ -1483,6 +1566,27 @@ impl SequenceHandle {
     }
 }
 
+/// Pre-solve snapshot of the manager's monotone counters, sampled in
+/// one acquisition of the solve lock; [`PostSolve::note`] bills the
+/// deltas across the solve to the service counters.
+struct CounterBaseline {
+    truncations: u64,
+    extraction_failures: u64,
+    strategy_shrinks: u64,
+    predicted_total: f64,
+}
+
+impl CounterBaseline {
+    fn sample(mg: &RecycleManager) -> Self {
+        CounterBaseline {
+            truncations: mg.truncations(),
+            extraction_failures: mg.extraction_failures(),
+            strategy_shrinks: mg.strategy_shrinks(),
+            predicted_total: mg.predicted_savings_total(),
+        }
+    }
+}
+
 /// Everything a drainer needs from the manager right after a solve,
 /// sampled in ONE acquisition of the solve lock (report fields, metric
 /// deltas, and the byte accountant's inputs).
@@ -1498,6 +1602,11 @@ struct PostSolve {
     /// This was a post-eviction run AND it needed more iterations than
     /// the run before it: the observable cost of the eviction decision.
     regressed: bool,
+    /// The strategy decision recorded by this run's absorb step.
+    decision: StrategyDecision,
+    extraction_failures: u64,
+    strategy_shrinks: u64,
+    predicted_total: f64,
 }
 
 fn sample_post_solve(mg: &RecycleManager) -> PostSolve {
@@ -1517,18 +1626,42 @@ fn sample_post_solve(mg: &RecycleManager) -> PostSolve {
         truncations: mg.truncations(),
         payoff,
         regressed,
+        decision: mg.last_decision(),
+        extraction_failures: mg.extraction_failures(),
+        strategy_shrinks: mg.strategy_shrinks(),
+        predicted_total: mg.predicted_savings_total(),
     }
 }
 
 impl PostSolve {
-    /// Fold this run's budget events into the service counters.
-    fn note(&self, metrics: &ServiceMetrics, trunc_before: u64) {
-        let delta = self.truncations.saturating_sub(trunc_before) as usize;
+    /// Fold this run's budget and strategy events into the service
+    /// counters.
+    fn note(&self, metrics: &ServiceMetrics, before: &CounterBaseline) {
+        let delta = self.truncations.saturating_sub(before.truncations) as usize;
         if delta > 0 {
             metrics.truncations.fetch_add(delta, Ordering::Relaxed);
         }
         if self.regressed {
             metrics.post_eviction_iter_regressions.fetch_add(1, Ordering::Relaxed);
+        }
+        let failures = self.extraction_failures.saturating_sub(before.extraction_failures);
+        if failures > 0 {
+            metrics.extraction_failures.fetch_add(failures, Ordering::Relaxed);
+        }
+        let shrinks = self.strategy_shrinks.saturating_sub(before.strategy_shrinks);
+        if shrinks > 0 {
+            metrics.strategy_shrinks.fetch_add(shrinks, Ordering::Relaxed);
+        }
+        let predicted = (self.predicted_total - before.predicted_total).max(0.0);
+        if predicted > 0.0 {
+            metrics
+                .predicted_saved_milli_iters
+                .fetch_add((predicted * 1e3) as u64, Ordering::Relaxed);
+        }
+        if self.payoff > 0.0 {
+            metrics
+                .realized_saved_milli_iters
+                .fetch_add((self.payoff * 1e3) as u64, Ordering::Relaxed);
         }
     }
 }
@@ -1619,6 +1752,44 @@ mod tests {
         let hist = seq.history();
         assert_eq!(hist.len(), 4);
         assert!(seq.k_active() > 0);
+    }
+
+    #[test]
+    fn reports_and_metrics_surface_strategy_decisions() {
+        let svc = SolveService::new(1);
+        let seq = svc.open_sequence(RecycleConfig { k: 6, l: 10, ..Default::default() });
+        let op = spd(60, 9);
+        let b = vec![1.0; 60];
+        let spec = SolveSpec::defcg().with_tol(1e-8);
+        let mut reports = Vec::new();
+        for _ in 0..3 {
+            let (r, rep) =
+                seq.submit(op.clone(), b.clone(), None, spec.clone()).wait_report();
+            assert_eq!(r.stop, StopReason::Converged);
+            reports.push(rep);
+        }
+        // Every settled solve names the strategy that ranked its basis;
+        // the default takes the budget's full offer.
+        for rep in &reports {
+            assert_eq!(rep.strategy, "harmonic-largest");
+            assert!(rep.k_offered > 0, "extraction ran after each solve");
+            assert_eq!(rep.k_chosen, rep.k_offered);
+        }
+        // Identical systems: by the third solve the basis is paying, and
+        // the report carries the same cold-start-relative signal the
+        // evictor uses.
+        assert!(reports[2].realized_savings > 0.0);
+        // Per-request override: the report names the adaptive strategy.
+        let (r, rep) = seq
+            .submit(op.clone(), b.clone(), None, spec.clone().auto_strategy())
+            .wait_report();
+        assert_eq!(r.stop, StopReason::Converged);
+        assert_eq!(rep.strategy, "adaptive-k");
+        assert!(rep.k_chosen <= rep.k_offered);
+        let snap = svc.metrics().snapshot();
+        assert_eq!(snap.extraction_failures, 0);
+        assert!(snap.realized_saved_iters > 0.0);
+        assert!(snap.predicted_saved_iters >= 0.0);
     }
 
     #[test]

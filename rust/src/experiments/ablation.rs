@@ -11,7 +11,7 @@
 use crate::experiments::common::{ExpOpts, Workload};
 use crate::gp::laplace::{LaplaceFit, SolverBackend};
 use crate::solvers::recycle::{AwPolicy, RecycleConfig};
-use crate::solvers::ritz::RitzSelect;
+use crate::solvers::strategy::StrategyChoice;
 use crate::util::table::{Align, Table};
 
 fn total_inner_iters(fit: &LaplaceFit) -> usize {
@@ -82,14 +82,17 @@ pub fn run(o: &ExpOpts) {
     .align(0, Align::Left)
     .align(1, Align::Left);
     for (pol, pname) in [(AwPolicy::Refresh, "refresh"), (AwPolicy::Reuse, "reuse")] {
-        for (sel, sname) in [(RitzSelect::Largest, "largest"), (RitzSelect::Smallest, "smallest")] {
+        for (sel, sname) in [
+            (StrategyChoice::HarmonicLargest, "largest"),
+            (StrategyChoice::RitzSmallest, "smallest"),
+        ] {
             let fit = run_config(
                 &w,
                 o,
                 RecycleConfig {
                     k: o.k,
                     l: o.l,
-                    select: sel,
+                    strategy: sel,
                     aw_policy: pol,
                     ..Default::default()
                 },
@@ -136,12 +139,22 @@ mod tests {
         let largest = run_config(
             &w,
             &o,
-            RecycleConfig { k: 6, l: 10, select: RitzSelect::Largest, ..Default::default() },
+            RecycleConfig {
+                k: 6,
+                l: 10,
+                strategy: StrategyChoice::HarmonicLargest,
+                ..Default::default()
+            },
         );
         let smallest = run_config(
             &w,
             &o,
-            RecycleConfig { k: 6, l: 10, select: RitzSelect::Smallest, ..Default::default() },
+            RecycleConfig {
+                k: 6,
+                l: 10,
+                strategy: StrategyChoice::RitzSmallest,
+                ..Default::default()
+            },
         );
         assert!(
             total_inner_iters(&largest) <= total_inner_iters(&smallest),

@@ -63,6 +63,7 @@ use crate::solvers::cg::{self, CgConfig};
 use crate::solvers::control::{CancelToken, SolveControl};
 use crate::solvers::defcg::{self, Deflation};
 use crate::solvers::recycle::RecycleBudget;
+use crate::solvers::strategy::StrategyChoice;
 use crate::solvers::{SolveResult, SpdOperator};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -247,6 +248,12 @@ pub struct SolveSpec {
     /// direct (manager-less) entry points, which hold no recycling state
     /// to bound.
     pub budget: Option<RecycleBudget>,
+    /// Per-request override of the sequence's recycle-space strategy
+    /// (see [`crate::solvers::strategy`]): inside a recycled sequence,
+    /// `Some` takes precedence over
+    /// [`crate::solvers::recycle::RecycleConfig::strategy`]. Ignored by
+    /// the direct entry points, which never extract a basis.
+    pub strategy: Option<StrategyChoice>,
 }
 
 impl Default for SolveSpec {
@@ -272,6 +279,7 @@ impl SolveSpec {
             priority: Priority::default(),
             control: SolveControl::none(),
             budget: None,
+            strategy: None,
         }
     }
 
@@ -407,6 +415,20 @@ impl SolveSpec {
         self
     }
 
+    /// Override the sequence's recycle-space strategy for this request
+    /// (see [`SolveSpec::strategy`]).
+    pub fn with_strategy(mut self, strategy: StrategyChoice) -> SolveSpec {
+        self.strategy = Some(strategy);
+        self
+    }
+
+    /// Shorthand for [`SolveSpec::with_strategy`]`(StrategyChoice::Auto)`:
+    /// predictive adaptive-k sizing that shrinks to plain CG when
+    /// recycling cannot pay.
+    pub fn auto_strategy(self) -> SolveSpec {
+        self.with_strategy(StrategyChoice::Auto)
+    }
+
     /// The scalar knobs (plus the control handle) as the legacy
     /// per-kernel config.
     pub fn cg_config(&self) -> CgConfig {
@@ -436,6 +458,7 @@ impl std::fmt::Debug for SolveSpec {
             .field("priority", &self.priority)
             .field("deadline", &self.control.deadline)
             .field("budget", &self.budget)
+            .field("strategy", &self.strategy)
             .finish()
     }
 }

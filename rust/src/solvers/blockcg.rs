@@ -12,7 +12,10 @@
 //! every direction against a recycled `(W, AW)` basis exactly as
 //! [`crate::solvers::defcg`] does for one right-hand side, and stores its
 //! first ℓ normalized directions so [`crate::solvers::ritz::extract`] can
-//! harvest the next basis from multi-RHS traffic.
+//! harvest the next basis from multi-RHS traffic. Strategy-sized bases
+//! (see [`crate::solvers::strategy`]) flow through this same deflation
+//! path unchanged: the block kernel only ever sees the `(W, AW)` pair the
+//! manager's strategy chose to retain.
 //!
 //! # Rank adaptivity
 //!

@@ -52,6 +52,23 @@ impl Deflation {
         self.w.cols()
     }
 
+    /// A new basis holding only the leading `k` column pairs. Extraction
+    /// builds and normalizes columns independently, so this prefix is
+    /// bit-for-bit the basis a smaller extraction would have built —
+    /// which is why the strategy layer sizes k by *prefix* selection
+    /// (see [`crate::solvers::strategy`]).
+    pub fn leading_cols(&self, k: usize) -> Deflation {
+        let k = k.min(self.k());
+        let n = self.w.rows();
+        let mut w = Mat::zeros(n, k);
+        let mut aw = Mat::zeros(n, k);
+        for j in 0..k {
+            w.set_col(j, &self.w.col(j));
+            aw.set_col(j, &self.aw.col(j));
+        }
+        Deflation::new(w, aw)
+    }
+
     /// Factor the k×k Gram `WᵀAW` (symmetrized against round-off) — the
     /// small SPD system every deflated kernel solves against, shared by
     /// the single-RHS kernel ([`solve_precond`]) and the block kernel

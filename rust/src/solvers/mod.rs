@@ -80,6 +80,7 @@ pub mod lanczos;
 pub mod pcg;
 pub mod recycle;
 pub mod ritz;
+pub mod strategy;
 
 pub use algebra::{LowRankUpdateOp, ScaledOp, ShiftedOp, SumOp};
 pub use api::{
@@ -87,6 +88,7 @@ pub use api::{
     SolveSpec,
 };
 pub use control::{CancelToken, SolveControl};
+pub use strategy::{RecycleStrategy, StrategyChoice, StrategyDecision};
 
 use crate::linalg::mat::Mat;
 use crate::util::pool::ThreadPool;

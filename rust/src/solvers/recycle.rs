@@ -24,7 +24,8 @@ use crate::linalg::qr::mgs_orthonormalize;
 use crate::solvers::api::{self, Jacobi, Method, Preconditioner, SolveSpec};
 use crate::solvers::blockcg::BlockSolveResult;
 use crate::solvers::defcg::Deflation;
-use crate::solvers::ritz::{self, RitzConfig, RitzValue};
+use crate::solvers::ritz::{self, ExtractFailure, RitzConfig, RitzValue};
+use crate::solvers::strategy::{self, EvalContext, StrategyChoice, StrategyDecision};
 use crate::solvers::{SolveResult, SpdOperator, StopReason, StoredDirections};
 use std::sync::Arc;
 
@@ -158,7 +159,13 @@ pub struct RecycleConfig {
     pub k: usize,
     /// CG iterations whose directions are stored (paper's ℓ, Table 1: 12).
     pub l: usize,
-    pub select: ritz::RitzSelect,
+    /// Recycle-space selection strategy: which spectral end extraction
+    /// ranks for and how many candidates are retained (see
+    /// [`crate::solvers::strategy`]). A per-request
+    /// [`SolveSpec::with_strategy`] override takes precedence. The
+    /// default, [`StrategyChoice::HarmonicLargest`], is today's
+    /// harmonic-Ritz-largest behavior, bitwise-pinned.
+    pub strategy: StrategyChoice,
     pub aw_policy: AwPolicy,
     /// Re-orthonormalize W (and refresh AW) when its condition degrades.
     pub stabilize: bool,
@@ -172,7 +179,7 @@ impl Default for RecycleConfig {
         RecycleConfig {
             k: 8,
             l: 12,
-            select: ritz::RitzSelect::Largest,
+            strategy: StrategyChoice::HarmonicLargest,
             // Refresh: exact deflation never harms convergence; its k
             // matvecs/system are what the paper's own overhead estimate
             // budgets for ("W and AW are obtained in O(n²(ℓ+1)k)").
@@ -195,7 +202,33 @@ pub struct AbsorbStats {
     /// This run started with a freshly evicted (empty) basis — it ran
     /// degraded (plain CG) and its panel re-warms the basis.
     pub post_eviction: bool,
+    /// The harmonic-Ritz extraction failed numerically this run (the
+    /// panel was dropped; the previous basis is kept). Counted by
+    /// [`RecycleManager::extraction_failures`].
+    pub extraction_failed: bool,
 }
+
+/// [`RecycleManager::seed`] rejected an external basis whose shape does
+/// not fit the operator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SeedError {
+    /// Operator dimension the basis must match.
+    pub expected_rows: usize,
+    /// Row count of the rejected `W`.
+    pub got_rows: usize,
+}
+
+impl std::fmt::Display for SeedError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "seed basis has {} rows but the operator dimension is {}",
+            self.got_rows, self.expected_rows
+        )
+    }
+}
+
+impl std::error::Error for SeedError {}
 
 /// Statistics for one solved system in the sequence.
 #[derive(Clone, Debug)]
@@ -243,6 +276,17 @@ pub struct RecycleManager {
     evicted: bool,
     /// What budget enforcement did during the most recent run.
     last_absorb: AbsorbStats,
+    /// Numerical harmonic-Ritz extraction failures (dropped panels),
+    /// monotone over the manager's lifetime.
+    extraction_failures: u64,
+    /// Absorbs where the strategy retained fewer candidates than offered
+    /// (k chosen < k offered), monotone.
+    strategy_shrinks: u64,
+    /// Cumulative positive predicted iteration savings across absorbs.
+    predicted_savings_total: f64,
+    /// The sizing decision from the most recent absorb (default before
+    /// the first extraction and after a cancelled run).
+    last_decision: StrategyDecision,
 }
 
 impl RecycleManager {
@@ -256,6 +300,10 @@ impl RecycleManager {
             truncations: 0,
             evicted: false,
             last_absorb: AbsorbStats::default(),
+            extraction_failures: 0,
+            strategy_shrinks: 0,
+            predicted_savings_total: 0.0,
+            last_decision: StrategyDecision::default(),
         }
     }
 
@@ -317,6 +365,32 @@ impl RecycleManager {
         self.last_absorb
     }
 
+    /// Numerical harmonic-Ritz extraction failures (dropped panels) over
+    /// the manager's lifetime. Benign-empty extractions (no stored
+    /// directions, k = 0) are not failures and are not counted.
+    pub fn extraction_failures(&self) -> u64 {
+        self.extraction_failures
+    }
+
+    /// Absorbs where the strategy retained fewer candidates than the
+    /// extraction offered, over the manager's lifetime.
+    pub fn strategy_shrinks(&self) -> u64 {
+        self.strategy_shrinks
+    }
+
+    /// Cumulative positive predicted iteration savings claimed by the
+    /// strategy's retained bases, over the manager's lifetime.
+    pub fn predicted_savings_total(&self) -> f64 {
+        self.predicted_savings_total
+    }
+
+    /// The strategy's sizing decision from the most recent absorb —
+    /// which rule ran, k chosen vs k offered, and the κ-bound model
+    /// terms behind the call.
+    pub fn last_decision(&self) -> StrategyDecision {
+        self.last_decision
+    }
+
     /// Drop the recycled basis and cached Jacobi, returning the bytes
     /// freed. The sequence **degrades gracefully**: the next solve runs
     /// plain (P)CG, stores directions as usual, and re-warms the basis
@@ -344,12 +418,35 @@ impl RecycleManager {
         spec.budget.unwrap_or(self.cfg.budget)
     }
 
+    /// The strategy in force for a request: the per-request override when
+    /// present, the sequence config's otherwise (mirrors the budget
+    /// override rule).
+    fn effective_strategy(&self, spec: &SolveSpec) -> StrategyChoice {
+        spec.strategy.clone().unwrap_or_else(|| self.cfg.strategy.clone())
+    }
+
     /// Seed the manager with an externally chosen basis (e.g. the a-priori
     /// low-rank space of an inducing-point method, as §1.1 suggests).
-    pub fn seed(&mut self, a: &dyn SpdOperator, w: crate::linalg::Mat) {
+    ///
+    /// The basis is validated up front: a `W` whose row count does not
+    /// match the operator dimension is rejected with a clear
+    /// [`SeedError`] instead of failing later inside a solve's projection
+    /// with an opaque shape panic. Returns the seeded basis dimension.
+    pub fn seed(
+        &mut self,
+        a: &dyn SpdOperator,
+        w: crate::linalg::Mat,
+    ) -> Result<usize, SeedError> {
+        if w.rows() != a.n() {
+            let err = SeedError { expected_rows: a.n(), got_rows: w.rows() };
+            crate::log_warn!("rejecting external seed basis: {err}");
+            return Err(err);
+        }
         let mut d = Deflation::new(w.clone(), crate::linalg::Mat::zeros(w.rows(), w.cols()));
         d.refresh(a);
+        let k = d.k();
         self.defl = Some(d);
+        Ok(k)
     }
 
     /// Drop the recycled basis (next solve is plain CG) and the cached
@@ -361,6 +458,7 @@ impl RecycleManager {
         self.solved = 0;
         self.evicted = false;
         self.last_absorb = AbsorbStats::default();
+        self.last_decision = StrategyDecision::default();
     }
 
     /// The sequence's cached Jacobi preconditioner, built from `a` on
@@ -487,7 +585,16 @@ impl RecycleManager {
     /// [`RecycleManager::solve_block`] skip this call entirely and the
     /// sequence's `(W, AW)` is left byte-for-byte what it was — there is
     /// no code path that mutates the basis mid-iteration.
-    fn absorb(&mut self, stored: &StoredDirections, n: usize, budget: &RecycleBudget) -> Vec<f64> {
+    fn absorb(
+        &mut self,
+        stored: &StoredDirections,
+        n: usize,
+        budget: &RecycleBudget,
+        choice: &StrategyChoice,
+        tol: f64,
+        timing: Option<(f64, usize)>,
+    ) -> Vec<f64> {
+        let strat = choice.resolve();
         let mut stats = AbsorbStats {
             post_eviction: std::mem::take(&mut self.evicted),
             ..Default::default()
@@ -509,29 +616,95 @@ impl RecycleManager {
             stored
         };
 
+        // The strategy owns candidate ranking: extraction ranks by its
+        // spectral ordering and truncates at the fixed cfg.k exactly as
+        // the historical path did — strategies only ever shrink the
+        // result to a leading prefix afterwards, so the default
+        // (harmonic-largest, keep the full offer) stays bitwise what it
+        // always was.
         let ritz_cfg = RitzConfig {
             k: self.cfg.k,
-            select: self.cfg.select,
+            select: strat.ordering(),
             min_col_norm: 1e-10,
         };
         let mut ritz_values: Vec<f64> = Vec::new();
-        if let Some((defl, vals)) = ritz::extract(self.defl.as_ref(), stored, n, &ritz_cfg) {
-            // Residual-optimal truncation (Neuenhofen & Groß): when the
-            // extraction produced more columns than `max_basis_bytes`
-            // allows, keep the pairs with the smallest relative
-            // eigenresidual — the best-converged, highest-payoff
-            // directions — rather than blindly keeping the leading end
-            // of the selection order.
-            let cap = budget.basis_cols(n);
-            let (defl, vals) = if defl.k() > cap {
-                stats.truncated_cols = defl.k() - cap;
-                self.truncations += 1;
-                truncate_residual_optimal(defl, vals, cap)
-            } else {
-                (Some(defl), vals)
-            };
-            ritz_values = vals.iter().map(|v: &RitzValue| v.theta).collect();
-            self.defl = defl;
+        match ritz::try_extract(self.defl.as_ref(), stored, n, &ritz_cfg) {
+            Ok(ext) => {
+                let ritz::Extraction { defl, vals, spectrum } = ext;
+                // Residual-optimal truncation (Neuenhofen & Groß): when the
+                // extraction produced more columns than `max_basis_bytes`
+                // allows, keep the pairs with the smallest relative
+                // eigenresidual — the best-converged, highest-payoff
+                // directions — rather than blindly keeping the leading end
+                // of the selection order. The budget runs FIRST: it is a
+                // hard ceiling, so whatever the strategy chooses below can
+                // never exceed `RecycleBudget::basis_cols`.
+                let cap = budget.basis_cols(n);
+                let (defl, vals) = if defl.k() > cap {
+                    stats.truncated_cols = defl.k() - cap;
+                    self.truncations += 1;
+                    truncate_residual_optimal(defl, vals, cap)
+                } else {
+                    (Some(defl), vals)
+                };
+
+                // Predicted-payoff sizing over the post-budget offer.
+                let k_offered = defl.as_ref().map(|d| d.k()).unwrap_or(0);
+                let ctx = EvalContext {
+                    n,
+                    tol,
+                    k_cap: k_offered,
+                    refresh: matches!(self.cfg.aw_policy, AwPolicy::Refresh),
+                    matvec_seconds: match timing {
+                        Some((s, m)) if m > 0 && s > 0.0 => Some(s / m as f64),
+                        _ => None,
+                    },
+                    proj_col_seconds: if strat.wants_measurement() {
+                        defl.as_ref()
+                            .and_then(|d| strategy::measure_projection_col_seconds(&d.w, &d.aw))
+                    } else {
+                        None
+                    },
+                };
+                let kc = strat.choose_k(&spectrum, &ctx);
+                let k_chosen = kc.k.min(k_offered);
+                let (defl, vals) = if k_chosen < k_offered {
+                    self.strategy_shrinks += 1;
+                    if k_chosen == 0 {
+                        (None, Vec::new())
+                    } else {
+                        let d = defl.unwrap();
+                        (Some(d.leading_cols(k_chosen)), vals[..k_chosen].to_vec())
+                    }
+                } else {
+                    (defl, vals)
+                };
+                self.last_decision = StrategyDecision {
+                    strategy: strat.name(),
+                    k_offered,
+                    k_chosen,
+                    predicted_plain_iters: kc.plain_iters,
+                    predicted_deflated_iters: kc.deflated_iters,
+                    predicted_overhead: kc.overhead,
+                };
+                if k_chosen > 0 {
+                    self.predicted_savings_total += self.last_decision.predicted_savings().max(0.0);
+                }
+                ritz_values = vals.iter().map(|v: &RitzValue| v.theta).collect();
+                self.defl = defl;
+            }
+            Err(ExtractFailure::Empty) => {
+                self.last_decision =
+                    StrategyDecision { strategy: strat.name(), ..Default::default() };
+            }
+            Err(ExtractFailure::Numerical) => {
+                // The panel is dropped but the previous basis survives —
+                // count the drop so the coordinator can audit it.
+                self.extraction_failures += 1;
+                stats.extraction_failed = true;
+                self.last_decision =
+                    StrategyDecision { strategy: strat.name(), ..Default::default() };
+            }
         }
         self.last_absorb = stats;
         ritz_values
@@ -625,9 +798,18 @@ impl RecycleManager {
             // leak into this run's report. (The eviction flag, consumed
             // only by `absorb`, survives for the next completed run.)
             self.last_absorb = AbsorbStats::default();
+            self.last_decision = StrategyDecision::default();
             Vec::new()
         } else {
-            self.absorb(&result.stored, n, &budget)
+            let choice = self.effective_strategy(spec);
+            self.absorb(
+                &result.stored,
+                n,
+                &budget,
+                &choice,
+                spec.tol,
+                Some((result.seconds, result.matvecs)),
+            )
         };
 
         self.record(
@@ -721,9 +903,18 @@ impl RecycleManager {
         // Same absorb policy as `solve_next`: everything but Cancelled.
         let ritz_values = if result.stop == StopReason::Cancelled {
             self.last_absorb = AbsorbStats::default();
+            self.last_decision = StrategyDecision::default();
             Vec::new()
         } else {
-            self.absorb(&result.stored, n, &budget)
+            let choice = self.effective_strategy(spec);
+            self.absorb(
+                &result.stored,
+                n,
+                &budget,
+                &choice,
+                spec.tol,
+                Some((result.seconds, result.matvecs)),
+            )
         };
 
         self.record(
@@ -924,8 +1115,25 @@ mod tests {
         let a = Mat::rand_spd(n, 1e5, &mut rng);
         let w = crate::linalg::qr::Qr::factor(&Mat::randn(n, 6, &mut rng)).thin_q();
         let mut mgr = RecycleManager::new(RecycleConfig::default());
-        mgr.seed(&DenseOp::new(&a), w);
+        assert_eq!(mgr.seed(&DenseOp::new(&a), w).expect("matching dims"), 6);
         assert_eq!(mgr.k_active(), 6);
+        let b = vec![1.0; n];
+        let r = mgr.solve_next(&DenseOp::new(&a), &b, None, &SolveSpec::defcg().with_tol(1e-8));
+        assert_eq!(r.stop, StopReason::Converged);
+    }
+
+    #[test]
+    fn seed_rejects_mismatched_rows() {
+        let n = 40;
+        let mut rng = Rng::new(14);
+        let a = Mat::rand_spd(n, 1e4, &mut rng);
+        let w = Mat::randn(n + 3, 4, &mut rng);
+        let mut mgr = RecycleManager::new(RecycleConfig::default());
+        let err = mgr.seed(&DenseOp::new(&a), w).unwrap_err();
+        assert_eq!(err, SeedError { expected_rows: n, got_rows: n + 3 });
+        assert!(err.to_string().contains("43"));
+        // The manager is untouched: no basis, and the next solve is fine.
+        assert_eq!(mgr.k_active(), 0);
         let b = vec![1.0; n];
         let r = mgr.solve_next(&DenseOp::new(&a), &b, None, &SolveSpec::defcg().with_tol(1e-8));
         assert_eq!(r.stop, StopReason::Converged);
@@ -1550,30 +1758,30 @@ mod tests {
         assert!(bnd.bytes_held() < unb.bytes_held());
     }
 
-    /// `bytes_held()` must equal the sum of live buffer sizes after any
+    /// Check `bytes_held()` against the live buffer sizes after any
     /// interleaving of absorb / truncate / evict / compress — the
     /// invariant the service-wide `ByteAccountant` relies on.
+    fn audit(mgr: &RecycleManager) {
+        let basis = mgr
+            .defl
+            .as_ref()
+            .map(|d| {
+                assert_eq!(d.w.rows(), d.aw.rows());
+                assert_eq!(d.w.cols(), d.aw.cols());
+                8 * (d.w.rows() * d.w.cols() + d.aw.rows() * d.aw.cols())
+            })
+            .unwrap_or(0);
+        let jacobi = mgr.jacobi.as_ref().map(|(j, _)| 8 * j.n()).unwrap_or(0);
+        let history: usize = mgr
+            .history
+            .iter()
+            .map(|s| std::mem::size_of::<SystemStats>() + 8 * s.ritz_values.len())
+            .sum();
+        assert_eq!(mgr.bytes_held(), basis + jacobi + history);
+    }
+
     #[test]
     fn bytes_held_matches_live_buffers_across_interleavings() {
-        fn audit(mgr: &RecycleManager) {
-            let basis = mgr
-                .defl
-                .as_ref()
-                .map(|d| {
-                    assert_eq!(d.w.rows(), d.aw.rows());
-                    assert_eq!(d.w.cols(), d.aw.cols());
-                    8 * (d.w.rows() * d.w.cols() + d.aw.rows() * d.aw.cols())
-                })
-                .unwrap_or(0);
-            let jacobi = mgr.jacobi.as_ref().map(|(j, _)| 8 * j.n()).unwrap_or(0);
-            let history: usize = mgr
-                .history
-                .iter()
-                .map(|s| std::mem::size_of::<SystemStats>() + 8 * s.ritz_values.len())
-                .sum();
-            assert_eq!(mgr.bytes_held(), basis + jacobi + history);
-        }
-
         let n = 40;
         let seq = drifting_sequence(n, 6, 19);
         let b = vec![1.0; n];
@@ -1615,7 +1823,7 @@ mod tests {
         );
         assert!(donor.stored.len() > 4);
         let squeeze = RecycleBudget::capping_cols(n, 6, 4);
-        mgr.absorb(&donor.stored, n, &squeeze);
+        mgr.absorb(&donor.stored, n, &squeeze, &StrategyChoice::default(), 1e-8, None);
         audit(&mgr);
         assert!(mgr.last_absorb().compressed_cols > 0);
 
@@ -1707,5 +1915,171 @@ mod tests {
             rewarmed.iterations,
             degraded.iterations
         );
+    }
+
+    /// A drifting sequence whose spectrum is essentially flat (κ ≈ 1 + ε):
+    /// the regime where deflation can never pay for itself.
+    fn drifting_flat_sequence(n: usize, count: usize, seed: u64) -> Vec<Mat> {
+        let mut rng = Rng::new(seed);
+        let mut delta = Mat::randn(n, n, &mut rng);
+        delta.symmetrize();
+        delta.scale_in_place(1e-6 / n as f64);
+        (0..count)
+            .map(|i| {
+                let mut a = Mat::identity(n);
+                a.scale_in_place(2.0);
+                let mut d = delta.clone();
+                d.scale_in_place(1.0 / (1.0 + i as f64));
+                a.add_in_place(&d);
+                a
+            })
+            .collect()
+    }
+
+    /// ISSUE acceptance pin: on a flat spectrum the adaptive evaluator
+    /// drives k → 0 and the sequence's total matvecs match plain CG —
+    /// the evaluation itself costs zero operator applications.
+    #[test]
+    fn adaptive_strategy_shrinks_to_plain_cg_on_flat_spectrum() {
+        let n = 48;
+        let seq = drifting_flat_sequence(n, 4, 29);
+        let b = vec![1.0; n];
+        let cfg = RecycleConfig { strategy: StrategyChoice::Auto, ..Default::default() };
+        let mut mgr = RecycleManager::new(cfg);
+        let spec = SolveSpec::defcg().with_tol(1e-8);
+        let mut recycled_matvecs = 0usize;
+        for a in &seq {
+            let r = mgr.solve_next(&DenseOp::new(a), &b, None, &spec);
+            assert_eq!(r.stop, StopReason::Converged);
+            recycled_matvecs += r.matvecs;
+            // The strategy saw candidates and turned them all down.
+            let d = mgr.last_decision();
+            assert_eq!(d.strategy, "adaptive-k");
+            assert!(d.k_offered > 0, "extraction should offer candidates");
+            assert_eq!(d.k_chosen, 0, "flat spectrum must shrink to plain CG: {d:?}");
+            assert_eq!(mgr.k_active(), 0);
+        }
+        assert!(mgr.strategy_shrinks() >= seq.len() as u64);
+
+        // With k pinned at 0 no basis is ever held, so no AW refresh and
+        // no deflation: every solve is exactly the plain-CG run.
+        let plain_matvecs: usize = seq
+            .iter()
+            .map(|a| {
+                crate::solvers::solve(&DenseOp::new(a), &b, &SolveSpec::cg().with_tol(1e-8))
+                    .matvecs
+            })
+            .sum();
+        assert_eq!(
+            recycled_matvecs, plain_matvecs,
+            "adaptive k=0 sequence must cost exactly plain CG"
+        );
+    }
+
+    /// On the paper-shaped outlier spectrum the adaptive evaluator keeps
+    /// the columns that pay (the outliers) and stops before chasing the
+    /// bulk — k lands strictly between 0 and the offer.
+    #[test]
+    fn adaptive_strategy_keeps_paying_columns_on_outlier_spectrum() {
+        let n = 90;
+        let seq = drifting_outlier_sequence(n, 4, 131);
+        let b = vec![1.0; n];
+        let cfg = RecycleConfig { k: 8, l: 12, strategy: StrategyChoice::Auto, ..Default::default() };
+        let mut mgr = RecycleManager::new(cfg);
+        let spec = SolveSpec::defcg().with_tol(1e-8);
+        let mut iters = Vec::new();
+        for a in &seq {
+            let r = mgr.solve_next(&DenseOp::new(a), &b, None, &spec);
+            assert_eq!(r.stop, StopReason::Converged);
+            iters.push(r.iterations);
+        }
+        let d = mgr.last_decision();
+        assert_eq!(d.strategy, "adaptive-k");
+        assert!(
+            (3..=5).contains(&d.k_chosen),
+            "should keep roughly the 3 outlier directions, chose {} of {}",
+            d.k_chosen,
+            d.k_offered
+        );
+        assert!(d.k_chosen < d.k_offered, "the bulk should be declined");
+        assert!(d.predicted_savings() > 0.0);
+        assert!(mgr.strategy_shrinks() >= 1);
+        assert!(mgr.predicted_savings_total() > 0.0);
+        // The small adaptive basis still delivers the recycling payoff.
+        assert!(
+            iters[2] < iters[0] && iters[3] < iters[0],
+            "recycled runs {iters:?} should beat the cold start"
+        );
+    }
+
+    /// Satellite: strategy × budget interaction. Whatever strategy is in
+    /// force — switched per-request mid-sequence — the chosen k never
+    /// exceeds `RecycleBudget::capping_cols`' basis cap, and
+    /// `bytes_held()` stays consistent with the live buffers.
+    #[test]
+    fn strategy_switches_respect_budget_and_byte_accounting() {
+        let n = 60;
+        let seq = drifting_outlier_sequence(n, 8, 57);
+        let b = vec![1.0; n];
+        let cfg = RecycleConfig { k: 8, l: 10, ..Default::default() };
+        let mut mgr = RecycleManager::new(cfg);
+        let budget = RecycleBudget::capping_cols(n, 3, 6);
+        let choices = [
+            (StrategyChoice::HarmonicLargest, "harmonic-largest"),
+            (StrategyChoice::RitzSmallest, "ritz-smallest"),
+            (StrategyChoice::TwoSided, "two-sided"),
+            (StrategyChoice::Auto, "adaptive-k"),
+        ];
+        for (i, a) in seq.iter().enumerate() {
+            let (choice, name) = &choices[i % choices.len()];
+            let spec = SolveSpec::defcg()
+                .with_tol(1e-8)
+                .with_budget(budget)
+                .with_strategy(choice.clone());
+            let r = mgr.solve_next(&DenseOp::new(a), &b, None, &spec);
+            assert_eq!(r.stop, StopReason::Converged);
+            audit(&mgr);
+            let cap = budget.basis_cols(n);
+            assert!(mgr.k_active() <= cap, "basis {} over budget cap {cap}", mgr.k_active());
+            let d = mgr.last_decision();
+            assert_eq!(d.strategy, *name);
+            assert!(d.k_chosen <= cap, "chosen k {} over budget cap {cap}", d.k_chosen);
+            assert!(d.k_chosen <= d.k_offered);
+            assert!(d.k_offered <= cap, "offer {} over budget cap {cap}", d.k_offered);
+        }
+    }
+
+    /// Satellite: numerical extraction failures are counted and flagged
+    /// instead of only being logged; benign-empty panels are not.
+    #[test]
+    fn extraction_failures_are_counted_and_flagged() {
+        let n = 12;
+        let mut mgr = RecycleManager::new(RecycleConfig::default());
+        // A degenerate panel whose AP image is zero makes G = (AZ)ᵀ(AZ)
+        // singular: the generalized eigensolve fails.
+        let mut e1 = vec![0.0; n];
+        e1[0] = 1.0;
+        let degenerate = StoredDirections { p: vec![e1], ap: vec![vec![0.0; n]] };
+        let budget = RecycleBudget::default();
+        let vals = mgr.absorb(&degenerate, n, &budget, &StrategyChoice::default(), 1e-8, None);
+        assert!(vals.is_empty());
+        assert_eq!(mgr.extraction_failures(), 1);
+        assert!(mgr.last_absorb().extraction_failed);
+        assert_eq!(mgr.k_active(), 0);
+        let d = mgr.last_decision();
+        assert_eq!(d.strategy, "harmonic-largest");
+        assert_eq!(d.k_offered, 0);
+        assert_eq!(d.k_chosen, 0);
+        // Benign-empty absorb: no stored directions is not a failure.
+        mgr.absorb(
+            &StoredDirections::default(),
+            n,
+            &budget,
+            &StrategyChoice::default(),
+            1e-8,
+            None,
+        );
+        assert_eq!(mgr.extraction_failures(), 1);
+        assert!(!mgr.last_absorb().extraction_failed);
     }
 }

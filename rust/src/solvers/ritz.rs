@@ -30,10 +30,15 @@ use crate::solvers::StoredDirections;
 /// Ritz values (the choice visualized in the paper's Fig. 1) is the
 /// default. `Smallest` matches the classic Saad-style deflation used when
 /// tiny eigenvalues limit convergence.
+/// `TwoSided` interleaves both ends — largest, smallest, 2nd-largest,
+/// 2nd-smallest, … — so a truncated prefix attacks the condition number
+/// from above and below at once (the [`crate::solvers::strategy`] layer's
+/// two-sided split rule).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RitzSelect {
     Largest,
     Smallest,
+    TwoSided,
 }
 
 /// Harmonic-Ritz configuration.
@@ -64,6 +69,31 @@ pub struct RitzValue {
     pub resid: f64,
 }
 
+/// A successful extraction: the built basis, the retained Ritz values,
+/// and the **full ranked spectrum** — every finite harmonic Ritz value in
+/// selection order, *before* truncation to `cfg.k`. The spectrum is what
+/// the [`crate::solvers::strategy`] payoff evaluator sizes k against:
+/// entry `j` is the θ removed by deflating the j-th ranked candidate.
+#[derive(Clone, Debug)]
+pub struct Extraction {
+    pub defl: Deflation,
+    pub vals: Vec<RitzValue>,
+    pub spectrum: Vec<f64>,
+}
+
+/// Why an extraction produced no basis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExtractFailure {
+    /// Nothing to extract — no stored directions or `k = 0`. Benign; not
+    /// a failure of the numerics.
+    Empty,
+    /// Numerical failure: the generalized eigensolve rejected the Gram
+    /// matrices, every candidate pair was non-finite, or every built
+    /// column collapsed below `min_col_norm`. The run's panel is dropped
+    /// (counted by `RecycleManager::extraction_failures`).
+    Numerical,
+}
+
 /// Extract a new recycled basis from the previous deflation (may be `None`
 /// on the first system) and the directions stored during the last solve —
 /// single-RHS CG directions and block-CG direction panels alike (block
@@ -73,13 +103,25 @@ pub struct RitzValue {
 ///
 /// Returns the new `Deflation { W, AW }` plus the selected harmonic Ritz
 /// values, or `None` if nothing useful could be extracted (e.g. no stored
-/// directions).
+/// directions). Thin wrapper over [`try_extract`], which additionally
+/// distinguishes benign-empty from numerical failure and reports the full
+/// ranked spectrum.
 pub fn extract(
     prev: Option<&Deflation>,
     stored: &StoredDirections,
     n: usize,
     cfg: &RitzConfig,
 ) -> Option<(Deflation, Vec<RitzValue>)> {
+    try_extract(prev, stored, n, cfg).ok().map(|e| (e.defl, e.vals))
+}
+
+/// [`extract`] with structured failure reporting and the ranked spectrum.
+pub fn try_extract(
+    prev: Option<&Deflation>,
+    stored: &StoredDirections,
+    n: usize,
+    cfg: &RitzConfig,
+) -> Result<Extraction, ExtractFailure> {
     let k_prev = prev.map(|d| d.k()).unwrap_or(0);
     // Drop non-finite stored pairs before anything touches them: a
     // near-breakdown run can record Inf/NaN direction columns, and a
@@ -101,7 +143,7 @@ pub fn extract(
     }
     let m = k_prev + finite.len();
     if m == 0 || cfg.k == 0 {
-        return None;
+        return Err(ExtractFailure::Empty);
     }
 
     // Z = [W, P], AZ = [AW, AP]
@@ -126,7 +168,7 @@ pub fn extract(
     // generalized eigensolve fails.
     let (z, az) = joint_mgs(&z, &az, 1e-10);
     if z.cols() == 0 {
-        return None;
+        return Err(ExtractFailure::Numerical);
     }
 
     // F = (AZ)ᵀZ, G = (AZ)ᵀ(AZ). F is symmetric in exact arithmetic
@@ -143,7 +185,7 @@ pub fn extract(
         Ok(p) => p,
         Err(e) => {
             crate::log_warn!("harmonic Ritz extraction failed ({e}); dropping recycle basis");
-            return None;
+            return Err(ExtractFailure::Numerical);
         }
     };
     // A non-finite pair (θ or eigenvector entries) would previously panic
@@ -152,7 +194,7 @@ pub fn extract(
     // order, so a contaminated extraction degrades instead of panicking.
     pairs.retain(|(theta, u)| theta.is_finite() && u.iter().all(|v| v.is_finite()));
     if pairs.is_empty() {
-        return None;
+        return Err(ExtractFailure::Numerical);
     }
 
     // gen_sym_eig returns |θ| descending. For SPD A all θ should be
@@ -160,7 +202,14 @@ pub fn extract(
     match cfg.select {
         RitzSelect::Largest => pairs.sort_by(|a, b| b.0.total_cmp(&a.0)),
         RitzSelect::Smallest => pairs.sort_by(|a, b| a.0.total_cmp(&b.0)),
+        RitzSelect::TwoSided => {
+            pairs.sort_by(|a, b| b.0.total_cmp(&a.0));
+            pairs = interleave_ends(pairs);
+        }
     }
+    // The full ranked spectrum — what the strategy layer's payoff
+    // evaluator sizes k against — is captured before truncation.
+    let spectrum: Vec<f64> = pairs.iter().map(|p| p.0).collect();
     pairs.truncate(cfg.k);
 
     // W' = Z U, AW' = AZ U as two block products (one pass over Z/AZ per
@@ -207,7 +256,7 @@ pub fn extract(
         dst += 1;
     }
     if dst == 0 {
-        return None;
+        return Err(ExtractFailure::Numerical);
     }
     // Shrink if columns were dropped.
     let (w, aw) = if dst < w.cols() {
@@ -222,7 +271,25 @@ pub fn extract(
         (w, aw)
     };
 
-    Some((Deflation::new(w, aw), vals))
+    Ok(Extraction { defl: Deflation::new(w, aw), vals, spectrum })
+}
+
+/// Interleave a descending-sorted pair list from both ends: indices
+/// `[0, m−1, 1, m−2, …]`, i.e. largest, smallest, 2nd-largest, … — the
+/// `RitzSelect::TwoSided` ranking.
+fn interleave_ends<T>(sorted: Vec<T>) -> Vec<T> {
+    let mut deque: std::collections::VecDeque<T> = sorted.into();
+    let mut out = Vec::with_capacity(deque.len());
+    let mut front = true;
+    loop {
+        let next = if front { deque.pop_front() } else { deque.pop_back() };
+        match next {
+            Some(v) => out.push(v),
+            None => break,
+        }
+        front = !front;
+    }
+    out
 }
 
 /// Modified Gram–Schmidt on the columns of `z`, mirroring every column
@@ -351,6 +418,66 @@ mod tests {
         assert!(extract(None, &stored, 10, &RitzConfig::default()).is_none());
         let cfg = RitzConfig { k: 0, ..Default::default() };
         assert!(extract(None, &stored, 10, &cfg).is_none());
+    }
+
+    #[test]
+    fn two_sided_interleaves_extremes() {
+        let mut rng = Rng::new(9);
+        let a = Mat::rand_spd(50, 1e4, &mut rng);
+        let (_, vals) = run_and_extract(&a, 14, 6, RitzSelect::TwoSided);
+        assert!(vals.len() >= 4);
+        // Rank order: largest first, then smallest, and the two leading
+        // entries bracket everything behind them.
+        assert!(vals[0].theta > vals[1].theta);
+        for v in &vals[2..] {
+            assert!(
+                vals[1].theta <= v.theta && v.theta <= vals[0].theta,
+                "θ = {} outside [{}, {}]",
+                v.theta,
+                vals[1].theta,
+                vals[0].theta
+            );
+        }
+    }
+
+    #[test]
+    fn try_extract_reports_spectrum_and_failure_kinds() {
+        // Benign empty: no stored directions at all.
+        let stored = StoredDirections::default();
+        assert_eq!(
+            try_extract(None, &stored, 10, &RitzConfig::default()).unwrap_err(),
+            ExtractFailure::Empty
+        );
+        // Numerical: a degenerate panel whose AP image is zero makes
+        // G = (AZ)ᵀ(AZ) singular and the generalized eigensolve fails.
+        let n = 8;
+        let mut e1 = vec![0.0; n];
+        e1[0] = 1.0;
+        let degenerate = StoredDirections { p: vec![e1], ap: vec![vec![0.0; n]] };
+        assert_eq!(
+            try_extract(None, &degenerate, n, &RitzConfig::default()).unwrap_err(),
+            ExtractFailure::Numerical
+        );
+        // Success: the spectrum holds every ranked candidate (≥ the
+        // truncated basis) in selection order.
+        let mut rng = Rng::new(10);
+        let a = Mat::rand_spd(30, 1e3, &mut rng);
+        let b: Vec<f64> = (0..30).map(|i| 1.0 + (i % 5) as f64).collect();
+        let cfg = CgConfig { tol: 1e-12, max_iters: 0, store_l: 10, ..Default::default() };
+        let r = cg::solve(&DenseOp::new(&a), &b, None, &cfg);
+        let ext = try_extract(
+            None,
+            &r.stored,
+            30,
+            &RitzConfig { k: 3, select: RitzSelect::Largest, min_col_norm: 1e-12 },
+        )
+        .unwrap();
+        assert!(ext.defl.k() <= 3);
+        assert!(ext.spectrum.len() >= ext.vals.len());
+        for w in ext.spectrum.windows(2) {
+            assert!(w[0] >= w[1], "largest-first ranking violated: {:?}", ext.spectrum);
+        }
+        assert_eq!(ext.vals[0].theta, ext.spectrum[0]);
     }
 
     #[test]

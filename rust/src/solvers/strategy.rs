@@ -1,0 +1,565 @@
+//! Pluggable recycle-space strategies with predictive adaptive-k sizing.
+//!
+//! The selection layer is the third pluggable axis of a recycled solve,
+//! alongside preconditioning and memory budgets. A [`RecycleStrategy`]
+//! answers the two questions the recycle pipeline has so far hard-coded:
+//!
+//! 1. **Which end of the spectrum do we keep?** ([`RecycleStrategy::ordering`]
+//!    maps onto a [`RitzSelect`] ranking used by harmonic-Ritz extraction.)
+//! 2. **How many candidates actually pay for themselves?**
+//!    ([`RecycleStrategy::choose_k`] — a predicted-payoff evaluation over
+//!    the ranked Ritz spectrum.)
+//!
+//! Three fixed rules ship with the crate — [`HarmonicLargest`] (the
+//! historical default, bitwise-pinned), [`RitzSmallest`], and
+//! [`TwoSidedSplit`] — plus [`AdaptiveK`], which sizes k per sequence
+//! from the CG κ-bound payoff model below and shrinks to k = 0 (plain
+//! CG) when recycling cannot pay.
+//!
+//! # The κ-bound payoff model
+//!
+//! The classical CG error bound gives the iterations to reach a relative
+//! tolerance `tol` on a spectrum of condition number κ:
+//!
+//! ```text
+//! N(κ, tol) = ⌈ ln(2/tol) / ln(1/ρ) ⌉,   ρ = (√κ − 1) / (√κ + 1)
+//! ```
+//!
+//! Deflating the first `j` ranked Ritz values removes them from the
+//! effective spectrum, so the evaluator scores retaining `j` candidates
+//! as `N(κ_j, tol)` where κ_j is the condition number of the *remaining*
+//! ranked spectrum. Against that saving it bills the deflation costs in
+//! matvec equivalents: the O(n·j) per-iteration projection (measured via
+//! [`measure_projection_col_seconds`] when timing is available, a flop
+//! model otherwise) and, under `AwPolicy::Refresh`, the `j` operator
+//! applications that re-form AW each system. [`best_k`] takes the argmin
+//! over the *admissible* `j = 0..=k_cap`; ties go to the smaller basis.
+//!
+//! The spectrum the evaluator sees is the *observed* harmonic-Ritz
+//! spectrum, not the true eigenvalues — a sparse sample that says nothing
+//! about spectral density between its entries. Trusting it blindly would
+//! let the model "deflate away" a whole cluster a few Ritz vectors at a
+//! time and predict κ → 1, which no finite basis delivers. [`best_k`]
+//! therefore only credits deflation at **cluster boundaries**: a cut
+//! after the first `j` ranked values is admissible only when the ratio
+//! across the cut is at least [`CLUSTER_GAP`] — peeling whole, separated
+//! outlier groups counts, peeling into a cluster does not. On a flat
+//! spectrum no cut is admissible and the adaptive rule degrades to plain
+//! CG; on an outlier spectrum the argmin lands exactly at the gap.
+
+use crate::linalg::Mat;
+use crate::solvers::ritz::RitzSelect;
+use std::fmt;
+use std::sync::Arc;
+
+/// Everything the payoff evaluator knows about the solve environment.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalContext {
+    /// Problem dimension (rows of the operator).
+    pub n: usize,
+    /// Convergence tolerance the sequence solves to.
+    pub tol: f64,
+    /// Hard ceiling on the chosen k: the post-budget candidate count
+    /// (never above `RecycleBudget::basis_cols`, so any strategy's
+    /// choice composes with the memory budget by construction).
+    pub k_cap: usize,
+    /// Whether the AW panel is re-formed each system (`AwPolicy::Refresh`)
+    /// — if so every retained column bills one matvec per solve.
+    pub refresh: bool,
+    /// Measured seconds per operator application from the run that
+    /// produced the candidate panel, when available.
+    pub matvec_seconds: Option<f64>,
+    /// Measured seconds per basis column of one deflation projection
+    /// (see [`measure_projection_col_seconds`]), when available.
+    pub proj_col_seconds: Option<f64>,
+}
+
+/// A strategy's sizing verdict: the chosen k plus the model terms behind
+/// it, all in units of iterations / matvec equivalents.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct KChoice {
+    /// Number of leading ranked candidates to retain.
+    pub k: usize,
+    /// κ-bound iteration prediction at k = 0 (no deflation).
+    pub plain_iters: f64,
+    /// κ-bound iteration prediction with the first `k` candidates deflated.
+    pub deflated_iters: f64,
+    /// Per-solve deflation overhead in matvec equivalents (projection
+    /// work across the predicted iterations plus any AW refresh).
+    pub overhead: f64,
+}
+
+impl KChoice {
+    /// Net predicted iteration savings of this choice over plain CG.
+    pub fn predicted_savings(&self) -> f64 {
+        self.plain_iters - self.deflated_iters - self.overhead
+    }
+}
+
+/// The decision record a [`crate::solvers::recycle::RecycleManager`] keeps
+/// from its most recent absorb, surfaced through `SolveReport` and the
+/// coordinator metrics so mis-sized bases are auditable.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StrategyDecision {
+    /// Name of the strategy that made the call (empty before the first
+    /// extraction of a sequence).
+    pub strategy: &'static str,
+    /// Candidates offered to the strategy (post budget truncation).
+    pub k_offered: usize,
+    /// Candidates the strategy retained (`0` = fall back to plain CG).
+    pub k_chosen: usize,
+    /// κ-bound iteration prediction without deflation.
+    pub predicted_plain_iters: f64,
+    /// κ-bound iteration prediction with the retained basis.
+    pub predicted_deflated_iters: f64,
+    /// Predicted per-solve overhead of the retained basis (matvec
+    /// equivalents).
+    pub predicted_overhead: f64,
+}
+
+impl StrategyDecision {
+    /// Net predicted iteration savings of the recorded choice.
+    pub fn predicted_savings(&self) -> f64 {
+        self.predicted_plain_iters - self.predicted_deflated_iters - self.predicted_overhead
+    }
+}
+
+/// A recycle-space selection rule: which spectral end extraction should
+/// rank for, and how many of the ranked candidates to retain.
+///
+/// Contract: `choose_k` receives the **full ranked Ritz spectrum** in the
+/// strategy's own selection order (best candidate first, as produced by
+/// [`RitzSelect`]) and must return a choice with `k ≤ ctx.k_cap`; the
+/// manager clamps anyway, so a misbehaving strategy can never exceed the
+/// memory budget. Retaining `k` means keeping the *leading* `k` ranked
+/// candidates — prefix selection keeps the default fixed-k path bitwise
+/// identical to the historical behavior.
+pub trait RecycleStrategy: Send + Sync {
+    /// Short stable name for reports and metrics.
+    fn name(&self) -> &'static str;
+    /// The spectral ordering harmonic-Ritz extraction ranks candidates by.
+    fn ordering(&self) -> RitzSelect;
+    /// Choose how many leading ranked candidates to retain.
+    fn choose_k(&self, spectrum: &[f64], ctx: &EvalContext) -> KChoice;
+    /// Whether the manager should time a projection pass
+    /// ([`measure_projection_col_seconds`]) before calling `choose_k`.
+    /// Defaults to `false` so fixed rules stay measurement-free.
+    fn wants_measurement(&self) -> bool {
+        false
+    }
+}
+
+/// κ-bound CG iteration estimate `N(κ, tol)`; κ ≤ 1 (or non-finite)
+/// collapses to a single iteration.
+pub fn cg_kappa_iters(kappa: f64, tol: f64) -> f64 {
+    if !kappa.is_finite() || kappa <= 1.0 {
+        return 1.0;
+    }
+    let rho = (kappa.sqrt() - 1.0) / (kappa.sqrt() + 1.0);
+    if rho <= 0.0 {
+        return 1.0;
+    }
+    let t = tol.clamp(1e-300, 0.5);
+    ((2.0 / t).ln() / (1.0 / rho).ln()).ceil().max(1.0)
+}
+
+/// Condition number of the ranked spectrum with its first `skip` entries
+/// deflated away: max/min over the positive finite tail. `None` when the
+/// tail holds nothing usable.
+pub fn remaining_kappa(spectrum: &[f64], skip: usize) -> Option<f64> {
+    let mut lo = f64::INFINITY;
+    let mut hi = 0.0f64;
+    for &t in spectrum.iter().skip(skip) {
+        if t.is_finite() && t > 0.0 {
+            lo = lo.min(t);
+            hi = hi.max(t);
+        }
+    }
+    if hi > 0.0 && lo.is_finite() {
+        Some(hi / lo)
+    } else {
+        None
+    }
+}
+
+/// Per-iteration overhead of deflating against a `j`-column basis, as a
+/// fraction of one matvec. Uses the measured projection/matvec timings
+/// when both are present; otherwise the flop model — one deflation
+/// projection is ~4nj flops ((AW)ᵀr plus W·μ, 2nj each) against the 2n²
+/// of a dense matvec, i.e. 2j/n.
+pub fn projection_overhead_frac(j: usize, ctx: &EvalContext) -> f64 {
+    if j == 0 {
+        return 0.0;
+    }
+    match (ctx.matvec_seconds, ctx.proj_col_seconds) {
+        (Some(mv), Some(pc)) if mv > 0.0 && pc > 0.0 && mv.is_finite() && pc.is_finite() => {
+            j as f64 * pc / mv
+        }
+        _ => 2.0 * j as f64 / ctx.n.max(1) as f64,
+    }
+}
+
+/// Score retaining the leading `j` ranked candidates: predicted plain and
+/// deflated iteration counts plus the per-solve overhead bill.
+pub fn evaluate_k(spectrum: &[f64], j: usize, ctx: &EvalContext) -> KChoice {
+    let plain = remaining_kappa(spectrum, 0)
+        .map(|k| cg_kappa_iters(k, ctx.tol))
+        .unwrap_or(1.0);
+    let deflated = remaining_kappa(spectrum, j)
+        .map(|k| cg_kappa_iters(k, ctx.tol))
+        .unwrap_or(1.0);
+    let refresh = if ctx.refresh { j as f64 } else { 0.0 };
+    KChoice {
+        k: j,
+        plain_iters: plain,
+        deflated_iters: deflated,
+        overhead: deflated * projection_overhead_frac(j, ctx) + refresh,
+    }
+}
+
+fn total_cost(c: &KChoice) -> f64 {
+    c.deflated_iters + c.overhead
+}
+
+/// Minimum ratio across a cut in the ranked Ritz spectrum for the cut to
+/// count as a cluster boundary. The Ritz values are a sparse sample of
+/// the true spectrum: inside a cluster they under-represent the density,
+/// so deflating part of one earns no κ credit — only peeling a whole,
+/// separated group (outliers a gap away from the rest) does.
+pub const CLUSTER_GAP: f64 = 4.0;
+
+/// Whether cutting the ranked spectrum after its first `j` entries lands
+/// on a cluster boundary. `j = 0` (keep nothing deflated) is always
+/// admissible; `j = len` (deflate the entire observed sample) never is —
+/// the tail κ estimate would be vacuous.
+fn cluster_boundary(spectrum: &[f64], j: usize) -> bool {
+    if j == 0 {
+        return true;
+    }
+    if j >= spectrum.len() {
+        return false;
+    }
+    let (a, b) = (spectrum[j - 1], spectrum[j]);
+    if !(a.is_finite() && b.is_finite() && a > 0.0 && b > 0.0) {
+        return false;
+    }
+    a.max(b) / a.min(b) >= CLUSTER_GAP
+}
+
+/// Argmin of predicted total cost over the admissible `j = 0..=k_cap` —
+/// cuts must land on a cluster boundary (see [`CLUSTER_GAP`]); ties go to
+/// the smaller basis. A flat spectrum admits no cut and yields k = 0; an
+/// outlier spectrum is peeled exactly down to the gap.
+pub fn best_k(spectrum: &[f64], ctx: &EvalContext) -> KChoice {
+    let cap = ctx.k_cap.min(spectrum.len());
+    let mut best = evaluate_k(spectrum, 0, ctx);
+    for j in 1..=cap {
+        if !cluster_boundary(spectrum, j) {
+            continue;
+        }
+        let c = evaluate_k(spectrum, j, ctx);
+        if total_cost(&c) < total_cost(&best) {
+            best = c;
+        }
+    }
+    best
+}
+
+/// Time one deflation projection against the basis `(W, AW)` — the
+/// per-iteration skinny products `(AW)ᵀr` and `W·μ` — and return seconds
+/// **per basis column**, or `None` when the basis is empty or the clock
+/// resolution defeats the measurement. The triangular `k×k` solve is
+/// deliberately excluded: it is O(k²) against the O(nk) products.
+pub fn measure_projection_col_seconds(w: &Mat, aw: &Mat) -> Option<f64> {
+    let n = w.rows();
+    let k = w.cols();
+    if n == 0 || k == 0 || aw.rows() != n || aw.cols() != k {
+        return None;
+    }
+    let mut rm = Mat::zeros(n, 1);
+    let r: Vec<f64> = (0..n).map(|i| 1.0 + (i % 3) as f64).collect();
+    rm.set_col(0, &r);
+    const REPS: usize = 3;
+    let t0 = std::time::Instant::now();
+    let mut sink = 0.0;
+    for _ in 0..REPS {
+        let mu = aw.t_matmul(&rm); // (AW)ᵀ r : k×1
+        let back = w.matmul(&mu); // W μ : n×1
+        sink += back[(0, 0)];
+    }
+    std::hint::black_box(sink);
+    let per_col = t0.elapsed().as_secs_f64() / (REPS * k) as f64;
+    (per_col.is_finite() && per_col > 0.0).then_some(per_col)
+}
+
+/// Today's behavior: rank harmonic-Ritz values largest-first and keep the
+/// full offered basis. The default, bitwise-pinned path.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HarmonicLargest;
+
+impl RecycleStrategy for HarmonicLargest {
+    fn name(&self) -> &'static str {
+        "harmonic-largest"
+    }
+    fn ordering(&self) -> RitzSelect {
+        RitzSelect::Largest
+    }
+    fn choose_k(&self, spectrum: &[f64], ctx: &EvalContext) -> KChoice {
+        evaluate_k(spectrum, ctx.k_cap.min(spectrum.len()), ctx)
+    }
+}
+
+/// Rank Ritz values smallest-first and keep the full offered basis — the
+/// right end when the spectrum has a cluster of small outliers dragging
+/// κ up from below.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RitzSmallest;
+
+impl RecycleStrategy for RitzSmallest {
+    fn name(&self) -> &'static str {
+        "ritz-smallest"
+    }
+    fn ordering(&self) -> RitzSelect {
+        RitzSelect::Smallest
+    }
+    fn choose_k(&self, spectrum: &[f64], ctx: &EvalContext) -> KChoice {
+        evaluate_k(spectrum, ctx.k_cap.min(spectrum.len()), ctx)
+    }
+}
+
+/// Two-sided split: interleave the largest and smallest ranked values
+/// (largest, smallest, 2nd-largest, 2nd-smallest, …) so a retained prefix
+/// attacks κ from both ends — for spectra with outliers above *and* below
+/// the bulk.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TwoSidedSplit;
+
+impl RecycleStrategy for TwoSidedSplit {
+    fn name(&self) -> &'static str {
+        "two-sided"
+    }
+    fn ordering(&self) -> RitzSelect {
+        RitzSelect::TwoSided
+    }
+    fn choose_k(&self, spectrum: &[f64], ctx: &EvalContext) -> KChoice {
+        evaluate_k(spectrum, ctx.k_cap.min(spectrum.len()), ctx)
+    }
+}
+
+/// Predictive adaptive sizing: harmonic-largest ordering, k chosen by
+/// [`best_k`] — shrinks to k = 0 (plain CG) whenever the κ-bound savings
+/// cannot beat the measured projection + refresh overhead.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AdaptiveK;
+
+impl RecycleStrategy for AdaptiveK {
+    fn name(&self) -> &'static str {
+        "adaptive-k"
+    }
+    fn ordering(&self) -> RitzSelect {
+        RitzSelect::Largest
+    }
+    fn choose_k(&self, spectrum: &[f64], ctx: &EvalContext) -> KChoice {
+        best_k(spectrum, ctx)
+    }
+    fn wants_measurement(&self) -> bool {
+        true
+    }
+}
+
+/// Cloneable, comparable handle to a strategy — what `RecycleConfig` and
+/// `SolveSpec` actually carry. The built-in variants resolve to
+/// zero-sized statics; `Custom` carries a user implementation and
+/// compares by pointer identity (so request coalescing stays sound).
+#[derive(Clone, Default)]
+pub enum StrategyChoice {
+    /// [`HarmonicLargest`] — the default.
+    #[default]
+    HarmonicLargest,
+    /// [`RitzSmallest`].
+    RitzSmallest,
+    /// [`TwoSidedSplit`].
+    TwoSided,
+    /// [`AdaptiveK`] predictive sizing.
+    Auto,
+    /// A user-supplied strategy.
+    Custom(Arc<dyn RecycleStrategy>),
+}
+
+impl StrategyChoice {
+    /// Borrow the concrete strategy behind this choice.
+    pub fn resolve(&self) -> &dyn RecycleStrategy {
+        match self {
+            StrategyChoice::HarmonicLargest => &HarmonicLargest,
+            StrategyChoice::RitzSmallest => &RitzSmallest,
+            StrategyChoice::TwoSided => &TwoSidedSplit,
+            StrategyChoice::Auto => &AdaptiveK,
+            StrategyChoice::Custom(s) => s.as_ref(),
+        }
+    }
+}
+
+impl fmt::Debug for StrategyChoice {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "StrategyChoice({})", self.resolve().name())
+    }
+}
+
+impl PartialEq for StrategyChoice {
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (StrategyChoice::Custom(a), StrategyChoice::Custom(b)) => Arc::ptr_eq(a, b),
+            (a, b) => std::mem::discriminant(a) == std::mem::discriminant(b),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(n: usize, k_cap: usize) -> EvalContext {
+        EvalContext {
+            n,
+            tol: 1e-8,
+            k_cap,
+            refresh: true,
+            matvec_seconds: None,
+            proj_col_seconds: None,
+        }
+    }
+
+    #[test]
+    fn kappa_bound_is_monotone_and_flat_is_one_iteration() {
+        assert_eq!(cg_kappa_iters(1.0, 1e-8), 1.0);
+        assert_eq!(cg_kappa_iters(0.5, 1e-8), 1.0);
+        assert_eq!(cg_kappa_iters(f64::NAN, 1e-8), 1.0);
+        let n10 = cg_kappa_iters(10.0, 1e-8);
+        let n100 = cg_kappa_iters(100.0, 1e-8);
+        let n1e4 = cg_kappa_iters(1e4, 1e-8);
+        assert!(n10 < n100 && n100 < n1e4, "{n10} {n100} {n1e4}");
+        // Tighter tolerance costs more iterations.
+        assert!(cg_kappa_iters(100.0, 1e-12) > cg_kappa_iters(100.0, 1e-4));
+    }
+
+    #[test]
+    fn remaining_kappa_scans_the_ranked_tail() {
+        let spec = [1e4, 1e3, 1.5, 1.0];
+        assert_eq!(remaining_kappa(&spec, 0), Some(1e4));
+        assert_eq!(remaining_kappa(&spec, 1), Some(1e3));
+        assert_eq!(remaining_kappa(&spec, 2), Some(1.5));
+        assert_eq!(remaining_kappa(&spec, 3), Some(1.0));
+        assert_eq!(remaining_kappa(&spec, 4), None);
+        // Non-finite and non-positive entries are ignored.
+        assert_eq!(remaining_kappa(&[f64::NAN, -2.0, 0.0, 4.0, 2.0], 0), Some(2.0));
+        assert_eq!(remaining_kappa(&[f64::NAN, 0.0], 0), None);
+    }
+
+    #[test]
+    fn flat_spectrum_drives_adaptive_k_to_zero() {
+        // Everything clustered: no deflation subset can beat its own cost.
+        let spec = vec![1.05, 1.04, 1.03, 1.02, 1.01, 1.0];
+        let choice = best_k(&spec, &ctx(100, 6));
+        assert_eq!(choice.k, 0, "flat spectrum must shrink to plain CG: {choice:?}");
+        assert!(choice.predicted_savings() <= 0.0 || choice.k == 0);
+    }
+
+    #[test]
+    fn outlier_spectrum_pays_for_deflation_and_respects_the_cap() {
+        // Three heavy outliers over a tight bulk: deflating them is a
+        // huge κ-bound win, deflating into the bulk is not.
+        let spec = [1e4, 3e3, 1e3, 1.5, 1.4, 1.3, 1.2, 1.1, 1.05, 1.0];
+        let c = best_k(&spec, &ctx(192, 8));
+        assert!(c.k >= 3, "should deflate all outliers, chose {}", c.k);
+        assert!(c.k <= 5, "should not chase the bulk, chose {}", c.k);
+        assert!(c.predicted_savings() > 0.0);
+        // A tighter cap binds the choice — and with every cut inside the
+        // outlier group ruled inadmissible, the model refuses entirely.
+        let capped = best_k(&spec, &ctx(192, 2));
+        assert!(capped.k <= 2);
+    }
+
+    #[test]
+    fn deflation_is_only_credited_at_cluster_boundaries() {
+        // Same outlier group: the only admissible cut is after the whole
+        // group (j = 3) — never partway through it or into the bulk.
+        let spec = [1e4, 3e3, 1e3, 1.5, 1.4, 1.3, 1.2, 1.1, 1.05, 1.0];
+        assert_eq!(best_k(&spec, &ctx(192, 8)).k, 3);
+        // A smooth geometric decay with every adjacent ratio below
+        // CLUSTER_GAP has no boundary: the sample cannot justify any cut.
+        let smooth: Vec<f64> = (0..8).rev().map(|i| 3.0f64.powi(i)).collect();
+        assert_eq!(best_k(&smooth, &ctx(192, 8)).k, 0);
+        // One isolated outlier over a single bulk sample is still peeled.
+        assert_eq!(best_k(&[1e4, 1.0], &ctx(64, 4)).k, 1);
+        // Deflating the entire observed sample is never admissible, even
+        // when the cap allows it (the tail κ estimate would be vacuous).
+        assert_eq!(best_k(&[1e4, 3e3], &ctx(64, 8)).k, 0);
+    }
+
+    #[test]
+    fn fixed_strategies_take_the_full_offer_with_their_own_ordering() {
+        let spec = [9.0, 5.0, 2.0, 1.0];
+        let c = ctx(64, 3);
+        for (s, ord) in [
+            (&HarmonicLargest as &dyn RecycleStrategy, RitzSelect::Largest),
+            (&RitzSmallest, RitzSelect::Smallest),
+            (&TwoSidedSplit, RitzSelect::TwoSided),
+        ] {
+            assert_eq!(s.ordering(), ord);
+            assert_eq!(s.choose_k(&spec, &c).k, 3, "{} must take the cap", s.name());
+            assert!(!s.wants_measurement());
+        }
+        assert_eq!(AdaptiveK.ordering(), RitzSelect::Largest);
+        assert!(AdaptiveK.wants_measurement());
+    }
+
+    #[test]
+    fn measured_overhead_overrides_the_flop_model() {
+        let mut c = ctx(100, 4);
+        // Flop fallback: 2j/n.
+        assert!((projection_overhead_frac(5, &c) - 0.1).abs() < 1e-12);
+        c.matvec_seconds = Some(1e-3);
+        c.proj_col_seconds = Some(1e-4);
+        assert!((projection_overhead_frac(5, &c) - 0.5).abs() < 1e-12);
+        assert_eq!(projection_overhead_frac(0, &c), 0.0);
+    }
+
+    #[test]
+    fn projection_measurement_returns_positive_seconds() {
+        let mut rng = crate::util::rng::Rng::new(11);
+        let w = Mat::randn(64, 4, &mut rng);
+        let aw = Mat::randn(64, 4, &mut rng);
+        let s = measure_projection_col_seconds(&w, &aw).expect("nonzero basis measures");
+        assert!(s > 0.0 && s.is_finite());
+        assert!(measure_projection_col_seconds(&Mat::zeros(0, 0), &Mat::zeros(0, 0)).is_none());
+    }
+
+    #[test]
+    fn strategy_choice_equality_and_debug() {
+        assert_eq!(StrategyChoice::default(), StrategyChoice::HarmonicLargest);
+        assert_ne!(StrategyChoice::Auto, StrategyChoice::TwoSided);
+        let a: Arc<dyn RecycleStrategy> = Arc::new(AdaptiveK);
+        let c1 = StrategyChoice::Custom(a.clone());
+        let c2 = StrategyChoice::Custom(a);
+        let c3 = StrategyChoice::Custom(Arc::new(AdaptiveK));
+        assert_eq!(c1, c2);
+        assert_ne!(c1, c3);
+        assert_ne!(c1, StrategyChoice::Auto);
+        assert_eq!(format!("{:?}", StrategyChoice::Auto), "StrategyChoice(adaptive-k)");
+    }
+
+    #[test]
+    fn decision_savings_matches_choice_savings() {
+        let spec = [50.0, 10.0, 2.0, 1.0];
+        let c = evaluate_k(&spec, 2, &ctx(128, 4));
+        let d = StrategyDecision {
+            strategy: "test",
+            k_offered: 4,
+            k_chosen: c.k,
+            predicted_plain_iters: c.plain_iters,
+            predicted_deflated_iters: c.deflated_iters,
+            predicted_overhead: c.overhead,
+        };
+        assert!((d.predicted_savings() - c.predicted_savings()).abs() < 1e-12);
+    }
+}
