@@ -1,0 +1,243 @@
+//! Bench: coordinator throughput under sustained mixed load — the
+//! service-level baseline every later scheduler/coordinator PR is
+//! accountable to.
+//!
+//! Two workloads, both emitted to `BENCH_service.json`:
+//!
+//! * **distinct-operator**: S independent sequences, each with its own
+//!   SPD operator, fed a pipelined ~70/30 interactive/batch stream of
+//!   single-RHS requests — run at 1 and at 4 scheduler workers. Reports
+//!   solves/sec, p50/p99 end-to-end latency per priority class, busy vs
+//!   span seconds, utilization, and steal counts; the headline number is
+//!   the 4-vs-1 worker throughput ratio (hardware permitting, ≥2×).
+//! * **shared-operator**: 8 sequences sharing ONE operator `Arc` (the
+//!   many-users-one-Gram-matrix shape), each submitting a 2-column block
+//!   request — run with cross-sequence coalescing on and off. Reports
+//!   total operator columns applied and the worst final residual for
+//!   both runs: coalescing must cut matvecs at equal accuracy.
+//!
+//! `--smoke` (or `KRR_BENCH_FAST=1`) shrinks sizes for the CI
+//! release-mode check, which only asserts the JSON exists and parses.
+
+use krr::coordinator::SolveService;
+use krr::linalg::mat::Mat;
+use krr::solvers::recycle::RecycleConfig;
+use krr::solvers::{SolveSpec, SpdOperator, StopReason};
+use krr::util::json::Json;
+use krr::util::rng::Rng;
+use krr::util::stats::percentile;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Owning dense operator (fingerprint-less, so cross-sequence merging
+/// in the shared workload rests on `Arc` identity alone).
+struct OwnedDense(Mat);
+
+impl SpdOperator for OwnedDense {
+    fn n(&self) -> usize {
+        self.0.rows()
+    }
+    fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        self.0.matvec_into(x, y);
+    }
+}
+
+struct LoadShape {
+    seqs: usize,
+    reqs_per_seq: usize,
+    n: usize,
+}
+
+struct RoundOut {
+    solves_per_sec: f64,
+    span_seconds: f64,
+    side: Json,
+}
+
+/// One sustained-load round on a fresh service: `seqs` sequences with
+/// distinct operators, `reqs_per_seq` pipelined submissions each,
+/// ~70/30 interactive/batch. Returns throughput plus the JSON side.
+fn distinct_op_round(workers: usize, shape: &LoadShape) -> RoundOut {
+    let svc = SolveService::new(workers);
+    let mut rng = Rng::new(2026);
+    let cfg = RecycleConfig { k: 6, l: 10, ..Default::default() };
+    let seqs: Vec<_> = (0..shape.seqs).map(|_| svc.open_sequence(cfg.clone())).collect();
+    let ops: Vec<Arc<dyn SpdOperator + Send + Sync>> = (0..shape.seqs)
+        .map(|_| {
+            Arc::new(OwnedDense(Mat::rand_spd(shape.n, 1e4, &mut rng)))
+                as Arc<dyn SpdOperator + Send + Sync>
+        })
+        .collect();
+    let rhs: Vec<Vec<f64>> =
+        (0..shape.seqs).map(|_| (0..shape.n).map(|_| rng.normal()).collect()).collect();
+
+    let t0 = Instant::now();
+    let mut futures = Vec::new();
+    for _ in 0..shape.reqs_per_seq {
+        for (s, seq) in seqs.iter().enumerate() {
+            let interactive = rng.uniform() < 0.7;
+            let mut spec = SolveSpec::defcg().with_tol(1e-8);
+            if !interactive {
+                spec = spec.batch();
+            }
+            futures.push((interactive, seq.submit(ops[s].clone(), rhs[s].clone(), None, spec)));
+        }
+    }
+    let mut lat_interactive = Vec::new();
+    let mut lat_batch = Vec::new();
+    for (interactive, f) in futures {
+        let (r, rep) = f.wait_report();
+        assert_eq!(r.stop, StopReason::Converged);
+        let lat = rep.queue_seconds + rep.solve_seconds;
+        if interactive {
+            lat_interactive.push(lat);
+        } else {
+            lat_batch.push(lat);
+        }
+    }
+    let span = t0.elapsed().as_secs_f64();
+    let snap = svc.metrics().snapshot();
+    let total = (lat_interactive.len() + lat_batch.len()) as f64;
+    let class = |lats: &[f64]| {
+        if lats.is_empty() {
+            // An all-one-class draw (tiny smoke runs): no percentiles.
+            return Json::obj(vec![("count", Json::num(0.0))]);
+        }
+        Json::obj(vec![
+            ("count", Json::num(lats.len() as f64)),
+            ("p50_seconds", Json::num(percentile(lats, 0.50))),
+            ("p99_seconds", Json::num(percentile(lats, 0.99))),
+        ])
+    };
+    RoundOut {
+        solves_per_sec: total / span.max(1e-12),
+        span_seconds: span,
+        side: Json::obj(vec![
+            ("workers", Json::num(workers as f64)),
+            ("completed", Json::num(snap.completed as f64)),
+            ("solves_per_sec", Json::num(total / span.max(1e-12))),
+            ("span_seconds", Json::num(span)),
+            ("busy_seconds", Json::num(snap.busy_seconds)),
+            ("utilization", Json::num(snap.utilization())),
+            ("steals", Json::num(snap.steals as f64)),
+            ("total_matvecs", Json::num(snap.total_matvecs as f64)),
+            ("interactive", class(&lat_interactive)),
+            ("batch", class(&lat_batch)),
+        ]),
+    }
+}
+
+struct SharedOut {
+    matvecs: f64,
+    worst_residual: f64,
+    side: Json,
+}
+
+/// The shared-operator workload: 8 sequences, ONE operator `Arc`, one
+/// 2-column block request each, staged behind a dispatch pause so the
+/// coalescer sees them together. With coalescing the leader merges the
+/// peers' heads into one group solve (duplicate columns rank-drop and
+/// ride nearly free); without it, 8 separate block solves run.
+fn shared_op_round(coalesce: bool, n: usize) -> SharedOut {
+    let svc = SolveService::new(1);
+    svc.cross_sequence_coalescing(coalesce);
+    let mut rng = Rng::new(77);
+    let a = Mat::rand_spd(n, 1e3, &mut rng);
+    let x_true = Mat::randn(n, 2, &mut rng);
+    let b = a.matmul(&x_true);
+    let op: Arc<dyn SpdOperator + Send + Sync> = Arc::new(OwnedDense(a));
+    let cfg = RecycleConfig::default();
+    let seqs: Vec<_> = (0..8).map(|_| svc.open_sequence(cfg.clone())).collect();
+    let pause = svc.pause();
+    let spec = SolveSpec::blockcg().with_tol(1e-9);
+    let futures: Vec<_> =
+        seqs.iter().map(|s| s.submit_block(op.clone(), b.clone(), spec.clone())).collect();
+    drop(pause);
+    let mut worst = 0.0f64;
+    for f in futures {
+        let r = f.wait();
+        assert_eq!(r.stop, StopReason::Converged);
+        worst = worst.max(r.final_residual());
+    }
+    let snap = svc.metrics().snapshot();
+    SharedOut {
+        matvecs: snap.total_matvecs as f64,
+        worst_residual: worst,
+        side: Json::obj(vec![
+            ("coalescing", Json::num(if coalesce { 1.0 } else { 0.0 })),
+            ("total_matvecs", Json::num(snap.total_matvecs as f64)),
+            ("cross_seq_coalesced", Json::num(snap.cross_seq_coalesced as f64)),
+            ("worst_final_residual", Json::num(worst)),
+            ("completed", Json::num(snap.completed as f64)),
+        ]),
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("KRR_BENCH_FAST").is_ok_and(|v| v == "1");
+    let shape = if smoke {
+        LoadShape { seqs: 4, reqs_per_seq: 6, n: 48 }
+    } else {
+        LoadShape { seqs: 16, reqs_per_seq: 40, n: 96 }
+    };
+    let shared_n = if smoke { 48 } else { 128 };
+
+    println!(
+        "service bench ({} mode): {} sequences × {} requests, n = {}",
+        if smoke { "smoke" } else { "full" },
+        shape.seqs,
+        shape.reqs_per_seq,
+        shape.n
+    );
+    let w1 = distinct_op_round(1, &shape);
+    let w4 = distinct_op_round(4, &shape);
+    let speedup = w4.solves_per_sec / w1.solves_per_sec.max(1e-12);
+    println!(
+        "  distinct-op: {:.1} solves/s @ 1 worker ({:.2}s span), {:.1} solves/s @ 4 workers ({:.2}s span) — {speedup:.2}x",
+        w1.solves_per_sec, w1.span_seconds, w4.solves_per_sec, w4.span_seconds
+    );
+
+    let merged = shared_op_round(true, shared_n);
+    let split = shared_op_round(false, shared_n);
+    println!(
+        "  shared-op: {} column applies coalesced vs {} uncoalesced ({:.2}x), residuals {:.2e} / {:.2e}",
+        merged.matvecs,
+        split.matvecs,
+        split.matvecs / merged.matvecs.max(1.0),
+        merged.worst_residual,
+        split.worst_residual
+    );
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("service_throughput")),
+        ("smoke", Json::num(if smoke { 1.0 } else { 0.0 })),
+        (
+            "distinct_op",
+            Json::obj(vec![
+                ("sequences", Json::num(shape.seqs as f64)),
+                ("requests_per_sequence", Json::num(shape.reqs_per_seq as f64)),
+                ("n", Json::num(shape.n as f64)),
+                ("workers_1", w1.side),
+                ("workers_4", w4.side),
+                ("speedup_4_vs_1", Json::num(speedup)),
+            ]),
+        ),
+        (
+            "shared_op",
+            Json::obj(vec![
+                ("sequences", Json::num(8.0)),
+                ("n", Json::num(shared_n as f64)),
+                ("coalesced", merged.side),
+                ("uncoalesced", split.side),
+                (
+                    "matvec_ratio_uncoalesced_over_coalesced",
+                    Json::num(split.matvecs / merged.matvecs.max(1.0)),
+                ),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_service.json", doc.to_string_pretty())
+        .expect("write BENCH_service.json");
+    println!("  wrote BENCH_service.json");
+}

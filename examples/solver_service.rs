@@ -11,8 +11,9 @@
 //! drives the full request lifecycle — `SolveFuture::poll` progress
 //! polling, mid-queue cancellation, a per-request deadline, and a
 //! `shutdown(Drain)` teardown — and prints the lifecycle metrics
-//! (busy vs span seconds, cancelled/deadline/rejected counters, queue
-//! high-water) next to the per-client recycling benefit.
+//! (busy vs span seconds, cancelled/deadline/rejected counters, queue +
+//! per-class high-waters, worker count / steals / utilization from the
+//! work-stealing scheduler) next to the per-client recycling benefit.
 
 use krr::coordinator::{Shutdown, SolveService};
 use krr::data::digits::{generate, DigitsConfig};
@@ -102,7 +103,7 @@ fn main() {
 
     // A request the caller loses interest in: cancel it right away. If it
     // is still queued it completes as Cancelled without running a single
-    // matvec; if the drainer already picked it up, it stops within one
+    // matvec; if a worker already picked it up, it stops within one
     // operator application with the partial iterate.
     let doomed = {
         let s: Vec<f64> = vec![0.4; n];
@@ -172,15 +173,23 @@ fn main() {
         m.total_matvecs
     );
     println!(
-        "queue: depth {} now, high-water {} (cap 64)",
-        m.queue_depth, m.queue_high_water
+        "queue: depth {} now, high-water {} (cap 64); class high-water: \
+         {} interactive / {} batch",
+        m.queue_depth, m.queue_high_water, m.interactive_high_water, m.batch_high_water
+    );
+    println!(
+        "scheduler: {} workers, {} steals (idle workers pulling hot \
+         sequences off busy ones), {} cross-sequence coalesced tickets",
+        m.workers, m.steals, m.cross_seq_coalesced
     );
     println!(
         "wall = {wall:.3}s, solver busy = {:.3}s over a {:.3}s service span \
-         (avg parallelism ×{:.2})",
+         (avg parallelism ×{:.2}, utilization {:.0}% of {} workers)",
         m.busy_seconds,
         m.span_seconds,
-        m.busy_seconds / m.span_seconds.max(1e-9)
+        m.busy_seconds / m.span_seconds.max(1e-9),
+        m.utilization() * 100.0,
+        m.workers
     );
     assert_eq!(m.queue_depth, 0, "drain must leave nothing queued");
     println!("OK");

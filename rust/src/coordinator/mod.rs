@@ -35,7 +35,10 @@
 //! * FIFO ordering within a priority class *within* a sequence
 //!   (recycling is inherently sequential) and parallelism *across*
 //!   sequences; consecutive same-operator block requests coalesce into
-//!   one block solve under an all-of cancel group;
+//!   one block solve under an all-of cancel group, and a dispatching
+//!   leader can additionally claim matching block requests from *other*
+//!   sequences sharing the same operator `Arc` (cross-sequence
+//!   coalescing, [`service::SolveService::cross_sequence_coalescing`]);
 //! * worker-panic containment: a panicking solve completes its future as
 //!   [`crate::solvers::StopReason::Failed`] instead of hanging every
 //!   caller behind it;
@@ -48,10 +51,40 @@
 //! This is the shape a GP-serving system would use: many concurrent model
 //! fits, each a sequence of related systems, sharing one compute engine
 //! under explicit backpressure.
+//!
+//! # The two thread pools
+//!
+//! The service runs **two deliberately separate pools**, and the split is
+//! load-bearing:
+//!
+//! * **Scheduler workers** (`krr-sched-{i}`, [`scheduler`], sized by the
+//!   `workers` argument to [`service::SolveService::new`]): each owns a
+//!   run queue of sequence cores and dispatches one task (or one
+//!   coalesced group) per turn, stealing from siblings when idle. These
+//!   threads *block* inside solves — that is fine, they are the solve
+//!   capacity.
+//! * **Compute pool** (`krr-compute-{i}`, built once at first use via
+//!   `OnceLock` — not lazily under a mutex on the hot path): the
+//!   fork/join shards of a single [`crate::solvers::ParDenseOp`] matvec.
+//!   These jobs must never wait on solver-length work. Running matvec
+//!   shards on the scheduler workers would deadlock the fork/join when
+//!   every worker is a dispatcher blocked joining its own shards; running
+//!   dispatchers on the compute pool would let one slow solve starve
+//!   every other sequence's matvecs. Hence: dispatchers block, shards
+//!   don't, and the pools never share threads.
+//!
+//! Sequence placement is **sticky**: a sequence's home worker is fixed at
+//! `open_sequence` (round-robin), so its recycled `(W, AW)` basis is
+//! re-touched by the same worker — warm caches — while work-stealing
+//! keeps any single hot worker from serializing the service (idle workers
+//! prefer victims with urgent work, then basis-free sequences, so a
+//! stolen dispatch is cheap to run cold). See `DESIGN.md` §"Scheduler &
+//! placement".
 
+pub(crate) mod scheduler;
 pub mod service;
 
 pub use service::{
-    MetricsSnapshot, SequenceHandle, ServiceMetrics, Shutdown, SolveFuture, SolveReport,
-    SolveService, SubmitError,
+    MetricsSnapshot, PauseGuard, SequenceHandle, ServiceMetrics, Shutdown, SolveFuture,
+    SolveReport, SolveService, SubmitError,
 };

@@ -1,0 +1,580 @@
+//! The sharded work-stealing scheduler behind [`super::service::SolveService`].
+//!
+//! # Worker model
+//!
+//! The old coordinator spawned one *drainer closure* per active sequence
+//! onto a shared [`crate::util::pool::ThreadPool`] and let that closure
+//! loop until its sequence queue was empty. That shape serializes each
+//! sequence (correct — recycling is inherently sequential) but has two
+//! scaling defects: a sequence with a sustained request stream occupies
+//! its pool worker **forever** (a busy pool starves late-opened
+//! sequences outright), and there is no placement — a sequence's
+//! recycled basis has no worker affinity, so nothing keeps the `(W, AW)`
+//! panel hot in one core's cache.
+//!
+//! This module replaces that with an explicit scheduler:
+//!
+//! * **N workers, one run queue each.** A runnable sequence core is an
+//!   [`Arc`] in exactly one run queue (or on exactly one worker's
+//!   dispatch), never two places at once — the per-sequence
+//!   serialization invariant survives by construction.
+//! * **One dispatch = one task (or one coalesced group).** After each
+//!   dispatch the core goes to the *back* of its home queue, so runnable
+//!   sequences on a worker round-robin: a sequence with an infinite
+//!   request stream can no longer starve its neighbours (the bounded-wait
+//!   fairness guarantee the old model lacked).
+//! * **Sticky placement.** Every core has a fixed *home* worker; pushes
+//!   and post-dispatch requeues always target the home queue, so a
+//!   sequence's recycled basis keeps being touched from the same worker
+//!   thread even after a one-off steal.
+//! * **Work stealing, basis-aware.** An idle worker scans the other run
+//!   queues and steals a core. Victims are chosen to protect locality:
+//!   urgent (interactive-holding) cores first, then cores whose
+//!   [`SchedEntry::steal_cost`] is 0 — basis-free sequences lose nothing
+//!   by running elsewhere — then the queue front as a last resort.
+//!   Stolen cores still requeue to their *home* worker afterwards.
+//! * **Claims.** A dispatching worker can atomically remove peer cores
+//!   from the run queues ([`SchedCtx::claim`]) — the hook the service's
+//!   cross-sequence block coalescer uses to pull same-operator work from
+//!   other sequences into one group solve. Claimed cores stay scheduled
+//!   and must be handed back via [`SchedCtx::requeue`] (or unscheduled
+//!   by their owner) when the group completes.
+//!
+//! The scheduler is deliberately policy-free: what "one dispatch" means
+//! (priority pops, dead-on-arrival completion, coalescing, panic
+//! containment) lives entirely in the dispatch closure the service
+//! installs. The hints ([`SchedEntry::urgent`], [`SchedEntry::steal_cost`])
+//! are advisory ordering signals, never correctness inputs.
+//!
+//! # Shutdown
+//!
+//! Dropping the [`Scheduler`] sets the stop flag and joins the workers;
+//! workers keep dispatching until every run queue is empty before
+//! exiting (mirroring [`crate::util::pool::ThreadPool`]'s drain-on-drop),
+//! so futures enqueued before the drop still complete.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Recover a mutex guard even when a previous holder panicked: the
+/// scheduler must keep dispatching after a contained worker failure.
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A schedulable sequence core. Implemented by the service's per-sequence
+/// state; the scheduler itself never looks inside a core beyond these
+/// placement hints.
+pub(crate) trait SchedEntry: Send + Sync + 'static {
+    /// Fixed home worker index (sticky placement target). Values are
+    /// taken modulo the worker count.
+    fn home(&self) -> usize;
+
+    /// Advisory cost of running this core away from its home worker —
+    /// the resident recycled-basis size (0 = basis-free, cheapest to
+    /// steal). Staleness only degrades steal choices, never correctness.
+    fn steal_cost(&self) -> usize;
+
+    /// Advisory count of urgent (interactive-class) requests queued on
+    /// this core; workers serve cores with `urgent() > 0` before the
+    /// rest of their run queue.
+    fn urgent(&self) -> usize;
+}
+
+/// The dispatch callback: run ONE unit of work (one task or one
+/// coalesced group) for `core`, then requeue or unschedule it. The
+/// second argument is the scheduler context for requeues and
+/// cross-sequence claims; the third is the executing worker's index.
+pub(crate) type DispatchFn<C> = Box<dyn Fn(&Arc<C>, &SchedCtx<C>, usize) + Send + Sync + 'static>;
+
+/// Shared scheduler state: the run queues, the park/wake machinery, and
+/// the dispatch hook. Handed to the dispatch closure so it can requeue
+/// and claim cores.
+pub(crate) struct SchedCtx<C: SchedEntry> {
+    /// One run queue per worker; a core is in at most one queue.
+    queues: Vec<Mutex<VecDeque<Arc<C>>>>,
+    /// Idle workers park here; pushes notify it (lock-then-notify, so a
+    /// worker between its queue scan and its wait cannot miss a wakeup).
+    park: Mutex<()>,
+    park_cv: Condvar,
+    stop: AtomicBool,
+    /// Active [`SchedulerHold`] guards; workers dispatch nothing while
+    /// this is nonzero (the deterministic-test quiesce mechanism).
+    holds: AtomicUsize,
+    /// Cores taken from a non-home run queue, cumulative.
+    steals: AtomicU64,
+    /// External steal observer (the service mirrors steals into its
+    /// metrics without the scheduler knowing about `ServiceMetrics`).
+    on_steal: Box<dyn Fn() + Send + Sync>,
+    dispatch: DispatchFn<C>,
+}
+
+impl<C: SchedEntry> SchedCtx<C> {
+    /// Enqueue `core` on its home worker's run queue and wake a worker.
+    /// The caller guarantees the core is not already queued or being
+    /// dispatched (the service's `scheduled` flag).
+    pub(crate) fn requeue(&self, core: Arc<C>) {
+        let w = core.home() % self.queues.len();
+        lock_unpoisoned(&self.queues[w]).push_back(core);
+        let _g = lock_unpoisoned(&self.park);
+        self.park_cv.notify_all();
+    }
+
+    /// Atomically remove up to `cap` cores matching `pred` from the run
+    /// queues (scanned worker by worker; `pred` runs under each queue's
+    /// lock and must not block — `try_lock` only). Claimed cores remain
+    /// logically scheduled: the caller owns them until it requeues or
+    /// unschedules them. This is the cross-sequence coalescing hook.
+    pub(crate) fn claim(&self, cap: usize, mut pred: impl FnMut(&C) -> bool) -> Vec<Arc<C>> {
+        let mut out = Vec::new();
+        for q in &self.queues {
+            if out.len() >= cap {
+                break;
+            }
+            let mut q = lock_unpoisoned(q);
+            let mut i = 0;
+            while i < q.len() && out.len() < cap {
+                if pred(&q[i]) {
+                    out.push(q.remove(i).expect("index valid under the lock"));
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        out
+    }
+
+    /// Cores taken from a non-home run queue since construction.
+    pub(crate) fn steals(&self) -> u64 {
+        self.steals.load(Ordering::Relaxed)
+    }
+
+    fn n_workers(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Return a popped-but-undispatchable core (a hold arrived between
+    /// the pop and the dispatch) to the FRONT of its home queue, so
+    /// FIFO order is preserved across the pause.
+    fn putback(&self, core: Arc<C>) {
+        let w = core.home() % self.queues.len();
+        lock_unpoisoned(&self.queues[w]).push_front(core);
+    }
+
+    /// Pop from the worker's own queue: the first urgent-holding core if
+    /// any, else the front (round-robin order). Every
+    /// [`FAIRNESS_PERIOD`]-th pop (`fair == true`) serves the front
+    /// unconditionally: urgency is a preference, not a guarantee, so a
+    /// sequence with a perpetual interactive stream cannot starve a
+    /// batch-only peer parked behind it on the same worker — the peer's
+    /// wait is bounded by `FAIRNESS_PERIOD` dispatch turns.
+    fn pop_local(&self, me: usize, fair: bool) -> Option<Arc<C>> {
+        let mut q = lock_unpoisoned(&self.queues[me]);
+        if q.is_empty() {
+            return None;
+        }
+        let idx = if fair { 0 } else { q.iter().position(|c| c.urgent() > 0).unwrap_or(0) };
+        q.remove(idx)
+    }
+
+    /// Steal from another worker's queue. Victim preference inside a
+    /// queue: urgent cores (latency beats locality), then basis-free
+    /// cores (`steal_cost() == 0`, nothing to keep hot), then the front.
+    fn steal(&self, me: usize) -> Option<Arc<C>> {
+        let n = self.queues.len();
+        for off in 1..n {
+            let v = (me + off) % n;
+            let mut q = lock_unpoisoned(&self.queues[v]);
+            if q.is_empty() {
+                continue;
+            }
+            let idx = q
+                .iter()
+                .position(|c| c.urgent() > 0)
+                .or_else(|| q.iter().position(|c| c.steal_cost() == 0))
+                .unwrap_or(0);
+            let core = q.remove(idx).expect("index valid under the lock");
+            drop(q);
+            self.steals.fetch_add(1, Ordering::Relaxed);
+            (self.on_steal)();
+            return Some(core);
+        }
+        None
+    }
+
+    fn any_queued(&self) -> bool {
+        self.queues.iter().any(|q| !lock_unpoisoned(q).is_empty())
+    }
+}
+
+/// RAII pause guard from [`Scheduler::hold`]: while any guard is alive,
+/// workers dispatch nothing (in-flight dispatches finish; queues keep
+/// accepting cores). Dropping the last guard resumes dispatching.
+pub(crate) struct SchedulerHold<C: SchedEntry> {
+    ctx: Arc<SchedCtx<C>>,
+}
+
+impl<C: SchedEntry> Drop for SchedulerHold<C> {
+    fn drop(&mut self) {
+        self.ctx.holds.fetch_sub(1, Ordering::SeqCst);
+        let _g = lock_unpoisoned(&self.ctx.park);
+        self.ctx.park_cv.notify_all();
+    }
+}
+
+/// The worker pool + run queues. Owns the worker threads; dropping it
+/// drains every run queue (dispatching the remaining cores) and joins.
+pub(crate) struct Scheduler<C: SchedEntry> {
+    ctx: Arc<SchedCtx<C>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl<C: SchedEntry> Scheduler<C> {
+    /// Spawn `workers` scheduler threads (named `krr-sched-{i}`).
+    /// `on_steal` is called once per steal; `dispatch` runs one unit of
+    /// work for a core (see [`SchedCtx`]).
+    pub(crate) fn new(
+        workers: usize,
+        on_steal: Box<dyn Fn() + Send + Sync>,
+        dispatch: DispatchFn<C>,
+    ) -> Self {
+        assert!(workers >= 1, "scheduler needs at least one worker");
+        let ctx = Arc::new(SchedCtx {
+            queues: (0..workers).map(|_| Mutex::new(VecDeque::new())).collect(),
+            park: Mutex::new(()),
+            park_cv: Condvar::new(),
+            stop: AtomicBool::new(false),
+            holds: AtomicUsize::new(0),
+            steals: AtomicU64::new(0),
+            on_steal,
+            dispatch,
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let ctx = ctx.clone();
+                std::thread::Builder::new()
+                    .name(format!("krr-sched-{i}"))
+                    .spawn(move || worker_loop(ctx, i))
+                    .expect("spawn scheduler worker")
+            })
+            .collect();
+        Scheduler { ctx, workers: handles }
+    }
+
+    /// Enqueue a core on its home worker (first scheduling of a core, or
+    /// re-scheduling after it went idle).
+    pub(crate) fn submit(&self, core: Arc<C>) {
+        self.ctx.requeue(core);
+    }
+
+    /// Pause dispatching until the returned guard (and any other
+    /// outstanding guard) is dropped. In-flight dispatches complete;
+    /// submissions are still accepted and queue up. The deterministic
+    /// replacement for the old park-a-pool-worker test gate.
+    pub(crate) fn hold(&self) -> SchedulerHold<C> {
+        self.ctx.holds.fetch_add(1, Ordering::SeqCst);
+        SchedulerHold { ctx: self.ctx.clone() }
+    }
+
+    pub(crate) fn n_workers(&self) -> usize {
+        self.ctx.n_workers()
+    }
+
+    /// Cores dispatched away from their home worker, cumulative.
+    pub(crate) fn steals(&self) -> u64 {
+        self.ctx.steals()
+    }
+}
+
+impl<C: SchedEntry> Drop for Scheduler<C> {
+    fn drop(&mut self) {
+        self.ctx.stop.store(true, Ordering::SeqCst);
+        {
+            let _g = lock_unpoisoned(&self.ctx.park);
+            self.ctx.park_cv.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Every N-th local pop ignores the urgency preference and serves the
+/// queue front (see [`SchedCtx::pop_local`]): the anti-starvation
+/// backstop for cross-sequence fairness on a shared worker.
+const FAIRNESS_PERIOD: usize = 4;
+
+fn worker_loop<C: SchedEntry>(ctx: Arc<SchedCtx<C>>, me: usize) {
+    let mut ticks: usize = 0;
+    loop {
+        let stopping = ctx.stop.load(Ordering::SeqCst);
+        if !stopping && ctx.holds.load(Ordering::SeqCst) > 0 {
+            let g = lock_unpoisoned(&ctx.park);
+            let _ = ctx
+                .park_cv
+                .wait_timeout(g, Duration::from_millis(25))
+                .unwrap_or_else(|e| e.into_inner());
+            continue;
+        }
+        // `ticks` counts successful pops, not loop iterations, so the
+        // fair-pop cadence is deterministic in dispatch order and
+        // unaffected by how often an idle worker rescans.
+        let fair = ticks % FAIRNESS_PERIOD == FAIRNESS_PERIOD - 1;
+        match ctx.pop_local(me, fair).or_else(|| ctx.steal(me)) {
+            Some(core) => {
+                ticks = ticks.wrapping_add(1);
+                // A hold that arrived between the pop and here must not
+                // lose the core or its queue position.
+                if !stopping && ctx.holds.load(Ordering::SeqCst) > 0 {
+                    ctx.putback(core);
+                    continue;
+                }
+                // The dispatch closure contains its own per-solve panic
+                // containment; this outer catch is the last-resort guard
+                // that keeps a scheduler worker alive through a bug in
+                // the dispatch plumbing itself.
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    (ctx.dispatch)(&core, &ctx, me);
+                }));
+                if r.is_err() {
+                    crate::log_warn!(
+                        "scheduler worker {me}: dispatch panicked outside solve containment"
+                    );
+                }
+            }
+            None => {
+                // Exit only when stopping AND the full scan (own queue +
+                // every steal victim) found nothing: a peer worker that
+                // is still mid-dispatch may yet requeue a core, but that
+                // peer will re-scan (and find it) before exiting itself.
+                if stopping {
+                    return;
+                }
+                let g = lock_unpoisoned(&ctx.park);
+                // Re-check under the park lock: pushes notify under this
+                // lock, so work pushed after the scan either shows up
+                // here or its notify lands in the wait below.
+                if ctx.any_queued() {
+                    continue;
+                }
+                let _ = ctx
+                    .park_cv
+                    .wait_timeout(g, Duration::from_millis(25))
+                    .unwrap_or_else(|e| e.into_inner());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::time::Instant;
+
+    /// Minimal schedulable core: `work` units remaining; each dispatch
+    /// consumes one, records (id, worker) and requeues while work
+    /// remains, mirroring the service's one-task-per-dispatch contract.
+    struct TestCore {
+        id: usize,
+        home: usize,
+        urgent: AtomicUsize,
+        cost: usize,
+        work: AtomicUsize,
+        scheduled: Mutex<bool>,
+    }
+
+    impl SchedEntry for TestCore {
+        fn home(&self) -> usize {
+            self.home
+        }
+        fn steal_cost(&self) -> usize {
+            self.cost
+        }
+        fn urgent(&self) -> usize {
+            self.urgent.load(Ordering::SeqCst)
+        }
+    }
+
+    struct Harness {
+        sched: Scheduler<TestCore>,
+        log: Arc<Mutex<Vec<(usize, usize)>>>,
+        done: Arc<(Mutex<usize>, Condvar)>,
+    }
+
+    /// Scheduler wired to a dispatch that pops one work unit, logs it,
+    /// and requeues the core while work remains — the same
+    /// requeue-or-unschedule protocol the service uses.
+    fn harness(workers: usize, sleep_ms: u64) -> Harness {
+        let log: Arc<Mutex<Vec<(usize, usize)>>> = Arc::new(Mutex::new(Vec::new()));
+        let done = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let (log2, done2) = (log.clone(), done.clone());
+        let dispatch: DispatchFn<TestCore> = Box::new(move |core, ctx, me| {
+            if sleep_ms > 0 {
+                std::thread::sleep(Duration::from_millis(sleep_ms));
+            }
+            log2.lock().unwrap().push((core.id, me));
+            if core.urgent.load(Ordering::SeqCst) > 0 {
+                core.urgent.fetch_sub(1, Ordering::SeqCst);
+            }
+            let remaining = core.work.fetch_sub(1, Ordering::SeqCst) - 1;
+            {
+                let mut n = done2.0.lock().unwrap();
+                *n += 1;
+                done2.1.notify_all();
+            }
+            if remaining > 0 {
+                ctx.requeue(core.clone());
+            } else {
+                *core.scheduled.lock().unwrap() = false;
+            }
+        });
+        let sched = Scheduler::new(workers, Box::new(|| {}), dispatch);
+        Harness { sched, log, done }
+    }
+
+    fn core(id: usize, home: usize, work: usize, urgent: usize, cost: usize) -> Arc<TestCore> {
+        Arc::new(TestCore {
+            id,
+            home,
+            urgent: AtomicUsize::new(urgent),
+            cost,
+            work: AtomicUsize::new(work),
+            scheduled: Mutex::new(true),
+        })
+    }
+
+    fn wait_done(done: &Arc<(Mutex<usize>, Condvar)>, n: usize) {
+        let deadline = Instant::now() + Duration::from_secs(20);
+        let mut g = done.0.lock().unwrap();
+        while *g < n {
+            assert!(Instant::now() < deadline, "scheduler test timed out at {}/{n}", *g);
+            let (g2, _) = done.1.wait_timeout(g, Duration::from_millis(50)).unwrap();
+            g = g2;
+        }
+    }
+
+    #[test]
+    fn single_worker_round_robins_across_cores() {
+        let h = harness(1, 0);
+        let a = core(1, 0, 3, 0, 0);
+        let b = core(2, 0, 3, 0, 0);
+        {
+            let _hold = h.sched.hold();
+            h.sched.submit(a);
+            h.sched.submit(b);
+        }
+        wait_done(&h.done, 6);
+        let order: Vec<usize> = h.log.lock().unwrap().iter().map(|(id, _)| *id).collect();
+        // One dispatch per turn, requeue at the back: strict alternation.
+        assert_eq!(order, vec![1, 2, 1, 2, 1, 2]);
+    }
+
+    #[test]
+    fn urgent_cores_jump_the_run_queue() {
+        let h = harness(1, 0);
+        let slow = core(1, 0, 1, 0, 0);
+        let urgent = core(2, 0, 1, 1, 0);
+        {
+            let _hold = h.sched.hold();
+            h.sched.submit(slow);
+            h.sched.submit(urgent); // queued behind, but urgent() > 0
+        }
+        wait_done(&h.done, 2);
+        let order: Vec<usize> = h.log.lock().unwrap().iter().map(|(id, _)| *id).collect();
+        assert_eq!(order, vec![2, 1], "urgent core must be dispatched first");
+    }
+
+    #[test]
+    fn idle_workers_steal_and_prefer_basis_free_victims() {
+        // Everything homes on worker 0 and each dispatch sleeps, so
+        // worker 1 can only make progress by stealing. The basis-free
+        // core (cost 0) must be the preferred victim over the costly one
+        // queued ahead of it.
+        let h = harness(2, 20);
+        let busy = core(1, 0, 1, 0, 5);
+        let costly = core(2, 0, 1, 0, 5);
+        let free = core(3, 0, 1, 0, 0);
+        {
+            let _hold = h.sched.hold();
+            h.sched.submit(busy);
+            h.sched.submit(costly);
+            h.sched.submit(free);
+        }
+        wait_done(&h.done, 3);
+        assert!(h.sched.steals() >= 1, "an idle worker must steal cross-queue work");
+        let log = h.log.lock().unwrap().clone();
+        let by_id = |id: usize| log.iter().find(|(i, _)| *i == id).unwrap().1;
+        // Worker 1 ran something (steal happened) and whenever it stole
+        // past the queue front, it took the basis-free core.
+        if by_id(2) == 1 {
+            // costly was stolen only if free was not available first —
+            // i.e. free was already taken. Either way free must not have
+            // been left for last on worker 0 while a costlier steal
+            // happened around it.
+            assert_eq!(by_id(3), 0);
+        } else {
+            assert!(by_id(1) == 1 || by_id(3) == 1);
+        }
+    }
+
+    #[test]
+    fn hold_pauses_dispatch_until_dropped() {
+        let h = harness(2, 0);
+        let hold = h.sched.hold();
+        h.sched.submit(core(1, 0, 2, 0, 0));
+        std::thread::sleep(Duration::from_millis(60));
+        assert_eq!(*h.done.0.lock().unwrap(), 0, "held scheduler must not dispatch");
+        drop(hold);
+        wait_done(&h.done, 2);
+    }
+
+    #[test]
+    fn claim_removes_matching_cores_atomically() {
+        let h = harness(2, 0);
+        let _hold = h.sched.hold();
+        h.sched.submit(core(1, 0, 1, 0, 0));
+        h.sched.submit(core(2, 1, 1, 0, 0));
+        h.sched.submit(core(3, 0, 1, 0, 0));
+        let claimed = h.sched.ctx.claim(8, |c| c.id != 2);
+        let ids: Vec<usize> = claimed.iter().map(|c| c.id).collect();
+        assert_eq!(ids, vec![1, 3], "claim scans every queue, in order");
+        // Hand one back; it must still get dispatched after the hold.
+        h.sched.ctx.requeue(claimed[0].clone());
+        for c in &claimed[1..] {
+            *c.scheduled.lock().unwrap() = false;
+        }
+        drop(_hold);
+        wait_done(&h.done, 2); // core 2 + the requeued core 1
+        let ran: Vec<usize> = h.log.lock().unwrap().iter().map(|(id, _)| *id).collect();
+        assert!(ran.contains(&1) && ran.contains(&2) && !ran.contains(&3));
+    }
+
+    #[test]
+    fn drop_drains_queued_cores_before_joining() {
+        let h = harness(2, 1);
+        for i in 0..8 {
+            h.sched.submit(core(i, i % 2, 1, 0, 0));
+        }
+        drop(h.sched); // must dispatch all 8, then join without hanging
+        assert_eq!(*h.done.0.lock().unwrap(), 8);
+    }
+
+    #[test]
+    fn many_cores_many_workers_all_complete() {
+        let h = harness(4, 0);
+        for i in 0..32 {
+            h.sched.submit(core(i, i % 4, 5, 0, i % 3));
+        }
+        wait_done(&h.done, 32 * 5);
+        // Per-core dispatch order is serial even across steals: each
+        // core appears exactly `work` times.
+        let log = h.log.lock().unwrap();
+        for i in 0..32 {
+            assert_eq!(log.iter().filter(|(id, _)| *id == i).count(), 5);
+        }
+    }
+}

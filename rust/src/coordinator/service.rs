@@ -1,10 +1,11 @@
 //! The solve-service implementation: an **admission-controlled async
-//! job API** over per-sequence recycled solves.
+//! job API** over per-sequence recycled solves, executed by the sharded
+//! work-stealing scheduler in [`super::scheduler`].
 //!
 //! # Request lifecycle
 //!
 //! ```text
-//! try_submit ──► bounded queue ──► priority-aware drainer pop ──► solve
+//! try_submit ──► bounded queue ──► priority-aware dispatch pop ──► solve
 //!     │Err(QueueFull)                │cancel/deadline dead-on-arrival
 //!     ▼                              ▼
 //!  rejected                 completes without running
@@ -28,15 +29,29 @@
 //! [`SolveService`] bounds the number of queued-plus-running requests
 //! ([`SolveService::with_queue_cap`]); [`SequenceHandle::try_submit`]
 //! refuses over-cap work with [`SubmitError::QueueFull`] instead of
-//! buffering unboundedly. Each request carries a
-//! [`Priority`](crate::solvers::Priority): the drainer serves the most
+//! buffering unboundedly.
+//!
+//! Admitted work is executed by `workers` scheduler threads with one run
+//! queue each (see [`super::scheduler`] for the full worker model). Each
+//! sequence is a *core* with a sticky home worker — its recycled
+//! `(W, AW)` basis keeps being touched from one thread — and one
+//! dispatch runs exactly one task (or one coalesced group) before the
+//! core rotates to the back of its home run queue. Runnable sequences on
+//! a worker therefore round-robin: across sequences, every class of work
+//! has a bounded wait even under a sustained stream elsewhere. Idle
+//! workers steal cores from their neighbours' queues, preferring urgent
+//! (interactive-holding) cores and then basis-free ones, so stolen work
+//! loses no basis locality it actually had.
+//!
+//! Within a sequence, each request carries a
+//! [`Priority`](crate::solvers::Priority): dispatch serves the most
 //! urgent class present and is FIFO within a class, so `Interactive`
 //! requests overtake queued `Batch` work (strict two-class priority:
-//! under a *sustained* interactive stream, batch work waits — `Batch`
-//! means "yield to every interactive request" by design; there is no
-//! aging). Priority pops pull interactive singles *out* of batch block
-//! runs, leaving those adjacent — coalescing groups stay intact.
-//! [`SolveService::shutdown`] supports graceful teardown:
+//! under a *sustained* interactive stream **in the same sequence**,
+//! batch work waits — `Batch` means "yield to every interactive request"
+//! by design; there is no aging). Priority pops pull interactive singles
+//! *out* of batch block runs, leaving those adjacent — coalescing groups
+//! stay intact. [`SolveService::shutdown`] supports graceful teardown:
 //! [`Shutdown::Drain`] completes all queued work, [`Shutdown::Abort`]
 //! cancels queued requests and raises the cancel flag of in-flight ones;
 //! both then wait for the service to go idle and reject new submissions.
@@ -48,10 +63,11 @@
 //! # Worker-panic safety
 //!
 //! A panic inside a solve (a poisoned operator, an internal assert) no
-//! longer hangs the pipeline: the drainer catches the unwind, completes
-//! that request's future with [`StopReason::Failed`] (start iterate,
-//! infinite residual), recovers the possibly-poisoned sequence state,
-//! and keeps draining — queued futures behind a failure still complete.
+//! longer hangs the pipeline: the dispatcher catches the unwind,
+//! completes that request's future with [`StopReason::Failed`] (start
+//! iterate, infinite residual), recovers the possibly-poisoned sequence
+//! state, and keeps dispatching — queued futures behind a failure still
+//! complete.
 //!
 //! # Heterogeneous workloads and coalescing
 //!
@@ -66,19 +82,39 @@
 //!
 //! Consecutive queued `submit_block` requests that share the same
 //! operator (`Arc` identity) and the same block-relevant policy set (see
-//! `coalescible` — now including priority and deadline) are drained as
+//! `coalescible` — including priority and deadline) are dispatched as
 //! **one** block solve. The shared solve runs under an *all-of* cancel
 //! group: one member's cancel cannot abort its neighbours' work; a
 //! member cancelled while still queued is simply left out of the group.
+//!
+//! **Cross-sequence coalescing:** a dispatching block leader additionally
+//! claims *other sequences'* cores from the run queues when their head
+//! task is a block request on the **same operator `Arc`** with the same
+//! policy set ([`SpdOperator::diag_fingerprint`] is used as a cheap
+//! negative prefilter — unequal fingerprints prove distinct operators —
+//! but `Arc` identity is the sole merge proof: equal fingerprints never
+//! merge two distinct allocations). Many users sharing one Gram matrix
+//! thus batch into one block solve across sequence boundaries, with
+//! per-ticket column billing exactly as the in-sequence coalescer.
+//! The group solve runs on the **leader's** recycle state: member
+//! sequences' bases and histories are untouched (their reports carry the
+//! leader's post-solve `k_active`). Disable with
+//! [`SolveService::cross_sequence_coalescing`].
 //!
 //! # Locking
 //!
 //! Each sequence keeps its request queue and its solve state
 //! ([`RecycleManager`]) behind **separate** mutexes. Submissions touch
 //! only the queue lock, so they return immediately while a solve is in
-//! flight; the single drainer per sequence serializes solves under the
-//! solve lock, FIFO within a priority class.
+//! flight; a sequence core is dispatched by at most one scheduler worker
+//! at a time (it lives in at most one run queue), which serializes
+//! solves under the solve lock, FIFO within a priority class. The
+//! cross-sequence claim predicate only ever `try_lock`s peer queue locks
+//! (under the scheduler's run-queue locks), so the lock graph stays
+//! acyclic: queue-lock → run-queue-lock (enqueue) and
+//! run-queue-lock → *try* queue-lock (claim) never deadlock.
 
+use super::scheduler::{DispatchFn, SchedCtx, SchedEntry, Scheduler, SchedulerHold};
 use crate::linalg::mat::Mat;
 use crate::solvers::api::{Priority, SolveSpec};
 use crate::solvers::blockcg::BlockSolveResult;
@@ -89,7 +125,7 @@ use crate::solvers::{ParDenseOp, SolveResult, SpdOperator, StopReason, StoredDir
 use crate::util::pool::ThreadPool;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard, Weak};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, TryLockError, Weak};
 use std::time::{Duration, Instant};
 
 /// Recover a mutex guard even when a previous holder panicked mid-solve:
@@ -147,7 +183,7 @@ pub struct SolveReport {
     /// How the solve ended (includes the lifecycle stops `Cancelled`,
     /// `DeadlineExceeded`, `Failed`).
     pub stop: StopReason,
-    /// Wall-clock seconds the request spent queued before its drainer
+    /// Wall-clock seconds the request spent queued before its dispatcher
     /// picked it up (0 for requests completed at submission time).
     pub queue_seconds: f64,
     /// Wall-clock seconds inside the solver (the shared group solve for
@@ -156,8 +192,11 @@ pub struct SolveReport {
     /// Operator applications billed to this request (a coalesced
     /// member's per-column share, like the result's `matvecs`).
     pub matvecs: usize,
-    /// Recycled-basis dimension of the sequence right after this
+    /// Recycled-basis dimension of the solving sequence right after this
     /// completion (0 for requests that never reached the solve state).
+    /// A cross-sequence coalesced member reports the **leader's**
+    /// post-solve basis dimension — the group solve ran on the leader's
+    /// recycle state; the member's own sequence state was untouched.
     pub k_active: usize,
     /// Number of requests served by the same coalesced block solve
     /// (1 for single-RHS requests and uncoalesced blocks).
@@ -198,7 +237,7 @@ enum SlotState<T> {
 }
 
 /// One-shot result slot (mini oneshot channel) shared by a future and
-/// the drainer that completes it.
+/// the dispatcher that completes it.
 struct Slot<T> {
     state: Mutex<SlotState<T>>,
     cv: Condvar,
@@ -374,7 +413,7 @@ impl Task {
             realized_savings: 0.0,
         };
         let n = self.op.n();
-        metrics.note_completion(stop);
+        metrics.note_completion(stop, self.spec.priority);
         match self.payload {
             Payload::Single { x0, slot, .. } => {
                 slot.put(
@@ -451,6 +490,18 @@ fn coalescible(a: &SolveSpec, b: &SolveSpec) -> bool {
         && same_defl
 }
 
+/// Cheap cross-sequence operator prefilter: unequal
+/// [`SpdOperator::diag_fingerprint`]s prove two operators are distinct
+/// (reject before the pointer comparison); equal or absent fingerprints
+/// prove **nothing** — two independent wrappers over one matrix share a
+/// fingerprint — so `Arc::ptr_eq` remains the sole merge proof.
+fn same_operator(a: &(dyn SpdOperator + Send + Sync), b: &(dyn SpdOperator + Send + Sync)) -> bool {
+    match (a.diag_fingerprint(), b.diag_fingerprint()) {
+        (Some(x), Some(y)) => x == y,
+        _ => true,
+    }
+}
+
 /// Queue-side state of a sequence, guarded by a lock that is only ever
 /// held for O(1)-ish pushes/pops — **never across a solve** — so
 /// [`SequenceHandle::submit`] returns immediately even while a solve for
@@ -458,17 +509,98 @@ fn coalescible(a: &SolveSpec, b: &SolveSpec) -> bool {
 /// solve-side state ([`RecycleManager`]) lives behind its own mutex.
 struct SequenceState {
     queue: VecDeque<Task>,
-    running: bool,
+    /// True while this sequence's core is in a run queue or on a
+    /// worker's dispatch (including claimed by a cross-sequence group
+    /// leader) — the core is in exactly one of those places at a time.
+    /// An enqueue that flips this false→true owns the `Scheduler::submit`.
+    scheduled: bool,
     closed: bool,
-    /// Cancel tokens of the request(s) currently on the drainer (all
-    /// members of a coalesced group). `shutdown(Abort)` raises these to
-    /// stop in-flight solves mid-iteration.
+    /// Cancel tokens of the request(s) currently on a dispatcher (all
+    /// members of a coalesced group that this sequence contributed).
+    /// `shutdown(Abort)` raises these to stop in-flight solves
+    /// mid-iteration.
     inflight: Vec<CancelToken>,
 }
 
+/// Index of the task a priority-aware pop takes from `queue`: the first
+/// `Interactive` task if any, else the front (oldest `Batch`). With
+/// exactly two classes this is one early-exiting scan — worst case
+/// O(queue), which the admission cap bounds.
+fn head_idx(queue: &VecDeque<Task>) -> usize {
+    queue
+        .iter()
+        .position(|t| t.spec.priority == Priority::Interactive)
+        .unwrap_or(0)
+}
+
+/// Everything the scheduler and the dispatch path need about one
+/// sequence: the request queue, the recycle state, and the placement
+/// hints. An `Arc<SeqCore>` is what circulates through the scheduler's
+/// run queues.
+struct SeqCore {
+    state: Mutex<SequenceState>,
+    mgr: Mutex<RecycleManager>,
+    seq_id: u64,
+    /// Fixed home worker (sticky placement): sequences are spread
+    /// round-robin over the workers at open time.
+    home: usize,
+    /// Advisory mirror of the resident basis size ([`SchedEntry::steal_cost`]):
+    /// refreshed from `k_active` after each settled solve, zeroed by the
+    /// byte accountant's evictor. Staleness only degrades steal choices.
+    basis_hint: AtomicUsize,
+    /// Advisory count of queued `Interactive` tasks
+    /// ([`SchedEntry::urgent`]), maintained under the state lock by
+    /// [`SeqCore::push_task`] / [`SeqCore::take_task`] /
+    /// [`SeqCore::drain_tasks`].
+    urgent_hint: AtomicUsize,
+}
+
+impl SchedEntry for SeqCore {
+    fn home(&self) -> usize {
+        self.home
+    }
+    fn steal_cost(&self) -> usize {
+        self.basis_hint.load(Ordering::Relaxed)
+    }
+    fn urgent(&self) -> usize {
+        self.urgent_hint.load(Ordering::Relaxed)
+    }
+}
+
+impl SeqCore {
+    /// Push a task (caller holds the state lock), keeping the urgent
+    /// hint in step with the queue's interactive count.
+    fn push_task(&self, st: &mut SequenceState, task: Task) {
+        if task.spec.priority == Priority::Interactive {
+            self.urgent_hint.fetch_add(1, Ordering::Relaxed);
+        }
+        st.queue.push_back(task);
+    }
+
+    /// Remove the task at `idx` (caller holds the state lock), keeping
+    /// the urgent hint in step. Saturating: the hint is advisory and
+    /// must never underflow-wrap into "everything is urgent".
+    fn take_task(&self, st: &mut SequenceState, idx: usize) -> Task {
+        let task = st.queue.remove(idx).expect("index valid under the lock");
+        if task.spec.priority == Priority::Interactive {
+            let _ = self.urgent_hint.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                Some(v.saturating_sub(1))
+            });
+        }
+        task
+    }
+
+    /// Drain the whole queue (caller holds the state lock) — the
+    /// `shutdown(Abort)` sweep.
+    fn drain_tasks(&self, st: &mut SequenceState) -> Vec<Task> {
+        self.urgent_hint.store(0, Ordering::Relaxed);
+        st.queue.drain(..).collect()
+    }
+}
+
 /// Owns the sequence's slot in the `active_sequences` gauge. Held by the
-/// `SequenceHandle` clones only (NOT by the drainer), so the gauge drops
-/// when the sequence is explicitly closed or every handle is gone —
+/// `SequenceHandle` clones only (NOT by the scheduler), so the gauge
+/// drops when the sequence is explicitly closed or every handle is gone —
 /// whichever comes first, exactly once.
 struct SeqCloser {
     metrics: Arc<ServiceMetrics>,
@@ -501,8 +633,10 @@ struct Admission {
 struct AccountEntry {
     id: u64,
     /// Weak: the accountant must never keep a retired sequence's recycle
-    /// state alive just to account for it.
-    mgr: Weak<Mutex<RecycleManager>>,
+    /// state alive just to account for it. (The core holds an `Arc` to
+    /// the accountant; this back-edge being weak keeps the graph
+    /// cycle-free.)
+    core: Weak<SeqCore>,
     /// [`RecycleManager::bytes_held`] as of this sequence's last settled
     /// solve (or last eviction).
     bytes: usize,
@@ -526,12 +660,12 @@ struct AccountEntry {
 ///
 /// # Locking
 ///
-/// Drainers call [`ByteAccountant::settle`] **after** releasing their
+/// Dispatchers call [`ByteAccountant::settle`] **after** releasing their
 /// sequence's solve lock; `settle` holds the ledger lock and only ever
 /// `try_lock`s victim managers. A victim mid-solve is therefore simply
 /// skipped (it is demonstrably not cold), and the blocking-lock edge
 /// "ledger → manager" never exists, so no lock-order cycle with the
-/// drainers' "manager, then ledger" sequence is possible.
+/// dispatchers' "manager, then ledger" sequence is possible.
 struct ByteAccountant {
     /// Global cap on summed `bytes_held` (`usize::MAX` = unbounded).
     cap: usize,
@@ -545,10 +679,10 @@ impl ByteAccountant {
         ByteAccountant { cap, clock: AtomicU64::new(0), entries: Mutex::new(Vec::new()) }
     }
 
-    fn register(&self, id: u64, mgr: &Arc<Mutex<RecycleManager>>) {
+    fn register(&self, id: u64, core: &Arc<SeqCore>) {
         lock_unpoisoned(&self.entries).push(AccountEntry {
             id,
-            mgr: Arc::downgrade(mgr),
+            core: Arc::downgrade(core),
             bytes: 0,
             last_used: 0,
             payoff: 0.0,
@@ -563,9 +697,10 @@ impl ByteAccountant {
     fn settle(&self, id: u64, bytes: usize, payoff: f64, metrics: &ServiceMetrics) {
         let now = self.clock.fetch_add(1, Ordering::Relaxed) + 1;
         let mut entries = lock_unpoisoned(&self.entries);
-        // Retired sequences (every handle dropped) freed their manager —
-        // drop their rows instead of counting ghost bytes.
-        entries.retain(|e| e.mgr.strong_count() > 0);
+        // Retired sequences (every handle dropped, core drained) freed
+        // their manager — drop their rows instead of counting ghost
+        // bytes.
+        entries.retain(|e| e.core.strong_count() > 0);
         if let Some(e) = entries.iter_mut().find(|e| e.id == id) {
             e.bytes = bytes;
             e.last_used = now;
@@ -585,15 +720,18 @@ impl ByteAccountant {
                 if total <= self.cap {
                     break;
                 }
-                let Some(m) = entries[i].mgr.upgrade() else {
+                let Some(c) = entries[i].core.upgrade() else {
                     total -= entries[i].bytes;
                     entries[i].bytes = 0;
                     continue;
                 };
-                if let Ok(mut mg) = m.try_lock() {
+                if let Ok(mut mg) = c.mgr.try_lock() {
                     let freed = mg.evict_basis();
                     let remaining = mg.bytes_held();
                     drop(mg);
+                    // The steal-cost hint must not keep advertising a
+                    // basis that was just dropped.
+                    c.basis_hint.store(0, Ordering::Relaxed);
                     total = total - entries[i].bytes + remaining;
                     entries[i].bytes = remaining;
                     // A victim that held only history frees nothing —
@@ -637,6 +775,23 @@ pub struct ServiceMetrics {
     pub queue_depth: AtomicUsize,
     /// High-water mark of `queue_depth`.
     pub queue_high_water: AtomicUsize,
+    /// Accepted `Interactive` requests not yet completed.
+    pub interactive_depth: AtomicUsize,
+    /// Accepted `Batch` requests not yet completed.
+    pub batch_depth: AtomicUsize,
+    /// High-water mark of `interactive_depth`.
+    pub interactive_high_water: AtomicUsize,
+    /// High-water mark of `batch_depth`.
+    pub batch_high_water: AtomicUsize,
+    /// Scheduler worker count (fixed at construction) — the denominator
+    /// callers need to turn `busy_seconds` into utilization.
+    pub workers: usize,
+    /// Sequence cores dispatched away from their home worker (mirrored
+    /// from the scheduler's own counter via its steal observer).
+    pub steals: AtomicU64,
+    /// Block requests pulled from **other** sequences into a coalesced
+    /// group solve by a cross-sequence leader.
+    pub cross_seq_coalesced: AtomicUsize,
     /// Gauge: recycling bytes currently held across all live sequences
     /// (basis + cached Jacobi + history, by the audited
     /// [`RecycleManager::bytes_held`] formula), refreshed by the byte
@@ -675,7 +830,7 @@ pub struct ServiceMetrics {
 }
 
 impl ServiceMetrics {
-    fn new() -> Self {
+    fn new(workers: usize) -> Self {
         ServiceMetrics {
             submitted: AtomicUsize::new(0),
             completed: AtomicUsize::new(0),
@@ -688,6 +843,13 @@ impl ServiceMetrics {
             busy_nanos: AtomicU64::new(0),
             queue_depth: AtomicUsize::new(0),
             queue_high_water: AtomicUsize::new(0),
+            interactive_depth: AtomicUsize::new(0),
+            batch_depth: AtomicUsize::new(0),
+            interactive_high_water: AtomicUsize::new(0),
+            batch_high_water: AtomicUsize::new(0),
+            workers,
+            steals: AtomicU64::new(0),
+            cross_seq_coalesced: AtomicUsize::new(0),
             bytes_held: AtomicUsize::new(0),
             basis_evictions: AtomicUsize::new(0),
             truncations: AtomicUsize::new(0),
@@ -722,10 +884,22 @@ impl ServiceMetrics {
         self.rejected.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Raise the per-class depth gauge for an **accepted** request (call
+    /// only on the enqueue path, after admission passed — exactly paired
+    /// with the decrement in [`ServiceMetrics::note_completion`]).
+    fn note_enqueued_class(&self, priority: Priority) {
+        let (depth, high) = match priority {
+            Priority::Interactive => (&self.interactive_depth, &self.interactive_high_water),
+            Priority::Batch => (&self.batch_depth, &self.batch_high_water),
+        };
+        let d = depth.fetch_add(1, Ordering::Relaxed) + 1;
+        high.fetch_max(d, Ordering::Relaxed);
+    }
+
     /// Record one request completion (it left the queue-or-running set):
-    /// stop-reason counters, the span stamp, the admission gauge, and
-    /// the idle wakeup for `shutdown` waiters.
-    fn note_completion(&self, stop: StopReason) {
+    /// stop-reason counters, the per-class depth gauge, the span stamp,
+    /// the admission gauge, and the idle wakeup for `shutdown` waiters.
+    fn note_completion(&self, stop: StopReason, priority: Priority) {
         match stop {
             StopReason::Cancelled => {
                 self.cancelled.fetch_add(1, Ordering::Relaxed);
@@ -737,6 +911,14 @@ impl ServiceMetrics {
                 self.failed.fetch_add(1, Ordering::Relaxed);
             }
             _ => {}
+        }
+        match priority {
+            Priority::Interactive => {
+                self.interactive_depth.fetch_sub(1, Ordering::Relaxed);
+            }
+            Priority::Batch => {
+                self.batch_depth.fetch_sub(1, Ordering::Relaxed);
+            }
         }
         // SeqCst, matching `snapshot`'s reads: once a snapshot observes
         // this completion in `completed`, it must also observe the span
@@ -817,6 +999,13 @@ impl ServiceMetrics {
             total_matvecs: self.matvecs.load(Ordering::Relaxed),
             queue_depth: self.queue_depth.load(Ordering::SeqCst),
             queue_high_water: self.queue_high_water.load(Ordering::Relaxed),
+            interactive_depth: self.interactive_depth.load(Ordering::Relaxed),
+            batch_depth: self.batch_depth.load(Ordering::Relaxed),
+            interactive_high_water: self.interactive_high_water.load(Ordering::Relaxed),
+            batch_high_water: self.batch_high_water.load(Ordering::Relaxed),
+            workers: self.workers,
+            steals: self.steals.load(Ordering::Relaxed) as usize,
+            cross_seq_coalesced: self.cross_seq_coalesced.load(Ordering::Relaxed),
             bytes_held: self.bytes_held.load(Ordering::Relaxed),
             basis_evictions: self.basis_evictions.load(Ordering::Relaxed),
             truncations: self.truncations.load(Ordering::Relaxed),
@@ -875,6 +1064,24 @@ pub struct MetricsSnapshot {
     /// High-water mark of `queue_depth` — how close the service came to
     /// its admission cap.
     pub queue_high_water: usize,
+    /// Accepted `Interactive` requests not yet completed.
+    pub interactive_depth: usize,
+    /// Accepted `Batch` requests not yet completed.
+    pub batch_depth: usize,
+    /// High-water mark of `interactive_depth`.
+    pub interactive_high_water: usize,
+    /// High-water mark of `batch_depth` — how much throughput work was
+    /// parked behind the interactive stream at the worst moment.
+    pub batch_high_water: usize,
+    /// Scheduler worker count (fixed at construction): the denominator
+    /// of [`MetricsSnapshot::utilization`].
+    pub workers: usize,
+    /// Sequence cores dispatched away from their home worker by idle
+    /// workers — how much the work-stealer had to rebalance.
+    pub steals: usize,
+    /// Block requests pulled from other sequences into a shared group
+    /// solve by cross-sequence coalescing.
+    pub cross_seq_coalesced: usize,
     /// Recycling bytes currently held across live sequences (basis +
     /// cached Jacobi + history, the audited
     /// [`RecycleManager::bytes_held`] formula), as of the last settled
@@ -910,24 +1117,48 @@ impl MetricsSnapshot {
     pub fn in_flight(&self) -> usize {
         self.submitted.saturating_sub(self.completed)
     }
+
+    /// Fraction of the worker-seconds the span offered that solvers
+    /// actually used: `busy_seconds / (span_seconds × workers)`. 0.0
+    /// before any work completes (empty span).
+    pub fn utilization(&self) -> f64 {
+        if self.span_seconds > 0.0 && self.workers > 0 {
+            self.busy_seconds / (self.span_seconds * self.workers as f64)
+        } else {
+            0.0
+        }
+    }
 }
 
-/// The service: a shared pool, per-sequence recycling state, and the
-/// service-wide admission policy.
+/// RAII dispatch pause from [`SolveService::pause`]: while any guard is
+/// alive, the scheduler workers dispatch nothing — in-flight solves
+/// finish, submissions still enqueue (and are admission-checked as
+/// usual), and dropping the last guard resumes dispatching. The
+/// deterministic way to stage a queue before letting it drain, used
+/// heavily by the coalescing and fairness tests.
+pub struct PauseGuard {
+    _hold: SchedulerHold<SeqCore>,
+}
+
+/// The service: a sharded work-stealing scheduler, per-sequence
+/// recycling state, and the service-wide admission policy.
 pub struct SolveService {
-    pool: Arc<ThreadPool>,
-    /// Lazily-built pool for sharded dense matvecs ([`ParDenseOp`]).
-    /// Kept separate from the drainer pool: a drainer that blocked on
-    /// shard joins queued behind other drainers on the *same* fixed-size
+    sched: Arc<Scheduler<SeqCore>>,
+    /// Dedicated pool for sharded dense matvecs ([`ParDenseOp`]),
+    /// built once on first use (lock-free after that). Kept separate
+    /// from the scheduler workers: a dispatcher that blocked on shard
+    /// joins queued behind other dispatchers on the *same* fixed-size
     /// pool would deadlock (nested fork/join).
-    compute: Mutex<Option<Arc<ThreadPool>>>,
+    compute: OnceLock<Arc<ThreadPool>>,
     metrics: Arc<ServiceMetrics>,
     admission: Arc<Admission>,
-    /// Weak registry of sequence queues, for `shutdown(Abort)` sweeps.
-    sequences: Mutex<Vec<Weak<Mutex<SequenceState>>>>,
+    /// Weak registry of sequence cores, for `shutdown(Abort)` sweeps.
+    sequences: Mutex<Vec<Weak<SeqCore>>>,
     /// Service-wide recycling-memory ledger (cap `usize::MAX` unless
     /// built with [`SolveService::with_byte_cap`]).
     accountant: Arc<ByteAccountant>,
+    /// Cross-sequence coalescing switch, read by the dispatch closure.
+    cross_seq: Arc<AtomicBool>,
     next_seq_id: AtomicU64,
 }
 
@@ -935,6 +1166,8 @@ impl SolveService {
     /// Default admission cap (queued + running requests).
     pub const DEFAULT_QUEUE_CAP: usize = 4096;
 
+    /// A service with `workers` scheduler threads and the default
+    /// admission cap.
     pub fn new(workers: usize) -> Self {
         Self::with_queue_cap(workers, Self::DEFAULT_QUEUE_CAP)
     }
@@ -959,29 +1192,70 @@ impl SolveService {
     /// [`SolveReport::post_eviction`].
     pub fn with_byte_cap(workers: usize, queue_cap: usize, max_recycle_bytes: usize) -> Self {
         assert!(queue_cap >= 1, "admission cap must admit at least one request");
+        let metrics = Arc::new(ServiceMetrics::new(workers));
+        let accountant = Arc::new(ByteAccountant::new(max_recycle_bytes));
+        let cross_seq = Arc::new(AtomicBool::new(true));
+        let on_steal: Box<dyn Fn() + Send + Sync> = {
+            let m = metrics.clone();
+            Box::new(move || {
+                m.steals.fetch_add(1, Ordering::Relaxed);
+            })
+        };
+        let dispatch: DispatchFn<SeqCore> = {
+            let metrics = metrics.clone();
+            let accountant = accountant.clone();
+            let cross_seq = cross_seq.clone();
+            Box::new(move |core, ctx, _worker| {
+                dispatch_one(core, ctx, &metrics, &accountant, &cross_seq);
+            })
+        };
         SolveService {
-            pool: Arc::new(ThreadPool::new(workers)),
-            compute: Mutex::new(None),
-            metrics: Arc::new(ServiceMetrics::new()),
+            sched: Arc::new(Scheduler::new(workers, on_steal, dispatch)),
+            compute: OnceLock::new(),
+            metrics,
             admission: Arc::new(Admission { queue_cap, closed: AtomicBool::new(false) }),
             sequences: Mutex::new(Vec::new()),
-            accountant: Arc::new(ByteAccountant::new(max_recycle_bytes)),
+            accountant,
+            cross_seq,
             next_seq_id: AtomicU64::new(0),
         }
     }
 
+    /// The service's live counters.
     pub fn metrics(&self) -> &ServiceMetrics {
         &self.metrics
     }
 
+    /// Scheduler worker count (the `workers` this service was built
+    /// with; also surfaced as [`MetricsSnapshot::workers`]).
+    pub fn workers(&self) -> usize {
+        self.sched.n_workers()
+    }
+
+    /// Enable or disable cross-sequence block coalescing (enabled by
+    /// default). Takes effect at the next dispatch; in-flight groups are
+    /// unaffected. Disabling restores strict per-sequence solves —
+    /// useful when per-sequence recycle-state isolation matters more
+    /// than shared-operator throughput.
+    pub fn cross_sequence_coalescing(&self, enabled: bool) {
+        self.cross_seq.store(enabled, Ordering::Relaxed);
+    }
+
+    /// Pause dispatching until the returned guard is dropped: in-flight
+    /// solves finish, queued and newly-submitted work waits. Guards
+    /// stack — dispatch resumes when the last one drops.
+    pub fn pause(&self) -> PauseGuard {
+        PauseGuard { _hold: self.sched.hold() }
+    }
+
     /// The dedicated compute pool for matvec sharding (created on first
-    /// use, sized to the machine).
+    /// use, sized to the machine, threads named `krr-compute-{i}`).
     pub fn compute_pool(&self) -> Arc<ThreadPool> {
-        let mut g = lock_unpoisoned(&self.compute);
-        if g.is_none() {
-            *g = Some(Arc::new(ThreadPool::default_size()));
-        }
-        g.as_ref().unwrap().clone()
+        self.compute
+            .get_or_init(|| {
+                Arc::new(ThreadPool::with_name(ThreadPool::auto_workers(), "krr-compute"))
+            })
+            .clone()
     }
 
     /// Wrap a dense SPD matrix in a [`ParDenseOp`] sharded over the
@@ -993,35 +1267,39 @@ impl SolveService {
     /// Open a new sequence with its own recycled-subspace state. Each
     /// request submitted to the handle carries its own [`SolveSpec`]; the
     /// `cfg` here fixes the sequence-level recycling hyperparameters
-    /// (k, ℓ, AW policy).
+    /// (k, ℓ, AW policy). The sequence's home worker is assigned
+    /// round-robin over the scheduler workers.
     pub fn open_sequence(&self, cfg: RecycleConfig) -> SequenceHandle {
         self.metrics.active_sequences.fetch_add(1, Ordering::Relaxed);
-        let state = Arc::new(Mutex::new(SequenceState {
-            queue: VecDeque::new(),
-            running: false,
-            closed: false,
-            inflight: Vec::new(),
-        }));
+        let seq_id = self.next_seq_id.fetch_add(1, Ordering::Relaxed);
+        let core = Arc::new(SeqCore {
+            state: Mutex::new(SequenceState {
+                queue: VecDeque::new(),
+                scheduled: false,
+                closed: false,
+                inflight: Vec::new(),
+            }),
+            mgr: Mutex::new(RecycleManager::new(cfg)),
+            seq_id,
+            home: seq_id as usize % self.sched.n_workers(),
+            basis_hint: AtomicUsize::new(0),
+            urgent_hint: AtomicUsize::new(0),
+        });
         {
             let mut seqs = lock_unpoisoned(&self.sequences);
             seqs.retain(|w| w.strong_count() > 0); // prune retired sequences
-            seqs.push(Arc::downgrade(&state));
+            seqs.push(Arc::downgrade(&core));
         }
-        let mgr = Arc::new(Mutex::new(RecycleManager::new(cfg)));
-        let seq_id = self.next_seq_id.fetch_add(1, Ordering::Relaxed);
-        self.accountant.register(seq_id, &mgr);
+        self.accountant.register(seq_id, &core);
         SequenceHandle {
-            state,
-            mgr,
-            pool: self.pool.clone(),
+            core,
+            sched: self.sched.clone(),
             metrics: self.metrics.clone(),
             admission: self.admission.clone(),
             closer: Arc::new(SeqCloser {
                 metrics: self.metrics.clone(),
                 retired: AtomicBool::new(false),
             }),
-            accountant: self.accountant.clone(),
-            seq_id,
         }
     }
 
@@ -1037,7 +1315,7 @@ impl SolveService {
     ///   operator application and completes as a `Cancelled` partial
     ///   result.
     ///
-    /// Idempotent; safe to call from any thread (not from a drainer).
+    /// Idempotent; safe to call from any thread (not from a dispatcher).
     pub fn shutdown(&self, mode: Shutdown) {
         self.admission.closed.store(true, Ordering::SeqCst);
         // Barrier: acquire every sequence's queue lock once AFTER setting
@@ -1047,18 +1325,16 @@ impl SolveService {
         // the barrier has passed; an enqueue locking after the barrier
         // observes `closed` and is rejected. Without this, a racing
         // submit could be accepted after `wait_idle` already returned.
-        let states: Vec<_> = lock_unpoisoned(&self.sequences)
+        let cores: Vec<_> = lock_unpoisoned(&self.sequences)
             .iter()
             .filter_map(|w| w.upgrade())
             .collect();
-        for state in &states {
+        for core in &cores {
             let (tasks, inflight) = {
-                let mut st = lock_unpoisoned(state);
+                let mut st = lock_unpoisoned(&core.state);
                 match mode {
                     Shutdown::Drain => (Vec::new(), Vec::new()),
-                    Shutdown::Abort => {
-                        (st.queue.drain(..).collect::<Vec<_>>(), st.inflight.clone())
-                    }
+                    Shutdown::Abort => (core.drain_tasks(&mut st), st.inflight.clone()),
                 }
             };
             for t in &inflight {
@@ -1070,6 +1346,8 @@ impl SolveService {
                 task.complete_unrun(StopReason::Cancelled, &self.metrics, qsec);
             }
         }
+        // Swept cores still sitting in run queues dispatch against an
+        // empty queue and simply unschedule themselves.
         self.metrics.wait_idle();
     }
 }
@@ -1077,23 +1355,21 @@ impl SolveService {
 /// Handle to one solve sequence. Within a priority class, submissions
 /// are processed FIFO (recycling transfers state from each solve to the
 /// next); `Interactive` requests overtake queued `Batch` ones. Distinct
-/// sequences run concurrently on the shared pool.
+/// sequences run concurrently across the scheduler workers, each from
+/// its sticky home worker unless stolen.
 ///
-/// The queue lock (`state`) and the solve lock (`mgr`) are separate:
+/// The queue lock and the solve lock ([`RecycleManager`]) are separate:
 /// submitting only touches the queue, so `submit`/`submit_block` return
-/// immediately even while this sequence's drainer is deep inside a slow
-/// solve. Only `history()`/`k_active()` wait on an in-flight solve (they
-/// read the recycle state itself).
+/// immediately even while this sequence is deep inside a slow solve.
+/// Only `history()`/`k_active()` wait on an in-flight solve (they read
+/// the recycle state itself).
 #[derive(Clone)]
 pub struct SequenceHandle {
-    state: Arc<Mutex<SequenceState>>,
-    mgr: Arc<Mutex<RecycleManager>>,
-    pool: Arc<ThreadPool>,
+    core: Arc<SeqCore>,
+    sched: Arc<Scheduler<SeqCore>>,
     metrics: Arc<ServiceMetrics>,
     admission: Arc<Admission>,
     closer: Arc<SeqCloser>,
-    accountant: Arc<ByteAccountant>,
-    seq_id: u64,
 }
 
 impl SequenceHandle {
@@ -1129,7 +1405,7 @@ impl SequenceHandle {
         x0: Option<Vec<f64>>,
         mut spec: SolveSpec,
     ) -> Result<SolveFuture<SolveResult>, SubmitError> {
-        // Validate at the call site: a panic inside the drainer is a
+        // Validate at the call site: a panic inside the dispatcher is a
         // Failed completion, but a dimension mismatch is a caller bug
         // and should fail loudly where it was made.
         assert_eq!(b.len(), op.n(), "rhs dimension mismatch");
@@ -1166,10 +1442,14 @@ impl SequenceHandle {
     /// operator (`Arc` identity) with the same block-relevant policy set
     /// (tolerance, iteration cap, method, stall window,
     /// residual-replacement period, auto-Jacobi flag, priority,
-    /// deadline, and preconditioner/deflation identity) are drained as a
-    /// single block solve over their concatenated columns —
+    /// deadline, and preconditioner/deflation identity) are dispatched
+    /// as a single block solve over their concatenated columns —
     /// same-sequence multi-RHS traffic shares the block Krylov space and
-    /// the per-iteration `apply_block` data pass. Each future still
+    /// the per-iteration `apply_block` data pass. A dispatching leader
+    /// additionally pulls matching block requests from **other
+    /// sequences** whose head-of-queue work shares the same operator
+    /// `Arc` and policy set (see the module docs; disable with
+    /// [`SolveService::cross_sequence_coalescing`]). Each future still
     /// receives exactly its own solution columns, and is billed exactly
     /// its own columns' operator applications (`col_matvecs` shares):
     /// duplicate or early-converging columns ride nearly free, with the
@@ -1225,7 +1505,7 @@ impl SequenceHandle {
             return Err(SubmitError::QueueFull);
         }
         self.metrics.queue_high_water.fetch_max(depth, Ordering::Relaxed);
-        let mut st = lock_unpoisoned(&self.state);
+        let mut st = lock_unpoisoned(&self.core.state);
         // Re-check shutdown UNDER the queue lock: `shutdown(Abort)` sweeps
         // each sequence queue under this same lock after setting the flag,
         // so a submit racing the sweep either lands before it (and is
@@ -1244,325 +1524,433 @@ impl SequenceHandle {
             return Err(SubmitError::SequenceClosed);
         }
         self.metrics.note_submitted();
-        st.queue.push_back(task);
-        if !st.running {
-            st.running = true;
-            drop(st);
-            self.spawn_drainer();
+        self.metrics.note_enqueued_class(task.spec.priority);
+        self.core.push_task(&mut st, task);
+        // Schedule the core exactly once: the `scheduled` flag flips
+        // false→true under the queue lock, and only back to false by a
+        // dispatcher that (under this same lock) saw an empty queue — so
+        // a core is never in two run queues, and no push is stranded.
+        let schedule = !st.scheduled;
+        if schedule {
+            st.scheduled = true;
+        }
+        drop(st);
+        if schedule {
+            self.sched.submit(self.core.clone());
         }
         Ok(())
-    }
-
-    fn spawn_drainer(&self) {
-        let state = self.state.clone();
-        let mgr = self.mgr.clone();
-        let metrics = self.metrics.clone();
-        let accountant = self.accountant.clone();
-        let seq_id = self.seq_id;
-        self.pool.spawn(move || loop {
-            // Priority-aware pop: serve the most urgent class present,
-            // FIFO within the class. With exactly two classes this is
-            // one early-exiting scan — the first Interactive task wins,
-            // else the front (oldest Batch). Worst case O(queue), which
-            // the admission cap bounds; the lock is never held across a
-            // solve. `idx` is remembered so a block leader can coalesce
-            // with the requests right behind it.
-            let (task, idx) = {
-                let mut st = lock_unpoisoned(&state);
-                if st.queue.is_empty() {
-                    st.running = false;
-                    st.inflight.clear();
-                    return;
-                }
-                let idx = st
-                    .queue
-                    .iter()
-                    .position(|t| t.spec.priority == Priority::Interactive)
-                    .unwrap_or(0);
-                let task = st.queue.remove(idx).expect("index valid under the lock");
-                st.inflight = vec![task.token.clone()];
-                (task, idx)
-            };
-            let dequeued = Instant::now();
-            let queue_seconds =
-                dequeued.saturating_duration_since(task.submitted_at).as_secs_f64();
-            // Dead on arrival: cancelled or deadline-expired while
-            // queued — complete without touching the solve state (no
-            // matvecs, no history entry, no basis change).
-            if task.token.is_cancelled() {
-                task.complete_unrun(StopReason::Cancelled, &metrics, queue_seconds);
-                continue;
-            }
-            if task.spec.control.deadline.is_some_and(|d| dequeued >= d) {
-                task.complete_unrun(StopReason::DeadlineExceeded, &metrics, queue_seconds);
-                continue;
-            }
-            let Task { op, spec, token, payload, .. } = task;
-            // Counter baseline: the manager's counters are monotone, so
-            // the delta across the solve is what THIS run did.
-            let before = CounterBaseline::sample(&lock_unpoisoned(&mgr));
-            match payload {
-                Payload::Single { b, x0, slot } => {
-                    // The solve runs under the dedicated solve mutex, NOT
-                    // the queue lock — submissions pipeline freely while
-                    // this solve is in flight. A panicking solve (operator
-                    // bug) is caught: the future completes as Failed and
-                    // the drainer keeps going, so no caller ever waits on
-                    // a dead worker.
-                    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                        let mut mg = lock_unpoisoned(&mgr);
-                        mg.solve_next(op.as_ref(), &b, x0.as_deref(), &spec)
-                    }));
-                    match outcome {
-                        Ok(result) => {
-                            let post = sample_post_solve(&lock_unpoisoned(&mgr));
-                            post.note(&metrics, &before);
-                            // Settle AFTER the solve lock is released:
-                            // the accountant only ever try_locks managers.
-                            accountant.settle(seq_id, post.bytes, post.payoff, &metrics);
-                            metrics.add_busy(result.seconds, result.matvecs);
-                            let report = SolveReport {
-                                stop: result.stop,
-                                queue_seconds,
-                                solve_seconds: result.seconds,
-                                matvecs: result.matvecs,
-                                k_active: post.k_active,
-                                group_size: 1,
-                                truncated_cols: post.absorb.truncated_cols
-                                    + post.absorb.compressed_cols,
-                                post_eviction: post.absorb.post_eviction,
-                                strategy: post.decision.strategy,
-                                k_offered: post.decision.k_offered,
-                                k_chosen: post.decision.k_chosen,
-                                predicted_savings: post.decision.predicted_savings(),
-                                realized_savings: post.payoff,
-                            };
-                            metrics.note_completion(result.stop);
-                            slot.put(result, report);
-                        }
-                        Err(_) => {
-                            let report = SolveReport {
-                                stop: StopReason::Failed,
-                                queue_seconds,
-                                solve_seconds: 0.0,
-                                matvecs: 0,
-                                k_active: 0,
-                                group_size: 1,
-                                truncated_cols: 0,
-                                post_eviction: false,
-                                strategy: "",
-                                k_offered: 0,
-                                k_chosen: 0,
-                                predicted_savings: 0.0,
-                                realized_savings: 0.0,
-                            };
-                            metrics.note_completion(StopReason::Failed);
-                            slot.put(
-                                SolveResult {
-                                    x: x0.unwrap_or_else(|| vec![0.0; op.n()]),
-                                    residuals: vec![f64::INFINITY],
-                                    iterations: 0,
-                                    matvecs: 0,
-                                    stop: StopReason::Failed,
-                                    stored: StoredDirections::default(),
-                                    seconds: 0.0,
-                                },
-                                report,
-                            );
-                        }
-                    }
-                }
-                Payload::Block { b, slot } => {
-                    // Coalesce: pull every *consecutive* queued block
-                    // request (consecutive within this priority class —
-                    // the leader was the first task of the best class,
-                    // so its successors start right at `idx`) that
-                    // shares this operator and the full block-relevant
-                    // policy set into one group solve. Members already
-                    // cancelled are left queued; their own dequeue
-                    // completes them as Cancelled.
-                    let mut members =
-                        vec![BlockMember { b, slot, queue_seconds }];
-                    let mut tokens = vec![token.clone()];
-                    {
-                        let mut st = lock_unpoisoned(&state);
-                        let mut cursor = idx;
-                        while let Some(next) = st.queue.get(cursor) {
-                            let matches_group = matches!(&next.payload, Payload::Block { .. })
-                                && Arc::ptr_eq(&next.op, &op)
-                                && coalescible(&next.spec, &spec);
-                            if !matches_group {
-                                break;
-                            }
-                            // A member cancelled while still queued is
-                            // skipped (left for its own dequeue, which
-                            // completes it as Cancelled without running)
-                            // WITHOUT breaking the group apart: the
-                            // members behind it still coalesce.
-                            if next.token.is_cancelled() {
-                                cursor += 1;
-                                continue;
-                            }
-                            let next = st.queue.remove(cursor).expect("checked above");
-                            tokens.push(next.token.clone());
-                            let qs = dequeued
-                                .saturating_duration_since(next.submitted_at)
-                                .as_secs_f64();
-                            match next.payload {
-                                Payload::Block { b, slot } => {
-                                    members.push(BlockMember { b, slot, queue_seconds: qs });
-                                }
-                                Payload::Single { .. } => unreachable!(),
-                            }
-                        }
-                        st.inflight = tokens.clone();
-                    }
-                    // The shared solve runs under an all-of cancel group
-                    // (stops only when every member cancelled) and the
-                    // members' common deadline.
-                    let mut gspec = spec.clone();
-                    gspec.control = SolveControl::all_of(tokens, spec.control.deadline);
-                    let n = op.n();
-                    let total: usize = members.iter().map(|m| m.b.cols()).sum();
-                    let mut big = Mat::zeros(n, total);
-                    let mut off = 0;
-                    for m in &members {
-                        for j in 0..m.b.cols() {
-                            big.set_col(off + j, &m.b.col(j));
-                        }
-                        off += m.b.cols();
-                    }
-                    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                        let mut mg = lock_unpoisoned(&mgr);
-                        mg.solve_block(op.as_ref(), &big, &gspec)
-                    }));
-                    match outcome {
-                        Ok(result) => {
-                            let post = sample_post_solve(&lock_unpoisoned(&mgr));
-                            post.note(&metrics, &before);
-                            accountant.settle(seq_id, post.bytes, post.payoff, &metrics);
-                            metrics.add_busy(result.seconds, result.matvecs);
-                            // Split the group result back into per-member
-                            // slices. Each member is billed its own
-                            // columns' applications (rank-dropped columns
-                            // ride free); the group-level overhead that no
-                            // column owns — the AW-refresh cost of the
-                            // sequence's recycled basis — lands on the
-                            // first member so shares still sum to the
-                            // group total the metrics recorded.
-                            let col_share: usize = result.col_matvecs.iter().sum();
-                            let mut overhead = result.matvecs - col_share;
-                            let group_size = members.len();
-                            let mut off = 0;
-                            for m in members {
-                                let cols = m.b.cols();
-                                let mut x = Mat::zeros(n, cols);
-                                let mut col_matvecs = Vec::with_capacity(cols);
-                                for j in 0..cols {
-                                    x.set_col(j, &result.x.col(off + j));
-                                    col_matvecs.push(result.col_matvecs[off + j]);
-                                }
-                                off += cols;
-                                let matvecs = col_matvecs.iter().sum::<usize>()
-                                    + std::mem::take(&mut overhead);
-                                let report = SolveReport {
-                                    stop: result.stop,
-                                    queue_seconds: m.queue_seconds,
-                                    solve_seconds: result.seconds,
-                                    matvecs,
-                                    k_active: post.k_active,
-                                    group_size,
-                                    truncated_cols: post.absorb.truncated_cols
-                                        + post.absorb.compressed_cols,
-                                    post_eviction: post.absorb.post_eviction,
-                                    strategy: post.decision.strategy,
-                                    k_offered: post.decision.k_offered,
-                                    k_chosen: post.decision.k_chosen,
-                                    predicted_savings: post.decision.predicted_savings(),
-                                    realized_savings: post.payoff,
-                                };
-                                metrics.note_completion(result.stop);
-                                m.slot.put(
-                                    BlockSolveResult {
-                                        x,
-                                        residuals: result.residuals.clone(),
-                                        iterations: result.iterations,
-                                        block_matvecs: result.block_matvecs,
-                                        matvecs,
-                                        col_matvecs,
-                                        stop: result.stop,
-                                        // The group's stored directions
-                                        // already fed the sequence basis;
-                                        // per-member results do not
-                                        // re-export them.
-                                        stored: Default::default(),
-                                        seconds: result.seconds,
-                                    },
-                                    report,
-                                );
-                            }
-                        }
-                        Err(_) => {
-                            let group_size = members.len();
-                            for m in members {
-                                let cols = m.b.cols();
-                                let report = SolveReport {
-                                    stop: StopReason::Failed,
-                                    queue_seconds: m.queue_seconds,
-                                    solve_seconds: 0.0,
-                                    matvecs: 0,
-                                    k_active: 0,
-                                    group_size,
-                                    truncated_cols: 0,
-                                    post_eviction: false,
-                                    strategy: "",
-                                    k_offered: 0,
-                                    k_chosen: 0,
-                                    predicted_savings: 0.0,
-                                    realized_savings: 0.0,
-                                };
-                                metrics.note_completion(StopReason::Failed);
-                                m.slot.put(
-                                    BlockSolveResult {
-                                        x: Mat::zeros(n, cols),
-                                        residuals: vec![f64::INFINITY],
-                                        iterations: 0,
-                                        block_matvecs: 0,
-                                        matvecs: 0,
-                                        col_matvecs: vec![0; cols],
-                                        stop: StopReason::Failed,
-                                        stored: StoredDirections::default(),
-                                        seconds: 0.0,
-                                    },
-                                    report,
-                                );
-                            }
-                        }
-                    }
-                }
-            }
-        });
     }
 
     /// Per-system statistics accumulated by this sequence's manager.
     /// Waits for an in-flight solve (it reads the solve-side state).
     /// Requests completed without running (cancelled in queue, swept by
-    /// `shutdown(Abort)`, failed) never appear here.
+    /// `shutdown(Abort)`, failed) never appear here, and neither do
+    /// requests this sequence contributed to **another** sequence's
+    /// cross-coalesced group solve (the group ran on the leader's
+    /// state).
     pub fn history(&self) -> Vec<SystemStats> {
-        lock_unpoisoned(&self.mgr).history().to_vec()
+        lock_unpoisoned(&self.core.mgr).history().to_vec()
     }
 
     /// Current recycled-basis dimension. Waits for an in-flight solve.
     pub fn k_active(&self) -> usize {
-        lock_unpoisoned(&self.mgr).k_active()
+        lock_unpoisoned(&self.core.mgr).k_active()
     }
 
     /// Close the sequence (subsequent submits are rejected) and retire
     /// it from the `active_sequences` gauge. Idempotent; dropping the
     /// last handle without closing retires the gauge slot too.
     pub fn close(&self) {
-        lock_unpoisoned(&self.state).closed = true;
+        lock_unpoisoned(&self.core.state).closed = true;
         self.closer.retire();
+    }
+}
+
+/// Most peers a cross-coalescing leader will claim per dispatch — keeps
+/// the claim scan and the merged block width bounded under pathological
+/// fan-in (the in-sequence gather is still unbounded, as before).
+const CROSS_SEQ_CAP: usize = 32;
+
+/// End-of-dispatch handoff: clear the inflight set and either rotate
+/// the core to the BACK of its home run queue (more work queued — the
+/// round-robin that bounds every sequence's wait between turns) or
+/// mark it unscheduled (empty queue; the next enqueue re-submits it).
+fn requeue_or_park(core: &Arc<SeqCore>, ctx: &SchedCtx<SeqCore>) {
+    let mut st = lock_unpoisoned(&core.state);
+    st.inflight.clear();
+    if st.queue.is_empty() {
+        st.scheduled = false;
+        return;
+    }
+    drop(st);
+    ctx.requeue(core.clone());
+}
+
+/// One dispatch turn for one sequence: pop the priority-aware head,
+/// run it (solo or as a coalesced group leader), complete the futures,
+/// and hand the core back to the scheduler. Runs on a `krr-sched`
+/// worker; never holds the queue lock across a solve.
+fn dispatch_one(
+    core: &Arc<SeqCore>,
+    ctx: &SchedCtx<SeqCore>,
+    metrics: &ServiceMetrics,
+    accountant: &ByteAccountant,
+    cross_seq: &AtomicBool,
+) {
+    // Priority-aware pop: serve the most urgent class present, FIFO
+    // within the class. With exactly two classes this is one
+    // early-exiting scan — the first Interactive task wins, else the
+    // front (oldest Batch). Worst case O(queue), which the admission
+    // cap bounds; the lock is never held across a solve. `idx` is
+    // remembered so a block leader can coalesce with the requests
+    // right behind it.
+    let (task, idx) = {
+        let mut st = lock_unpoisoned(&core.state);
+        if st.queue.is_empty() {
+            // Drained (e.g. by shutdown's Abort sweep) between the
+            // enqueue that scheduled us and now — just unschedule.
+            st.scheduled = false;
+            st.inflight.clear();
+            return;
+        }
+        let idx = head_idx(&st.queue);
+        let task = core.take_task(&mut st, idx);
+        st.inflight = vec![task.token.clone()];
+        (task, idx)
+    };
+    let dequeued = Instant::now();
+    let queue_seconds = dequeued.saturating_duration_since(task.submitted_at).as_secs_f64();
+    // Dead on arrival: cancelled or deadline-expired while queued —
+    // complete without touching the solve state (no matvecs, no
+    // history entry, no basis change).
+    if task.token.is_cancelled() {
+        task.complete_unrun(StopReason::Cancelled, metrics, queue_seconds);
+        requeue_or_park(core, ctx);
+        return;
+    }
+    if task.spec.control.deadline.is_some_and(|d| dequeued >= d) {
+        task.complete_unrun(StopReason::DeadlineExceeded, metrics, queue_seconds);
+        requeue_or_park(core, ctx);
+        return;
+    }
+    let Task { op, spec, token, payload, .. } = task;
+    // Counter baseline: the manager's counters are monotone, so the
+    // delta across the solve is what THIS run did.
+    let before = CounterBaseline::sample(&lock_unpoisoned(&core.mgr));
+    match payload {
+        Payload::Single { b, x0, slot } => {
+            // The solve runs under the dedicated solve mutex, NOT the
+            // queue lock — submissions pipeline freely while this solve
+            // is in flight. A panicking solve (operator bug) is caught:
+            // the future completes as Failed and the worker keeps
+            // dispatching, so no caller ever waits on a dead worker.
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let mut mg = lock_unpoisoned(&core.mgr);
+                mg.solve_next(op.as_ref(), &b, x0.as_deref(), &spec)
+            }));
+            match outcome {
+                Ok(result) => {
+                    let post = sample_post_solve(&lock_unpoisoned(&core.mgr));
+                    post.note(metrics, &before);
+                    // Settle AFTER the solve lock is released: the
+                    // accountant only ever try_locks managers.
+                    accountant.settle(core.seq_id, post.bytes, post.payoff, metrics);
+                    metrics.add_busy(result.seconds, result.matvecs);
+                    core.basis_hint.store(post.k_active, Ordering::Relaxed);
+                    let report = SolveReport {
+                        stop: result.stop,
+                        queue_seconds,
+                        solve_seconds: result.seconds,
+                        matvecs: result.matvecs,
+                        k_active: post.k_active,
+                        group_size: 1,
+                        truncated_cols: post.absorb.truncated_cols
+                            + post.absorb.compressed_cols,
+                        post_eviction: post.absorb.post_eviction,
+                        strategy: post.decision.strategy,
+                        k_offered: post.decision.k_offered,
+                        k_chosen: post.decision.k_chosen,
+                        predicted_savings: post.decision.predicted_savings(),
+                        realized_savings: post.payoff,
+                    };
+                    metrics.note_completion(result.stop, spec.priority);
+                    slot.put(result, report);
+                }
+                Err(_) => {
+                    let report = SolveReport {
+                        stop: StopReason::Failed,
+                        queue_seconds,
+                        solve_seconds: 0.0,
+                        matvecs: 0,
+                        k_active: 0,
+                        group_size: 1,
+                        truncated_cols: 0,
+                        post_eviction: false,
+                        strategy: "",
+                        k_offered: 0,
+                        k_chosen: 0,
+                        predicted_savings: 0.0,
+                        realized_savings: 0.0,
+                    };
+                    metrics.note_completion(StopReason::Failed, spec.priority);
+                    slot.put(
+                        SolveResult {
+                            x: x0.unwrap_or_else(|| vec![0.0; op.n()]),
+                            residuals: vec![f64::INFINITY],
+                            iterations: 0,
+                            matvecs: 0,
+                            stop: StopReason::Failed,
+                            stored: StoredDirections::default(),
+                            seconds: 0.0,
+                        },
+                        report,
+                    );
+                }
+            }
+            requeue_or_park(core, ctx);
+        }
+        Payload::Block { b, slot } => {
+            // Coalesce, stage 1 (in-sequence): pull every *consecutive*
+            // queued block request (consecutive within this priority
+            // class — the leader was the first task of the best class,
+            // so its successors start right at `idx`) that shares this
+            // operator and the full block-relevant policy set into one
+            // group solve. Members already cancelled are left queued;
+            // their own dequeue completes them as Cancelled.
+            let mut members = vec![BlockMember { b, slot, queue_seconds }];
+            let mut tokens = vec![token.clone()];
+            {
+                let mut st = lock_unpoisoned(&core.state);
+                let mut cursor = idx;
+                while let Some(next) = st.queue.get(cursor) {
+                    let matches_group = matches!(&next.payload, Payload::Block { .. })
+                        && Arc::ptr_eq(&next.op, &op)
+                        && coalescible(&next.spec, &spec);
+                    if !matches_group {
+                        break;
+                    }
+                    // A member cancelled while still queued is skipped
+                    // (left for its own dequeue, which completes it as
+                    // Cancelled without running) WITHOUT breaking the
+                    // group apart: the members behind it still coalesce.
+                    if next.token.is_cancelled() {
+                        cursor += 1;
+                        continue;
+                    }
+                    let next = core.take_task(&mut st, cursor);
+                    tokens.push(next.token.clone());
+                    let qs =
+                        dequeued.saturating_duration_since(next.submitted_at).as_secs_f64();
+                    match next.payload {
+                        Payload::Block { b, slot } => {
+                            members.push(BlockMember { b, slot, queue_seconds: qs });
+                        }
+                        Payload::Single { .. } => unreachable!(),
+                    }
+                }
+                st.inflight = tokens.clone();
+            }
+            // Coalesce, stage 2 (cross-sequence): claim queued peer
+            // sequences whose priority-aware head is a block request on
+            // the *same operator Arc* with the same policy set, and fold
+            // their matching head runs into this group. The claim
+            // predicate only try_locks peer queues (run-queue lock →
+            // queue lock must never block, see the module docs) and uses
+            // the fingerprint as a cheap negative prefilter before the
+            // authoritative `Arc::ptr_eq`.
+            let mut peers: Vec<Arc<SeqCore>> = Vec::new();
+            if cross_seq.load(Ordering::Relaxed) {
+                let claimed = ctx.claim(CROSS_SEQ_CAP, |peer| {
+                    let pst = match peer.state.try_lock() {
+                        Ok(g) => g,
+                        Err(TryLockError::Poisoned(p)) => p.into_inner(),
+                        Err(TryLockError::WouldBlock) => return false,
+                    };
+                    if pst.queue.is_empty() {
+                        return false;
+                    }
+                    let head = &pst.queue[head_idx(&pst.queue)];
+                    matches!(&head.payload, Payload::Block { .. })
+                        && !head.token.is_cancelled()
+                        && same_operator(head.op.as_ref(), op.as_ref())
+                        && Arc::ptr_eq(&head.op, &op)
+                        && coalescible(&head.spec, &spec)
+                });
+                for peer in claimed {
+                    // The leader holds no locks here, so a blocking lock
+                    // is fine; the head may have changed since the claim
+                    // (racing cancel), so re-gather from scratch.
+                    let mut pst = lock_unpoisoned(&peer.state);
+                    let mut ptokens = Vec::new();
+                    let mut cursor = head_idx(&pst.queue);
+                    while let Some(next) = pst.queue.get(cursor) {
+                        let matches_group = matches!(&next.payload, Payload::Block { .. })
+                            && Arc::ptr_eq(&next.op, &op)
+                            && coalescible(&next.spec, &spec);
+                        if !matches_group {
+                            break;
+                        }
+                        if next.token.is_cancelled() {
+                            cursor += 1;
+                            continue;
+                        }
+                        let next = peer.take_task(&mut pst, cursor);
+                        ptokens.push(next.token.clone());
+                        tokens.push(next.token.clone());
+                        let qs = dequeued
+                            .saturating_duration_since(next.submitted_at)
+                            .as_secs_f64();
+                        match next.payload {
+                            Payload::Block { b, slot } => {
+                                members.push(BlockMember { b, slot, queue_seconds: qs });
+                            }
+                            Payload::Single { .. } => unreachable!(),
+                        }
+                    }
+                    if ptokens.is_empty() {
+                        // Head consumed/cancelled between claim and
+                        // gather — give the peer straight back.
+                        drop(pst);
+                        ctx.requeue(peer);
+                        continue;
+                    }
+                    metrics.cross_seq_coalesced.fetch_add(ptokens.len(), Ordering::Relaxed);
+                    pst.inflight = ptokens;
+                    drop(pst);
+                    peers.push(peer);
+                }
+            }
+            // The shared solve runs under an all-of cancel group (stops
+            // only when every member across every sequence cancelled)
+            // and the members' common deadline — on the LEADER's
+            // recycle state; claimed peers' bases are untouched.
+            let mut gspec = spec.clone();
+            gspec.control = SolveControl::all_of(tokens, spec.control.deadline);
+            let n = op.n();
+            let total: usize = members.iter().map(|m| m.b.cols()).sum();
+            let mut big = Mat::zeros(n, total);
+            let mut off = 0;
+            for m in &members {
+                for j in 0..m.b.cols() {
+                    big.set_col(off + j, &m.b.col(j));
+                }
+                off += m.b.cols();
+            }
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let mut mg = lock_unpoisoned(&core.mgr);
+                mg.solve_block(op.as_ref(), &big, &gspec)
+            }));
+            match outcome {
+                Ok(result) => {
+                    let post = sample_post_solve(&lock_unpoisoned(&core.mgr));
+                    post.note(metrics, &before);
+                    accountant.settle(core.seq_id, post.bytes, post.payoff, metrics);
+                    metrics.add_busy(result.seconds, result.matvecs);
+                    core.basis_hint.store(post.k_active, Ordering::Relaxed);
+                    // Split the group result back into per-member
+                    // slices. Each member is billed its own columns'
+                    // applications (rank-dropped columns ride free); the
+                    // group-level overhead that no column owns — the
+                    // AW-refresh cost of the leader's recycled basis —
+                    // lands on the first member so shares still sum to
+                    // the group total the metrics recorded.
+                    let col_share: usize = result.col_matvecs.iter().sum();
+                    let mut overhead = result.matvecs - col_share;
+                    let group_size = members.len();
+                    let mut off = 0;
+                    for m in members {
+                        let cols = m.b.cols();
+                        let mut x = Mat::zeros(n, cols);
+                        let mut col_matvecs = Vec::with_capacity(cols);
+                        for j in 0..cols {
+                            x.set_col(j, &result.x.col(off + j));
+                            col_matvecs.push(result.col_matvecs[off + j]);
+                        }
+                        off += cols;
+                        let matvecs =
+                            col_matvecs.iter().sum::<usize>() + std::mem::take(&mut overhead);
+                        let report = SolveReport {
+                            stop: result.stop,
+                            queue_seconds: m.queue_seconds,
+                            solve_seconds: result.seconds,
+                            matvecs,
+                            k_active: post.k_active,
+                            group_size,
+                            truncated_cols: post.absorb.truncated_cols
+                                + post.absorb.compressed_cols,
+                            post_eviction: post.absorb.post_eviction,
+                            strategy: post.decision.strategy,
+                            k_offered: post.decision.k_offered,
+                            k_chosen: post.decision.k_chosen,
+                            predicted_savings: post.decision.predicted_savings(),
+                            realized_savings: post.payoff,
+                        };
+                        metrics.note_completion(result.stop, spec.priority);
+                        m.slot.put(
+                            BlockSolveResult {
+                                x,
+                                residuals: result.residuals.clone(),
+                                iterations: result.iterations,
+                                block_matvecs: result.block_matvecs,
+                                matvecs,
+                                col_matvecs,
+                                stop: result.stop,
+                                // The group's stored directions already
+                                // fed the leader's sequence basis;
+                                // per-member results do not re-export
+                                // them.
+                                stored: Default::default(),
+                                seconds: result.seconds,
+                            },
+                            report,
+                        );
+                    }
+                }
+                Err(_) => {
+                    let group_size = members.len();
+                    for m in members {
+                        let cols = m.b.cols();
+                        let report = SolveReport {
+                            stop: StopReason::Failed,
+                            queue_seconds: m.queue_seconds,
+                            solve_seconds: 0.0,
+                            matvecs: 0,
+                            k_active: 0,
+                            group_size,
+                            truncated_cols: 0,
+                            post_eviction: false,
+                            strategy: "",
+                            k_offered: 0,
+                            k_chosen: 0,
+                            predicted_savings: 0.0,
+                            realized_savings: 0.0,
+                        };
+                        metrics.note_completion(StopReason::Failed, spec.priority);
+                        m.slot.put(
+                            BlockSolveResult {
+                                x: Mat::zeros(n, cols),
+                                residuals: vec![f64::INFINITY],
+                                iterations: 0,
+                                block_matvecs: 0,
+                                matvecs: 0,
+                                col_matvecs: vec![0; cols],
+                                stop: StopReason::Failed,
+                                stored: StoredDirections::default(),
+                                seconds: 0.0,
+                            },
+                            report,
+                        );
+                    }
+                }
+            }
+            // Hand every claimed peer back to the scheduler before
+            // rotating ourselves — a peer with a racing enqueue behind
+            // its consumed head picks right back up.
+            for peer in peers {
+                requeue_or_park(&peer, ctx);
+            }
+            requeue_or_park(core, ctx);
+        }
     }
 }
 
@@ -1587,7 +1975,7 @@ impl CounterBaseline {
     }
 }
 
-/// Everything a drainer needs from the manager right after a solve,
+/// Everything a dispatcher needs from the manager right after a solve,
 /// sampled in ONE acquisition of the solve lock (report fields, metric
 /// deltas, and the byte accountant's inputs).
 struct PostSolve {
@@ -1825,6 +2213,7 @@ mod tests {
             snap.span_seconds > 0.0,
             "first-submit→last-complete span must be recorded"
         );
+        assert_eq!(snap.workers, 4);
     }
 
     #[test]
@@ -1932,19 +2321,9 @@ mod tests {
         let x_true = Mat::randn(n, 5, &mut rng);
         let b = a.matmul(&x_true);
         let op = spd_mat(a);
-        // Deterministically hold the drainer back: the service has ONE
-        // drainer worker, and a gate job parked on it means the sequence
-        // drainer (queued behind the gate) cannot start until we release
-        // it — by which point all three block requests are queued.
-        let gate = Arc::new(AtomicBool::new(false));
-        let held = {
-            let gate = gate.clone();
-            seq.pool.spawn(move || {
-                while !gate.load(Ordering::Relaxed) {
-                    std::thread::yield_now();
-                }
-            })
-        };
+        // Deterministically hold dispatch back so all three block
+        // requests are queued before the worker sees any of them.
+        let pause = svc.pause();
         let spec = SolveSpec::blockcg().with_tol(1e-9);
         let futures: Vec<_> = (0..3)
             .map(|g| {
@@ -1960,8 +2339,7 @@ mod tests {
                 seq.submit_block(op.clone(), bg, spec.clone())
             })
             .collect();
-        gate.store(true, Ordering::Relaxed);
-        held.join();
+        drop(pause);
         let results: Vec<_> = futures.into_iter().map(|t| t.wait_report()).collect();
         for (g, (r, report)) in results.iter().enumerate() {
             assert_eq!(r.stop, StopReason::Converged, "group {g}");
@@ -2012,23 +2390,14 @@ mod tests {
         let a = Mat::rand_spd(n, 1e3, &mut rng);
         let b = a.matmul(&Mat::randn(n, 2, &mut rng));
         let op = spd_mat(a);
-        // Park the single drainer worker so both requests queue first.
-        let gate = Arc::new(AtomicBool::new(false));
-        let held = {
-            let gate = gate.clone();
-            seq.pool.spawn(move || {
-                while !gate.load(Ordering::Relaxed) {
-                    std::thread::yield_now();
-                }
-            })
-        };
+        // Pause dispatch so all three requests queue first.
+        let pause = svc.pause();
         let spec_a = SolveSpec::blockcg().with_tol(1e-9);
         let spec_b = SolveSpec::blockcg().with_tol(1e-9).with_stall_window(50);
         let t1 = seq.submit_block(op.clone(), b.clone(), spec_a.clone());
         let t2 = seq.submit_block(op.clone(), b.clone(), spec_b);
         let t3 = seq.submit_block(op.clone(), b.clone(), spec_a);
-        gate.store(true, Ordering::Relaxed);
-        held.join();
+        drop(pause);
         assert_eq!(t1.wait().stop, StopReason::Converged);
         assert_eq!(t2.wait().stop, StopReason::Converged);
         assert_eq!(t3.wait().stop, StopReason::Converged);
@@ -2048,15 +2417,7 @@ mod tests {
         let a = Mat::rand_spd(n, 1e3, &mut rng);
         let b = a.matmul(&Mat::randn(n, 2, &mut rng));
         let op = spd_mat(a);
-        let gate = Arc::new(AtomicBool::new(false));
-        let held = {
-            let gate = gate.clone();
-            seq.pool.spawn(move || {
-                while !gate.load(Ordering::Relaxed) {
-                    std::thread::yield_now();
-                }
-            })
-        };
+        let pause = svc.pause();
         let spec = SolveSpec::blockcg().with_tol(1e-9);
         let t1 = seq.submit_block(op.clone(), b.clone(), spec.clone());
         let t2 = seq.submit_block(
@@ -2064,8 +2425,7 @@ mod tests {
             b.clone(),
             spec.clone().with_deadline(Duration::from_secs(3600)),
         );
-        gate.store(true, Ordering::Relaxed);
-        held.join();
+        drop(pause);
         assert_eq!(t1.wait().stop, StopReason::Converged);
         assert_eq!(t2.wait().stop, StopReason::Converged);
         assert_eq!(seq.history().len(), 2, "different deadlines must not coalesce");
@@ -2084,22 +2444,13 @@ mod tests {
         let a = Mat::rand_spd(n, 1e3, &mut rng);
         let b = a.matmul(&Mat::randn(n, 2, &mut rng));
         let op = spd_mat(a);
-        let gate = Arc::new(AtomicBool::new(false));
-        let held = {
-            let gate = gate.clone();
-            seq.pool.spawn(move || {
-                while !gate.load(Ordering::Relaxed) {
-                    std::thread::yield_now();
-                }
-            })
-        };
+        let pause = svc.pause();
         let spec = SolveSpec::blockcg().with_tol(1e-9);
         let t1 = seq.submit_block(op.clone(), b.clone(), spec.clone());
         let t2 = seq.submit_block(op.clone(), b.clone(), spec.clone());
         let t3 = seq.submit_block(op.clone(), b.clone(), spec.clone());
-        t2.cancel(); // cancelled while provably still queued (drainer parked)
-        gate.store(true, Ordering::Relaxed);
-        held.join();
+        t2.cancel(); // cancelled while provably still queued (dispatch paused)
+        drop(pause);
         let (r1, rep1) = t1.wait_report();
         let r2 = t2.wait();
         let (r3, rep3) = t3.wait_report();
@@ -2130,21 +2481,12 @@ mod tests {
         let (op, started, release, _calls) = SlowOp::new(a);
         let svc = SolveService::new(1);
         let seq = svc.open_sequence(RecycleConfig::default());
-        // Park the drainer worker so both requests queue, then coalesce.
-        let gate = Arc::new(AtomicBool::new(false));
-        let held = {
-            let gate = gate.clone();
-            seq.pool.spawn(move || {
-                while !gate.load(Ordering::Relaxed) {
-                    std::thread::yield_now();
-                }
-            })
-        };
+        // Pause dispatch so both requests queue, then coalesce.
+        let pause = svc.pause();
         let spec = SolveSpec::blockcg().with_tol(1e-9);
         let t1 = seq.submit_block(op.clone(), b.clone(), spec.clone());
         let t2 = seq.submit_block(op.clone(), b.clone(), spec.clone());
-        gate.store(true, Ordering::Relaxed);
-        held.join();
+        drop(pause);
         // Wait until the group solve is provably inside the operator,
         // cancel ONE member, then release the operator.
         while !started.load(Ordering::SeqCst) {
@@ -2171,20 +2513,11 @@ mod tests {
         let (op, started, release, calls) = SlowOp::new(a);
         let svc = SolveService::new(1);
         let seq = svc.open_sequence(RecycleConfig::default());
-        let gate = Arc::new(AtomicBool::new(false));
-        let held = {
-            let gate = gate.clone();
-            seq.pool.spawn(move || {
-                while !gate.load(Ordering::Relaxed) {
-                    std::thread::yield_now();
-                }
-            })
-        };
+        let pause = svc.pause();
         let spec = SolveSpec::blockcg().with_tol(1e-12);
         let t1 = seq.submit_block(op.clone(), b.clone(), spec.clone());
         let t2 = seq.submit_block(op.clone(), b.clone(), spec.clone());
-        gate.store(true, Ordering::Relaxed);
-        held.join();
+        drop(pause);
         while !started.load(Ordering::SeqCst) {
             std::thread::yield_now();
         }
@@ -2212,7 +2545,7 @@ mod tests {
     #[test]
     fn interactive_requests_jump_batch_queue() {
         // Priority-aware pop: with batch work queued first, a later
-        // interactive request must run first once the drainer frees up.
+        // interactive request must run first once dispatch resumes.
         struct TagOp {
             a: Mat,
             tag: usize,
@@ -2243,23 +2576,14 @@ mod tests {
         };
         let svc = SolveService::new(1);
         let seq = svc.open_sequence(RecycleConfig::default());
-        // Park the one worker so the queue builds up before draining.
-        let gate = Arc::new(AtomicBool::new(false));
-        let held = {
-            let gate = gate.clone();
-            seq.pool.spawn(move || {
-                while !gate.load(Ordering::Relaxed) {
-                    std::thread::yield_now();
-                }
-            })
-        };
+        // Pause the one worker so the queue builds up before draining.
+        let pause = svc.pause();
         let b = vec![1.0; 25];
         let batch = SolveSpec::cg().with_tol(1e-8).batch();
         let t1 = seq.submit(mk(1), b.clone(), None, batch.clone());
         let t2 = seq.submit(mk(2), b.clone(), None, batch);
         let t3 = seq.submit(mk(3), b.clone(), None, SolveSpec::cg().with_tol(1e-8));
-        gate.store(true, Ordering::Relaxed);
-        held.join();
+        drop(pause);
         assert_eq!(t1.wait().stop, StopReason::Converged);
         assert_eq!(t2.wait().stop, StopReason::Converged);
         assert_eq!(t3.wait().stop, StopReason::Converged);
@@ -2307,7 +2631,7 @@ mod tests {
     fn submit_returns_immediately_during_inflight_solve() {
         // The pipelining contract: `submit` must enqueue and return while
         // a previous solve of the SAME sequence is still running — the
-        // drainer may not hold the queue lock across a solve. The slow
+        // dispatcher may not hold the queue lock across a solve. The slow
         // operator parks its first matvec until released; if submission
         // blocked on the in-flight solve, the second submit below would
         // deadlock (watchdog-released after 10 s, failing the assert).
@@ -2320,7 +2644,7 @@ mod tests {
         let b = vec![1.0; n];
         let spec = SolveSpec::cg().with_tol(1e-8);
         let t1 = seq.submit(op.clone(), b.clone(), None, spec.clone());
-        // Wait until the drainer is provably inside the first solve.
+        // Wait until the worker is provably inside the first solve.
         while !started.load(Ordering::SeqCst) {
             std::thread::yield_now();
         }
@@ -2486,21 +2810,12 @@ mod tests {
         let seq = svc.open_sequence(RecycleConfig::default());
         let n = 10;
         let op = Arc::new(PanickingOp(n));
-        let gate = Arc::new(AtomicBool::new(false));
-        let held = {
-            let gate = gate.clone();
-            seq.pool.spawn(move || {
-                while !gate.load(Ordering::Relaxed) {
-                    std::thread::yield_now();
-                }
-            })
-        };
+        let pause = svc.pause();
         let spec = SolveSpec::blockcg().with_tol(1e-8);
         let ones = |cols: usize| Mat::from_fn(n, cols, |_, _| 1.0);
         let t1 = seq.submit_block(op.clone(), ones(2), spec.clone());
         let t2 = seq.submit_block(op.clone(), ones(1), spec);
-        gate.store(true, Ordering::Relaxed);
-        held.join();
+        drop(pause);
         let r1 = t1.wait();
         let r2 = t2.wait();
         assert_eq!(r1.stop, StopReason::Failed);
@@ -2603,4 +2918,191 @@ mod tests {
             "snapshot reported busy_seconds > span_seconds on a 1-worker service"
         );
     }
+
+    /// Cross-sequence coalescing with exact billing: two sequences queue
+    /// block requests on the SAME operator `Arc`; the dispatching leader
+    /// folds the peer's head run into one group solve (one history entry
+    /// total, leader-side), each future gets exactly its own columns,
+    /// and per-ticket matvec shares sum exactly to the service totals.
+    #[test]
+    fn cross_sequence_blocks_coalesce_with_exact_billing() {
+        let svc = SolveService::new(1);
+        let sa = svc.open_sequence(RecycleConfig::default());
+        let sb = svc.open_sequence(RecycleConfig::default());
+        let mut rng = Rng::new(60);
+        let n = 60;
+        let a = Mat::rand_spd(n, 1e3, &mut rng);
+        let x_true = Mat::randn(n, 3, &mut rng);
+        let b = a.matmul(&x_true);
+        let op: Arc<dyn SpdOperator + Send + Sync> = spd_mat(a);
+        let pause = svc.pause();
+        let spec = SolveSpec::blockcg().with_tol(1e-9);
+        let mut ba = Mat::zeros(n, 2);
+        ba.set_col(0, &b.col(0));
+        ba.set_col(1, &b.col(1));
+        let mut bb = Mat::zeros(n, 1);
+        bb.set_col(0, &b.col(2));
+        let ta = sa.submit_block(op.clone(), ba, spec.clone());
+        let tb = sb.submit_block(op.clone(), bb, spec);
+        drop(pause);
+        let (ra, rep_a) = ta.wait_report();
+        let (rb, rep_b) = tb.wait_report();
+        assert_eq!(ra.stop, StopReason::Converged);
+        assert_eq!(rb.stop, StopReason::Converged);
+        assert_eq!(rep_a.group_size, 2, "the two sequences' blocks merged into one group");
+        assert_eq!(rep_b.group_size, 2);
+        // Each ticket got exactly its own columns.
+        assert!((ra.x.col(0)[0] - x_true[(0, 0)]).abs() < 1e-4);
+        assert!((ra.x.col(1)[3] - x_true[(3, 1)]).abs() < 1e-4);
+        assert!((rb.x.col(0)[5] - x_true[(5, 2)]).abs() < 1e-4);
+        // The group ran ONCE, on exactly one sequence's recycle state
+        // (the leader's — which sequence leads depends on queue order).
+        assert_eq!(
+            sa.history().len() + sb.history().len(),
+            1,
+            "a cross-sequence group must be one solve on one manager"
+        );
+        // Exact billing: per-ticket shares sum to the service total, and
+        // each report mirrors its result.
+        assert_eq!(rep_a.matvecs, ra.matvecs);
+        assert_eq!(rep_b.matvecs, rb.matvecs);
+        let snap = svc.metrics().snapshot();
+        assert_eq!(snap.total_matvecs, ra.matvecs + rb.matvecs);
+        assert_eq!(snap.cross_seq_coalesced, 1, "one peer ticket joined the leader's group");
+        assert_eq!(snap.completed, 2);
+        assert_eq!(snap.queue_depth, 0);
+    }
+
+    /// ALL-OF across sequences: cancelling one sequence's member of a
+    /// cross-coalesced group must not abort the other sequence's member.
+    #[test]
+    fn cross_sequence_member_cancel_never_aborts_other_sequences() {
+        let mut rng = Rng::new(61);
+        let n = 30;
+        let a = Mat::rand_spd(n, 1e3, &mut rng);
+        let b = a.matmul(&Mat::randn(n, 1, &mut rng));
+        let (op, started, release, _calls) = SlowOp::new(a);
+        let op: Arc<dyn SpdOperator + Send + Sync> = op;
+        let svc = SolveService::new(1);
+        let sa = svc.open_sequence(RecycleConfig::default());
+        let sb = svc.open_sequence(RecycleConfig::default());
+        let pause = svc.pause();
+        let spec = SolveSpec::blockcg().with_tol(1e-9);
+        let ta = sa.submit_block(op.clone(), b.clone(), spec.clone());
+        let tb = sb.submit_block(op.clone(), b.clone(), spec);
+        drop(pause);
+        while !started.load(Ordering::SeqCst) {
+            std::thread::yield_now();
+        }
+        tb.cancel();
+        release.store(true, Ordering::SeqCst);
+        let (ra, rep_a) = ta.wait_report();
+        let rb = tb.wait();
+        assert_eq!(rep_a.group_size, 2, "the two sequences coalesced");
+        assert_eq!(
+            ra.stop,
+            StopReason::Converged,
+            "another sequence's cancel must not abort this member"
+        );
+        // The cancelled member rode the shared solve to completion (its
+        // flag was raised after the group had already dequeued it).
+        assert_eq!(rb.stop, StopReason::Converged);
+        assert_eq!(svc.metrics().snapshot().cross_seq_coalesced, 1);
+        assert_eq!(sa.history().len() + sb.history().len(), 1);
+    }
+
+    /// The kill switch: with cross-sequence coalescing disabled, the same
+    /// staged two-sequence workload runs as two separate solves.
+    #[test]
+    fn cross_sequence_coalescing_can_be_disabled() {
+        let svc = SolveService::new(1);
+        svc.cross_sequence_coalescing(false);
+        let sa = svc.open_sequence(RecycleConfig::default());
+        let sb = svc.open_sequence(RecycleConfig::default());
+        let mut rng = Rng::new(62);
+        let n = 40;
+        let a = Mat::rand_spd(n, 1e3, &mut rng);
+        let b = a.matmul(&Mat::randn(n, 1, &mut rng));
+        let op: Arc<dyn SpdOperator + Send + Sync> = spd_mat(a);
+        let pause = svc.pause();
+        let spec = SolveSpec::blockcg().with_tol(1e-9);
+        let ta = sa.submit_block(op.clone(), b.clone(), spec.clone());
+        let tb = sb.submit_block(op.clone(), b.clone(), spec);
+        drop(pause);
+        assert_eq!(ta.wait().stop, StopReason::Converged);
+        assert_eq!(tb.wait().stop, StopReason::Converged);
+        assert_eq!(sa.history().len(), 1, "each sequence solved its own block");
+        assert_eq!(sb.history().len(), 1);
+        assert_eq!(svc.metrics().snapshot().cross_seq_coalesced, 0);
+    }
+
+    /// The merge key is operator *identity*, not the fingerprint: two
+    /// distinct `ParDenseOp` Arcs over the SAME matrix share a diagonal
+    /// fingerprint, yet must never cross-coalesce (equal fingerprints
+    /// prove nothing; `Arc::ptr_eq` is the sole proof of same operator).
+    #[test]
+    fn distinct_operator_arcs_never_cross_coalesce() {
+        let svc = SolveService::new(1);
+        let mut rng = Rng::new(63);
+        let n = 40;
+        let am = Arc::new(Mat::rand_spd(n, 1e3, &mut rng));
+        let b = am.matmul(&Mat::randn(n, 1, &mut rng));
+        let op1: Arc<dyn SpdOperator + Send + Sync> =
+            Arc::new(ParDenseOp::new(am.clone(), svc.compute_pool()));
+        let op2: Arc<dyn SpdOperator + Send + Sync> =
+            Arc::new(ParDenseOp::new(am.clone(), svc.compute_pool()));
+        // Same matrix ⇒ same fingerprint: exactly the aliasing case the
+        // Arc-identity check exists for.
+        assert!(op1.diag_fingerprint().is_some());
+        assert_eq!(op1.diag_fingerprint(), op2.diag_fingerprint());
+        let sa = svc.open_sequence(RecycleConfig::default());
+        let sb = svc.open_sequence(RecycleConfig::default());
+        let pause = svc.pause();
+        let spec = SolveSpec::blockcg().with_tol(1e-9);
+        let ta = sa.submit_block(op1, b.clone(), spec.clone());
+        let tb = sb.submit_block(op2, b.clone(), spec);
+        drop(pause);
+        assert_eq!(ta.wait().stop, StopReason::Converged);
+        assert_eq!(tb.wait().stop, StopReason::Converged);
+        assert_eq!(sa.history().len(), 1, "distinct Arcs must solve separately");
+        assert_eq!(sb.history().len(), 1);
+        assert_eq!(svc.metrics().snapshot().cross_seq_coalesced, 0);
+    }
+
+    /// The new per-class gauges: queued work shows up under its priority
+    /// class while staged, drains to zero, and leaves high-water marks.
+    #[test]
+    fn class_depth_gauges_track_queue_composition() {
+        let svc = SolveService::new(1);
+        let seq = svc.open_sequence(RecycleConfig::default());
+        let op = spd(25, 64);
+        let b = vec![1.0; 25];
+        let pause = svc.pause();
+        let batch = SolveSpec::cg().with_tol(1e-8).batch();
+        let t1 = seq.submit(op.clone(), b.clone(), None, batch.clone());
+        let t2 = seq.submit(op.clone(), b.clone(), None, batch);
+        let t3 = seq.submit(op.clone(), b.clone(), None, SolveSpec::cg().with_tol(1e-8));
+        let snap = svc.metrics().snapshot();
+        assert_eq!(snap.workers, 1);
+        assert_eq!(snap.batch_depth, 2);
+        assert_eq!(snap.interactive_depth, 1);
+        drop(pause);
+        assert_eq!(t1.wait().stop, StopReason::Converged);
+        assert_eq!(t2.wait().stop, StopReason::Converged);
+        assert_eq!(t3.wait().stop, StopReason::Converged);
+        let snap = svc.metrics().snapshot();
+        assert_eq!(snap.batch_depth, 0, "completions drain the class gauges");
+        assert_eq!(snap.interactive_depth, 0);
+        assert!(snap.batch_high_water >= 2);
+        assert!(snap.interactive_high_water >= 1);
+        assert_eq!(snap.steals, 0, "one worker has nobody to steal from");
+        assert!(snap.utilization() >= 0.0);
+    }
 }
+
+
+
+
+
+
+

@@ -354,6 +354,25 @@ impl RecycleManager {
         basis + jacobi + history
     }
 
+    /// Whether a recycled basis is currently resident (k > 0). The
+    /// scheduler's steal policy reads this through the sequence core's
+    /// advisory hint: a basis-free sequence loses nothing by running on
+    /// a non-home worker, so it is the preferred steal victim.
+    pub fn basis_resident(&self) -> bool {
+        self.k_active() > 0
+    }
+
+    /// Bytes of the resident `(W, AW)` basis alone — the
+    /// cache-locality term the scheduler's steal-cost hint tracks
+    /// (history and cached Jacobi are excluded: they are not touched on
+    /// the solve hot path). 0 when no basis is resident.
+    pub fn basis_bytes(&self) -> usize {
+        self.defl
+            .as_ref()
+            .map(|d| 2 * 8 * d.w.rows() * d.k())
+            .unwrap_or(0)
+    }
+
     /// Budget-enforcement events (basis truncations plus panel
     /// compressions) over the manager's lifetime.
     pub fn truncations(&self) -> u64 {

@@ -49,8 +49,17 @@ impl<T> JobHandle<T> {
 }
 
 impl ThreadPool {
-    /// Create a pool with `n` worker threads (n >= 1).
+    /// Create a pool with `n` worker threads (n >= 1), named
+    /// `krr-worker-{i}`.
     pub fn new(n: usize) -> Self {
+        Self::with_name(n, "krr-worker")
+    }
+
+    /// [`ThreadPool::new`] with a caller-chosen thread-name prefix
+    /// (threads are named `{prefix}-{i}`) — with several pools in one
+    /// process (scheduler workers vs the matvec compute pool), thread
+    /// names are how profilers and stack dumps tell them apart.
+    pub fn with_name(n: usize, prefix: &str) -> Self {
         assert!(n >= 1, "ThreadPool needs at least one worker");
         let queue = Arc::new(Queue {
             jobs: Mutex::new(VecDeque::new()),
@@ -61,7 +70,7 @@ impl ThreadPool {
             .map(|i| {
                 let q = queue.clone();
                 std::thread::Builder::new()
-                    .name(format!("krr-worker-{i}"))
+                    .name(format!("{prefix}-{i}"))
                     .spawn(move || worker_loop(q))
                     .expect("spawn worker")
             })
@@ -69,13 +78,19 @@ impl ThreadPool {
         ThreadPool { queue, workers }
     }
 
-    /// Pool sized to the machine (logical CPUs, capped at 16).
-    pub fn default_size() -> Self {
-        let n = std::thread::available_parallelism()
+    /// The machine-sized worker count used by [`ThreadPool::default_size`]
+    /// (logical CPUs, capped at 16), exposed so callers building a named
+    /// pool can reuse the sizing rule.
+    pub fn auto_workers() -> usize {
+        std::thread::available_parallelism()
             .map(|p| p.get())
             .unwrap_or(4)
-            .min(16);
-        Self::new(n)
+            .min(16)
+    }
+
+    /// Pool sized to the machine (logical CPUs, capped at 16).
+    pub fn default_size() -> Self {
+        Self::new(Self::auto_workers())
     }
 
     pub fn n_workers(&self) -> usize {

@@ -1,0 +1,375 @@
+//! Multi-worker scheduler stress: the PR-5/6/7 lifecycle and recycling
+//! invariants re-pinned under ≥4 scheduler workers, plus the new
+//! fairness and cross-sequence billing guarantees.
+//!
+//! Everything here drives the public API only. Synchronization is via
+//! `SolveService::pause` and operator-level flags, not sleeps, except
+//! where a wall-clock bound is itself the property under test; the CI
+//! stress job runs this suite single-threaded under a hard timeout so a
+//! reintroduced deadlock fails fast instead of hanging.
+
+use krr::coordinator::SolveService;
+use krr::linalg::mat::Mat;
+use krr::solvers::recycle::RecycleConfig;
+use krr::solvers::{SolveSpec, SpdOperator, StopReason};
+use krr::util::rng::Rng;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Owning dense operator.
+struct OwnedDense(Mat);
+
+impl SpdOperator for OwnedDense {
+    fn n(&self) -> usize {
+        self.0.rows()
+    }
+    fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        self.0.matvec_into(x, y);
+    }
+}
+
+fn spd(n: usize, cond: f64, seed: u64) -> Arc<OwnedDense> {
+    let mut rng = Rng::new(seed);
+    Arc::new(OwnedDense(Mat::rand_spd(n, cond, &mut rng)))
+}
+
+/// Operator that records which (sequence tag, request tag) touched it
+/// first — the order probe for FIFO-under-stealing.
+struct TagOp {
+    a: Mat,
+    seq: usize,
+    req: usize,
+    log: Arc<Mutex<Vec<(usize, usize)>>>,
+    logged: AtomicBool,
+}
+
+impl SpdOperator for TagOp {
+    fn n(&self) -> usize {
+        self.a.rows()
+    }
+    fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        if !self.logged.swap(true, Ordering::SeqCst) {
+            self.log.lock().unwrap().push((self.seq, self.req));
+        }
+        self.a.matvec_into(x, y);
+    }
+}
+
+/// 8 sequences × 6 pipelined mixed-priority requests on 4 workers: every
+/// solve converges, recycling still pays within each sequence, and the
+/// service-wide accounting stays consistent (slots released, class
+/// gauges drained, busy bounded by span × workers).
+#[test]
+fn multi_worker_pipelined_load_converges_with_sane_accounting() {
+    let svc = SolveService::new(4);
+    assert_eq!(svc.workers(), 4);
+    let cfg = RecycleConfig { k: 6, l: 10, ..Default::default() };
+    let n = 50;
+    let seqs: Vec<_> = (0..8).map(|_| svc.open_sequence(cfg.clone())).collect();
+    let ops: Vec<_> = (0..8).map(|s| spd(n, 1e4, 500 + s as u64)).collect();
+    let b = vec![1.0; n];
+    let mut futures = Vec::new();
+    for r in 0..6 {
+        for (s, seq) in seqs.iter().enumerate() {
+            let mut spec = SolveSpec::defcg().with_tol(1e-8);
+            if r % 3 == 0 {
+                spec = spec.batch();
+            }
+            futures.push((s, seq.submit(ops[s].clone(), b.clone(), None, spec)));
+        }
+    }
+    for (s, f) in futures {
+        let r = f.wait();
+        assert_eq!(r.stop, StopReason::Converged, "sequence {s}");
+    }
+    for (s, seq) in seqs.iter().enumerate() {
+        let hist = seq.history();
+        assert_eq!(hist.len(), 6, "sequence {s}");
+        assert!(seq.k_active() > 0, "sequence {s} basis never warmed");
+        // Identical systems within a sequence: whatever execution order
+        // the two priority classes produced, the first-executed solve is
+        // cold and the last-executed rides a warm basis — the history is
+        // in execution order, so recycling must show there.
+        assert!(
+            hist.last().unwrap().iterations < hist.first().unwrap().iterations,
+            "sequence {s}: recycling stopped paying under multi-worker dispatch"
+        );
+    }
+    let snap = svc.metrics().snapshot();
+    assert_eq!(snap.submitted, 48);
+    assert_eq!(snap.completed, 48);
+    assert_eq!(snap.queue_depth, 0, "all admission slots released");
+    assert_eq!(snap.interactive_depth, 0);
+    assert_eq!(snap.batch_depth, 0);
+    assert!(snap.interactive_high_water >= 1);
+    assert!(snap.batch_high_water >= 1);
+    assert_eq!(snap.workers, 4);
+    assert!(
+        snap.busy_seconds <= snap.span_seconds * 4.0 + 1e-6,
+        "busy {} exceeds span {} × 4 workers",
+        snap.busy_seconds,
+        snap.span_seconds
+    );
+    assert!(snap.utilization() <= 1.0 + 1e-9);
+}
+
+/// The anti-starvation pin, on ONE worker (the hard case: both
+/// sequences share a dispatcher). Sequence A receives a sustained
+/// stream of Interactive requests — refilled as they complete, so its
+/// urgent flag never clears — while sequence B submits one Batch
+/// request. The worker's periodic fair pop must still serve B within a
+/// bounded number of dispatch turns: the batch future completes while
+/// the interactive stream is still flowing.
+#[test]
+fn batch_completes_under_sustained_interactive_stream_across_sequences() {
+    let svc = Arc::new(SolveService::new(1));
+    let sa = svc.open_sequence(RecycleConfig::default());
+    let sb = svc.open_sequence(RecycleConfig::default());
+    let n = 35;
+    let op_a = spd(n, 1e3, 900);
+    let op_b = spd(n, 1e3, 901);
+    let b = vec![1.0; n];
+    let stop_feed = Arc::new(AtomicBool::new(false));
+    let feeder = {
+        let sa = sa.clone();
+        let op_a = op_a.clone();
+        let b = b.clone();
+        let stop_feed = stop_feed.clone();
+        std::thread::spawn(move || {
+            // Keep ~8 interactive requests in flight in sequence A the
+            // whole time; collect completions as we go.
+            let spec = SolveSpec::cg().with_tol(1e-8);
+            let mut inflight = std::collections::VecDeque::new();
+            while !stop_feed.load(Ordering::SeqCst) {
+                while inflight.len() < 8 {
+                    inflight.push_back(sa.submit(op_a.clone(), b.clone(), None, spec.clone()));
+                }
+                if let Some(f) = inflight.pop_front() {
+                    assert_eq!(f.wait().stop, StopReason::Converged);
+                }
+            }
+            for f in inflight {
+                assert_eq!(f.wait().stop, StopReason::Converged);
+            }
+        })
+    };
+    // Let the stream establish itself, then submit the batch request.
+    while sa.history().is_empty() {
+        std::thread::yield_now();
+    }
+    let tb = sb.submit(op_b, b, None, SolveSpec::cg().with_tol(1e-8).batch());
+    let r = tb.wait_timeout(Duration::from_secs(60));
+    // Stop the stream BEFORE asserting so a failure doesn't leak the
+    // feeder thread into the rest of the suite.
+    stop_feed.store(true, Ordering::SeqCst);
+    feeder.join().unwrap();
+    let r = r.expect("batch request starved by a sustained interactive stream in another sequence");
+    assert_eq!(r.stop, StopReason::Converged);
+    assert_eq!(sb.history().len(), 1);
+}
+
+/// FIFO within a class survives work-stealing: 3 sequences × 8 batch
+/// requests on 4 workers (steals essentially guaranteed while queues
+/// drain). Whatever worker runs a given solve, each sequence's requests
+/// must reach their operators in submission order — a stolen core
+/// dispatches from the same per-sequence queue.
+#[test]
+fn fifo_within_class_survives_stealing() {
+    let svc = SolveService::new(4);
+    let mut rng = Rng::new(910);
+    let n = 40;
+    let a = Mat::rand_spd(n, 1e3, &mut rng);
+    let log: Arc<Mutex<Vec<(usize, usize)>>> = Arc::new(Mutex::new(Vec::new()));
+    let seqs: Vec<_> = (0..3).map(|_| svc.open_sequence(RecycleConfig::default())).collect();
+    let b = vec![1.0; n];
+    let pause = svc.pause();
+    let mut futures = Vec::new();
+    for (s, seq) in seqs.iter().enumerate() {
+        for r in 0..8 {
+            let op = Arc::new(TagOp {
+                a: a.clone(),
+                seq: s,
+                req: r,
+                log: log.clone(),
+                logged: AtomicBool::new(false),
+            });
+            futures.push(seq.submit(op, b.clone(), None, SolveSpec::cg().with_tol(1e-8).batch()));
+        }
+    }
+    drop(pause);
+    for f in futures {
+        assert_eq!(f.wait().stop, StopReason::Converged);
+    }
+    let log = log.lock().unwrap();
+    assert_eq!(log.len(), 24);
+    for s in 0..3 {
+        let order: Vec<usize> = log.iter().filter(|(ls, _)| *ls == s).map(|&(_, r)| r).collect();
+        assert_eq!(
+            order,
+            (0..8).collect::<Vec<_>>(),
+            "sequence {s} ran out of submission order under stealing"
+        );
+    }
+}
+
+/// Cross-sequence billing under 4 workers: 8 sequences stage one block
+/// request each on a shared operator `Arc`. Racing leaders may split
+/// the population into several groups — that is allowed; what must hold
+/// exactly is the billing invariant: per-ticket matvec shares sum to
+/// the service total, and every ticket converges on its own columns.
+#[test]
+fn cross_sequence_billing_sums_exactly_under_four_workers() {
+    let svc = SolveService::new(4);
+    let mut rng = Rng::new(920);
+    let n = 60;
+    let a = Mat::rand_spd(n, 1e3, &mut rng);
+    let x_true = Mat::randn(n, 2, &mut rng);
+    let b = a.matmul(&x_true);
+    let op: Arc<dyn SpdOperator + Send + Sync> = Arc::new(OwnedDense(a));
+    let seqs: Vec<_> = (0..8).map(|_| svc.open_sequence(RecycleConfig::default())).collect();
+    let pause = svc.pause();
+    let spec = SolveSpec::blockcg().with_tol(1e-9);
+    let futures: Vec<_> =
+        seqs.iter().map(|s| s.submit_block(op.clone(), b.clone(), spec.clone())).collect();
+    drop(pause);
+    let mut billed = 0usize;
+    for f in futures {
+        let (r, rep) = f.wait_report();
+        assert_eq!(r.stop, StopReason::Converged);
+        assert_eq!(rep.matvecs, r.matvecs, "report and result must agree per ticket");
+        assert!(r.x.max_abs_diff(&x_true) < 1e-4, "each ticket gets its own exact columns");
+        billed += r.matvecs;
+    }
+    let snap = svc.metrics().snapshot();
+    assert_eq!(
+        billed, snap.total_matvecs,
+        "per-ticket shares must sum exactly to the service total"
+    );
+    // Every solve landed in exactly one sequence's history (leaders),
+    // and member sequences carry none.
+    let hist_total: usize = seqs.iter().map(|s| s.history().len()).sum();
+    let merged = snap.cross_seq_coalesced;
+    assert_eq!(hist_total + merged, 8, "each ticket is either a leader's solve or a member");
+    assert_eq!(snap.completed, 8);
+}
+
+/// Deadline-feeds-basis survives multi-worker dispatch: a mid-solve
+/// deadline on one sequence returns a partial result that still warms
+/// that sequence's basis, while 4 workers run other sequences.
+#[test]
+fn deadline_feeds_basis_under_four_workers() {
+    struct SleepOp {
+        a: Mat,
+    }
+    impl SpdOperator for SleepOp {
+        fn n(&self) -> usize {
+            self.a.rows()
+        }
+        fn matvec(&self, x: &[f64], y: &mut [f64]) {
+            std::thread::sleep(Duration::from_millis(2));
+            self.a.matvec_into(x, y);
+        }
+    }
+    let svc = SolveService::new(4);
+    // Background traffic on other sequences while the deadline fires.
+    let bg_seq = svc.open_sequence(RecycleConfig::default());
+    let bg_op = spd(40, 1e3, 930);
+    let bg: Vec<_> = (0..6)
+        .map(|_| bg_seq.submit(bg_op.clone(), vec![1.0; 40], None, SolveSpec::cg().with_tol(1e-8)))
+        .collect();
+    let n = 90;
+    let mut rng = Rng::new(931);
+    let a = Mat::rand_spd(n, 1e6, &mut rng);
+    let seq = svc.open_sequence(RecycleConfig { k: 8, l: 12, ..Default::default() });
+    let slow = Arc::new(SleepOp { a: a.clone() });
+    let spec = SolveSpec::defcg().with_tol(1e-15).with_deadline(Duration::from_millis(150));
+    let (r, report) = seq.submit(slow, a.matvec(&vec![1.0; n]), None, spec).wait_report();
+    assert_eq!(r.stop, StopReason::DeadlineExceeded, "stopped as {:?}", r.stop);
+    assert!(r.iterations >= 1);
+    assert!(report.k_active > 0, "the partial run must feed the basis");
+    assert!(seq.k_active() > 0);
+    for f in bg {
+        assert_eq!(f.wait().stop, StopReason::Converged);
+    }
+    assert_eq!(svc.metrics().snapshot().deadline_exceeded, 1);
+}
+
+/// Byte-accountant settlement under 4 workers: a service-wide cap that
+/// fits roughly one basis forces evictions while sequences settle
+/// concurrently from different workers; every solve still converges and
+/// the ledger stays consistent.
+#[test]
+fn byte_accountant_settles_under_four_workers() {
+    let cap = 5_000;
+    let svc = SolveService::with_byte_cap(4, SolveService::DEFAULT_QUEUE_CAP, cap);
+    let cfg = RecycleConfig { k: 6, l: 10, ..Default::default() };
+    let seqs: Vec<_> = (0..8).map(|_| svc.open_sequence(cfg.clone())).collect();
+    let spec = SolveSpec::defcg().with_tol(1e-8);
+    // Pipelined across all sequences: settlements race on purpose.
+    let mut futures = Vec::new();
+    for _round in 0..3 {
+        for (i, seq) in seqs.iter().enumerate() {
+            let n = 40 + 2 * i;
+            let op = spd(n, 1e4, 940 + i as u64); // same system per sequence each round
+            futures.push(seq.submit(op, vec![1.0; n], None, spec.clone()));
+        }
+    }
+    for f in futures {
+        assert_eq!(f.wait().stop, StopReason::Converged);
+    }
+    let snap = svc.metrics().snapshot();
+    assert!(snap.basis_evictions > 0, "the global cap never evicted anything");
+    assert!(snap.bytes_held > 0);
+    for (i, seq) in seqs.iter().enumerate() {
+        assert_eq!(seq.history().len(), 3, "sequence {i}");
+    }
+}
+
+/// Hammer `snapshot` while 4 workers chew through 6 sequences: the
+/// utilization invariant `busy ≤ span × workers` must hold on every
+/// concurrent read, not just at quiescence.
+#[test]
+fn snapshot_utilization_bounded_under_concurrent_load() {
+    let svc = Arc::new(SolveService::new(4));
+    let cfg = RecycleConfig { k: 4, l: 6, ..Default::default() };
+    let n = 50;
+    let seqs: Vec<_> = (0..6).map(|_| svc.open_sequence(cfg.clone())).collect();
+    let ops: Vec<_> = (0..6).map(|s| spd(n, 1e4, 950 + s as u64)).collect();
+    let done = Arc::new(AtomicBool::new(false));
+    let violations = Arc::new(AtomicUsize::new(0));
+    let reader = {
+        let svc = svc.clone();
+        let done = done.clone();
+        let violations = violations.clone();
+        std::thread::spawn(move || {
+            while !done.load(Ordering::SeqCst) {
+                let snap = svc.metrics().snapshot();
+                if snap.busy_seconds > snap.span_seconds * 4.0 + 1e-6 {
+                    violations.fetch_add(1, Ordering::SeqCst);
+                }
+            }
+        })
+    };
+    let mut futures = Vec::new();
+    for _ in 0..8 {
+        for (s, seq) in seqs.iter().enumerate() {
+            futures.push(seq.submit(
+                ops[s].clone(),
+                vec![1.0; n],
+                None,
+                SolveSpec::defcg().with_tol(1e-10),
+            ));
+        }
+    }
+    for f in futures {
+        assert_eq!(f.wait().stop, StopReason::Converged);
+    }
+    done.store(true, Ordering::SeqCst);
+    reader.join().unwrap();
+    assert_eq!(
+        violations.load(Ordering::SeqCst),
+        0,
+        "snapshot reported busy > span × workers under concurrent load"
+    );
+}
