@@ -53,17 +53,11 @@
 //! exiting (mirroring [`crate::util::pool::ThreadPool`]'s drain-on-drop),
 //! so futures enqueued before the drop still complete.
 
+use crate::util::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use crate::util::sync::thread::JoinHandle;
+use crate::util::sync::{lock_unpoisoned, Arc, Condvar, Mutex};
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard};
-use std::thread::JoinHandle;
 use std::time::Duration;
-
-/// Recover a mutex guard even when a previous holder panicked: the
-/// scheduler must keep dispatching after a contained worker failure.
-fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(|e| e.into_inner())
-}
 
 /// A schedulable sequence core. Implemented by the service's per-sequence
 /// state; the scheduler itself never looks inside a core beyond these
@@ -119,8 +113,35 @@ impl<C: SchedEntry> SchedCtx<C> {
     pub(crate) fn requeue(&self, core: Arc<C>) {
         let w = core.home() % self.queues.len();
         lock_unpoisoned(&self.queues[w]).push_back(core);
+        #[cfg(debug_assertions)]
+        debug_assert!(self.audit_queues().is_ok(), "{:?}", self.audit_queues());
         let _g = lock_unpoisoned(&self.park);
         self.park_cv.notify_all();
+    }
+
+    /// Check the one-entry-anywhere invariant: no core is resident in two
+    /// run queues at once. Takes every queue lock **simultaneously** (in
+    /// index order — deadlock-free because every other path holds at most
+    /// one queue lock at a time), so a core dispatched out of queue A and
+    /// requeued into queue B mid-scan cannot masquerade as a duplicate.
+    /// `debug_assert`-gated on the mutating paths; also callable directly
+    /// from tests (see `Scheduler::audit_queues` and the service's
+    /// `audit_scheduler`).
+    pub(crate) fn audit_queues(&self) -> Result<(), String> {
+        let guards: Vec<_> = self.queues.iter().map(lock_unpoisoned).collect();
+        let mut seen: Vec<(usize, usize)> = Vec::new(); // (core ptr, queue idx)
+        for (w, q) in guards.iter().enumerate() {
+            for core in q.iter() {
+                let p = Arc::as_ptr(core) as usize;
+                if let Some((_, prev)) = seen.iter().find(|(sp, _)| *sp == p) {
+                    return Err(format!(
+                        "core {p:#x} resident in run queues {prev} and {w} at once"
+                    ));
+                }
+                seen.push((p, w));
+            }
+        }
+        Ok(())
     }
 
     /// Atomically remove up to `cap` cores matching `pred` from the run
@@ -149,7 +170,7 @@ impl<C: SchedEntry> SchedCtx<C> {
 
     /// Cores taken from a non-home run queue since construction.
     pub(crate) fn steals(&self) -> u64 {
-        self.steals.load(Ordering::Relaxed)
+        self.steals.load(Ordering::SeqCst)
     }
 
     fn n_workers(&self) -> usize {
@@ -162,6 +183,8 @@ impl<C: SchedEntry> SchedCtx<C> {
     fn putback(&self, core: Arc<C>) {
         let w = core.home() % self.queues.len();
         lock_unpoisoned(&self.queues[w]).push_front(core);
+        #[cfg(debug_assertions)]
+        debug_assert!(self.audit_queues().is_ok(), "{:?}", self.audit_queues());
     }
 
     /// Pop from the worker's own queue: the first urgent-holding core if
@@ -198,7 +221,7 @@ impl<C: SchedEntry> SchedCtx<C> {
                 .unwrap_or(0);
             let core = q.remove(idx).expect("index valid under the lock");
             drop(q);
-            self.steals.fetch_add(1, Ordering::Relaxed);
+            self.steals.fetch_add(1, Ordering::SeqCst);
             (self.on_steal)();
             return Some(core);
         }
@@ -255,7 +278,7 @@ impl<C: SchedEntry> Scheduler<C> {
         let handles = (0..workers)
             .map(|i| {
                 let ctx = ctx.clone();
-                std::thread::Builder::new()
+                crate::util::sync::thread::Builder::new()
                     .name(format!("krr-sched-{i}"))
                     .spawn(move || worker_loop(ctx, i))
                     .expect("spawn scheduler worker")
@@ -286,6 +309,12 @@ impl<C: SchedEntry> Scheduler<C> {
     /// Cores dispatched away from their home worker, cumulative.
     pub(crate) fn steals(&self) -> u64 {
         self.ctx.steals()
+    }
+
+    /// Test hook: check the one-entry-anywhere invariant right now. See
+    /// [`SchedCtx::audit_queues`].
+    pub(crate) fn audit_queues(&self) -> Result<(), String> {
+        self.ctx.audit_queues()
     }
 }
 
@@ -369,7 +398,7 @@ fn worker_loop<C: SchedEntry>(ctx: Arc<SchedCtx<C>>, me: usize) {
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
     use std::sync::atomic::AtomicUsize;
@@ -416,20 +445,20 @@ mod tests {
             if sleep_ms > 0 {
                 std::thread::sleep(Duration::from_millis(sleep_ms));
             }
-            log2.lock().unwrap().push((core.id, me));
+            lock_unpoisoned(&log2).push((core.id, me));
             if core.urgent.load(Ordering::SeqCst) > 0 {
                 core.urgent.fetch_sub(1, Ordering::SeqCst);
             }
             let remaining = core.work.fetch_sub(1, Ordering::SeqCst) - 1;
             {
-                let mut n = done2.0.lock().unwrap();
+                let mut n = lock_unpoisoned(&done2.0);
                 *n += 1;
                 done2.1.notify_all();
             }
             if remaining > 0 {
                 ctx.requeue(core.clone());
             } else {
-                *core.scheduled.lock().unwrap() = false;
+                *lock_unpoisoned(&core.scheduled) = false;
             }
         });
         let sched = Scheduler::new(workers, Box::new(|| {}), dispatch);
@@ -449,7 +478,7 @@ mod tests {
 
     fn wait_done(done: &Arc<(Mutex<usize>, Condvar)>, n: usize) {
         let deadline = Instant::now() + Duration::from_secs(20);
-        let mut g = done.0.lock().unwrap();
+        let mut g = lock_unpoisoned(&done.0);
         while *g < n {
             assert!(Instant::now() < deadline, "scheduler test timed out at {}/{n}", *g);
             let (g2, _) = done.1.wait_timeout(g, Duration::from_millis(50)).unwrap();
@@ -468,7 +497,7 @@ mod tests {
             h.sched.submit(b);
         }
         wait_done(&h.done, 6);
-        let order: Vec<usize> = h.log.lock().unwrap().iter().map(|(id, _)| *id).collect();
+        let order: Vec<usize> = lock_unpoisoned(&h.log).iter().map(|(id, _)| *id).collect();
         // One dispatch per turn, requeue at the back: strict alternation.
         assert_eq!(order, vec![1, 2, 1, 2, 1, 2]);
     }
@@ -484,7 +513,7 @@ mod tests {
             h.sched.submit(urgent); // queued behind, but urgent() > 0
         }
         wait_done(&h.done, 2);
-        let order: Vec<usize> = h.log.lock().unwrap().iter().map(|(id, _)| *id).collect();
+        let order: Vec<usize> = lock_unpoisoned(&h.log).iter().map(|(id, _)| *id).collect();
         assert_eq!(order, vec![2, 1], "urgent core must be dispatched first");
     }
 
@@ -506,7 +535,7 @@ mod tests {
         }
         wait_done(&h.done, 3);
         assert!(h.sched.steals() >= 1, "an idle worker must steal cross-queue work");
-        let log = h.log.lock().unwrap().clone();
+        let log = lock_unpoisoned(&h.log).clone();
         let by_id = |id: usize| log.iter().find(|(i, _)| *i == id).unwrap().1;
         // Worker 1 ran something (steal happened) and whenever it stole
         // past the queue front, it took the basis-free core.
@@ -527,7 +556,7 @@ mod tests {
         let hold = h.sched.hold();
         h.sched.submit(core(1, 0, 2, 0, 0));
         std::thread::sleep(Duration::from_millis(60));
-        assert_eq!(*h.done.0.lock().unwrap(), 0, "held scheduler must not dispatch");
+        assert_eq!(*lock_unpoisoned(&h.done.0), 0, "held scheduler must not dispatch");
         drop(hold);
         wait_done(&h.done, 2);
     }
@@ -545,11 +574,11 @@ mod tests {
         // Hand one back; it must still get dispatched after the hold.
         h.sched.ctx.requeue(claimed[0].clone());
         for c in &claimed[1..] {
-            *c.scheduled.lock().unwrap() = false;
+            *lock_unpoisoned(&c.scheduled) = false;
         }
         drop(_hold);
         wait_done(&h.done, 2); // core 2 + the requeued core 1
-        let ran: Vec<usize> = h.log.lock().unwrap().iter().map(|(id, _)| *id).collect();
+        let ran: Vec<usize> = lock_unpoisoned(&h.log).iter().map(|(id, _)| *id).collect();
         assert!(ran.contains(&1) && ran.contains(&2) && !ran.contains(&3));
     }
 
@@ -560,7 +589,7 @@ mod tests {
             h.sched.submit(core(i, i % 2, 1, 0, 0));
         }
         drop(h.sched); // must dispatch all 8, then join without hanging
-        assert_eq!(*h.done.0.lock().unwrap(), 8);
+        assert_eq!(*lock_unpoisoned(&h.done.0), 8);
     }
 
     #[test]
@@ -572,7 +601,7 @@ mod tests {
         wait_done(&h.done, 32 * 5);
         // Per-core dispatch order is serial even across steals: each
         // core appears exactly `work` times.
-        let log = h.log.lock().unwrap();
+        let log = lock_unpoisoned(&h.log);
         for i in 0..32 {
             assert_eq!(log.iter().filter(|(id, _)| *id == i).count(), 5);
         }

@@ -123,19 +123,10 @@ use crate::solvers::recycle::{AbsorbStats, RecycleConfig, RecycleManager, System
 use crate::solvers::strategy::StrategyDecision;
 use crate::solvers::{ParDenseOp, SolveResult, SpdOperator, StopReason, StoredDirections};
 use crate::util::pool::ThreadPool;
+use crate::util::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use crate::util::sync::{lock_unpoisoned, Arc, Condvar, Mutex, OnceLock, TryLockError, Weak};
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, TryLockError, Weak};
 use std::time::{Duration, Instant};
-
-/// Recover a mutex guard even when a previous holder panicked mid-solve:
-/// the coordinator must keep serving the queue after a worker failure
-/// (the failed request completes as [`StopReason::Failed`]; the recycle
-/// state it may have half-updated is still structurally valid — basis
-/// absorption is transactional, it happens only after a solve returns).
-fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(|e| e.into_inner())
-}
 
 /// Why a submission was not accepted.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -238,23 +229,32 @@ enum SlotState<T> {
 
 /// One-shot result slot (mini oneshot channel) shared by a future and
 /// the dispatcher that completes it.
-struct Slot<T> {
+///
+/// `pub` + `#[doc(hidden)]` (not part of the supported API): the loom
+/// suite (`rust/tests/loom_models.rs`) model-checks this exact state
+/// machine — racing `try_take` callers must yield the result exactly
+/// once — and it must check the shipped type, not a replica.
+#[doc(hidden)]
+pub struct Slot<T> {
     state: Mutex<SlotState<T>>,
     cv: Condvar,
 }
 
 impl<T> Slot<T> {
-    fn new() -> Arc<Self> {
+    #[doc(hidden)]
+    pub fn new() -> Arc<Self> {
         Arc::new(Slot { state: Mutex::new(SlotState::Pending), cv: Condvar::new() })
     }
 
-    fn put(&self, value: T, report: SolveReport) {
+    #[doc(hidden)]
+    pub fn put(&self, value: T, report: SolveReport) {
         *lock_unpoisoned(&self.state) = SlotState::Ready(value, report);
         self.cv.notify_all();
     }
 
     /// Non-blocking: the result if it is ready and not yet taken.
-    fn try_take(&self) -> Option<(T, SolveReport)> {
+    #[doc(hidden)]
+    pub fn try_take(&self) -> Option<(T, SolveReport)> {
         let mut g = lock_unpoisoned(&self.state);
         match std::mem::replace(&mut *g, SlotState::Taken) {
             SlotState::Ready(v, r) => Some((v, r)),
@@ -269,7 +269,8 @@ impl<T> Slot<T> {
     /// Block until the result is ready; panics if it was already taken
     /// by a successful [`Slot::try_take`] (each future yields its result
     /// exactly once).
-    fn take(&self) -> (T, SolveReport) {
+    #[doc(hidden)]
+    pub fn take(&self) -> (T, SolveReport) {
         let mut g = lock_unpoisoned(&self.state);
         loop {
             match std::mem::replace(&mut *g, SlotState::Taken) {
@@ -284,7 +285,8 @@ impl<T> Slot<T> {
     }
 
     /// Block until the result is ready or `timeout` elapses.
-    fn take_timeout(&self, timeout: Duration) -> Option<(T, SolveReport)> {
+    #[doc(hidden)]
+    pub fn take_timeout(&self, timeout: Duration) -> Option<(T, SolveReport)> {
         let until = Instant::now() + timeout;
         let mut g = lock_unpoisoned(&self.state);
         loop {
@@ -609,8 +611,8 @@ struct SeqCloser {
 
 impl SeqCloser {
     fn retire(&self) {
-        if !self.retired.swap(true, Ordering::Relaxed) {
-            self.metrics.active_sequences.fetch_sub(1, Ordering::Relaxed);
+        if !self.retired.swap(true, Ordering::SeqCst) {
+            self.metrics.active_sequences.fetch_sub(1, Ordering::SeqCst);
         }
     }
 }
@@ -695,7 +697,7 @@ impl ByteAccountant {
     /// is never a victim — it is by definition the hottest, and evicting
     /// it would only force an immediate re-warm.
     fn settle(&self, id: u64, bytes: usize, payoff: f64, metrics: &ServiceMetrics) {
-        let now = self.clock.fetch_add(1, Ordering::Relaxed) + 1;
+        let now = self.clock.fetch_add(1, Ordering::SeqCst) + 1;
         let mut entries = lock_unpoisoned(&self.entries);
         // Retired sequences (every handle dropped, core drained) freed
         // their manager — drop their rows instead of counting ghost
@@ -737,7 +739,7 @@ impl ByteAccountant {
                     // A victim that held only history frees nothing —
                     // that is bookkeeping, not an eviction.
                     if freed > 0 {
-                        metrics.basis_evictions.fetch_add(1, Ordering::Relaxed);
+                        metrics.basis_evictions.fetch_add(1, Ordering::SeqCst);
                         crate::log_debug!(
                             "byte accountant evicted sequence {} basis ({} bytes held globally)",
                             entries[i].id,
@@ -747,7 +749,7 @@ impl ByteAccountant {
                 }
             }
         }
-        metrics.bytes_held.store(total, Ordering::Relaxed);
+        metrics.bytes_held.store(total, Ordering::SeqCst);
     }
 }
 
@@ -875,13 +877,13 @@ impl ServiceMetrics {
         let _ = self.first_submit_nanos.compare_exchange(
             0,
             self.stamp(),
-            Ordering::Relaxed,
-            Ordering::Relaxed,
+            Ordering::SeqCst,
+            Ordering::SeqCst,
         );
     }
 
     fn note_rejected(&self) {
-        self.rejected.fetch_add(1, Ordering::Relaxed);
+        self.rejected.fetch_add(1, Ordering::SeqCst);
     }
 
     /// Raise the per-class depth gauge for an **accepted** request (call
@@ -892,8 +894,8 @@ impl ServiceMetrics {
             Priority::Interactive => (&self.interactive_depth, &self.interactive_high_water),
             Priority::Batch => (&self.batch_depth, &self.batch_high_water),
         };
-        let d = depth.fetch_add(1, Ordering::Relaxed) + 1;
-        high.fetch_max(d, Ordering::Relaxed);
+        let d = depth.fetch_add(1, Ordering::SeqCst) + 1;
+        high.fetch_max(d, Ordering::SeqCst);
     }
 
     /// Record one request completion (it left the queue-or-running set):
@@ -902,22 +904,22 @@ impl ServiceMetrics {
     fn note_completion(&self, stop: StopReason, priority: Priority) {
         match stop {
             StopReason::Cancelled => {
-                self.cancelled.fetch_add(1, Ordering::Relaxed);
+                self.cancelled.fetch_add(1, Ordering::SeqCst);
             }
             StopReason::DeadlineExceeded => {
-                self.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+                self.deadline_exceeded.fetch_add(1, Ordering::SeqCst);
             }
             StopReason::Failed => {
-                self.failed.fetch_add(1, Ordering::Relaxed);
+                self.failed.fetch_add(1, Ordering::SeqCst);
             }
             _ => {}
         }
         match priority {
             Priority::Interactive => {
-                self.interactive_depth.fetch_sub(1, Ordering::Relaxed);
+                self.interactive_depth.fetch_sub(1, Ordering::SeqCst);
             }
             Priority::Batch => {
-                self.batch_depth.fetch_sub(1, Ordering::Relaxed);
+                self.batch_depth.fetch_sub(1, Ordering::SeqCst);
             }
         }
         // SeqCst, matching `snapshot`'s reads: once a snapshot observes
@@ -937,7 +939,7 @@ impl ServiceMetrics {
     /// group contributes its shared wall time once, while each member's
     /// completion is counted by [`ServiceMetrics::note_completion`]).
     fn add_busy(&self, seconds: f64, matvecs: usize) {
-        self.matvecs.fetch_add(matvecs, Ordering::Relaxed);
+        self.matvecs.fetch_add(matvecs, Ordering::SeqCst);
         // SeqCst pairs with `snapshot` reading busy FIRST: any busy time
         // a snapshot sees was added strictly before its span reads.
         self.busy_nanos.fetch_add((seconds * 1e9) as u64, Ordering::SeqCst);
@@ -985,41 +987,41 @@ impl ServiceMetrics {
         MetricsSnapshot {
             submitted,
             completed,
-            rejected: self.rejected.load(Ordering::Relaxed),
-            cancelled: self.cancelled.load(Ordering::Relaxed),
-            deadline_exceeded: self.deadline_exceeded.load(Ordering::Relaxed),
-            failed: self.failed.load(Ordering::Relaxed),
-            active_sequences: self.active_sequences.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::SeqCst),
+            cancelled: self.cancelled.load(Ordering::SeqCst),
+            deadline_exceeded: self.deadline_exceeded.load(Ordering::SeqCst),
+            failed: self.failed.load(Ordering::SeqCst),
+            active_sequences: self.active_sequences.load(Ordering::SeqCst),
             busy_seconds: busy as f64 * 1e-9,
             span_seconds: if first > 0 && last >= first {
                 (last - first) as f64 * 1e-9
             } else {
                 0.0
             },
-            total_matvecs: self.matvecs.load(Ordering::Relaxed),
+            total_matvecs: self.matvecs.load(Ordering::SeqCst),
             queue_depth: self.queue_depth.load(Ordering::SeqCst),
-            queue_high_water: self.queue_high_water.load(Ordering::Relaxed),
-            interactive_depth: self.interactive_depth.load(Ordering::Relaxed),
-            batch_depth: self.batch_depth.load(Ordering::Relaxed),
-            interactive_high_water: self.interactive_high_water.load(Ordering::Relaxed),
-            batch_high_water: self.batch_high_water.load(Ordering::Relaxed),
+            queue_high_water: self.queue_high_water.load(Ordering::SeqCst),
+            interactive_depth: self.interactive_depth.load(Ordering::SeqCst),
+            batch_depth: self.batch_depth.load(Ordering::SeqCst),
+            interactive_high_water: self.interactive_high_water.load(Ordering::SeqCst),
+            batch_high_water: self.batch_high_water.load(Ordering::SeqCst),
             workers: self.workers,
-            steals: self.steals.load(Ordering::Relaxed) as usize,
-            cross_seq_coalesced: self.cross_seq_coalesced.load(Ordering::Relaxed),
-            bytes_held: self.bytes_held.load(Ordering::Relaxed),
-            basis_evictions: self.basis_evictions.load(Ordering::Relaxed),
-            truncations: self.truncations.load(Ordering::Relaxed),
+            steals: self.steals.load(Ordering::SeqCst) as usize,
+            cross_seq_coalesced: self.cross_seq_coalesced.load(Ordering::SeqCst),
+            bytes_held: self.bytes_held.load(Ordering::SeqCst),
+            basis_evictions: self.basis_evictions.load(Ordering::SeqCst),
+            truncations: self.truncations.load(Ordering::SeqCst),
             post_eviction_iter_regressions: self
                 .post_eviction_iter_regressions
-                .load(Ordering::Relaxed),
-            extraction_failures: self.extraction_failures.load(Ordering::Relaxed)
+                .load(Ordering::SeqCst),
+            extraction_failures: self.extraction_failures.load(Ordering::SeqCst)
                 as usize,
-            strategy_shrinks: self.strategy_shrinks.load(Ordering::Relaxed) as usize,
+            strategy_shrinks: self.strategy_shrinks.load(Ordering::SeqCst) as usize,
             predicted_saved_iters: self
                 .predicted_saved_milli_iters
-                .load(Ordering::Relaxed) as f64
+                .load(Ordering::SeqCst) as f64
                 * 1e-3,
-            realized_saved_iters: self.realized_saved_milli_iters.load(Ordering::Relaxed)
+            realized_saved_iters: self.realized_saved_milli_iters.load(Ordering::SeqCst)
                 as f64
                 * 1e-3,
         }
@@ -1198,7 +1200,7 @@ impl SolveService {
         let on_steal: Box<dyn Fn() + Send + Sync> = {
             let m = metrics.clone();
             Box::new(move || {
-                m.steals.fetch_add(1, Ordering::Relaxed);
+                m.steals.fetch_add(1, Ordering::SeqCst);
             })
         };
         let dispatch: DispatchFn<SeqCore> = {
@@ -1232,13 +1234,25 @@ impl SolveService {
         self.sched.n_workers()
     }
 
+    /// Test hook (`pub` + `#[doc(hidden)]`, not part of the supported
+    /// API): check the scheduler's one-entry-anywhere invariant — no
+    /// sequence core resident in two run queues at once — right now.
+    /// `Err` carries a description of the duplicate. Integration tests
+    /// hammer this concurrently with submit/steal/pause/requeue traffic;
+    /// the same audit is `debug_assert`ed on the scheduler's own
+    /// mutating paths.
+    #[doc(hidden)]
+    pub fn audit_scheduler(&self) -> Result<(), String> {
+        self.sched.audit_queues()
+    }
+
     /// Enable or disable cross-sequence block coalescing (enabled by
     /// default). Takes effect at the next dispatch; in-flight groups are
     /// unaffected. Disabling restores strict per-sequence solves —
     /// useful when per-sequence recycle-state isolation matters more
     /// than shared-operator throughput.
     pub fn cross_sequence_coalescing(&self, enabled: bool) {
-        self.cross_seq.store(enabled, Ordering::Relaxed);
+        self.cross_seq.store(enabled, Ordering::SeqCst);
     }
 
     /// Pause dispatching until the returned guard is dropped: in-flight
@@ -1270,8 +1284,8 @@ impl SolveService {
     /// (k, ℓ, AW policy). The sequence's home worker is assigned
     /// round-robin over the scheduler workers.
     pub fn open_sequence(&self, cfg: RecycleConfig) -> SequenceHandle {
-        self.metrics.active_sequences.fetch_add(1, Ordering::Relaxed);
-        let seq_id = self.next_seq_id.fetch_add(1, Ordering::Relaxed);
+        self.metrics.active_sequences.fetch_add(1, Ordering::SeqCst);
+        let seq_id = self.next_seq_id.fetch_add(1, Ordering::SeqCst);
         let core = Arc::new(SeqCore {
             state: Mutex::new(SequenceState {
                 queue: VecDeque::new(),
@@ -1504,7 +1518,7 @@ impl SequenceHandle {
             self.metrics.note_rejected();
             return Err(SubmitError::QueueFull);
         }
-        self.metrics.queue_high_water.fetch_max(depth, Ordering::Relaxed);
+        self.metrics.queue_high_water.fetch_max(depth, Ordering::SeqCst);
         let mut st = lock_unpoisoned(&self.core.state);
         // Re-check shutdown UNDER the queue lock: `shutdown(Abort)` sweeps
         // each sequence queue under this same lock after setting the flag,
@@ -1759,7 +1773,7 @@ fn dispatch_one(
             // the fingerprint as a cheap negative prefilter before the
             // authoritative `Arc::ptr_eq`.
             let mut peers: Vec<Arc<SeqCore>> = Vec::new();
-            if cross_seq.load(Ordering::Relaxed) {
+            if cross_seq.load(Ordering::SeqCst) {
                 let claimed = ctx.claim(CROSS_SEQ_CAP, |peer| {
                     let pst = match peer.state.try_lock() {
                         Ok(g) => g,
@@ -1814,7 +1828,7 @@ fn dispatch_one(
                         ctx.requeue(peer);
                         continue;
                     }
-                    metrics.cross_seq_coalesced.fetch_add(ptokens.len(), Ordering::Relaxed);
+                    metrics.cross_seq_coalesced.fetch_add(ptokens.len(), Ordering::SeqCst);
                     pst.inflight = ptokens;
                     drop(pst);
                     peers.push(peer);
@@ -2027,29 +2041,29 @@ impl PostSolve {
     fn note(&self, metrics: &ServiceMetrics, before: &CounterBaseline) {
         let delta = self.truncations.saturating_sub(before.truncations) as usize;
         if delta > 0 {
-            metrics.truncations.fetch_add(delta, Ordering::Relaxed);
+            metrics.truncations.fetch_add(delta, Ordering::SeqCst);
         }
         if self.regressed {
-            metrics.post_eviction_iter_regressions.fetch_add(1, Ordering::Relaxed);
+            metrics.post_eviction_iter_regressions.fetch_add(1, Ordering::SeqCst);
         }
         let failures = self.extraction_failures.saturating_sub(before.extraction_failures);
         if failures > 0 {
-            metrics.extraction_failures.fetch_add(failures, Ordering::Relaxed);
+            metrics.extraction_failures.fetch_add(failures, Ordering::SeqCst);
         }
         let shrinks = self.strategy_shrinks.saturating_sub(before.strategy_shrinks);
         if shrinks > 0 {
-            metrics.strategy_shrinks.fetch_add(shrinks, Ordering::Relaxed);
+            metrics.strategy_shrinks.fetch_add(shrinks, Ordering::SeqCst);
         }
         let predicted = (self.predicted_total - before.predicted_total).max(0.0);
         if predicted > 0.0 {
             metrics
                 .predicted_saved_milli_iters
-                .fetch_add((predicted * 1e3) as u64, Ordering::Relaxed);
+                .fetch_add((predicted * 1e3) as u64, Ordering::SeqCst);
         }
         if self.payoff > 0.0 {
             metrics
                 .realized_saved_milli_iters
-                .fetch_add((self.payoff * 1e3) as u64, Ordering::Relaxed);
+                .fetch_add((self.payoff * 1e3) as u64, Ordering::SeqCst);
         }
     }
 }

@@ -92,12 +92,23 @@ pub fn grid_search(
             });
         }
     }
-    let best = evaluated
-        .iter()
-        .cloned()
-        .max_by(|a, b| a.psi.partial_cmp(&b.psi).unwrap())
-        .unwrap();
+    let best = best_point(&evaluated);
     HyperSearchResult { evaluated, best }
+}
+
+/// The Ψ-best evaluated point. Under `total_cmp` a NaN Ψ sorts *above*
+/// +inf, so a bare `max_by` would crown a diverged fit; NaN points are
+/// filtered out instead (falling back to the first point when every fit
+/// diverged, so callers still get a deterministic answer rather than a
+/// panic — the old `partial_cmp(..).unwrap()` aborted the whole search).
+fn best_point(evaluated: &[HyperPoint]) -> HyperPoint {
+    evaluated
+        .iter()
+        .filter(|p| !p.psi.is_nan())
+        .max_by(|a, b| a.psi.total_cmp(&b.psi))
+        .or_else(|| evaluated.first())
+        .expect("grid search evaluated at least one point")
+        .clone()
 }
 
 /// One evaluated `(amplitude θ, noise σ)` grid point of
@@ -204,6 +215,32 @@ pub fn sigma_grid_search(
 mod tests {
     use super::*;
     use crate::data::digits::{generate, DigitsConfig};
+
+    fn point(psi: f64) -> HyperPoint {
+        HyperPoint {
+            amplitude: 1.0,
+            lengthscale: 1.0,
+            psi,
+            log_lik: 0.0,
+            solver_iterations: 0,
+            seconds: 0.0,
+        }
+    }
+
+    #[test]
+    fn best_point_ignores_nan_psi() {
+        // Regression: a single diverged fit (NaN Ψ) used to panic the
+        // whole grid search via `partial_cmp(..).unwrap()`; and a naive
+        // `total_cmp` max would crown the NaN (it sorts above +inf).
+        let pts = vec![point(-3.0), point(f64::NAN), point(-1.0), point(-2.0)];
+        assert_eq!(best_point(&pts).psi, -1.0);
+        // -inf (the "fit produced no steps" sentinel) loses to any
+        // finite Ψ but still beats being NaN.
+        let pts = vec![point(f64::NEG_INFINITY), point(f64::NAN)];
+        assert_eq!(best_point(&pts).psi, f64::NEG_INFINITY);
+        // All-NaN grid: deterministic fallback, no panic.
+        assert!(best_point(&[point(f64::NAN)]).psi.is_nan());
+    }
 
     #[test]
     fn grid_search_finds_reasonable_lengthscale() {

@@ -406,9 +406,9 @@ mod tests {
         let pairs = gen_sym_eig(&Mat::identity(5), &f).unwrap();
         let fe = sym_eig(&f).unwrap();
         let mut thetas: Vec<f64> = pairs.iter().map(|(t, _)| 1.0 / t).collect();
-        thetas.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        thetas.sort_by(|a, b| a.total_cmp(b));
         let mut expect: Vec<f64> = fe.values.iter().copied().filter(|v| v.abs() > 1e-12).collect();
-        expect.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        expect.sort_by(|a, b| a.total_cmp(b));
         assert_eq!(thetas.len(), expect.len());
         for (a, b) in thetas.iter().zip(&expect) {
             assert!((a - b).abs() < 1e-8, "{a} vs {b}");

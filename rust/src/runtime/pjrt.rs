@@ -86,7 +86,7 @@ impl PjrtEngine {
 
     /// Compile (or fetch the cached) executable for `name`.
     fn executable(&self, name: &str) -> Result<Arc<PjRtLoadedExecutable>> {
-        if let Some(exe) = self.exes.lock().unwrap().get(name) {
+        if let Some(exe) = crate::util::sync::lock_unpoisoned(&self.exes).get(name) {
             return Ok(exe.clone());
         }
         let meta = self.meta(name)?;
@@ -101,7 +101,7 @@ impl PjrtEngine {
         crate::log_debug!("compiled {name} in {:.3}s", t0.elapsed().as_secs_f64());
         // Double-checked insert: racing threads may both compile; last wins
         // (both executables are valid).
-        self.exes.lock().unwrap().insert(name.to_string(), exe.clone());
+        crate::util::sync::lock_unpoisoned(&self.exes).insert(name.to_string(), exe.clone());
         Ok(exe)
     }
 

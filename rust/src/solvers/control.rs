@@ -23,8 +23,8 @@
 //! reach it): an inert default costs one branch per iteration.
 
 use crate::solvers::StopReason;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use crate::util::sync::atomic::{AtomicBool, Ordering};
+use crate::util::sync::Arc;
 use std::time::Instant;
 
 /// Shared cancellation flag for one solve request.
@@ -33,9 +33,17 @@ use std::time::Instant;
 /// coordinator's `SolveFuture::cancel` flips it), the kernel polls
 /// another once per iteration. Cancellation is level-triggered and
 /// permanent — there is no un-cancel.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct CancelToken {
     flag: Arc<AtomicBool>,
+}
+
+// Manual impl: loom's `AtomicBool` has no `Default`, so the derive would
+// not compile under `cfg(loom)`.
+impl Default for CancelToken {
+    fn default() -> CancelToken {
+        CancelToken { flag: Arc::new(AtomicBool::new(false)) }
+    }
 }
 
 impl CancelToken {

@@ -406,7 +406,7 @@ impl ParDenseOp {
     /// Copy `x` into the parked scratch allocation (reusing it when no
     /// previous call still holds it) and return a shareable handle.
     fn shared_input(&self, x: &[f64]) -> Arc<Vec<f64>> {
-        let mut g = self.scratch.lock().unwrap();
+        let mut g = crate::util::sync::lock_unpoisoned(&self.scratch);
         match Arc::get_mut(&mut *g) {
             Some(buf) => {
                 buf.clear();

@@ -14,5 +14,6 @@ pub mod pool;
 pub mod quickprop;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 pub mod table;
 pub mod timer;

@@ -9,6 +9,7 @@
 //!   * `spawn` returning a `JobHandle<T>` that can be `join`ed;
 //!   * `scope`-free parallel map for static workloads.
 
+use crate::util::sync::lock_unpoisoned;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -37,9 +38,9 @@ impl<T> JobHandle<T> {
     /// Block until the job finishes; re-panics if the job panicked.
     pub fn join(self) -> T {
         let (lock, cv) = &*self.slot;
-        let mut guard = lock.lock().unwrap();
+        let mut guard = lock_unpoisoned(lock);
         while guard.is_none() {
-            guard = cv.wait(guard).unwrap();
+            guard = cv.wait(guard).unwrap_or_else(|e| e.into_inner());
         }
         match guard.take().unwrap() {
             Ok(v) => v,
@@ -108,11 +109,11 @@ impl ThreadPool {
         let job: Job = Box::new(move || {
             let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
             let (lock, cv) = &*slot2;
-            *lock.lock().unwrap() = Some(out);
+            *lock_unpoisoned(lock) = Some(out);
             cv.notify_all();
         });
         {
-            let mut q = self.queue.jobs.lock().unwrap();
+            let mut q = lock_unpoisoned(&self.queue.jobs);
             q.push_back(job);
         }
         self.queue.cv.notify_one();
@@ -139,7 +140,7 @@ impl ThreadPool {
 fn worker_loop(q: Arc<Queue>) {
     loop {
         let job = {
-            let mut jobs = q.jobs.lock().unwrap();
+            let mut jobs = lock_unpoisoned(&q.jobs);
             loop {
                 if let Some(j) = jobs.pop_front() {
                     break Some(j);
@@ -147,7 +148,7 @@ fn worker_loop(q: Arc<Queue>) {
                 if q.shutdown.load(Ordering::Acquire) {
                     break None;
                 }
-                jobs = q.cv.wait(jobs).unwrap();
+                jobs = q.cv.wait(jobs).unwrap_or_else(|e| e.into_inner());
             }
         };
         match job {

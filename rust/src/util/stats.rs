@@ -60,7 +60,10 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
     assert!(!xs.is_empty(), "percentile of empty slice");
     assert!((0.0..=1.0).contains(&q), "q out of range");
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // `total_cmp`, not `partial_cmp(..).unwrap()`: a NaN timing sample
+    // (e.g. 0/0 from a zero-iteration run) must not panic the
+    // end-of-run summary; NaN sorts above +inf and lands in the tail.
+    v.sort_by(|a, b| a.total_cmp(b));
     let pos = q * (v.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -136,6 +139,18 @@ mod tests {
     fn percentile_interpolates() {
         let xs = [0.0, 10.0];
         assert!((percentile(&xs, 0.25) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_tolerates_nan_samples() {
+        // Regression for the PR 6 class of failures: a NaN sample used
+        // to panic the `partial_cmp(..).unwrap()` sort. With `total_cmp`
+        // NaN sorts above +inf, so low/mid percentiles stay finite and
+        // meaningful while the NaN is confined to the extreme tail.
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert!((percentile(&xs, 1.0 / 3.0) - 2.0).abs() < 1e-12);
+        assert!(percentile(&xs, 1.0).is_nan(), "NaN lands at the top");
     }
 
     #[test]

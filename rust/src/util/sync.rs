@@ -1,0 +1,165 @@
+//! Sync-primitive shim: `std::sync`/`std::thread` by default, [`loom`]'s
+//! model-checked replacements under `RUSTFLAGS="--cfg loom"`.
+//!
+//! The coordinator's concurrency protocols (the scheduled-flag
+//! one-entry-anywhere handshake, the `Slot` one-shot state machine, the
+//! busy→stamp→completed snapshot ordering, the all-of group-cancel set,
+//! the byte accountant's settle-after-unlock `try_lock` dance) are
+//! load-bearing for *numerical* correctness: a race that mixes one
+//! sequence's `(W, AW)` basis into another's produces a silently wrong
+//! deflation space, not a crash. `rust/tests/loom_models.rs` model-checks
+//! small-N versions of those protocols exhaustively; for the checked code
+//! to be the shipped code, every shimmed module must reach its
+//! primitives through this module instead of `std::sync`/`std::thread`
+//! (mechanically enforced by the `std-sync-in-shimmed` rule of
+//! `cargo run -p lint`).
+//!
+//! # Shimmed modules
+//!
+//! `coordinator::scheduler`, `coordinator::service` (including the
+//! `ServiceMetrics` counters) and `solvers::control`. Everything else —
+//! the thread pool, the solver kernels, the experiments — keeps using
+//! `std` directly: their concurrency is either absent or fork/join
+//! structured, and dragging them under the shim would only grow loom's
+//! state space without adding a checked protocol.
+//!
+//! # What switches and what deliberately does not
+//!
+//! * [`Mutex`], [`Condvar`], [`atomic`], [`thread`]: `std` by default,
+//!   `loom` under `cfg(loom)`. These are the primitives whose
+//!   interleavings loom explores.
+//! * [`Arc`], [`Weak`], [`OnceLock`]: **always `std`**. Loom's `Arc`
+//!   does not support `Weak` (the service's sequence registry and byte
+//!   accountant need downgrades), and loom has no `OnceLock`.
+//!   Reference-counted lifetime is not one of the modeled protocols;
+//!   `std`'s refcounting is sound inside a loom model — loom simply does
+//!   not explore its orderings.
+//!
+//! [`loom`] is **not** vendored into the offline tree (mirroring the
+//! `pjrt` feature's unvendored `xla` dependency): the default build is
+//! dependency-free and bitwise-unchanged. CI materializes it with
+//! `cargo add loom@0.7 --dev --target 'cfg(loom)' -p krr` before running
+//! the model suite; do the same locally. See DESIGN.md §"Correctness
+//! tooling".
+//!
+//! [`loom`]: https://docs.rs/loom
+
+// The refcounting primitives stay `std` in both worlds — see module docs.
+pub use std::sync::{Arc, OnceLock, Weak};
+
+#[cfg(not(loom))]
+pub use std::sync::{Condvar, Mutex, MutexGuard, TryLockError};
+
+#[cfg(loom)]
+pub use loom::sync::{Condvar, Mutex, MutexGuard, TryLockError};
+
+/// Atomics for the shimmed modules. Note that loom's atomics have
+/// non-`const` constructors: shimmed types must build their atomics at
+/// runtime (struct fields, not `static`s).
+#[cfg(not(loom))]
+pub mod atomic {
+    pub use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+}
+
+/// Atomics for the shimmed modules (loom build).
+#[cfg(loom)]
+pub mod atomic {
+    pub use loom::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+}
+
+/// Thread spawning for the shimmed modules.
+#[cfg(not(loom))]
+pub mod thread {
+    pub use std::thread::{spawn, yield_now, Builder, JoinHandle};
+}
+
+/// Thread spawning for the shimmed modules (loom build). Loom threads
+/// exist only inside `loom::model` closures; code paths that spawn
+/// through this module must not run outside a model in a loom build
+/// (the model suite never constructs a full `Scheduler`).
+#[cfg(loom)]
+pub mod thread {
+    pub use loom::thread::{spawn, yield_now, JoinHandle};
+
+    /// Minimal `std::thread::Builder`-compatible shim: loom has no named
+    /// threads, so the name is accepted and dropped.
+    pub struct Builder {
+        name: Option<String>,
+    }
+
+    impl Builder {
+        pub fn new() -> Builder {
+            Builder { name: None }
+        }
+
+        pub fn name(mut self, name: String) -> Builder {
+            self.name = Some(name);
+            self
+        }
+
+        pub fn spawn<F, T>(self, f: F) -> std::io::Result<JoinHandle<T>>
+        where
+            F: FnOnce() -> T,
+            F: Send + 'static,
+            T: Send + 'static,
+        {
+            let _ = self.name;
+            Ok(spawn(f))
+        }
+    }
+
+    impl Default for Builder {
+        fn default() -> Builder {
+            Builder::new()
+        }
+    }
+}
+
+/// Recover a mutex guard even when a previous holder panicked: the
+/// coordinator must keep dispatching after a contained worker failure
+/// (the failed request completes as `StopReason::Failed`; recycle state
+/// a panicked solve may have half-updated is still structurally valid —
+/// basis absorption is transactional, it happens only after a solve
+/// returns). `#[track_caller]` makes the recovery log name the real
+/// call site instead of this helper.
+#[track_caller]
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| {
+        crate::log_warn!("recovered poisoned mutex at {}", std::panic::Location::caller());
+        e.into_inner()
+    })
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lock_unpoisoned_returns_guard() {
+        let m = Mutex::new(7);
+        assert_eq!(*lock_unpoisoned(&m), 7);
+    }
+
+    #[test]
+    fn lock_unpoisoned_recovers_after_holder_panic() {
+        let m = Arc::new(Mutex::new(0));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap(); // lint:allow(bare-lock-unwrap) — poisoning on purpose
+            panic!("poison the mutex");
+        })
+        .join();
+        // A bare .lock().unwrap() would panic here; the helper recovers.
+        *lock_unpoisoned(&m) += 1;
+        assert_eq!(*lock_unpoisoned(&m), 1);
+    }
+
+    #[test]
+    fn shim_thread_builder_matches_std_surface() {
+        let h = thread::Builder::new()
+            .name("krr-shim-test".to_string())
+            .spawn(|| 41 + 1)
+            .expect("spawn");
+        assert_eq!(h.join().unwrap(), 42);
+    }
+}

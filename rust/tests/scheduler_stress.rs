@@ -13,6 +13,7 @@ use krr::linalg::mat::Mat;
 use krr::solvers::recycle::RecycleConfig;
 use krr::solvers::{SolveSpec, SpdOperator, StopReason};
 use krr::util::rng::Rng;
+use krr::util::sync::lock_unpoisoned;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -50,7 +51,7 @@ impl SpdOperator for TagOp {
     }
     fn matvec(&self, x: &[f64], y: &mut [f64]) {
         if !self.logged.swap(true, Ordering::SeqCst) {
-            self.log.lock().unwrap().push((self.seq, self.req));
+            lock_unpoisoned(&self.log).push((self.seq, self.req));
         }
         self.a.matvec_into(x, y);
     }
@@ -201,7 +202,7 @@ fn fifo_within_class_survives_stealing() {
     for f in futures {
         assert_eq!(f.wait().stop, StopReason::Converged);
     }
-    let log = log.lock().unwrap();
+    let log = lock_unpoisoned(&log);
     assert_eq!(log.len(), 24);
     for s in 0..3 {
         let order: Vec<usize> = log.iter().filter(|(ls, _)| *ls == s).map(|&(_, r)| r).collect();
@@ -372,4 +373,102 @@ fn snapshot_utilization_bounded_under_concurrent_load() {
         0,
         "snapshot reported busy > span × workers under concurrent load"
     );
+}
+
+/// One-entry-anywhere property test: 10k randomized
+/// submit/steal/pause/requeue operations across 4 submitter threads and
+/// 4 scheduler workers, with a dedicated auditor thread hammering
+/// `SolveService::audit_scheduler` the whole time — a sequence core must
+/// never be observed resident in two run queues at once. The same audit
+/// is `debug_assert`ed inside the scheduler's requeue/putback paths, so
+/// a debug-build run of this test also self-checks every mutation; loom
+/// proves the handshake exhaustively at small N
+/// (`rust/tests/loom_models.rs`), this test covers the full-size system
+/// with real solves, steals and pauses.
+#[test]
+fn audit_never_sees_core_in_two_queues_across_10k_random_ops() {
+    const OPS_PER_THREAD: usize = 2500; // × 4 threads = 10k ops
+    const MAX_INFLIGHT: usize = 48;
+    let svc = Arc::new(SolveService::new(4));
+    let n = 8;
+    // 12 sequences shared by all submitter threads: cross-thread
+    // submissions to one sequence race enqueue against dispatch-requeue,
+    // and the home-queue imbalance (12 homes on 4 workers, bursty
+    // submission) keeps the steal path hot.
+    let seqs: Vec<_> = (0..12)
+        .map(|_| Arc::new(svc.open_sequence(RecycleConfig { k: 3, l: 4, ..Default::default() })))
+        .collect();
+    let ops: Vec<_> = (0..12).map(|s| spd(n, 1e2, 960 + s as u64)).collect();
+    let done = Arc::new(AtomicBool::new(false));
+    let auditor = {
+        let svc = svc.clone();
+        let done = done.clone();
+        std::thread::spawn(move || {
+            let mut audits = 0usize;
+            while !done.load(Ordering::SeqCst) {
+                svc.audit_scheduler().expect("one-entry-anywhere violated");
+                audits += 1;
+                std::thread::yield_now();
+            }
+            audits
+        })
+    };
+    let submitters: Vec<_> = (0..4)
+        .map(|t| {
+            let svc = svc.clone();
+            let seqs = seqs.clone();
+            let ops = ops.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(7_000 + t as u64);
+                let mut inflight = std::collections::VecDeque::new();
+                for i in 0..OPS_PER_THREAD {
+                    // Occasionally pause the whole scheduler across a
+                    // burst of submissions: pops between the pause and
+                    // its drop exercise the putback (front-requeue) path.
+                    let pause = if rng.below(50) == 0 {
+                        Some(svc.pause())
+                    } else {
+                        None
+                    };
+                    let burst = if pause.is_some() { 4 } else { 1 };
+                    for _ in 0..burst {
+                        let s = rng.below(seqs.len() as u64) as usize;
+                        let spec = if rng.below(3) == 0 {
+                            SolveSpec::cg().with_tol(1e-6).batch()
+                        } else {
+                            SolveSpec::cg().with_tol(1e-6)
+                        };
+                        inflight.push_back(seqs[s].submit(
+                            ops[s].clone(),
+                            vec![1.0; n],
+                            None,
+                            spec,
+                        ));
+                    }
+                    drop(pause);
+                    // Randomly drain a future mid-stream (keeps requeue
+                    // and unschedule transitions flowing) and always
+                    // bound the in-flight population.
+                    if rng.below(4) == 0 || inflight.len() > MAX_INFLIGHT {
+                        if let Some(f) = inflight.pop_front() {
+                            assert_eq!(f.wait().stop, StopReason::Converged, "thread {t} op {i}");
+                        }
+                    }
+                }
+                for f in inflight {
+                    assert_eq!(f.wait().stop, StopReason::Converged);
+                }
+            })
+        })
+        .collect();
+    for s in submitters {
+        s.join().unwrap();
+    }
+    done.store(true, Ordering::SeqCst);
+    let audits = auditor.join().unwrap();
+    assert!(audits > 0, "the auditor never ran");
+    svc.audit_scheduler().expect("final audit");
+    let snap = svc.metrics().snapshot();
+    assert_eq!(snap.submitted, snap.completed, "all 10k+ ops completed");
+    assert!(snap.submitted >= 10_000);
 }

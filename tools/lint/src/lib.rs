@@ -1,0 +1,476 @@
+//! Repo-invariant lint engine: mechanical enforcement of the rules
+//! reviewers previously policed by hand (see DESIGN.md § Correctness
+//! tooling for the rule table and rationale).
+//!
+//! The engine is deliberately text-based, not AST-based: every rule here
+//! is a *surface* invariant — "this token sequence must not appear in
+//! this region of the tree" — and a line matcher with comment stripping
+//! and a test-region heuristic catches exactly that, with zero
+//! dependencies and sub-second runtime. Anything needing type knowledge
+//! (e.g. "is this `sort_by` on floats?") is written so the cheap
+//! approximation over-approximates and the `allow.list` carries the
+//! sanctioned exceptions; every suppression is a reviewed line in that
+//! file rather than an invisible non-match.
+//!
+//! Escape hatches, in precedence order:
+//!
+//! 1. an inline `lint:allow(rule-id)` marker anywhere on the raw line
+//!    (for one-off sites whose justification belongs next to the code);
+//! 2. an `allow.list` entry `rule-id path-suffix :: substring` (for
+//!    policy-level exceptions, reviewed centrally);
+//! 3. `skip_tests` rules ignore everything from the conventional
+//!    `#[cfg(test)] mod tests` trailer to end-of-file.
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// One lint rule: a line predicate plus where it applies.
+pub struct Rule {
+    /// Stable kebab-case identifier (used in `allow.list` and in the
+    /// inline `lint:allow(...)` marker).
+    pub id: &'static str,
+    /// One-line explanation printed with every finding, stating the fix.
+    pub message: &'static str,
+    /// Path substrings (with `/` separators, relative to the scanned
+    /// root) this rule applies to; empty = the whole tree.
+    pub scopes: &'static [&'static str],
+    /// Skip the trailing `#[cfg(test)] mod tests` region of each file.
+    pub skip_tests: bool,
+    /// Line predicate, applied to comment-stripped line content.
+    pub matches: fn(&str) -> bool,
+}
+
+/// One rule violation at a specific `file:line`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Path relative to the scanned root, `/`-separated.
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: &'static str,
+    /// The offending line, trimmed (for the human reading the log).
+    pub text: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}\n    {}",
+            self.path, self.line, self.rule, self.message, self.text
+        )
+    }
+}
+
+/// The repo's rule set. IDs are load-bearing: `allow.list`, inline
+/// markers and the self-test fixtures all refer to them.
+pub fn default_rules() -> Vec<Rule> {
+    vec![
+        Rule {
+            id: "float-sort-unwrap",
+            message: "float comparison via partial_cmp(..).unwrap() panics on NaN — \
+                      use total_cmp (and decide where NaN should sort)",
+            scopes: &[],
+            skip_tests: false,
+            matches: |l| l.contains("partial_cmp") && l.contains(".unwrap()"),
+        },
+        Rule {
+            id: "bare-lock-unwrap",
+            message: "bare .lock()/.read()/.write().unwrap() poisons the caller after a \
+                      panic elsewhere — use util::sync::lock_unpoisoned (it recovers and \
+                      logs the call site)",
+            scopes: &[],
+            skip_tests: false,
+            matches: |l| {
+                l.contains(".lock().unwrap()")
+                    || l.contains(".read().unwrap()")
+                    || l.contains(".write().unwrap()")
+            },
+        },
+        Rule {
+            id: "relaxed-ordering",
+            message: "Ordering::Relaxed on coordinator state read by snapshot() breaks the \
+                      busy ≤ span × workers invariant — use SeqCst (advisory hints go in \
+                      allow.list)",
+            scopes: &["coordinator/scheduler.rs", "coordinator/service.rs"],
+            skip_tests: true,
+            matches: |l| l.contains("Ordering::Relaxed"),
+        },
+        Rule {
+            id: "std-sync-in-shimmed",
+            message: "shimmed modules must reach sync/thread primitives through util::sync \
+                      so the loom build model-checks the shipped code",
+            scopes: &["coordinator/scheduler.rs", "coordinator/service.rs", "solvers/control.rs"],
+            skip_tests: true,
+            matches: |l| l.contains("std::sync") || l.contains("std::thread"),
+        },
+        Rule {
+            id: "instant-in-solver",
+            message: "Instant::now() inside solver code is a per-iteration syscall in the hot \
+                      loop — time at kernel entry only (sanctioned sites live in allow.list)",
+            scopes: &["solvers/"],
+            skip_tests: true,
+            matches: |l| l.contains("Instant::now"),
+        },
+    ]
+}
+
+/// One `allow.list` entry: `rule path-suffix :: content-substring`.
+#[derive(Debug, Clone)]
+pub struct AllowEntry {
+    pub rule: String,
+    pub path_suffix: String,
+    pub substring: String,
+}
+
+/// Parsed `allow.list`: `#` comments and blank lines are skipped; every
+/// other line must parse, so a typo fails loudly instead of silently
+/// allowing nothing.
+#[derive(Debug, Default)]
+pub struct Allowlist {
+    pub entries: Vec<AllowEntry>,
+}
+
+impl Allowlist {
+    pub fn parse(text: &str) -> Result<Allowlist, String> {
+        let mut entries = Vec::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (head, substring) = line
+                .split_once("::")
+                .ok_or_else(|| format!("allow.list line {}: missing `::`", i + 1))?;
+            let mut head_parts = head.split_whitespace();
+            let rule = head_parts
+                .next()
+                .ok_or_else(|| format!("allow.list line {}: missing rule id", i + 1))?;
+            let path_suffix = head_parts
+                .next()
+                .ok_or_else(|| format!("allow.list line {}: missing path suffix", i + 1))?;
+            if head_parts.next().is_some() {
+                return Err(format!("allow.list line {}: too many fields before `::`", i + 1));
+            }
+            let substring = substring.trim();
+            if substring.is_empty() {
+                return Err(format!("allow.list line {}: empty content substring", i + 1));
+            }
+            entries.push(AllowEntry {
+                rule: rule.to_string(),
+                path_suffix: path_suffix.to_string(),
+                substring: substring.to_string(),
+            });
+        }
+        Ok(Allowlist { entries })
+    }
+
+    /// Is this (rule, file, line) combination sanctioned?
+    pub fn allows(&self, rule: &str, path: &str, line_text: &str) -> bool {
+        self.entries.iter().any(|e| {
+            e.rule == rule && path.ends_with(&e.path_suffix) && line_text.contains(&e.substring)
+        })
+    }
+}
+
+/// Strip comments and string-literal *contents* from one line of Rust
+/// source: `//` inside a string (e.g. a URL) does not truncate, `"`
+/// inside a char literal or comment does not open a string, and what a
+/// string says is data, not code. `in_block` carries `/* ... */` state
+/// across lines. The result is what rules match on, so prose *about* a
+/// forbidden pattern — doc comments in `ritz.rs` discuss the old
+/// `partial_cmp` sort, log messages may quote an API — can never trip a
+/// rule.
+pub fn strip_comments(line: &str, in_block: &mut bool) -> String {
+    let bytes = line.as_bytes();
+    let mut out = String::with_capacity(line.len());
+    let mut i = 0;
+    let mut in_string = false;
+    while i < bytes.len() {
+        if *in_block {
+            if bytes[i] == b'*' && i + 1 < bytes.len() && bytes[i + 1] == b'/' {
+                *in_block = false;
+                i += 2;
+            } else {
+                i += 1;
+            }
+            continue;
+        }
+        let c = bytes[i];
+        if in_string {
+            if c == b'\\' && i + 1 < bytes.len() {
+                i += 2;
+                continue;
+            }
+            if c == b'"' {
+                out.push('"');
+                in_string = false;
+            }
+            i += 1;
+            continue;
+        }
+        match c {
+            b'"' => {
+                in_string = true;
+                out.push('"');
+                i += 1;
+            }
+            b'\'' => {
+                // Char literal ('x', '\n', '\'') vs lifetime ('a in
+                // generics): a literal closes within a few bytes; a
+                // lifetime has no closing quote. Only literals may
+                // contain `"` or `/`, so only they need skipping.
+                let lit_len = if i + 2 < bytes.len() && bytes[i + 1] == b'\\' {
+                    // '\x' escape forms; find the closing quote.
+                    bytes[i + 2..].iter().take(6).position(|&b| b == b'\'').map(|p| p + 3)
+                } else if i + 2 < bytes.len() && bytes[i + 2] == b'\'' {
+                    Some(3)
+                } else {
+                    None
+                };
+                match lit_len {
+                    Some(len) => {
+                        for &b in &bytes[i..i + len] {
+                            out.push(b as char);
+                        }
+                        i += len;
+                    }
+                    None => {
+                        out.push('\'');
+                        i += 1;
+                    }
+                }
+            }
+            b'/' if i + 1 < bytes.len() && bytes[i + 1] == b'/' => break,
+            b'/' if i + 1 < bytes.len() && bytes[i + 1] == b'*' => {
+                *in_block = true;
+                i += 2;
+            }
+            _ => {
+                out.push(c as char);
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+/// First line (0-based) of the conventional trailing test region: a
+/// `#[cfg(test)]` / `#[cfg(all(test, ...))]` attribute. Everything from
+/// there to EOF is "tests" for `skip_tests` rules — the repo keeps unit
+/// tests in one trailing `mod tests` per file, which this leans on.
+pub fn test_region_start(lines: &[&str]) -> usize {
+    lines
+        .iter()
+        .position(|l| {
+            let t = l.trim_start();
+            t.starts_with("#[cfg(test)]") || t.starts_with("#[cfg(all(test")
+        })
+        .unwrap_or(lines.len())
+}
+
+/// Lint one file's content. `rel_path` is `/`-separated, relative to the
+/// scanned root.
+pub fn check_content(
+    rel_path: &str,
+    content: &str,
+    rules: &[Rule],
+    allow: &Allowlist,
+) -> Vec<Finding> {
+    let lines: Vec<&str> = content.lines().collect();
+    let test_start = test_region_start(&lines);
+    let mut in_block = false;
+    let mut findings = Vec::new();
+    for (idx, raw) in lines.iter().enumerate() {
+        let stripped = strip_comments(raw, &mut in_block);
+        if stripped.trim().is_empty() {
+            continue;
+        }
+        for rule in rules {
+            if !rule.scopes.is_empty() && !rule.scopes.iter().any(|s| rel_path.contains(s)) {
+                continue;
+            }
+            if rule.skip_tests && idx >= test_start {
+                continue;
+            }
+            if !(rule.matches)(&stripped) {
+                continue;
+            }
+            // The inline marker lives in a comment, so consult the RAW line.
+            if raw.contains(&format!("lint:allow({})", rule.id)) {
+                continue;
+            }
+            if allow.allows(rule.id, rel_path, raw) {
+                continue;
+            }
+            findings.push(Finding {
+                path: rel_path.to_string(),
+                line: idx + 1,
+                rule: rule.id,
+                message: rule.message,
+                text: raw.trim().to_string(),
+            });
+        }
+    }
+    findings
+}
+
+/// All `.rs` files under `root`, as `(absolute, root-relative)` pairs,
+/// sorted by relative path for deterministic output.
+pub fn walk(root: &Path) -> std::io::Result<Vec<(PathBuf, String)>> {
+    fn visit(dir: &Path, root: &Path, out: &mut Vec<(PathBuf, String)>) -> std::io::Result<()> {
+        for entry in std::fs::read_dir(dir)? {
+            let path = entry?.path();
+            if path.is_dir() {
+                visit(&path, root, out)?;
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                let rel = path
+                    .strip_prefix(root)
+                    .expect("walked path is under root")
+                    .components()
+                    .map(|c| c.as_os_str().to_string_lossy())
+                    .collect::<Vec<_>>()
+                    .join("/");
+                out.push((path, rel));
+            }
+        }
+        Ok(())
+    }
+    let mut out = Vec::new();
+    visit(root, root, &mut out)?;
+    out.sort_by(|a, b| a.1.cmp(&b.1));
+    Ok(out)
+}
+
+/// Lint every `.rs` file under `root` with the given rules + allowlist.
+pub fn run(root: &Path, rules: &[Rule], allow: &Allowlist) -> std::io::Result<Vec<Finding>> {
+    let mut findings = Vec::new();
+    for (path, rel) in walk(root)? {
+        let content = std::fs::read_to_string(&path)?;
+        findings.extend(check_content(&rel, &content, rules, allow));
+    }
+    Ok(findings)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_line_comments_and_string_contents() {
+        let mut blk = false;
+        assert_eq!(strip_comments("let x = 1; // partial_cmp", &mut blk), "let x = 1; ");
+        // A `//` inside a string does not truncate the line, and the
+        // string's contents are blanked (data, not code).
+        assert_eq!(
+            strip_comments(r#"let url = "https://a"; let y = 2;"#, &mut blk),
+            r#"let url = ""; let y = 2;"#
+        );
+        assert_eq!(
+            strip_comments(r#"log("uses partial_cmp(x).unwrap()");"#, &mut blk),
+            r#"log("");"#
+        );
+        assert_eq!(strip_comments("/// partial_cmp(..).unwrap()", &mut blk), "");
+    }
+
+    #[test]
+    fn strips_block_comments_across_lines() {
+        let mut blk = false;
+        assert_eq!(strip_comments("a /* partial_cmp", &mut blk), "a ");
+        assert!(blk);
+        assert_eq!(strip_comments(".unwrap() */ b", &mut blk), " b");
+        assert!(!blk);
+    }
+
+    #[test]
+    fn char_literal_quote_does_not_open_string() {
+        let mut blk = false;
+        // The '"' char literal must not swallow the // comment.
+        assert_eq!(
+            strip_comments(r#"if c == '"' { x(); } // note"#, &mut blk),
+            r#"if c == '"' { x(); } "#
+        );
+        // Lifetimes are not char literals.
+        assert_eq!(
+            strip_comments("fn f<'a>(x: &'a str) {} // c", &mut blk),
+            "fn f<'a>(x: &'a str) {} "
+        );
+    }
+
+    #[test]
+    fn test_region_is_detected() {
+        let lines = vec!["fn a() {}", "#[cfg(test)]", "mod tests {", "}"];
+        assert_eq!(test_region_start(&lines), 1);
+        let gated = vec!["fn a() {}", "#[cfg(all(test, not(loom)))]", "mod tests {"];
+        assert_eq!(test_region_start(&gated), 1);
+        let none = vec!["fn a() {}"];
+        assert_eq!(test_region_start(&none), 1);
+    }
+
+    #[test]
+    fn allowlist_parses_and_matches() {
+        let a = Allowlist::parse(
+            "# comment\n\nrelaxed-ordering coordinator/service.rs :: basis_hint\n",
+        )
+        .unwrap();
+        assert_eq!(a.entries.len(), 1);
+        assert!(a.allows(
+            "relaxed-ordering",
+            "coordinator/service.rs",
+            "x.basis_hint.load(Ordering::Relaxed)"
+        ));
+        assert!(!a.allows("relaxed-ordering", "coordinator/service.rs", "other.load(..)"));
+        assert!(!a.allows("float-sort-unwrap", "coordinator/service.rs", "basis_hint"));
+        assert!(Allowlist::parse("bad line no separator").is_err());
+    }
+
+    #[test]
+    fn findings_carry_file_line_and_rule() {
+        let rules = default_rules();
+        let content =
+            "fn f(v: &mut Vec<f64>) {\n    v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n}\n";
+        let f = check_content("util/x.rs", content, &rules, &Allowlist::default());
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].line, 2);
+        assert_eq!(f[0].rule, "float-sort-unwrap");
+        assert!(f[0].to_string().starts_with("util/x.rs:2: [float-sort-unwrap]"));
+    }
+
+    #[test]
+    fn inline_marker_suppresses() {
+        let rules = default_rules();
+        let content =
+            "let g = m.lock().unwrap(); // lint:allow(bare-lock-unwrap) poisoning on purpose\n";
+        assert!(check_content("a.rs", content, &rules, &Allowlist::default()).is_empty());
+        // The marker only covers its own rule.
+        let wrong = "let g = m.lock().unwrap(); // lint:allow(float-sort-unwrap)\n";
+        assert_eq!(check_content("a.rs", wrong, &rules, &Allowlist::default()).len(), 1);
+    }
+
+    #[test]
+    fn scoped_rules_ignore_other_files() {
+        let rules = default_rules();
+        let relaxed = "x.load(Ordering::Relaxed);\n";
+        assert!(check_content("solvers/cg.rs", relaxed, &rules, &Allowlist::default()).is_empty());
+        assert_eq!(
+            check_content("coordinator/service.rs", relaxed, &rules, &Allowlist::default()).len(),
+            1
+        );
+    }
+
+    #[test]
+    fn skip_tests_rules_ignore_trailing_test_mod() {
+        let rules = default_rules();
+        let content = "use x;\n#[cfg(test)]\nmod tests {\n    use std::thread;\n}\n";
+        assert!(
+            check_content("solvers/control.rs", content, &rules, &Allowlist::default()).is_empty()
+        );
+        // ... but not code before the test region.
+        let bad = "use std::thread;\n#[cfg(test)]\nmod tests {}\n";
+        assert_eq!(
+            check_content("solvers/control.rs", bad, &rules, &Allowlist::default()).len(),
+            1
+        );
+    }
+}

@@ -1,0 +1,56 @@
+//! `cargo run -p lint` — walk `rust/src`, enforce the repo invariants in
+//! `lint::default_rules`, exit non-zero with `file:line` diagnostics on
+//! any violation. Sanctioned exceptions live in `tools/lint/allow.list`.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let manifest_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    // tools/lint → repo root → rust/src. An explicit argument overrides,
+    // so the binary can also lint fixture trees or out-of-repo checkouts.
+    let root = std::env::args()
+        .nth(1)
+        .map(PathBuf::from)
+        .unwrap_or_else(|| manifest_dir.join("../../rust/src"));
+    let allow_path = manifest_dir.join("allow.list");
+
+    let allow = match load_allowlist(&allow_path) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("lint: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let rules = lint::default_rules();
+    let findings = match lint::run(&root, &rules, &allow) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("lint: cannot walk {}: {e}", root.display());
+            return ExitCode::FAILURE;
+        }
+    };
+    if findings.is_empty() {
+        println!("lint: {} clean ({} rules)", root.display(), rules.len());
+        return ExitCode::SUCCESS;
+    }
+    for f in &findings {
+        eprintln!("{f}");
+    }
+    eprintln!(
+        "lint: {} violation(s). Fix, add `lint:allow(rule-id)` on the line, or add a \
+         reviewed entry to {}.",
+        findings.len(),
+        allow_path.display()
+    );
+    ExitCode::FAILURE
+}
+
+fn load_allowlist(path: &Path) -> Result<lint::Allowlist, String> {
+    match std::fs::read_to_string(path) {
+        Ok(text) => lint::Allowlist::parse(&text),
+        // A missing allow.list is valid (a tree with zero exceptions).
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(lint::Allowlist::default()),
+        Err(e) => Err(format!("cannot read {}: {e}", path.display())),
+    }
+}

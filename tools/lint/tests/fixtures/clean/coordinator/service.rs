@@ -1,0 +1,39 @@
+// Fixture: scoped file that must yield ZERO findings — every forbidden
+// pattern below is suppressed by a legitimate mechanism.
+
+// 1. Prose about a pattern is stripped before matching:
+//    the old code did `v.sort_by(|a, b| a.partial_cmp(b).unwrap())`.
+
+/* Block comments too: counter.load(Ordering::Relaxed) is discussed
+here across lines and must not fire. */
+
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+
+// 2. Allowlisted site (the self-test supplies a matching allow entry).
+pub fn basis_hint(hint: &AtomicU64) -> u64 {
+    hint.load(Ordering::Relaxed) // advisory basis_hint, not snapshot state
+}
+
+// 3. Inline marker on the raw line.
+pub fn poisoned_probe(m: &std::sync::Mutex<u64>) -> u64 { // lint:allow(std-sync-in-shimmed)
+    *m.lock().unwrap() // lint:allow(bare-lock-unwrap) fixture marker
+}
+
+// 4. A string literal containing a forbidden token is not code.
+pub fn doc() -> &'static str {
+    "call sites must never use partial_cmp(x).unwrap() on floats"
+}
+
+// 5. skip_tests: everything below the test attribute is ignored for
+//    scoped rules like relaxed-ordering / std-sync-in-shimmed.
+#[cfg(test)]
+mod tests {
+    use std::thread;
+
+    #[test]
+    fn relaxed_is_fine_in_tests() {
+        let c = std::sync::atomic::AtomicU64::new(0);
+        let _ = c.load(std::sync::atomic::Ordering::Relaxed);
+        thread::yield_now();
+    }
+}

@@ -1,0 +1,13 @@
+// Fixture: clean solver file — timing happens once at entry and is
+// allowlisted by the self-test, mirroring the real repo policy.
+use std::time::Instant;
+
+pub fn solve(n: usize) -> f64 {
+    let start = Instant::now();
+    let mut acc = 0.0;
+    for i in 0..n {
+        acc += (i as f64).sqrt();
+    }
+    let _elapsed = start.elapsed();
+    acc
+}

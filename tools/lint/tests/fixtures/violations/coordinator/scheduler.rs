@@ -1,0 +1,6 @@
+// Fixture: must trip `std-sync-in-shimmed` (bypasses the loom shim).
+use std::sync::Mutex;
+
+pub fn queue() -> Mutex<Vec<u64>> {
+    Mutex::new(Vec::new())
+}

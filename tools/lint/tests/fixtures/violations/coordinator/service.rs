@@ -1,0 +1,6 @@
+// Fixture: must trip `relaxed-ordering` (snapshot-visible counter).
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+
+pub fn read_completed(completed: &AtomicU64) -> u64 {
+    completed.load(Ordering::Relaxed)
+}

@@ -1,0 +1,11 @@
+// Fixture: must trip `instant-in-solver` (clock read inside the loop).
+use std::time::Instant;
+
+pub fn iterate(n: usize) -> u128 {
+    let mut total = 0;
+    for _ in 0..n {
+        let t = Instant::now();
+        total += t.elapsed().as_nanos();
+    }
+    total
+}

@@ -1,0 +1,4 @@
+// Fixture: must trip `std-sync-in-shimmed` via the thread namespace.
+pub fn nap() {
+    std::thread::yield_now();
+}

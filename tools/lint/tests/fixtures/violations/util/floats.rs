@@ -1,0 +1,4 @@
+// Fixture: must trip `float-sort-unwrap` (NaN panics the comparator).
+pub fn sort_scores(v: &mut Vec<f64>) {
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}

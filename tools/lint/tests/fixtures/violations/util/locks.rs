@@ -1,0 +1,6 @@
+// Fixture: must trip `bare-lock-unwrap` (poison propagates to caller).
+use std::sync::Mutex;
+
+pub fn bump(counter: &Mutex<u64>) {
+    *counter.lock().unwrap() += 1;
+}

@@ -1,0 +1,86 @@
+//! Self-test: the lint must (a) flag every deliberately-violating
+//! fixture, (b) stay silent on the clean fixture tree, and (c) pass on
+//! the real `rust/src` with the checked-in allowlist — so `cargo test -p
+//! lint` alone proves the tool both fires and is currently satisfied.
+
+use std::path::PathBuf;
+
+fn fixtures(sub: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(sub)
+}
+
+#[test]
+fn every_rule_fires_on_the_violations_tree() {
+    let rules = lint::default_rules();
+    let findings =
+        lint::run(&fixtures("violations"), &rules, &lint::Allowlist::default()).unwrap();
+
+    for rule in &rules {
+        assert!(
+            findings.iter().any(|f| f.rule == rule.id),
+            "rule `{}` produced no finding on the violations fixtures",
+            rule.id
+        );
+    }
+
+    // Each fixture file trips exactly the rule it documents.
+    let expected = [
+        ("util/floats.rs", "float-sort-unwrap"),
+        ("util/locks.rs", "bare-lock-unwrap"),
+        ("coordinator/service.rs", "relaxed-ordering"),
+        ("coordinator/scheduler.rs", "std-sync-in-shimmed"),
+        ("solvers/control.rs", "std-sync-in-shimmed"),
+        ("solvers/cg.rs", "instant-in-solver"),
+    ];
+    for (path, rule) in expected {
+        assert!(
+            findings.iter().any(|f| f.path == path && f.rule == rule),
+            "expected `{rule}` finding in {path}; got {findings:#?}"
+        );
+    }
+    assert_eq!(findings.len(), expected.len(), "unexpected extra findings: {findings:#?}");
+
+    // Findings point at real lines.
+    for f in &findings {
+        assert!(f.line >= 1);
+        assert!(f.to_string().contains(&format!("{}:{}: [{}]", f.path, f.line, f.rule)));
+    }
+}
+
+#[test]
+fn clean_tree_is_silent_given_its_allow_entries() {
+    let rules = lint::default_rules();
+    let allow = lint::Allowlist::parse(
+        "relaxed-ordering coordinator/service.rs :: basis_hint\n\
+         instant-in-solver solvers/cg.rs :: let start = Instant::now();\n",
+    )
+    .unwrap();
+    let findings = lint::run(&fixtures("clean"), &rules, &allow).unwrap();
+    assert!(findings.is_empty(), "clean fixtures flagged: {findings:#?}");
+}
+
+#[test]
+fn clean_tree_suppressions_are_load_bearing() {
+    // Without the allow entries, the clean tree's two allowlisted sites
+    // resurface — proving the suppression mechanism (not rule scoping)
+    // is what keeps them quiet.
+    let rules = lint::default_rules();
+    let findings = lint::run(&fixtures("clean"), &rules, &lint::Allowlist::default()).unwrap();
+    let mut ids: Vec<&str> = findings.iter().map(|f| f.rule).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, vec!["instant-in-solver", "relaxed-ordering"], "{findings:#?}");
+}
+
+#[test]
+fn real_tree_passes_with_checked_in_allowlist() {
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let root = manifest.join("../../rust/src");
+    let allow_text = std::fs::read_to_string(manifest.join("allow.list")).unwrap();
+    let allow = lint::Allowlist::parse(&allow_text).unwrap();
+    let findings = lint::run(&root, &lint::default_rules(), &allow).unwrap();
+    assert!(
+        findings.is_empty(),
+        "rust/src violates repo invariants:\n{}",
+        findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+    );
+}
