@@ -10,6 +10,7 @@ use krr::experiments::fig1_spectrum;
 use krr::solvers::ritz::{extract, RitzConfig, RitzSelect};
 use krr::solvers::{self, DenseOp, SolveSpec};
 use krr::util::bench::{BenchConfig, BenchGroup};
+use krr::util::precision::to_f64;
 use krr::util::rng::Rng;
 use krr::linalg::mat::Mat;
 
@@ -39,7 +40,7 @@ fn main() {
     // Harmonic-Ritz extraction alone.
     let mut rng = Rng::new(5);
     let a = Mat::rand_spd(o.n, 1e5, &mut rng);
-    let b: Vec<f64> = (0..o.n).map(|i| 1.0 + (i % 7) as f64).collect();
+    let b: Vec<f64> = (0..o.n).map(|i| 1.0 + to_f64(i % 7)).collect();
     let run = solvers::solve(
         &DenseOp::new(&a),
         &b,

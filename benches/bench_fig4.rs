@@ -9,6 +9,7 @@ use krr::experiments::common::{ExpOpts, Workload};
 use krr::gp::inducing::run_subset;
 use krr::gp::laplace::SolverBackend;
 use krr::util::bench::{BenchConfig, BenchGroup};
+use krr::util::precision::to_f64;
 use krr::util::rng::Rng;
 
 fn main() {
@@ -34,7 +35,7 @@ fn main() {
     let rel = |ll: f64| ((ll - exact).abs() / exact.abs()).max(1e-16);
 
     for frac in [0.05, 0.10, 0.25, 0.50] {
-        let m = ((o.n as f64 * frac) as usize).max(4);
+        let m = ((to_f64(o.n) * frac) as usize).max(4);
         let mut rng = Rng::new(9);
         let res = run_subset(&w.data, &w.kernel, m, o.max_newton, &mut rng);
         println!(

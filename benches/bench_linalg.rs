@@ -13,6 +13,7 @@ use krr::linalg::vec_ops::{axpy, dot};
 use krr::solvers::{DenseOp, ParDenseOp, SpdOperator};
 use krr::util::bench::{BenchConfig, BenchGroup};
 use krr::util::pool::ThreadPool;
+use krr::util::precision::to_f64;
 use krr::util::rng::Rng;
 use std::sync::Arc;
 
@@ -26,10 +27,10 @@ fn main() {
     let a: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
     let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
     let mut c = b.clone();
-    g.bench_with_work("dot", Some(2.0 * n as f64), &mut || {
+    g.bench_with_work("dot", Some(2.0 * to_f64(n)), &mut || {
         std::hint::black_box(dot(&a, &b));
     });
-    g.bench_with_work("axpy", Some(2.0 * n as f64), &mut || {
+    g.bench_with_work("axpy", Some(2.0 * to_f64(n)), &mut || {
         axpy(1.0001, &a, &mut c);
         std::hint::black_box(&c);
     });
@@ -42,7 +43,7 @@ fn main() {
         let m = Mat::rand_spd(n, 1e4, &mut rng);
         let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
         let mut y = vec![0.0; n];
-        g.bench_with_work(&format!("matvec n={n}"), Some(2.0 * (n * n) as f64), &mut || {
+        g.bench_with_work(&format!("matvec n={n}"), Some(2.0 * to_f64(n * n)), &mut || {
             m.matvec_into(&v, &mut y);
             std::hint::black_box(&y);
         });
@@ -52,7 +53,7 @@ fn main() {
         let m2 = Mat::randn(n, n, &mut rng);
         g.bench_with_work(
             &format!("matmul n={n}"),
-            Some(2.0 * (n * n * n) as f64),
+            Some(2.0 * to_f64(n * n * n)),
             &mut || {
                 std::hint::black_box(m1.matmul(&m2));
             },
@@ -62,7 +63,7 @@ fn main() {
         let m = Mat::rand_spd(n, 1e4, &mut rng);
         g.bench_with_work(
             &format!("cholesky n={n}"),
-            Some((n * n * n) as f64 / 3.0),
+            Some(to_f64(n * n * n) / 3.0),
             &mut || {
                 std::hint::black_box(Cholesky::factor(&m).unwrap());
             },
@@ -104,7 +105,7 @@ fn main() {
         let serial = DenseOp::new(&a);
         g.bench_with_work(
             &format!("serial DenseOp n={n}"),
-            Some(2.0 * (n * n) as f64),
+            Some(2.0 * to_f64(n * n)),
             &mut || {
                 serial.matvec(&v, &mut y);
                 std::hint::black_box(&y);
@@ -115,7 +116,7 @@ fn main() {
             let par = ParDenseOp::new(a.clone(), Arc::new(ThreadPool::new(workers)));
             g.bench_with_work(
                 &format!("ParDenseOp n={n} workers={workers}"),
-                Some(2.0 * (n * n) as f64),
+                Some(2.0 * to_f64(n * n)),
                 &mut || {
                     par.matvec(&v, &mut y);
                     std::hint::black_box(&y);
@@ -145,7 +146,7 @@ fn main() {
         for kcols in [4usize, 16, 64] {
             let xs = Mat::randn(n, kcols, &mut rng);
             let mut ys = Mat::zeros(n, kcols);
-            let work = Some(2.0 * (n * n * kcols) as f64);
+            let work = Some(2.0 * to_f64(n * n * kcols));
             let mut col = vec![0.0; n];
             let mut y = vec![0.0; n];
             g.bench_with_work(&format!("matvec-loop DenseOp k={kcols}"), work, &mut || {
@@ -188,7 +189,7 @@ fn main() {
         let k = RbfKernel::new(1.0, 10.0);
         g.bench_with_work(
             &format!("gram n={n}"),
-            Some(2.0 * (n * n) as f64 * 784.0),
+            Some(2.0 * to_f64(n * n) * 784.0),
             &mut || {
                 std::hint::black_box(k.gram(&x));
             },
@@ -197,7 +198,7 @@ fn main() {
         let mut y = vec![0.0; n];
         g.bench_with_work(
             &format!("gram_matvec (matrix-free) n={n}"),
-            Some(2.0 * (n * n) as f64 * 784.0),
+            Some(2.0 * to_f64(n * n) * 784.0),
             &mut || {
                 k.gram_matvec(&x, &v, &mut y);
                 std::hint::black_box(&y);

@@ -24,6 +24,7 @@ use krr::linalg::mat::Mat;
 use krr::solvers::recycle::RecycleConfig;
 use krr::solvers::{SolveSpec, SpdOperator, StopReason};
 use krr::util::json::Json;
+use krr::util::precision::to_f64;
 use krr::util::rng::Rng;
 use krr::util::stats::percentile;
 use std::sync::Arc;
@@ -97,14 +98,14 @@ fn distinct_op_round(workers: usize, shape: &LoadShape) -> RoundOut {
     }
     let span = t0.elapsed().as_secs_f64();
     let snap = svc.metrics().snapshot();
-    let total = (lat_interactive.len() + lat_batch.len()) as f64;
+    let total = to_f64(lat_interactive.len() + lat_batch.len());
     let class = |lats: &[f64]| {
         if lats.is_empty() {
             // An all-one-class draw (tiny smoke runs): no percentiles.
             return Json::obj(vec![("count", Json::num(0.0))]);
         }
         Json::obj(vec![
-            ("count", Json::num(lats.len() as f64)),
+            ("count", Json::num(to_f64(lats.len()))),
             ("p50_seconds", Json::num(percentile(lats, 0.50))),
             ("p99_seconds", Json::num(percentile(lats, 0.99))),
         ])
@@ -113,14 +114,14 @@ fn distinct_op_round(workers: usize, shape: &LoadShape) -> RoundOut {
         solves_per_sec: total / span.max(1e-12),
         span_seconds: span,
         side: Json::obj(vec![
-            ("workers", Json::num(workers as f64)),
-            ("completed", Json::num(snap.completed as f64)),
+            ("workers", Json::num(to_f64(workers))),
+            ("completed", Json::num(to_f64(snap.completed))),
             ("solves_per_sec", Json::num(total / span.max(1e-12))),
             ("span_seconds", Json::num(span)),
             ("busy_seconds", Json::num(snap.busy_seconds)),
             ("utilization", Json::num(snap.utilization())),
-            ("steals", Json::num(snap.steals as f64)),
-            ("total_matvecs", Json::num(snap.total_matvecs as f64)),
+            ("steals", Json::num(to_f64(snap.steals))),
+            ("total_matvecs", Json::num(to_f64(snap.total_matvecs))),
             ("interactive", class(&lat_interactive)),
             ("batch", class(&lat_batch)),
         ]),
@@ -161,14 +162,14 @@ fn shared_op_round(coalesce: bool, n: usize) -> SharedOut {
     }
     let snap = svc.metrics().snapshot();
     SharedOut {
-        matvecs: snap.total_matvecs as f64,
+        matvecs: to_f64(snap.total_matvecs),
         worst_residual: worst,
         side: Json::obj(vec![
             ("coalescing", Json::num(if coalesce { 1.0 } else { 0.0 })),
-            ("total_matvecs", Json::num(snap.total_matvecs as f64)),
-            ("cross_seq_coalesced", Json::num(snap.cross_seq_coalesced as f64)),
+            ("total_matvecs", Json::num(to_f64(snap.total_matvecs))),
+            ("cross_seq_coalesced", Json::num(to_f64(snap.cross_seq_coalesced))),
             ("worst_final_residual", Json::num(worst)),
-            ("completed", Json::num(snap.completed as f64)),
+            ("completed", Json::num(to_f64(snap.completed))),
         ]),
     }
 }
@@ -215,9 +216,9 @@ fn main() {
         (
             "distinct_op",
             Json::obj(vec![
-                ("sequences", Json::num(shape.seqs as f64)),
-                ("requests_per_sequence", Json::num(shape.reqs_per_seq as f64)),
-                ("n", Json::num(shape.n as f64)),
+                ("sequences", Json::num(to_f64(shape.seqs))),
+                ("requests_per_sequence", Json::num(to_f64(shape.reqs_per_seq))),
+                ("n", Json::num(to_f64(shape.n))),
                 ("workers_1", w1.side),
                 ("workers_4", w4.side),
                 ("speedup_4_vs_1", Json::num(speedup)),
@@ -227,7 +228,7 @@ fn main() {
             "shared_op",
             Json::obj(vec![
                 ("sequences", Json::num(8.0)),
-                ("n", Json::num(shared_n as f64)),
+                ("n", Json::num(to_f64(shared_n))),
                 ("coalesced", merged.side),
                 ("uncoalesced", split.side),
                 (

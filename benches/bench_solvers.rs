@@ -11,6 +11,7 @@ use krr::solvers::strategy::StrategyChoice;
 use krr::solvers::{self, DenseOp, SolveSpec};
 use krr::util::bench::{BenchConfig, BenchGroup};
 use krr::util::json::Json;
+use krr::util::precision::{demote, to_f32, to_f64};
 use krr::util::rng::Rng;
 use std::sync::Arc;
 
@@ -21,12 +22,12 @@ fn drifting_systems(n: usize, count: usize, seed: u64) -> Vec<Mat> {
     let a0 = Mat::rand_spd(n, 1e5, &mut rng);
     let mut delta = Mat::randn(n, n, &mut rng);
     delta.symmetrize();
-    delta.scale_in_place(1e-3 / n as f64);
+    delta.scale_in_place(1e-3 / to_f64(n));
     (0..count)
         .map(|i| {
             let mut a = a0.clone();
             let mut d = delta.clone();
-            d.scale_in_place(1.0 / (1.0 + i as f64));
+            d.scale_in_place(1.0 / (1.0 + to_f64(i)));
             a.add_in_place(&d);
             a.add_diag(1e-6);
             a
@@ -45,7 +46,7 @@ fn drifting_systems(n: usize, count: usize, seed: u64) -> Vec<Mat> {
 /// `quarter_budget_loses_at_most_two_iterations_per_system` test.
 fn recycle_memory_report(n: usize) {
     let systems = drifting_systems(n, 5, 9);
-    let b: Vec<f64> = (0..n).map(|i| 1.0 + (i % 7) as f64).collect();
+    let b: Vec<f64> = (0..n).map(|i| 1.0 + to_f64(i % 7)).collect();
     let spec = SolveSpec::defcg().with_tol(1e-6);
     let run = |budget: Option<RecycleBudget>| {
         let mut cfg = RecycleConfig { k: 16, l: 24, ..Default::default() };
@@ -59,9 +60,9 @@ fn recycle_memory_report(n: usize) {
         for a in &systems {
             let r = mgr.solve_next(&DenseOp::new(a), &b, None, &spec);
             assert_eq!(r.stop, krr::solvers::StopReason::Converged);
-            iters.push(r.iterations as f64);
+            iters.push(to_f64(r.iterations));
             matvecs += r.matvecs;
-            bytes.push(mgr.bytes_held() as f64);
+            bytes.push(to_f64(mgr.bytes_held()));
         }
         (iters, bytes, matvecs, mgr.truncations())
     };
@@ -75,21 +76,21 @@ fn recycle_memory_report(n: usize) {
             ("iterations", Json::arr_num(iters)),
             ("bytes_held", Json::arr_num(bytes)),
             ("peak_bytes", Json::num(bytes.iter().cloned().fold(0.0, f64::max))),
-            ("total_matvecs", Json::num(matvecs as f64)),
+            ("total_matvecs", Json::num(to_f64(matvecs))),
         ])
     };
     let doc = Json::obj(vec![
         ("bench", Json::str("recycle_memory")),
-        ("n", Json::num(n as f64)),
-        ("systems", Json::num(systems.len() as f64)),
+        ("n", Json::num(to_f64(n))),
+        ("systems", Json::num(to_f64(systems.len()))),
         ("tol", Json::num(1e-6)),
         ("unbounded", side(&u_iters, &u_bytes, u_matvecs)),
         (
             "bounded",
             Json::obj(vec![
-                ("basis_cols", Json::num(budget.basis_cols(n) as f64)),
-                ("stored_cols", Json::num(budget.stored_cols(n) as f64)),
-                ("truncations", Json::num(b_truncs as f64)),
+                ("basis_cols", Json::num(to_f64(budget.basis_cols(n)))),
+                ("stored_cols", Json::num(to_f64(budget.stored_cols(n)))),
+                ("truncations", Json::num(to_f64(b_truncs))),
                 ("side", side(&b_iters, &b_bytes, b_matvecs)),
             ]),
         ),
@@ -116,7 +117,7 @@ fn recycle_memory_report(n: usize) {
 /// `BENCH_strategy.json` for CI to archive.
 fn strategy_report(n: usize) {
     let systems = drifting_systems(n, 5, 9);
-    let b: Vec<f64> = (0..n).map(|i| 1.0 + (i % 7) as f64).collect();
+    let b: Vec<f64> = (0..n).map(|i| 1.0 + to_f64(i % 7)).collect();
     let spec = SolveSpec::defcg().with_tol(1e-6);
     let strategies = [
         ("harmonic-largest", StrategyChoice::HarmonicLargest),
@@ -138,7 +139,7 @@ fn strategy_report(n: usize) {
         for a in &systems {
             let r = mgr.solve_next(&DenseOp::new(a), &b, None, &spec);
             assert_eq!(r.stop, krr::solvers::StopReason::Converged);
-            iters.push(r.iterations as f64);
+            iters.push(to_f64(r.iterations));
             matvecs += r.matvecs;
         }
         let d = mgr.last_decision();
@@ -149,18 +150,18 @@ fn strategy_report(n: usize) {
         rows.push(Json::obj(vec![
             ("strategy", Json::str(name)),
             ("iterations", Json::arr_num(&iters)),
-            ("total_matvecs", Json::num(matvecs as f64)),
-            ("final_k_active", Json::num(mgr.k_active() as f64)),
-            ("k_offered", Json::num(d.k_offered as f64)),
-            ("k_chosen", Json::num(d.k_chosen as f64)),
+            ("total_matvecs", Json::num(to_f64(matvecs))),
+            ("final_k_active", Json::num(to_f64(mgr.k_active()))),
+            ("k_offered", Json::num(to_f64(d.k_offered))),
+            ("k_chosen", Json::num(to_f64(d.k_chosen))),
             ("predicted_savings", Json::num(d.predicted_savings())),
-            ("strategy_shrinks", Json::num(mgr.strategy_shrinks() as f64)),
+            ("strategy_shrinks", Json::num(to_f64(mgr.strategy_shrinks()))),
         ]));
     }
     let doc = Json::obj(vec![
         ("bench", Json::str("strategy")),
-        ("n", Json::num(n as f64)),
-        ("systems", Json::num(systems.len() as f64)),
+        ("n", Json::num(to_f64(n))),
+        ("systems", Json::num(to_f64(systems.len()))),
         ("tol", Json::num(1e-6)),
         ("k", Json::num(8.0)),
         ("l", Json::num(12.0)),
@@ -184,7 +185,7 @@ fn main() {
     let mut rng = Rng::new(2);
     let n = 512;
     let a = Mat::rand_spd(n, 1e5, &mut rng);
-    let b: Vec<f64> = (0..n).map(|i| 1.0 + (i % 7) as f64).collect();
+    let b: Vec<f64> = (0..n).map(|i| 1.0 + to_f64(i % 7)).collect();
     let op = DenseOp::new(&a);
 
     // Recycled basis for the def-CG cases.
@@ -286,12 +287,12 @@ fn main() {
         let mut rng = Rng::new(9);
         let mut delta = Mat::randn(n, n, &mut rng);
         delta.symmetrize();
-        delta.scale_in_place(1e-3 / n as f64);
+        delta.scale_in_place(1e-3 / to_f64(n));
         let systems: Vec<Mat> = (0..5)
             .map(|i| {
                 let mut ai = a.clone();
                 let mut d = delta.clone();
-                d.scale_in_place(1.0 / (1.0 + i as f64));
+                d.scale_in_place(1.0 / (1.0 + to_f64(i)));
                 ai.add_in_place(&d);
                 ai.add_diag(1e-6);
                 ai
@@ -329,7 +330,7 @@ fn main() {
         let mut data = vec![0.0f32; ne * dim];
         let mut r2 = Rng::new(3);
         for v in data.iter_mut() {
-            *v = (r2.normal() * 0.3) as f32;
+            *v = demote(r2.normal() * 0.3);
         }
         let x = Tensor::mat(ne, dim, data);
         let t0 = std::time::Instant::now();
@@ -338,20 +339,20 @@ fn main() {
             "engine ({backend}): gram_n{ne} built in {:.3}s (pjrt: includes XLA compile)",
             t0.elapsed().as_secs_f64()
         );
-        let v: Vec<f32> = (0..ne).map(|i| (i % 5) as f32 - 2.0).collect();
+        let v: Vec<f32> = (0..ne).map(|i| to_f32(i % 5) - 2.0).collect();
         let s: Vec<f32> = vec![0.5; ne];
         let mut g = BenchGroup::new(&format!("solvers — engine ({backend}) matvec path"))
             .with_config(BenchConfig { warmup: 2, iters: 10, max_seconds: 60.0 });
         g.bench_with_work(
             &format!("engine kmatvec n={ne}"),
-            Some(2.0 * (ne * ne) as f64),
+            Some(2.0 * to_f64(ne * ne)),
             &mut || {
                 std::hint::black_box(ek.kmatvec_f32(&v).unwrap());
             },
         );
         g.bench_with_work(
             &format!("engine amatvec (fused I+SKS) n={ne}"),
-            Some(2.0 * (ne * ne) as f64),
+            Some(2.0 * to_f64(ne * ne)),
             &mut || {
                 std::hint::black_box(ek.amatvec_f32(&s, &v).unwrap());
             },

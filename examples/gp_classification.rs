@@ -24,6 +24,7 @@ use krr::gp::likelihood::Logistic;
 use krr::runtime::engine::{Engine, Tensor};
 use krr::runtime::ops::EngineKernel;
 use krr::solvers::recycle::RecycleConfig;
+use krr::util::precision::to_f64;
 use krr::util::rng::Rng;
 use std::sync::Arc;
 
@@ -38,7 +39,7 @@ fn main() {
     // Dataset: train + held-out test.
     let all = generate(&DigitsConfig { n: n + n / 4, seed: 7, ..Default::default() });
     let mut rng = Rng::new(1);
-    let (train, test) = all.split(n as f64 / all.n() as f64, &mut rng);
+    let (train, test) = all.split(to_f64(n) / to_f64(all.n()), &mut rng);
     let train = krr::data::digits::Digits {
         x: train.x.take_rows(&(0..n.min(train.n())).collect::<Vec<_>>()),
         y: train.y[..n.min(train.n())].to_vec(),
@@ -90,7 +91,7 @@ fn main() {
     let cross = kernel.cross_gram(&train.x, &test.x);
     let f_test = gpc.predict_latent(&cross, &fit);
     let test_acc = accuracy(&test.y, &f_test);
-    let mean_p: f64 = f_test.iter().map(|&f| lik.predict(f)).sum::<f64>() / f_test.len() as f64;
+    let mean_p: f64 = f_test.iter().map(|&f| lik.predict(f)).sum::<f64>() / to_f64(f_test.len());
     println!(
         "\ntrain accuracy = {:.2}%   test accuracy = {:.2}%   mean p(3|x) on test = {:.3}",
         100.0 * train_acc,
@@ -122,5 +123,5 @@ fn report(fit: &LaplaceFit) {
 
 fn accuracy(y: &[f64], f: &[f64]) -> f64 {
     let correct = y.iter().zip(f).filter(|(&yi, &fi)| yi * fi > 0.0).count();
-    correct as f64 / y.len() as f64
+    to_f64(correct) / to_f64(y.len())
 }

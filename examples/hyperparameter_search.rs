@@ -19,6 +19,7 @@ use krr::data::digits::{generate, DigitsConfig};
 use krr::gp::hyper::{grid_search, sigma_grid_search};
 use krr::gp::laplace::SolverBackend;
 use krr::solvers::recycle::RecycleConfig;
+use krr::util::precision::to_f64;
 
 fn main() {
     let n = 200;
@@ -58,7 +59,7 @@ fn main() {
     println!(
         "total inner iterations: cg = {total_cg}, def-cg = {total_def} \
          ({:.0}% saved within each fit's Newton sequence)",
-        100.0 * (total_cg as f64 - total_def as f64) / total_cg as f64
+        100.0 * (to_f64(total_cg) - to_f64(total_def)) / to_f64(total_cg)
     );
     assert_eq!(
         (cg.best.amplitude, cg.best.lengthscale),
@@ -118,7 +119,7 @@ fn main() {
     println!(
         "\nσ-grid totals (points 2..): plain = {tot_plain}, recycled = {tot_rec} \
          ({:.0}% saved, with zero kernel rebuilds either way)",
-        100.0 * (tot_plain as f64 - tot_rec as f64) / tot_plain as f64
+        100.0 * (to_f64(tot_plain) - to_f64(tot_rec)) / to_f64(tot_plain)
     );
     assert!(
         tot_rec < tot_plain,

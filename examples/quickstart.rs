@@ -15,6 +15,7 @@
 use krr::linalg::mat::Mat;
 use krr::solvers::recycle::{RecycleConfig, RecycleManager};
 use krr::solvers::{self, DenseOp, SolveSpec, SpdOperator};
+use krr::util::precision::to_f64;
 use krr::util::rng::Rng;
 
 fn main() {
@@ -32,13 +33,13 @@ fn main() {
         .map(|i| {
             let mut a = a0.clone();
             let mut d = delta.clone();
-            d.scale_in_place(1.0 / (1.0 + i as f64));
+            d.scale_in_place(1.0 / (1.0 + to_f64(i)));
             a.add_in_place(&d);
             a.add_diag(1e-6);
             a
         })
         .collect();
-    let b: Vec<f64> = (0..n).map(|i| 1.0 + ((i * 7) % 11) as f64).collect();
+    let b: Vec<f64> = (0..n).map(|i| 1.0 + to_f64((i * 7) % 11)).collect();
 
     // 1) Plain CG: every system starts from scratch.
     let cg_spec = SolveSpec::cg().with_tol(1e-8);
@@ -108,7 +109,7 @@ fn main() {
     println!(
         "\nrecycling saved {saved} iterations over systems 2..{systems} \
          ({:.0}% of plain CG's work there)",
-        100.0 * saved as f64 / cg_iters.iter().skip(1).sum::<usize>() as f64
+        100.0 * to_f64(saved) / to_f64(cg_iters.iter().skip(1).sum::<usize>())
     );
     assert!(saved > 0, "recycling should save iterations on this workload");
     println!("OK");

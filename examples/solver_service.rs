@@ -21,6 +21,7 @@ use krr::gp::kernel::RbfKernel;
 use krr::linalg::mat::Mat;
 use krr::solvers::recycle::RecycleConfig;
 use krr::solvers::{SolveSpec, SpdOperator, StopReason};
+use krr::util::precision::to_f64;
 use krr::util::rng::Rng;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -63,7 +64,7 @@ fn main() {
     for c in 0..clients {
         // Each client: its own dataset/kernel => its own system sequence.
         let data = generate(&DigitsConfig { n, seed: 50 + c as u64, ..Default::default() });
-        let k = RbfKernel::new(1.0, 8.0 + c as f64).gram(&data.x);
+        let k = RbfKernel::new(1.0, 8.0 + to_f64(c)).gram(&data.x);
         let seq = svc.open_sequence(RecycleConfig { k: 6, l: 10, ..Default::default() });
         let mut rng = Rng::new(c as u64);
 
@@ -72,7 +73,7 @@ fn main() {
         let futures: Vec<_> = (0..systems_per_client)
             .map(|i| {
                 let s: Vec<f64> = (0..n)
-                    .map(|j| 0.5 - 0.02 * (i as f64) + 0.001 * ((j % 10) as f64))
+                    .map(|j| 0.5 - 0.02 * to_f64(i) + 0.001 * to_f64(j % 10))
                     .collect();
                 let op = Arc::new(NewtonOp { k: k.clone(), s });
                 let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
@@ -144,14 +145,14 @@ fn main() {
         let iters: Vec<usize> = futures.into_iter().map(|t| t.wait().iterations).collect();
         let first = iters[0];
         let later: f64 =
-            iters[1..].iter().sum::<usize>() as f64 / (iters.len() - 1) as f64;
+            to_f64(iters[1..].iter().sum::<usize>()) / to_f64(iters.len() - 1);
         println!(
             "client {c}: iterations/system = {iters:?}  (first {first}, later mean \
              {later:.1}, k = {})",
             seq.k_active()
         );
         assert!(
-            later < first as f64,
+            later < to_f64(first),
             "client {c}: recycling gave no benefit"
         );
     }

@@ -157,11 +157,16 @@ impl<C: SchedEntry> SchedCtx<C> {
             }
             let mut q = lock_unpoisoned(q);
             let mut i = 0;
-            while i < q.len() && out.len() < cap {
-                if pred(&q[i]) {
-                    out.push(q.remove(i).expect("index valid under the lock"));
-                } else {
-                    i += 1;
+            while out.len() < cap {
+                match q.get(i) {
+                    None => break,
+                    Some(c) if pred(c) => match q.remove(i) {
+                        Some(core) => out.push(core),
+                        // `get(i)` returned Some under the same lock, so
+                        // `remove(i)` cannot miss; bail rather than spin.
+                        None => break,
+                    },
+                    Some(_) => i += 1,
                 }
             }
         }
@@ -219,7 +224,9 @@ impl<C: SchedEntry> SchedCtx<C> {
                 .position(|c| c.urgent() > 0)
                 .or_else(|| q.iter().position(|c| c.steal_cost() == 0))
                 .unwrap_or(0);
-            let core = q.remove(idx).expect("index valid under the lock");
+            // `idx` came from `position` (or 0 on a non-empty queue)
+            // under this lock, so the remove cannot miss.
+            let Some(core) = q.remove(idx) else { continue };
             drop(q);
             self.steals.fetch_add(1, Ordering::SeqCst);
             (self.on_steal)();

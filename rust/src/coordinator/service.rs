@@ -581,15 +581,18 @@ impl SeqCore {
 
     /// Remove the task at `idx` (caller holds the state lock), keeping
     /// the urgent hint in step. Saturating: the hint is advisory and
-    /// must never underflow-wrap into "everything is urgent".
-    fn take_task(&self, st: &mut SequenceState, idx: usize) -> Task {
-        let task = st.queue.remove(idx).expect("index valid under the lock");
+    /// must never underflow-wrap into "everything is urgent". Returns
+    /// `None` on an out-of-range index; callers derive `idx` under the
+    /// same lock, so a miss means the caller's invariant broke and the
+    /// dispatch turn should stop rather than panic mid-queue.
+    fn take_task(&self, st: &mut SequenceState, idx: usize) -> Option<Task> {
+        let task = st.queue.remove(idx)?;
         if task.spec.priority == Priority::Interactive {
             let _ = self.urgent_hint.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
                 Some(v.saturating_sub(1))
             });
         }
-        task
+        Some(task)
     }
 
     /// Drain the whole queue (caller holds the state lock) — the
@@ -1628,7 +1631,13 @@ fn dispatch_one(
             return;
         }
         let idx = head_idx(&st.queue);
-        let task = core.take_task(&mut st, idx);
+        // `head_idx` indexes a non-empty queue under this same lock, so
+        // the take cannot miss; treat a miss like a drained queue.
+        let Some(task) = core.take_task(&mut st, idx) else {
+            st.scheduled = false;
+            st.inflight.clear();
+            return;
+        };
         st.inflight = vec![task.token.clone()];
         (task, idx)
     };
@@ -1751,15 +1760,14 @@ fn dispatch_one(
                         cursor += 1;
                         continue;
                     }
-                    let next = core.take_task(&mut st, cursor);
-                    tokens.push(next.token.clone());
+                    let Some(next) = core.take_task(&mut st, cursor) else { break };
                     let qs =
                         dequeued.saturating_duration_since(next.submitted_at).as_secs_f64();
-                    match next.payload {
-                        Payload::Block { b, slot } => {
-                            members.push(BlockMember { b, slot, queue_seconds: qs });
-                        }
-                        Payload::Single { .. } => unreachable!(),
+                    // The guard above saw a Block payload at `cursor`
+                    // under this same lock, so this take is that task.
+                    if let Payload::Block { b, slot } = next.payload {
+                        tokens.push(next.token.clone());
+                        members.push(BlockMember { b, slot, queue_seconds: qs });
                     }
                 }
                 st.inflight = tokens.clone();
@@ -1783,7 +1791,9 @@ fn dispatch_one(
                     if pst.queue.is_empty() {
                         return false;
                     }
-                    let head = &pst.queue[head_idx(&pst.queue)];
+                    let Some(head) = pst.queue.get(head_idx(&pst.queue)) else {
+                        return false;
+                    };
                     matches!(&head.payload, Payload::Block { .. })
                         && !head.token.is_cancelled()
                         && same_operator(head.op.as_ref(), op.as_ref())
@@ -1808,17 +1818,16 @@ fn dispatch_one(
                             cursor += 1;
                             continue;
                         }
-                        let next = peer.take_task(&mut pst, cursor);
-                        ptokens.push(next.token.clone());
-                        tokens.push(next.token.clone());
+                        let Some(next) = peer.take_task(&mut pst, cursor) else { break };
                         let qs = dequeued
                             .saturating_duration_since(next.submitted_at)
                             .as_secs_f64();
-                        match next.payload {
-                            Payload::Block { b, slot } => {
-                                members.push(BlockMember { b, slot, queue_seconds: qs });
-                            }
-                            Payload::Single { .. } => unreachable!(),
+                        // Same-lock guard as above: the task at `cursor`
+                        // was verified to carry a Block payload.
+                        if let Payload::Block { b, slot } = next.payload {
+                            ptokens.push(next.token.clone());
+                            tokens.push(next.token.clone());
+                            members.push(BlockMember { b, slot, queue_seconds: qs });
                         }
                     }
                     if ptokens.is_empty() {
@@ -1875,11 +1884,11 @@ fn dispatch_one(
                     for m in members {
                         let cols = m.b.cols();
                         let mut x = Mat::zeros(n, cols);
-                        let mut col_matvecs = Vec::with_capacity(cols);
                         for j in 0..cols {
                             x.set_col(j, &result.x.col(off + j));
-                            col_matvecs.push(result.col_matvecs[off + j]);
                         }
+                        let col_matvecs: Vec<usize> =
+                            result.col_matvecs.iter().skip(off).take(cols).copied().collect();
                         off += cols;
                         let matvecs =
                             col_matvecs.iter().sum::<usize>() + std::mem::take(&mut overhead);
@@ -2019,8 +2028,7 @@ fn sample_post_solve(mg: &RecycleManager) -> PostSolve {
     };
     let absorb = mg.last_absorb();
     let regressed = absorb.post_eviction
-        && h.len() >= 2
-        && h[h.len() - 1].iterations > h[h.len() - 2].iterations;
+        && matches!(h, [.., prev, last] if last.iterations > prev.iterations);
     PostSolve {
         k_active: mg.k_active(),
         absorb,

@@ -1,6 +1,7 @@
 //! Row-major dense matrix with cache-blocked kernels.
 
 use crate::linalg::vec_ops;
+use crate::util::precision;
 use crate::util::rng::Rng;
 use std::fmt;
 
@@ -122,6 +123,15 @@ impl Mat {
 
     pub fn col(&self, j: usize) -> Vec<f64> {
         (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    /// Copy column `j` into `out` — the allocation-free [`Mat::col`],
+    /// for callers reading columns inside solver iteration loops.
+    pub fn col_into(&self, j: usize, out: &mut [f64]) {
+        assert_eq!(out.len(), self.rows);
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = self[(i, j)];
+        }
     }
 
     pub fn set_col(&mut self, j: usize, v: &[f64]) {
@@ -362,15 +372,16 @@ impl Mat {
         m
     }
 
-    /// f32 copy of the buffer (for the XLA boundary).
+    /// f32 copy of the buffer (for the XLA boundary). Goes through
+    /// [`precision::demote`] so the precision loss is explicit.
     pub fn to_f32(&self) -> Vec<f32> {
-        self.data.iter().map(|&x| x as f32).collect()
+        self.data.iter().map(|&x| precision::demote(x)).collect()
     }
 
-    /// Build from an f32 buffer.
+    /// Build from an f32 buffer (exact widening).
     pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Mat {
         assert_eq!(data.len(), rows * cols);
-        Mat { rows, cols, data: data.iter().map(|&x| x as f64).collect() }
+        Mat { rows, cols, data: data.iter().map(|&x| precision::promote(x)).collect() }
     }
 }
 

@@ -392,7 +392,7 @@ pub fn solve_spec(
         let mut shed = false;
         for &j in active {
             let rn = norm2(&r_cols[j]);
-            let mut v = r_cols[j].clone();
+            let mut v = r_cols[j].clone(); // lint:allow(alloc-in-hot-loop) — cold shed path
             for _ in 0..2 {
                 for q in &qcols {
                     let c = dot(q, &v);
@@ -420,8 +420,8 @@ pub fn solve_spec(
                 rk.set_col(t, &r_cols[kj]);
             }
             let coef = Qr::factor(&rk).solve_ls(&r_cols[j]);
-            let mut r_defect = r_cols[j].clone();
-            let mut x_base = x_cols[j].clone();
+            let mut r_defect = r_cols[j].clone(); // lint:allow(alloc-in-hot-loop) — cold path
+            let mut x_base = x_cols[j].clone(); // lint:allow(alloc-in-hot-loop) — cold path
             for (t, &kj) in keep.iter().enumerate() {
                 axpy(-coef[t], &r_cols[kj], &mut r_defect);
                 axpy(-coef[t], &x_cols[kj], &mut x_base);
@@ -460,28 +460,35 @@ pub fn solve_spec(
                 keep.push(j);
                 continue;
             }
-            passengers.push(Passenger { col: j, refs: keep.clone(), coef, x_base, r_defect });
+            let refs = keep.clone(); // lint:allow(alloc-in-hot-loop) — cold shed path
+            passengers.push(Passenger { col: j, refs, coef, x_base, r_defect });
             shed = true;
         }
         (keep, shed)
     };
 
     // Reconstruct every passenger's (x, r) from the current independent
-    // columns, latest drop first so chained dependences resolve.
-    let update_passengers = |passengers: &[Passenger],
-                             x_cols: &mut [Vec<f64>],
-                             r_cols: &mut [Vec<f64>],
-                             rels: &mut [f64]| {
+    // columns, latest drop first so chained dependences resolve. The
+    // rebuild goes through two reused scratch vectors (a passenger's
+    // refs may point at other passenger columns, so the accumulation
+    // cannot alias the column arrays), keeping the per-iteration call
+    // allocation-free.
+    let mut pass_x = vec![0.0; n];
+    let mut pass_r = vec![0.0; n];
+    let mut update_passengers = |passengers: &[Passenger],
+                                 x_cols: &mut [Vec<f64>],
+                                 r_cols: &mut [Vec<f64>],
+                                 rels: &mut [f64]| {
         for p in passengers.iter().rev() {
-            let mut x = p.x_base.clone();
-            let mut r = p.r_defect.clone();
+            pass_x.copy_from_slice(&p.x_base);
+            pass_r.copy_from_slice(&p.r_defect);
             for (t, &j) in p.refs.iter().enumerate() {
-                axpy(p.coef[t], &x_cols[j], &mut x);
-                axpy(p.coef[t], &r_cols[j], &mut r);
+                axpy(p.coef[t], &x_cols[j], &mut pass_x);
+                axpy(p.coef[t], &r_cols[j], &mut pass_r);
             }
-            rels[p.col] = norm2(&r) / denoms[p.col];
-            x_cols[p.col] = x;
-            r_cols[p.col] = r;
+            rels[p.col] = norm2(&pass_r) / denoms[p.col];
+            x_cols[p.col].copy_from_slice(&pass_x);
+            r_cols[p.col].copy_from_slice(&pass_r);
         }
     };
 
@@ -525,22 +532,36 @@ pub fn solve_spec(
         };
     }
 
+    // Deflation split in two so no call site ever re-unwraps the basis:
+    // `defl_mu` builds μ = (WᵀAW)⁻¹ (AW)ᵀ src when a basis is active,
+    // `defl_sub` applies cand −= W μ (both no-ops without a basis).
+    let defl_mu = |src: &[f64]| -> Option<Vec<f64>> {
+        let (d, ch) = (defl_active?, wtaw_ch.as_ref()?);
+        Some(ch.solve(&d.aw.matvec_t(src)))
+    };
+    let defl_sub = |mu: &Option<Vec<f64>>, cand: &mut Vec<f64>| {
+        if let (Some(mu), Some(d)) = (mu, defl_active) {
+            d.w.sub_scaled_cols(mu, cand);
+        }
+    };
     // p₀ = z₀ − W μ₀ per column, μ from z alone (old directions are already
     // deflated) — defcg line 3.
-    let deflect = |z: &[f64]| -> Option<Vec<f64>> {
-        let (d, ch) = (defl_active?, wtaw_ch.as_ref()?);
-        Some(ch.solve(&d.aw.matvec_t(z)))
-    };
     let mut p_cols: Vec<Vec<f64>> = z_cols
         .iter()
         .map(|z| {
             let mut p = z.clone();
-            if let Some(mu) = deflect(z) {
-                defl_active.unwrap().w.sub_scaled_cols(&mu, &mut p);
-            }
+            defl_sub(&defl_mu(z), &mut p);
             p
         })
         .collect();
+    // Q's columns are read out through a reused buffer pool sized for
+    // the widest possible active block, so the hot loop never allocates
+    // column storage. Only the first `a_cnt` entries are live in any
+    // iteration.
+    let mut q_cols: Vec<Vec<f64>> = vec![vec![0.0; n]; s];
+    // Revive scratch for the all-converged-but-a-passenger case (cold
+    // path; hoisted so the loop body allocates no index storage).
+    let mut revive: Vec<usize> = Vec::new();
 
     'outer: for _ in 0..max_iters {
         // Cooperative cancel/deadline check, before the block apply (see
@@ -564,12 +585,14 @@ pub fn solve_spec(
         for &j in &active {
             col_matvecs[j] += 1;
         }
-        let q_cols: Vec<Vec<f64>> = (0..a_cnt).map(|t| qm.col(t)).collect();
+        for (t, qc) in q_cols.iter_mut().take(a_cnt).enumerate() {
+            qm.col_into(t, qc);
+        }
 
         // PᵀAP with breakdown detection: a non-positive or non-finite
         // pivot stops the solve instead of spinning on a least-squares
         // fallback until the iteration cap.
-        let d_gram = gram(&p_cols, &q_cols);
+        let d_gram = gram(&p_cols, &q_cols[..a_cnt]);
         let d_ch = if a_cnt == 1 {
             let d = d_gram[(0, 0)];
             if d <= 0.0 || !d.is_finite() {
@@ -645,8 +668,9 @@ pub fn solve_spec(
             rels[j] = norm2(&r_cols[j]) / denoms[j];
         }
         update_passengers(&passengers, &mut x_cols, &mut r_cols, &mut rels);
-        residuals.push(live_max(&rels, &deferred_flag));
-        if *residuals.last().unwrap() <= cfg.tol {
+        let rel = live_max(&rels, &deferred_flag);
+        residuals.push(rel);
+        if rel <= cfg.tol {
             stop = StopReason::Converged;
             break 'outer;
         }
@@ -656,11 +680,11 @@ pub fn solve_spec(
         }
 
         // Deflation by convergence: freeze finished columns in X and
-        // shrink the active block.
-        let mut new_active: Vec<usize> =
-            active.iter().copied().filter(|&j| rels[j] > cfg.tol).collect();
-        let mut dropped = new_active.len() != a_cnt;
-        if new_active.is_empty() {
+        // shrink the active block (in place, so the hot loop allocates
+        // no index storage).
+        active.retain(|&j| rels[j] > cfg.tol);
+        let mut dropped = active.len() != a_cnt;
+        if active.is_empty() {
             // Every iterated column is at tolerance but a passenger's
             // reconstructed residual is not (moderate amplification below
             // the deferral gate). Re-activate the passenger's *reference*
@@ -670,7 +694,7 @@ pub fn solve_spec(
             // passenger down. `max_iters` and `stall_window` bound the
             // attempt; the rebuilt candidate block is explicitly
             // conjugated against the old directions (drop path below).
-            let mut revive: Vec<usize> = Vec::new();
+            revive.clear();
             for p in &passengers {
                 if rels[p.col] > cfg.tol {
                     for &r in &p.refs {
@@ -686,14 +710,16 @@ pub fn solve_spec(
                 stop = StopReason::Breakdown;
                 break 'outer;
             }
-            new_active = revive;
+            // `active` is empty here, so the swap hands the revived set
+            // over and leaves `revive` empty for its next reuse.
+            std::mem::swap(&mut active, &mut revive);
             dropped = true;
         }
 
-        let mut z_new = apply_precond(&new_active, &r_cols);
-        let mut rz_new = gram_rz(&new_active, &r_cols, &z_new);
+        let mut z_new = apply_precond(&active, &r_cols);
+        let mut rz_new = gram_rz(&active, &r_cols, &z_new);
         let mut rz_new_ch: Option<Cholesky> = None;
-        if new_active.len() > 1 {
+        if active.len() > 1 {
             // Factor RᵀZ and watch its pivots: a residual column that fell
             // (numerically) into the span of the others mid-run shows up
             // as a pivot collapse — often a tiny *positive* pivot rather
@@ -705,7 +731,7 @@ pub fn solve_spec(
             // coalesced duplicate right-hand sides actually live).
             let suspect = match Cholesky::factor(&rz_new) {
                 Ok(ch) => {
-                    let collapsed = (0..new_active.len()).any(|i| {
+                    let collapsed = (0..active.len()).any(|i| {
                         let piv = ch.l()[(i, i)];
                         piv * piv <= 1e-16 * rz_new[(i, i)]
                     });
@@ -716,7 +742,7 @@ pub fn solve_spec(
             };
             if suspect {
                 let (kept, shed) = shed_dependent(
-                    &new_active,
+                    &active,
                     &r_cols,
                     &x_cols,
                     &mut passengers,
@@ -726,10 +752,10 @@ pub fn solve_spec(
                 );
                 if shed {
                     dropped = true;
-                    new_active = kept;
-                    z_new = apply_precond(&new_active, &r_cols);
-                    rz_new = gram_rz(&new_active, &r_cols, &z_new);
-                    rz_new_ch = if new_active.len() > 1 {
+                    active = kept;
+                    z_new = apply_precond(&active, &r_cols);
+                    rz_new = gram_rz(&active, &r_cols, &z_new);
+                    rz_new_ch = if active.len() > 1 {
                         match Cholesky::factor(&rz_new) {
                             Ok(ch) => Some(ch),
                             Err(_) => {
@@ -762,12 +788,18 @@ pub fn solve_spec(
                     m
                 }
                 (Some(ch), _) => ch.solve_mat(&rz_new),
-                (None, _) => unreachable!("a>1 keeps rz factored"),
+                (None, _) => {
+                    // a > 1 keeps rz factored; a missing factor means the
+                    // bookkeeping above broke — fail the solve, never the
+                    // process.
+                    stop = StopReason::Failed;
+                    break 'outer;
+                }
             }
         } else {
-            let k_new = new_active.len();
+            let k_new = active.len();
             let mut qtz = Mat::zeros(a_cnt, k_new);
-            for (i, q) in q_cols.iter().enumerate() {
+            for (i, q) in q_cols.iter().take(a_cnt).enumerate() {
                 for (t, z) in z_new.iter().enumerate() {
                     qtz[(i, t)] = dot(q, z);
                 }
@@ -781,34 +813,39 @@ pub fn solve_spec(
                     m
                 }
                 (Some(ch), _) => ch.solve_mat(&qtz),
-                (None, _) => unreachable!("a>1 keeps PᵀAP factored"),
+                (None, _) => {
+                    // Same invariant as above, for PᵀAP.
+                    stop = StopReason::Failed;
+                    break 'outer;
+                }
             };
             m.scale_in_place(-1.0);
             m
         };
-        let mut p_next: Vec<Vec<f64>> = Vec::with_capacity(new_active.len());
-        for (t, z) in z_new.iter().enumerate() {
-            let mut cand = z.clone();
+        // Deflate the new directions against W. The one-column steady
+        // state deflects z alone — defcg line 11, bitwise (the old
+        // direction is already deflated, so the candidate needs no
+        // correction in exact arithmetic); its μ is taken BEFORE β mixes
+        // the old direction in, which lets each z be consumed as the
+        // candidate buffer instead of cloned. Wider blocks deflect the
+        // FULL candidate: the matrix β mixes columns, which amplifies
+        // round-off drift out of the W-orthogonal complement fast
+        // enough to send residuals growing; re-projecting the whole
+        // candidate pins the drift back every iteration at the same
+        // O(nk) cost.
+        let steady_one = a_cnt == 1 && active.len() == 1;
+        let mut p_next: Vec<Vec<f64>> = Vec::with_capacity(active.len());
+        for (t, z) in z_new.into_iter().enumerate() {
+            let pre_mu = if steady_one { defl_mu(&z) } else { None };
+            let mut cand = z;
             for (i, p) in p_cols.iter().enumerate() {
                 axpy(beta[(i, t)], p, &mut cand);
             }
-            // Deflate the new direction against W. The one-column steady
-            // state deflects z alone — defcg line 11, bitwise (the old
-            // direction is already deflated, so the candidate needs no
-            // correction in exact arithmetic). Wider blocks deflect the
-            // FULL candidate: the matrix β mixes columns, which amplifies
-            // round-off drift out of the W-orthogonal complement fast
-            // enough to send residuals growing; re-projecting the whole
-            // candidate pins the drift back every iteration at the same
-            // O(nk) cost.
-            let mu_src: &[f64] = if a_cnt == 1 && new_active.len() == 1 { z } else { &cand };
-            if let Some(mu) = deflect(mu_src) {
-                defl_active.unwrap().w.sub_scaled_cols(&mu, &mut cand);
-            }
+            let mu = if steady_one { pre_mu } else { defl_mu(&cand) };
+            defl_sub(&mu, &mut cand);
             p_next.push(cand);
         }
         p_cols = p_next;
-        active = new_active;
         rz = rz_new;
         rz_ch = rz_new_ch;
     }

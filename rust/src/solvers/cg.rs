@@ -200,8 +200,9 @@ pub fn solve(
             }
         }
         let rr_new = dot(&r, &r);
-        residuals.push(rr_new.sqrt() / denom);
-        if *residuals.last().unwrap() <= cfg.tol {
+        let rel = rr_new.sqrt() / denom;
+        residuals.push(rel);
+        if rel <= cfg.tol {
             stop = StopReason::Converged;
             break;
         }

@@ -126,7 +126,11 @@ impl Deflation {
         if bytes.len() < 24 || &bytes[..8] != b"KRRDEFL1" {
             return Err("bad magic".into());
         }
-        let rd = |off: usize| u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap()) as usize;
+        let rd = |off: usize| {
+            let mut le = [0u8; 8];
+            le.copy_from_slice(&bytes[off..off + 8]);
+            u64::from_le_bytes(le) as usize
+        };
         let (n, k) = (rd(8), rd(16));
         let need = 24 + 16 * n * k;
         if bytes.len() != need {
@@ -134,9 +138,11 @@ impl Deflation {
         }
         let read_mat = |start: usize| -> crate::linalg::Mat {
             let mut data = Vec::with_capacity(n * k);
+            let mut le = [0u8; 8];
             for i in 0..n * k {
                 let off = start + 8 * i;
-                data.push(f64::from_le_bytes(bytes[off..off + 8].try_into().unwrap()));
+                le.copy_from_slice(&bytes[off..off + 8]);
+                data.push(f64::from_le_bytes(le));
             }
             crate::linalg::Mat::from_vec(n, k, data)
         };
@@ -365,8 +371,9 @@ pub fn solve_precond(
         axpy(-alpha, &ap, &mut r);
         iterations += 1;
         // Convergence is judged on the unpreconditioned residual.
-        residuals.push(norm2(&r) / denom);
-        if *residuals.last().unwrap() <= cfg.tol {
+        let rel = norm2(&r) / denom;
+        residuals.push(rel);
+        if rel <= cfg.tol {
             stop = StopReason::Converged;
             break;
         }

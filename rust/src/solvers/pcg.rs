@@ -136,8 +136,9 @@ pub fn solve_with(
         axpy(alpha, &p, &mut x);
         axpy(-alpha, &ap, &mut r);
         iterations += 1;
-        residuals.push(norm2(&r) / denom);
-        if *residuals.last().unwrap() <= cfg.tol {
+        let rel = norm2(&r) / denom;
+        residuals.push(rel);
+        if rel <= cfg.tol {
             stop = StopReason::Converged;
             break;
         }

@@ -27,6 +27,7 @@ use crate::solvers::defcg::Deflation;
 use crate::solvers::ritz::{self, ExtractFailure, RitzConfig, RitzValue};
 use crate::solvers::strategy::{self, EvalContext, StrategyChoice, StrategyDecision};
 use crate::solvers::{SolveResult, SpdOperator, StopReason, StoredDirections};
+use crate::util::precision::to_f64;
 use std::sync::Arc;
 
 /// Policy for keeping `AW` consistent across systems.
@@ -675,7 +676,7 @@ impl RecycleManager {
                     k_cap: k_offered,
                     refresh: matches!(self.cfg.aw_policy, AwPolicy::Refresh),
                     matvec_seconds: match timing {
-                        Some((s, m)) if m > 0 && s > 0.0 => Some(s / m as f64),
+                        Some((s, m)) if m > 0 && s > 0.0 => Some(s / to_f64(m)),
                         _ => None,
                     },
                     proj_col_seconds: if strat.wants_measurement() {

@@ -49,6 +49,7 @@
 
 use crate::linalg::Mat;
 use crate::solvers::ritz::RitzSelect;
+use crate::util::precision::to_f64;
 use std::fmt;
 use std::sync::Arc;
 
@@ -193,9 +194,9 @@ pub fn projection_overhead_frac(j: usize, ctx: &EvalContext) -> f64 {
     }
     match (ctx.matvec_seconds, ctx.proj_col_seconds) {
         (Some(mv), Some(pc)) if mv > 0.0 && pc > 0.0 && mv.is_finite() && pc.is_finite() => {
-            j as f64 * pc / mv
+            to_f64(j) * pc / mv
         }
-        _ => 2.0 * j as f64 / ctx.n.max(1) as f64,
+        _ => 2.0 * to_f64(j) / to_f64(ctx.n.max(1)),
     }
 }
 
@@ -208,7 +209,7 @@ pub fn evaluate_k(spectrum: &[f64], j: usize, ctx: &EvalContext) -> KChoice {
     let deflated = remaining_kappa(spectrum, j)
         .map(|k| cg_kappa_iters(k, ctx.tol))
         .unwrap_or(1.0);
-    let refresh = if ctx.refresh { j as f64 } else { 0.0 };
+    let refresh = if ctx.refresh { to_f64(j) } else { 0.0 };
     KChoice {
         k: j,
         plain_iters: plain,
@@ -277,7 +278,7 @@ pub fn measure_projection_col_seconds(w: &Mat, aw: &Mat) -> Option<f64> {
         return None;
     }
     let mut rm = Mat::zeros(n, 1);
-    let r: Vec<f64> = (0..n).map(|i| 1.0 + (i % 3) as f64).collect();
+    let r: Vec<f64> = (0..n).map(|i| 1.0 + to_f64(i % 3)).collect();
     rm.set_col(0, &r);
     const REPS: usize = 3;
     let t0 = std::time::Instant::now();
@@ -288,7 +289,7 @@ pub fn measure_projection_col_seconds(w: &Mat, aw: &Mat) -> Option<f64> {
         sink += back[(0, 0)];
     }
     std::hint::black_box(sink);
-    let per_col = t0.elapsed().as_secs_f64() / (REPS * k) as f64;
+    let per_col = t0.elapsed().as_secs_f64() / to_f64(REPS * k);
     (per_col.is_finite() && per_col > 0.0).then_some(per_col)
 }
 

@@ -11,6 +11,7 @@ pub mod cli;
 pub mod json;
 pub mod log;
 pub mod pool;
+pub mod precision;
 pub mod quickprop;
 pub mod rng;
 pub mod stats;

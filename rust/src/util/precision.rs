@@ -1,0 +1,171 @@
+//! Sanctioned float-width conversions.
+//!
+//! The lint's `lossy-cast` rule bans bare `as f32` / `as f64` in
+//! `solvers/`, `linalg/`, `benches/` and `examples/`: an `as` cast is
+//! silent about whether it loses information, and a numerics codebase
+//! accumulates them until nobody can say which ones matter. Every
+//! float-width change in swept code routes through this module instead,
+//! so each conversion states its contract at the call site:
+//!
+//! - [`to_f64`] — lossless-by-construction widening from integer
+//!   counters and sizes (debug-asserted under 2⁵³, where every integer
+//!   is exactly representable).
+//! - [`promote`] — exact f32 → f64 widening (every f32 is an f64).
+//! - [`demote`] / [`to_f32`] — the one *deliberately* lossy direction
+//!   (rounds to nearest f32), for mixed-precision boundaries like the
+//!   XLA/accelerator interface. Grep for these to find every place the
+//!   codebase gives up f64 precision.
+
+/// Integer-like values that widen into `f64` without losing magnitude
+/// information in practice. See [`to_f64`].
+pub trait ToF64 {
+    fn to_f64(self) -> f64;
+}
+
+/// Values that narrow into `f32`. See [`to_f32`].
+pub trait ToF32 {
+    fn to_f32(self) -> f32;
+}
+
+// 2^53: the largest width below which every integer has an exact f64
+// representation. Counters (iterations, matvecs, bytes, lengths) sit
+// far under it; the debug assert documents the contract and catches a
+// future misuse with a genuinely huge value.
+const EXACT_F64: u64 = 1 << 53;
+
+macro_rules! impl_to_f64_int {
+    ($($t:ty),*) => {$(
+        impl ToF64 for $t {
+            #[inline]
+            fn to_f64(self) -> f64 {
+                debug_assert!(
+                    (self as u128) < (EXACT_F64 as u128),
+                    "integer {} exceeds 2^53; f64 can no longer hold it exactly",
+                    self
+                );
+                self as f64 // the sanctioned cast: util/ sits outside the lossy-cast sweep
+            }
+        }
+    )*};
+}
+
+impl_to_f64_int!(u8, u16, u32, u64, usize);
+
+macro_rules! impl_to_f64_sint {
+    ($($t:ty),*) => {$(
+        impl ToF64 for $t {
+            #[inline]
+            fn to_f64(self) -> f64 {
+                debug_assert!(
+                    self.unsigned_abs() as u128 < EXACT_F64 as u128,
+                    "integer {} exceeds 2^53 in magnitude; f64 can no longer hold it exactly",
+                    self
+                );
+                self as f64 // the sanctioned cast: util/ sits outside the lossy-cast sweep
+            }
+        }
+    )*};
+}
+
+impl_to_f64_sint!(i8, i16, i32, i64, isize);
+
+impl ToF64 for f32 {
+    #[inline]
+    fn to_f64(self) -> f64 {
+        f64::from(self)
+    }
+}
+
+impl ToF64 for f64 {
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self
+    }
+}
+
+macro_rules! impl_to_f32_int {
+    ($($t:ty),*) => {$(
+        impl ToF32 for $t {
+            #[inline]
+            fn to_f32(self) -> f32 {
+                self as f32 // the sanctioned cast: util/ sits outside the lossy-cast sweep
+            }
+        }
+    )*};
+}
+
+impl_to_f32_int!(u8, u16, u32, u64, usize, i8, i16, i32, i64, isize);
+
+impl ToF32 for f64 {
+    #[inline]
+    fn to_f32(self) -> f32 {
+        self as f32 // the sanctioned cast: util/ sits outside the lossy-cast sweep
+    }
+}
+
+/// Widen an integer counter/size (or an f32) to `f64`.
+/// Debug-asserts the value sits under 2⁵³ so the widening is exact.
+#[inline]
+pub fn to_f64<T: ToF64>(x: T) -> f64 {
+    x.to_f64()
+}
+
+/// Narrow to `f32`, rounding to nearest. Deliberately lossy — use at
+/// mixed-precision boundaries only.
+#[inline]
+pub fn to_f32<T: ToF32>(x: T) -> f32 {
+    x.to_f32()
+}
+
+/// Exact f32 → f64 widening.
+#[inline]
+pub fn promote(x: f32) -> f64 {
+    f64::from(x)
+}
+
+/// f64 → f32 narrowing, rounding to nearest. The explicit name marks
+/// the precision loss that a bare `as f32` would hide.
+#[inline]
+pub fn demote(x: f64) -> f32 {
+    x as f32 // the sanctioned cast: util/ sits outside the lossy-cast sweep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn integer_widening_is_exact_for_counters() {
+        assert_eq!(to_f64(0usize), 0.0);
+        assert_eq!(to_f64(1usize << 40), (1u64 << 40) as f64);
+        assert_eq!(to_f64(-7i64), -7.0);
+        assert_eq!(to_f64(u32::MAX), 4294967295.0);
+    }
+
+    #[test]
+    fn promote_demote_round_trip_on_f32_values() {
+        for &v in &[0.0f32, 1.5, -3.25, f32::MIN_POSITIVE, 1e30] {
+            assert_eq!(demote(promote(v)), v);
+        }
+    }
+
+    #[test]
+    fn demote_rounds_to_nearest() {
+        // 1 + 2⁻²⁶ is below half an f32 ULP at 1.0 — rounds back to 1.
+        assert_eq!(demote(1.0 + 2f64.powi(-26)), 1.0f32);
+        assert_eq!(to_f32(3usize), 3.0f32);
+    }
+
+    #[test]
+    fn f32_and_f64_widen_losslessly() {
+        assert_eq!(to_f64(0.5f32), 0.5);
+        assert_eq!(to_f64(2.25f64), 2.25);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "exceeds 2^53")]
+    fn widening_a_too_large_counter_panics_in_debug() {
+        let _ = to_f64((1u64 << 53) + 1);
+    }
+}

@@ -1,0 +1,401 @@
+//! A small hand-rolled Rust lexer — just enough token structure for the
+//! scope-aware rules, with one hard guarantee: **round-trip fidelity**.
+//! Concatenating `Tok::text` over `lex(src)` reproduces `src` byte for
+//! byte (property-tested against every file in the repo), so nothing the
+//! downstream region model sees was silently dropped or invented.
+//!
+//! The lexer understands exactly the forms that break naive line
+//! matchers: `//` and nested `/* /* */ */` comments, string literals
+//! with escapes, raw strings `r#"..."#` (any hash depth, plus `b`/`br`
+//! byte forms), char literals vs lifetimes (`'a'` vs `'a`), raw
+//! identifiers (`r#match`), and numeric literals with enough greed to
+//! not swallow `..` ranges. It does **not** try to be rustc: token
+//! *kinds* beyond those are approximate, which is fine — the rules only
+//! rely on the exact classification of comments, strings and idents.
+
+/// Token classes. `Code` is the catch-all for punctuation/operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (the text distinguishes them).
+    Ident,
+    /// `'a` — never opens a char literal.
+    Lifetime,
+    /// `"…"`, `r#"…"#`, `b"…"` — contents are data, not code.
+    Str,
+    /// `'x'`, `'\n'`, `b'x'`.
+    Char,
+    /// Integer/float literal (suffixes included).
+    Num,
+    /// `// …` or `/* … */` (nested); `lint:allow` markers live here.
+    Comment,
+    /// Spaces, tabs, newlines.
+    Whitespace,
+    /// Everything else, one byte at a time (`{`, `}`, `[`, `#`, …).
+    Punct,
+}
+
+/// One token: kind + the exact source slice + 1-based start line.
+#[derive(Debug, Clone, Copy)]
+pub struct Tok<'a> {
+    pub kind: TokKind,
+    pub text: &'a str,
+    pub line: usize,
+}
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_'
+}
+
+fn is_ident_cont(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Tokenize `src`. Total function: any byte sequence produces a token
+/// stream whose concatenation is the input (malformed source degrades to
+/// `Punct` bytes, it never panics and never loses bytes).
+pub fn lex(src: &str) -> Vec<Tok<'_>> {
+    let b = src.as_bytes();
+    let mut toks = Vec::new();
+    let mut i = 0;
+    let mut line = 1;
+    while i < b.len() {
+        let start = i;
+        let start_line = line;
+        let kind = match b[i] {
+            c if c.is_ascii_whitespace() => {
+                while i < b.len() && b[i].is_ascii_whitespace() {
+                    if b[i] == b'\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+                TokKind::Whitespace
+            }
+            b'/' if i + 1 < b.len() && b[i + 1] == b'/' => {
+                while i < b.len() && b[i] != b'\n' {
+                    i += 1;
+                }
+                TokKind::Comment
+            }
+            b'/' if i + 1 < b.len() && b[i + 1] == b'*' => {
+                i += 2;
+                let mut depth = 1usize;
+                while i < b.len() && depth > 0 {
+                    if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == b'*' && i + 1 < b.len() && b[i + 1] == b'/' {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        if b[i] == b'\n' {
+                            line += 1;
+                        }
+                        i += 1;
+                    }
+                }
+                TokKind::Comment
+            }
+            b'"' => {
+                i = scan_string(b, i, &mut line);
+                TokKind::Str
+            }
+            // Raw strings / byte strings / raw idents share prefixes with
+            // plain identifiers, so resolve them before the ident arm.
+            b'r' | b'b' if raw_or_byte_len(b, i).is_some() => {
+                let (kind, end) = scan_prefixed(b, i, &mut line);
+                i = end;
+                kind
+            }
+            b'\'' => {
+                // Char literal vs lifetime: `'` + ident-start + no close
+                // within the literal window is a lifetime (`'a`,
+                // `'outer`); anything with a closing `'` nearby is a
+                // char literal (`'x'`, `'\n'`, `'\u{1F600}'`).
+                match char_literal_len(b, i) {
+                    Some(len) => {
+                        for &c in &b[i..i + len] {
+                            if c == b'\n' {
+                                line += 1;
+                            }
+                        }
+                        i += len;
+                        TokKind::Char
+                    }
+                    None => {
+                        i += 1;
+                        while i < b.len() && is_ident_cont(b[i]) {
+                            i += 1;
+                        }
+                        TokKind::Lifetime
+                    }
+                }
+            }
+            c if is_ident_start(c) => {
+                while i < b.len() && is_ident_cont(b[i]) {
+                    i += 1;
+                }
+                TokKind::Ident
+            }
+            c if c.is_ascii_digit() => {
+                i = scan_number(b, i);
+                TokKind::Num
+            }
+            _ => {
+                i += 1;
+                TokKind::Punct
+            }
+        };
+        toks.push(Tok { kind, text: &src[start..i], line: start_line });
+    }
+    toks
+}
+
+/// Length of a char literal starting at the `'` at `i`, or `None` if it
+/// is a lifetime. Handles `'\''`, `'\\'`, `'\u{…}'` (up to 10 bytes of
+/// escape payload) and multibyte UTF-8 scalar literals.
+fn char_literal_len(b: &[u8], i: usize) -> Option<usize> {
+    debug_assert_eq!(b.get(i), Some(&b'\''));
+    let body = i + 1;
+    if body >= b.len() {
+        return None;
+    }
+    if b[body] == b'\\' {
+        // Escape form: the byte after `\` is payload even when it is a
+        // quote (`'\''`), so the closing-quote search starts past it.
+        if body + 2 > b.len() {
+            return None;
+        }
+        let window = &b[body + 2..b.len().min(body + 12)];
+        return window.iter().position(|&c| c == b'\'').map(|p| p + 4);
+    }
+    if is_ident_start(b[body]) {
+        // `'a'` is a char literal only if the very next byte closes it;
+        // `'abc` (no close) or `'a:` is a lifetime/label.
+        return if b.get(body + 1) == Some(&b'\'') { Some(3) } else { None };
+    }
+    // Non-ident scalar (`'+'`, `' '`, multibyte `'é'`): scan to close.
+    let window = &b[body..b.len().min(body + 8)];
+    window.iter().position(|&c| c == b'\'').map(|p| p + 2)
+}
+
+/// If position `i` starts `r"`, `r#`(raw string or raw ident), `b"`,
+/// `b'`, `br"`, `br#`, return the prefix length, else `None`.
+fn raw_or_byte_len(b: &[u8], i: usize) -> Option<usize> {
+    match b[i] {
+        b'r' => match b.get(i + 1) {
+            Some(b'"') | Some(b'#') => Some(1),
+            _ => None,
+        },
+        b'b' => match b.get(i + 1) {
+            Some(b'"') | Some(b'\'') => Some(1),
+            Some(b'r') => match b.get(i + 2) {
+                Some(b'"') | Some(b'#') => Some(2),
+                _ => None,
+            },
+            _ => None,
+        },
+        _ => None,
+    }
+}
+
+/// Scan a `r…`/`b…`-prefixed literal (or raw identifier) starting at
+/// `i`; returns (kind, end index).
+fn scan_prefixed(b: &[u8], i: usize, line: &mut usize) -> (TokKind, usize) {
+    let p = raw_or_byte_len(b, i).expect("caller checked prefix");
+    let mut j = i + p;
+    match b.get(j) {
+        Some(b'"') => (TokKind::Str, scan_string(b, j, line)),
+        Some(b'\'') => match char_literal_len(b, j) {
+            Some(len) => (TokKind::Char, j + len),
+            None => (TokKind::Punct, j + 1),
+        },
+        Some(b'#') => {
+            // Count hashes: raw string `r##"…"##` or raw ident `r#name`.
+            let mut hashes = 0;
+            while b.get(j) == Some(&b'#') {
+                hashes += 1;
+                j += 1;
+            }
+            if b.get(j) == Some(&b'"') {
+                j += 1;
+                // Scan to `"` followed by `hashes` `#`s.
+                'outer: while j < b.len() {
+                    if b[j] == b'\n' {
+                        *line += 1;
+                    }
+                    if b[j] == b'"' {
+                        let mut k = 0;
+                        while k < hashes {
+                            if b.get(j + 1 + k) != Some(&b'#') {
+                                j += 1;
+                                continue 'outer;
+                            }
+                            k += 1;
+                        }
+                        j += 1 + hashes;
+                        return (TokKind::Str, j);
+                    }
+                    j += 1;
+                }
+                (TokKind::Str, j)
+            } else if hashes == 1 && b.get(j).copied().is_some_and(is_ident_start) {
+                // Raw identifier `r#match`.
+                while j < b.len() && is_ident_cont(b[j]) {
+                    j += 1;
+                }
+                (TokKind::Ident, j)
+            } else {
+                (TokKind::Punct, i + 1)
+            }
+        }
+        _ => (TokKind::Punct, i + 1),
+    }
+}
+
+/// Scan a plain `"…"` string starting at the quote at `i`; returns the
+/// index just past the closing quote (or EOF on unterminated input).
+fn scan_string(b: &[u8], i: usize, line: &mut usize) -> usize {
+    debug_assert_eq!(b.get(i), Some(&b'"'));
+    let mut j = i + 1;
+    while j < b.len() {
+        match b[j] {
+            b'\\' => j += 2,
+            b'"' => return j + 1,
+            b'\n' => {
+                *line += 1;
+                j += 1;
+            }
+            _ => j += 1,
+        }
+    }
+    j.min(b.len())
+}
+
+/// Scan a numeric literal: digits, `_`, hex/suffix alphanumerics, one
+/// `.` only when followed by a digit (so `0..n` stays a range), and an
+/// exponent sign (`1e-3`).
+fn scan_number(b: &[u8], i: usize) -> usize {
+    let mut j = i;
+    let mut seen_dot = false;
+    while j < b.len() {
+        let c = b[j];
+        if c.is_ascii_alphanumeric() || c == b'_' {
+            // `1e-3` / `1E+7`: consume the sign with the exponent.
+            if (c == b'e' || c == b'E')
+                && !b[i..j].iter().any(|&x| x == b'x' || x == b'b' || x == b'o')
+                && matches!(b.get(j + 1), Some(b'+') | Some(b'-'))
+                && b.get(j + 2).is_some_and(|d| d.is_ascii_digit())
+            {
+                j += 2;
+            }
+            j += 1;
+        } else if c == b'.' && !seen_dot && b.get(j + 1).is_some_and(|d| d.is_ascii_digit()) {
+            seen_dot = true;
+            j += 1;
+        } else {
+            break;
+        }
+    }
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(src: &str) -> Vec<Tok<'_>> {
+        let toks = lex(src);
+        let rebuilt: String = toks.iter().map(|t| t.text).collect();
+        assert_eq!(rebuilt, src, "lexer round-trip failed");
+        toks
+    }
+
+    fn kinds_of(src: &str) -> Vec<(TokKind, String)> {
+        roundtrip(src)
+            .into_iter()
+            .filter(|t| t.kind != TokKind::Whitespace)
+            .map(|t| (t.kind, t.text.to_string()))
+            .collect()
+    }
+
+    #[test]
+    fn idents_keywords_puncts() {
+        let ks = kinds_of("fn foo(x: u8) { x + 1 }");
+        assert_eq!(ks[0], (TokKind::Ident, "fn".into()));
+        assert_eq!(ks[1], (TokKind::Ident, "foo".into()));
+        assert!(ks.iter().any(|k| *k == (TokKind::Punct, "{".into())));
+        assert!(ks.iter().any(|k| *k == (TokKind::Num, "1".into())));
+    }
+
+    #[test]
+    fn comments_line_and_nested_block() {
+        let ks = kinds_of("a // tail .unwrap()\nb /* x /* y */ z */ c");
+        assert_eq!(ks[0].0, TokKind::Ident);
+        assert_eq!(ks[1], (TokKind::Comment, "// tail .unwrap()".into()));
+        assert_eq!(ks[3], (TokKind::Comment, "/* x /* y */ z */".into()));
+        assert_eq!(ks[4], (TokKind::Ident, "c".into()));
+    }
+
+    #[test]
+    fn strings_with_escapes_and_embedded_slashes() {
+        let ks = kinds_of(r#"let u = "https://x\" // not a comment"; y"#);
+        assert!(ks.iter().any(|k| k.0 == TokKind::Str));
+        assert_eq!(ks.last().unwrap(), &(TokKind::Ident, "y".into()));
+    }
+
+    #[test]
+    fn raw_strings_any_hash_depth_and_byte_strings() {
+        let ks = kinds_of(r###"let s = r#"has "quotes" and \ "#; t"###);
+        assert!(ks.iter().any(|k| k.0 == TokKind::Str && k.1.starts_with("r#")));
+        assert_eq!(ks.last().unwrap(), &(TokKind::Ident, "t".into()));
+        let ks = kinds_of(r#"let b = b"bytes"; let r = br#"raw"# ; u"#);
+        assert_eq!(ks.iter().filter(|k| k.0 == TokKind::Str).count(), 2);
+    }
+
+    #[test]
+    fn char_literal_vs_lifetime() {
+        let ks = kinds_of("fn f<'a>(c: char) { if c == '\"' { } let q = 'x'; 'outer: loop {} }");
+        assert!(ks.iter().any(|k| *k == (TokKind::Lifetime, "'a".into())));
+        assert!(ks.iter().any(|k| *k == (TokKind::Char, "'\"'".into())));
+        assert!(ks.iter().any(|k| *k == (TokKind::Char, "'x'".into())));
+        assert!(ks.iter().any(|k| *k == (TokKind::Lifetime, "'outer".into())));
+    }
+
+    #[test]
+    fn escaped_char_literals() {
+        let ks = kinds_of(r"let a = '\n'; let b = '\''; let c = '\u{1F600}';");
+        assert_eq!(ks.iter().filter(|k| k.0 == TokKind::Char).count(), 3);
+    }
+
+    #[test]
+    fn numbers_do_not_swallow_ranges() {
+        let ks = kinds_of("for i in 0..n { let x = 1.5e-3; let y = 0xFFu32; }");
+        assert!(ks.iter().any(|k| *k == (TokKind::Num, "0".into())));
+        assert!(ks.iter().any(|k| *k == (TokKind::Num, "1.5e-3".into())));
+        assert!(ks.iter().any(|k| *k == (TokKind::Num, "0xFFu32".into())));
+    }
+
+    #[test]
+    fn raw_identifier() {
+        let ks = kinds_of("let r#type = 3;");
+        assert!(ks.iter().any(|k| *k == (TokKind::Ident, "r#type".into())));
+    }
+
+    #[test]
+    fn line_numbers_track_newlines_everywhere() {
+        let src = "a\n\"two\nline\"\n/* c\nc */ b";
+        let toks = roundtrip(src);
+        let b_tok = toks.iter().find(|t| t.text == "b").unwrap();
+        assert_eq!(b_tok.line, 5);
+    }
+
+    #[test]
+    fn total_on_malformed_input() {
+        // Unterminated constructs must not panic or lose bytes.
+        roundtrip("let s = \"unterminated");
+        roundtrip("let c = '");
+        roundtrip("/* never closed");
+        roundtrip("r###\"never closed");
+    }
+}

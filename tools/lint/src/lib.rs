@@ -2,15 +2,20 @@
 //! reviewers previously policed by hand (see DESIGN.md § Correctness
 //! tooling for the rule table and rationale).
 //!
-//! The engine is deliberately text-based, not AST-based: every rule here
-//! is a *surface* invariant — "this token sequence must not appear in
-//! this region of the tree" — and a line matcher with comment stripping
-//! and a test-region heuristic catches exactly that, with zero
-//! dependencies and sub-second runtime. Anything needing type knowledge
-//! (e.g. "is this `sort_by` on floats?") is written so the cheap
+//! Since PR 10 the engine is token- and scope-aware: a hand-rolled
+//! lexer ([`lexer`], round-trip byte-exact) feeds a brace-tracking
+//! region model ([`regions`]) that knows function boundaries, loop
+//! bodies and `#[cfg(test)]` spans, so rules can say "no panic token in
+//! a *non-test coordinator fn*" or "no allocation in a *solver
+//! iteration loop*" instead of over-approximating per line. It is still
+//! deliberately not AST-based: every rule is a *surface* invariant over
+//! token text in a region, which keeps the tool dependency-free and
+//! sub-second. Anything needing type knowledge is written so the cheap
 //! approximation over-approximates and the `allow.list` carries the
 //! sanctioned exceptions; every suppression is a reviewed line in that
-//! file rather than an invisible non-match.
+//! file rather than an invisible non-match — and a suppression that
+//! stops matching anything is itself an error (stale-suppression),
+//! so exceptions cannot outlive the code they excused.
 //!
 //! Escape hatches, in precedence order:
 //!
@@ -18,13 +23,33 @@
 //!    (for one-off sites whose justification belongs next to the code);
 //! 2. an `allow.list` entry `rule-id path-suffix :: substring` (for
 //!    policy-level exceptions, reviewed centrally);
-//! 3. `skip_tests` rules ignore everything from the conventional
-//!    `#[cfg(test)] mod tests` trailer to end-of-file.
+//! 3. `skip_tests` rules ignore `#[test]` / `#[cfg(test)]` regions.
 
 use std::fmt;
 use std::path::{Path, PathBuf};
 
-/// One lint rule: a line predicate plus where it applies.
+pub mod lexer;
+pub mod regions;
+
+use regions::NONINDEX_KEYWORDS;
+
+/// How a rule selects the lines (or functions) it inspects.
+pub enum RuleKind {
+    /// Plain line predicate over comment/string-stripped text, applied
+    /// everywhere the rule's scope and `skip_tests` admit.
+    Line(fn(&str) -> bool),
+    /// Line predicate restricted to non-test code in the scoped files —
+    /// the coordinator "dispatch path" region.
+    DispatchLine(fn(&str) -> bool),
+    /// Line predicate restricted to `for`/`while`/`loop` bodies of the
+    /// scoped files — the solver per-iteration region.
+    HotLoopLine(fn(&str) -> bool),
+    /// Function-level audit: every `.apply(`/`.apply_block(` call site
+    /// must sit in a fn whose body also touches a matvec counter.
+    MatvecBilling,
+}
+
+/// One lint rule: what to match plus where it applies.
 pub struct Rule {
     /// Stable kebab-case identifier (used in `allow.list` and in the
     /// inline `lint:allow(...)` marker).
@@ -34,10 +59,9 @@ pub struct Rule {
     /// Path substrings (with `/` separators, relative to the scanned
     /// root) this rule applies to; empty = the whole tree.
     pub scopes: &'static [&'static str],
-    /// Skip the trailing `#[cfg(test)] mod tests` region of each file.
+    /// Skip `#[test]` fns and `#[cfg(test)]`-gated regions.
     pub skip_tests: bool,
-    /// Line predicate, applied to comment-stripped line content.
-    pub matches: fn(&str) -> bool,
+    pub kind: RuleKind,
 }
 
 /// One rule violation at a specific `file:line`.
@@ -51,16 +75,72 @@ pub struct Finding {
     pub message: &'static str,
     /// The offending line, trimmed (for the human reading the log).
     pub text: String,
+    /// Innermost enclosing named function ("" at module scope).
+    pub function: String,
+    /// Region kind: "loop", "fn", "test" or "file".
+    pub region: &'static str,
 }
 
 impl fmt::Display for Finding {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(
-            f,
-            "{}:{}: [{}] {}\n    {}",
-            self.path, self.line, self.rule, self.message, self.text
-        )
+        write!(f, "{}:{}: [{}]", self.path, self.line, self.rule)?;
+        if self.function.is_empty() {
+            write!(f, " ({})", self.region)?;
+        } else {
+            write!(f, " (fn {}, {})", self.function, self.region)?;
+        }
+        write!(f, " {}\n    {}", self.message, self.text)
     }
+}
+
+fn panic_tokens(l: &str) -> bool {
+    l.contains(".unwrap()")
+        || l.contains(".expect(")
+        || l.contains("panic!")
+        || l.contains("unreachable!")
+        || l.contains("todo!(")
+        || l.contains("unimplemented!")
+}
+
+fn alloc_tokens(l: &str) -> bool {
+    l.contains("Vec::new")
+        || l.contains("vec![")
+        || l.contains(".clone()")
+        || l.contains(".collect(")
+        || l.contains(".collect::<")
+}
+
+fn lossy_cast(l: &str) -> bool {
+    l.contains(" as f32") || l.contains(" as f64")
+}
+
+/// Bare slice/array indexing: a `[` directly following an identifier
+/// (that is not a keyword introducing an array type/pattern/literal) or
+/// a closing `)` / `]`. `#[attr]`, `vec![…]`, `let [a, b] = …`,
+/// `[0u8; 8]` and `Vec<[f64; 4]>` all stay clean.
+fn bare_index(l: &str) -> bool {
+    let b = l.as_bytes();
+    for i in 1..b.len() {
+        if b[i] != b'[' {
+            continue;
+        }
+        let p = b[i - 1];
+        if p == b')' || p == b']' {
+            return true;
+        }
+        if p.is_ascii_alphanumeric() || p == b'_' {
+            let mut s = i;
+            while s > 0 && (b[s - 1].is_ascii_alphanumeric() || b[s - 1] == b'_') {
+                s -= 1;
+            }
+            let word = &l[s..i];
+            let numeric = word.bytes().next().is_some_and(|c| c.is_ascii_digit());
+            if !numeric && !NONINDEX_KEYWORDS.contains(&word) {
+                return true;
+            }
+        }
+    }
+    false
 }
 
 /// The repo's rule set. IDs are load-bearing: `allow.list`, inline
@@ -73,7 +153,7 @@ pub fn default_rules() -> Vec<Rule> {
                       use total_cmp (and decide where NaN should sort)",
             scopes: &[],
             skip_tests: false,
-            matches: |l| l.contains("partial_cmp") && l.contains(".unwrap()"),
+            kind: RuleKind::Line(|l| l.contains("partial_cmp") && l.contains(".unwrap()")),
         },
         Rule {
             id: "bare-lock-unwrap",
@@ -82,11 +162,11 @@ pub fn default_rules() -> Vec<Rule> {
                       logs the call site)",
             scopes: &[],
             skip_tests: false,
-            matches: |l| {
+            kind: RuleKind::Line(|l| {
                 l.contains(".lock().unwrap()")
                     || l.contains(".read().unwrap()")
                     || l.contains(".write().unwrap()")
-            },
+            }),
         },
         Rule {
             id: "relaxed-ordering",
@@ -95,7 +175,7 @@ pub fn default_rules() -> Vec<Rule> {
                       allow.list)",
             scopes: &["coordinator/scheduler.rs", "coordinator/service.rs"],
             skip_tests: true,
-            matches: |l| l.contains("Ordering::Relaxed"),
+            kind: RuleKind::Line(|l| l.contains("Ordering::Relaxed")),
         },
         Rule {
             id: "std-sync-in-shimmed",
@@ -103,7 +183,7 @@ pub fn default_rules() -> Vec<Rule> {
                       so the loom build model-checks the shipped code",
             scopes: &["coordinator/scheduler.rs", "coordinator/service.rs", "solvers/control.rs"],
             skip_tests: true,
-            matches: |l| l.contains("std::sync") || l.contains("std::thread"),
+            kind: RuleKind::Line(|l| l.contains("std::sync") || l.contains("std::thread")),
         },
         Rule {
             id: "instant-in-solver",
@@ -111,7 +191,62 @@ pub fn default_rules() -> Vec<Rule> {
                       loop — time at kernel entry only (sanctioned sites live in allow.list)",
             scopes: &["solvers/"],
             skip_tests: true,
-            matches: |l| l.contains("Instant::now"),
+            kind: RuleKind::Line(|l| l.contains("Instant::now")),
+        },
+        Rule {
+            id: "panic-in-dispatch",
+            message: "panic path (unwrap/expect/panic!/unreachable!) inside a coordinator \
+                      dispatch fn turns one bad request into a corrupted worker turn — \
+                      return the error (let-else / Option) or justify the invariant in \
+                      allow.list",
+            scopes: &["coordinator/scheduler.rs", "coordinator/service.rs"],
+            skip_tests: true,
+            kind: RuleKind::DispatchLine(panic_tokens),
+        },
+        Rule {
+            id: "index-in-dispatch",
+            message: "bare slice indexing in a coordinator dispatch fn is a hidden panic \
+                      path — use .get()/let-else, a slice pattern, or justify the bound in \
+                      allow.list",
+            scopes: &["coordinator/scheduler.rs", "coordinator/service.rs"],
+            skip_tests: true,
+            kind: RuleKind::DispatchLine(bare_index),
+        },
+        Rule {
+            id: "panic-in-hot-loop",
+            message: "panic path inside a solver iteration loop aborts the solve mid-\
+                      recurrence — hoist the check out of the loop or fail with \
+                      StopReason::Failed",
+            scopes: &["solvers/cg.rs", "solvers/pcg.rs", "solvers/defcg.rs", "solvers/blockcg.rs"],
+            skip_tests: true,
+            kind: RuleKind::HotLoopLine(panic_tokens),
+        },
+        Rule {
+            id: "alloc-in-hot-loop",
+            message: "allocation (Vec::new/vec!/clone/collect) inside a solver iteration \
+                      loop — preallocate scratch outside the loop (sanctioned bounded \
+                      stores live in allow.list)",
+            scopes: &["solvers/cg.rs", "solvers/pcg.rs", "solvers/defcg.rs", "solvers/blockcg.rs"],
+            skip_tests: true,
+            kind: RuleKind::HotLoopLine(alloc_tokens),
+        },
+        Rule {
+            id: "matvec-billing",
+            message: "operator application in a fn that never touches a matvec counter \
+                      (matvecs/col_matvecs/CounterBaseline) — bill the apply or document \
+                      the caller that does in allow.list",
+            scopes: &["solvers/"],
+            skip_tests: true,
+            kind: RuleKind::MatvecBilling,
+        },
+        Rule {
+            id: "lossy-cast",
+            message: "raw `as f32`/`as f64` cast — route through util::precision \
+                      (to_f64/demote/promote) so precision loss is explicit and auditable \
+                      ahead of the mixed-precision work",
+            scopes: &["solvers/", "linalg/", "benches/", "examples/"],
+            skip_tests: true,
+            kind: RuleKind::Line(lossy_cast),
         },
     ]
 }
@@ -122,6 +257,8 @@ pub struct AllowEntry {
     pub rule: String,
     pub path_suffix: String,
     pub substring: String,
+    /// 1-based line in allow.list (0 for programmatic entries).
+    pub line: usize,
 }
 
 /// Parsed `allow.list`: `#` comments and blank lines are skipped; every
@@ -161,159 +298,368 @@ impl Allowlist {
                 rule: rule.to_string(),
                 path_suffix: path_suffix.to_string(),
                 substring: substring.to_string(),
+                line: i + 1,
             });
         }
         Ok(Allowlist { entries })
     }
 
-    /// Is this (rule, file, line) combination sanctioned?
-    pub fn allows(&self, rule: &str, path: &str, line_text: &str) -> bool {
-        self.entries.iter().any(|e| {
+    /// Index of the first entry sanctioning this (rule, file, line).
+    pub fn match_idx(&self, rule: &str, path: &str, line_text: &str) -> Option<usize> {
+        self.entries.iter().position(|e| {
             e.rule == rule && path.ends_with(&e.path_suffix) && line_text.contains(&e.substring)
         })
     }
+
+    /// Is this (rule, file, line) combination sanctioned?
+    pub fn allows(&self, rule: &str, path: &str, line_text: &str) -> bool {
+        self.match_idx(rule, path, line_text).is_some()
+    }
 }
 
-/// Strip comments and string-literal *contents* from one line of Rust
-/// source: `//` inside a string (e.g. a URL) does not truncate, `"`
-/// inside a char literal or comment does not open a string, and what a
-/// string says is data, not code. `in_block` carries `/* ... */` state
-/// across lines. The result is what rules match on, so prose *about* a
-/// forbidden pattern — doc comments in `ritz.rs` discuss the old
-/// `partial_cmp` sort, log messages may quote an API — can never trip a
-/// rule.
-pub fn strip_comments(line: &str, in_block: &mut bool) -> String {
-    let bytes = line.as_bytes();
-    let mut out = String::with_capacity(line.len());
-    let mut i = 0;
-    let mut in_string = false;
-    while i < bytes.len() {
-        if *in_block {
-            if bytes[i] == b'*' && i + 1 < bytes.len() && bytes[i + 1] == b'/' {
-                *in_block = false;
-                i += 2;
-            } else {
-                i += 1;
-            }
-            continue;
+/// One inline `lint:allow(rule)` marker seen during a scan.
+#[derive(Debug, Clone)]
+pub struct MarkerUse {
+    pub path: String,
+    pub line: usize,
+    pub rule: String,
+    /// Did it actually suppress a matching finding this run?
+    pub used: bool,
+}
+
+/// Suppression bookkeeping across one or more scanned roots, for the
+/// stale-suppression check.
+#[derive(Debug, Default)]
+pub struct SuppressionUse {
+    /// Parallel to `Allowlist::entries`.
+    pub allow_used: Vec<bool>,
+    pub markers: Vec<MarkerUse>,
+}
+
+impl SuppressionUse {
+    pub fn for_allowlist(allow: &Allowlist) -> SuppressionUse {
+        SuppressionUse { allow_used: vec![false; allow.entries.len()], markers: Vec::new() }
+    }
+
+    fn record_allow_use(&mut self, idx: usize) {
+        if let Some(slot) = self.allow_used.get_mut(idx) {
+            *slot = true;
         }
-        let c = bytes[i];
-        if in_string {
-            if c == b'\\' && i + 1 < bytes.len() {
-                i += 2;
-                continue;
-            }
-            if c == b'"' {
-                out.push('"');
-                in_string = false;
-            }
-            i += 1;
-            continue;
-        }
-        match c {
-            b'"' => {
-                in_string = true;
-                out.push('"');
-                i += 1;
-            }
-            b'\'' => {
-                // Char literal ('x', '\n', '\'') vs lifetime ('a in
-                // generics): a literal closes within a few bytes; a
-                // lifetime has no closing quote. Only literals may
-                // contain `"` or `/`, so only they need skipping.
-                let lit_len = if i + 2 < bytes.len() && bytes[i + 1] == b'\\' {
-                    // '\x' escape forms; find the closing quote.
-                    bytes[i + 2..].iter().take(6).position(|&b| b == b'\'').map(|p| p + 3)
-                } else if i + 2 < bytes.len() && bytes[i + 2] == b'\'' {
-                    Some(3)
-                } else {
-                    None
-                };
-                match lit_len {
-                    Some(len) => {
-                        for &b in &bytes[i..i + len] {
-                            out.push(b as char);
-                        }
-                        i += len;
-                    }
-                    None => {
-                        out.push('\'');
-                        i += 1;
-                    }
-                }
-            }
-            b'/' if i + 1 < bytes.len() && bytes[i + 1] == b'/' => break,
-            b'/' if i + 1 < bytes.len() && bytes[i + 1] == b'*' => {
-                *in_block = true;
-                i += 2;
-            }
-            _ => {
-                out.push(c as char);
-                i += 1;
+    }
+
+    fn record_marker_use(&mut self, path: &str, line: usize, rule: &str) {
+        for m in self.markers.iter_mut() {
+            if m.line == line && m.rule == rule && m.path == path {
+                m.used = true;
             }
         }
     }
-    out
 }
 
-/// First line (0-based) of the conventional trailing test region: a
-/// `#[cfg(test)]` / `#[cfg(all(test, ...))]` attribute. Everything from
-/// there to EOF is "tests" for `skip_tests` rules — the repo keeps unit
-/// tests in one trailing `mod tests` per file, which this leans on.
-pub fn test_region_start(lines: &[&str]) -> usize {
-    lines
-        .iter()
-        .position(|l| {
-            let t = l.trim_start();
-            t.starts_with("#[cfg(test)]") || t.starts_with("#[cfg(all(test")
-        })
-        .unwrap_or(lines.len())
+/// Accumulated result of scanning one or more roots with one allowlist.
+#[derive(Debug)]
+pub struct ScanOutcome {
+    pub findings: Vec<Finding>,
+    pub suppressions: SuppressionUse,
 }
+
+impl ScanOutcome {
+    pub fn new(allow: &Allowlist) -> ScanOutcome {
+        ScanOutcome { findings: Vec::new(), suppressions: SuppressionUse::for_allowlist(allow) }
+    }
+}
+
+/// Comment/string-stripped view of the source, one entry per line:
+/// comments blank out to spaces, string/char contents vanish (their
+/// delimiters remain), code passes through verbatim. Rules match on
+/// this, so prose *about* a forbidden pattern can never trip one.
+pub fn stripped_lines(src: &str) -> Vec<String> {
+    let mut out = String::with_capacity(src.len());
+    for t in lexer::lex(src) {
+        match t.kind {
+            lexer::TokKind::Comment => {
+                out.extend(t.text.chars().map(|c| if c == '\n' { '\n' } else { ' ' }));
+            }
+            lexer::TokKind::Str => {
+                out.push('"');
+                out.extend(t.text.chars().filter(|&c| c == '\n'));
+                out.push('"');
+            }
+            lexer::TokKind::Char => out.push_str("''"),
+            _ => out.push_str(t.text),
+        }
+    }
+    out.lines().map(str::to_string).collect()
+}
+
+/// Collect every `lint:allow(rule)` marker in the file into the tracker.
+fn collect_markers(rel_path: &str, raw_lines: &[&str], use_track: &mut SuppressionUse) {
+    for (idx, raw) in raw_lines.iter().enumerate() {
+        let mut rest = *raw;
+        while let Some(pos) = rest.find("lint:allow(") {
+            let tail = &rest[pos + "lint:allow(".len()..];
+            if let Some(close) = tail.find(')') {
+                use_track.markers.push(MarkerUse {
+                    path: rel_path.to_string(),
+                    line: idx + 1,
+                    rule: tail[..close].trim().to_string(),
+                    used: false,
+                });
+                rest = &tail[close + 1..];
+            } else {
+                break;
+            }
+        }
+    }
+}
+
+/// Names exempt from the billing audit: trait-impl delegation wrappers
+/// whose whole body *is* the apply (the counter lives in their caller).
+const BILLING_EXEMPT_FNS: &[&str] = &["apply", "apply_block"];
+
+const BILLING_CALL_TOKENS: &[&str] = &[".apply(", ".apply_block("];
+const BILLING_COUNTER_TOKENS: &[&str] = &["matvecs", "CounterBaseline"];
 
 /// Lint one file's content. `rel_path` is `/`-separated, relative to the
-/// scanned root.
+/// scanned root. Suppression usage is recorded into `use_track`.
+pub fn check_content_tracked(
+    rel_path: &str,
+    content: &str,
+    rules: &[Rule],
+    allow: &Allowlist,
+    use_track: &mut SuppressionUse,
+) -> Vec<Finding> {
+    let raw_lines: Vec<&str> = content.lines().collect();
+    let stripped = stripped_lines(content);
+    let file_regions = regions::analyze(content);
+    collect_markers(rel_path, &raw_lines, use_track);
+
+    let mut findings = Vec::new();
+    let mut suppress = |rule_id: &'static str,
+                        raw: &str,
+                        line_no: usize,
+                        use_track: &mut SuppressionUse|
+     -> bool {
+        if raw.contains(&format!("lint:allow({rule_id})")) {
+            use_track.record_marker_use(rel_path, line_no, rule_id);
+            return true;
+        }
+        if let Some(idx) = allow.match_idx(rule_id, rel_path, raw) {
+            use_track.record_allow_use(idx);
+            return true;
+        }
+        false
+    };
+    let region_of = |info: &regions::LineInfo| -> &'static str {
+        if info.in_test {
+            "test"
+        } else if info.in_loop {
+            "loop"
+        } else if info.function.is_some() {
+            "fn"
+        } else {
+            "file"
+        }
+    };
+
+    for rule in rules {
+        if !rule.scopes.is_empty() && !rule.scopes.iter().any(|s| rel_path.contains(s)) {
+            continue;
+        }
+        match rule.kind {
+            RuleKind::Line(pred) | RuleKind::DispatchLine(pred) | RuleKind::HotLoopLine(pred) => {
+                for (idx, line) in stripped.iter().enumerate() {
+                    if line.trim().is_empty() {
+                        continue;
+                    }
+                    let info = file_regions.line(idx + 1);
+                    if rule.skip_tests && info.in_test {
+                        continue;
+                    }
+                    match rule.kind {
+                        RuleKind::HotLoopLine(_) if !info.in_loop => continue,
+                        RuleKind::DispatchLine(_) if info.function.is_none() => continue,
+                        _ => {}
+                    }
+                    if !pred(line) {
+                        continue;
+                    }
+                    let raw = raw_lines.get(idx).copied().unwrap_or("");
+                    if suppress(rule.id, raw, idx + 1, use_track) {
+                        continue;
+                    }
+                    findings.push(Finding {
+                        path: rel_path.to_string(),
+                        line: idx + 1,
+                        rule: rule.id,
+                        message: rule.message,
+                        text: raw.trim().to_string(),
+                        function: info.function.clone().unwrap_or_default(),
+                        region: region_of(&info),
+                    });
+                }
+            }
+            RuleKind::MatvecBilling => {
+                billing_audit(
+                    rel_path,
+                    &raw_lines,
+                    &stripped,
+                    &file_regions,
+                    rule,
+                    &mut findings,
+                    &mut |id, raw, line, track| suppress(id, raw, line, track),
+                    use_track,
+                );
+            }
+        }
+    }
+    findings
+}
+
+/// The matvec-billing audit: group lines by their innermost named fn;
+/// any fn containing an operator application must also mention a
+/// counter somewhere in its body.
+#[allow(clippy::too_many_arguments)]
+fn billing_audit(
+    rel_path: &str,
+    raw_lines: &[&str],
+    stripped: &[String],
+    file_regions: &regions::FileRegions,
+    rule: &Rule,
+    findings: &mut Vec<Finding>,
+    suppress: &mut dyn FnMut(&'static str, &str, usize, &mut SuppressionUse) -> bool,
+    use_track: &mut SuppressionUse,
+) {
+    use std::collections::BTreeMap;
+    // fn name → (first call-site line, body mentions counter).
+    let mut per_fn: BTreeMap<String, (Option<usize>, bool)> = BTreeMap::new();
+    for (idx, line) in stripped.iter().enumerate() {
+        let info = file_regions.line(idx + 1);
+        if info.in_test {
+            continue;
+        }
+        let Some(name) = info.function else { continue };
+        if BILLING_EXEMPT_FNS.contains(&name.as_str()) {
+            continue;
+        }
+        let entry = per_fn.entry(name).or_insert((None, false));
+        if entry.0.is_none() && BILLING_CALL_TOKENS.iter().any(|t| line.contains(t)) {
+            entry.0 = Some(idx + 1);
+        }
+        if BILLING_COUNTER_TOKENS.iter().any(|t| line.contains(t)) {
+            entry.1 = true;
+        }
+    }
+    for (name, (call_line, billed)) in per_fn {
+        let (Some(line_no), false) = (call_line, billed) else { continue };
+        let raw = raw_lines.get(line_no - 1).copied().unwrap_or("");
+        if suppress(rule.id, raw, line_no, use_track) {
+            continue;
+        }
+        findings.push(Finding {
+            path: rel_path.to_string(),
+            line: line_no,
+            rule: rule.id,
+            message: rule.message,
+            text: raw.trim().to_string(),
+            function: name,
+            region: "fn",
+        });
+    }
+}
+
+/// Lint one file's content without suppression tracking (convenience
+/// for tests and one-shot callers).
 pub fn check_content(
     rel_path: &str,
     content: &str,
     rules: &[Rule],
     allow: &Allowlist,
 ) -> Vec<Finding> {
-    let lines: Vec<&str> = content.lines().collect();
-    let test_start = test_region_start(&lines);
-    let mut in_block = false;
-    let mut findings = Vec::new();
-    for (idx, raw) in lines.iter().enumerate() {
-        let stripped = strip_comments(raw, &mut in_block);
-        if stripped.trim().is_empty() {
+    let mut track = SuppressionUse::for_allowlist(allow);
+    check_content_tracked(rel_path, content, rules, allow, &mut track)
+}
+
+/// After scanning everything, convert unused suppressions into findings:
+/// an `allow.list` entry or inline marker that excused nothing this run
+/// must be deleted (or the run passed `--allow-stale` mid-refactor).
+pub fn stale_suppressions(outcome: &ScanOutcome, allow: &Allowlist) -> Vec<Finding> {
+    let mut stale = Vec::new();
+    for (idx, entry) in allow.entries.iter().enumerate() {
+        if outcome.suppressions.allow_used.get(idx).copied().unwrap_or(false) {
             continue;
         }
-        for rule in rules {
-            if !rule.scopes.is_empty() && !rule.scopes.iter().any(|s| rel_path.contains(s)) {
-                continue;
-            }
-            if rule.skip_tests && idx >= test_start {
-                continue;
-            }
-            if !(rule.matches)(&stripped) {
-                continue;
-            }
-            // The inline marker lives in a comment, so consult the RAW line.
-            if raw.contains(&format!("lint:allow({})", rule.id)) {
-                continue;
-            }
-            if allow.allows(rule.id, rel_path, raw) {
-                continue;
-            }
-            findings.push(Finding {
-                path: rel_path.to_string(),
-                line: idx + 1,
-                rule: rule.id,
-                message: rule.message,
-                text: raw.trim().to_string(),
-            });
+        stale.push(Finding {
+            path: "allow.list".to_string(),
+            line: entry.line,
+            rule: "stale-suppression",
+            message: "allow.list entry matched nothing this run — delete it (or pass \
+                      --allow-stale mid-refactor)",
+            text: format!("{} {} :: {}", entry.rule, entry.path_suffix, entry.substring),
+            function: String::new(),
+            region: "file",
+        });
+    }
+    for m in &outcome.suppressions.markers {
+        if m.used {
+            continue;
+        }
+        stale.push(Finding {
+            path: m.path.clone(),
+            line: m.line,
+            rule: "stale-suppression",
+            message: "inline lint:allow marker suppressed nothing this run — delete it \
+                      (or pass --allow-stale mid-refactor)",
+            text: format!("lint:allow({})", m.rule),
+            function: String::new(),
+            region: "file",
+        });
+    }
+    stale
+}
+
+/// Escape a string for a JSON string literal (hand-rolled: the tool is
+/// dependency-free on purpose).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
         }
     }
-    findings
+    out
+}
+
+/// Machine-readable diagnostics: `{"count":N,"findings":[…]}` with rule
+/// id, file:line, function name and region kind per finding.
+pub fn findings_to_json(findings: &[Finding]) -> String {
+    let mut out = String::from("{\"count\":");
+    out.push_str(&findings.len().to_string());
+    out.push_str(",\"findings\":[");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"rule\":\"{}\",\"path\":\"{}\",\"line\":{},\"function\":\"{}\",\
+             \"region\":\"{}\",\"message\":\"{}\",\"text\":\"{}\"}}",
+            json_escape(f.rule),
+            json_escape(&f.path),
+            f.line,
+            json_escape(&f.function),
+            json_escape(f.region),
+            json_escape(f.message),
+            json_escape(&f.text)
+        ));
+    }
+    out.push_str("]}");
+    out
 }
 
 /// All `.rs` files under `root`, as `(absolute, root-relative)` pairs,
@@ -327,7 +673,7 @@ pub fn walk(root: &Path) -> std::io::Result<Vec<(PathBuf, String)>> {
             } else if path.extension().is_some_and(|e| e == "rs") {
                 let rel = path
                     .strip_prefix(root)
-                    .expect("walked path is under root")
+                    .unwrap_or(&path)
                     .components()
                     .map(|c| c.as_os_str().to_string_lossy())
                     .collect::<Vec<_>>()
@@ -343,14 +689,33 @@ pub fn walk(root: &Path) -> std::io::Result<Vec<(PathBuf, String)>> {
     Ok(out)
 }
 
-/// Lint every `.rs` file under `root` with the given rules + allowlist.
-pub fn run(root: &Path, rules: &[Rule], allow: &Allowlist) -> std::io::Result<Vec<Finding>> {
-    let mut findings = Vec::new();
+/// Scan every `.rs` file under `root` into `outcome`, with `prefix`
+/// prepended to each relative path (so multi-root scans — `rust/src`,
+/// `benches`, `examples` — report repo-relative paths and rule scopes
+/// distinguish the roots).
+pub fn scan_root(
+    root: &Path,
+    prefix: &str,
+    rules: &[Rule],
+    allow: &Allowlist,
+    outcome: &mut ScanOutcome,
+) -> std::io::Result<()> {
     for (path, rel) in walk(root)? {
+        let rel_full = format!("{prefix}{rel}");
         let content = std::fs::read_to_string(&path)?;
-        findings.extend(check_content(&rel, &content, rules, allow));
+        let f =
+            check_content_tracked(&rel_full, &content, rules, allow, &mut outcome.suppressions);
+        outcome.findings.extend(f);
     }
-    Ok(findings)
+    Ok(())
+}
+
+/// Lint every `.rs` file under `root` with the given rules + allowlist
+/// (single-root convenience; no stale-suppression reporting).
+pub fn run(root: &Path, rules: &[Rule], allow: &Allowlist) -> std::io::Result<Vec<Finding>> {
+    let mut outcome = ScanOutcome::new(allow);
+    scan_root(root, "", rules, allow, &mut outcome)?;
+    Ok(outcome.findings)
 }
 
 #[cfg(test)]
@@ -358,63 +723,65 @@ mod tests {
     use super::*;
 
     #[test]
-    fn strips_line_comments_and_string_contents() {
-        let mut blk = false;
-        assert_eq!(strip_comments("let x = 1; // partial_cmp", &mut blk), "let x = 1; ");
-        // A `//` inside a string does not truncate the line, and the
-        // string's contents are blanked (data, not code).
-        assert_eq!(
-            strip_comments(r#"let url = "https://a"; let y = 2;"#, &mut blk),
-            r#"let url = ""; let y = 2;"#
-        );
-        assert_eq!(
-            strip_comments(r#"log("uses partial_cmp(x).unwrap()");"#, &mut blk),
-            r#"log("");"#
-        );
-        assert_eq!(strip_comments("/// partial_cmp(..).unwrap()", &mut blk), "");
+    fn stripped_lines_blank_comments_and_strings() {
+        let src = "let x = 1; // partial_cmp\nlet url = \"https://a\"; let y = 2;\n/// doc .unwrap()\nlet s = r#\"raw .unwrap()\"#;";
+        let lines = stripped_lines(src);
+        assert!(!lines[0].contains("partial_cmp"));
+        assert!(lines[0].contains("let x = 1;"));
+        assert!(!lines[1].contains("https"));
+        assert!(lines[1].contains("let y = 2;"));
+        assert!(!lines[2].contains("unwrap"));
+        assert!(!lines[3].contains("unwrap"), "raw string contents are data: {}", lines[3]);
     }
 
     #[test]
-    fn strips_block_comments_across_lines() {
-        let mut blk = false;
-        assert_eq!(strip_comments("a /* partial_cmp", &mut blk), "a ");
-        assert!(blk);
-        assert_eq!(strip_comments(".unwrap() */ b", &mut blk), " b");
-        assert!(!blk);
+    fn stripped_lines_preserve_line_count_across_block_comments() {
+        let src = "a\n/* x\n y */\nb\nlet s = \"multi\nline\";\nc";
+        let lines = stripped_lines(src);
+        assert_eq!(lines.len(), 7);
+        assert_eq!(lines[3], "b");
+        assert_eq!(lines[6], "c");
     }
 
     #[test]
-    fn char_literal_quote_does_not_open_string() {
-        let mut blk = false;
-        // The '"' char literal must not swallow the // comment.
-        assert_eq!(
-            strip_comments(r#"if c == '"' { x(); } // note"#, &mut blk),
-            r#"if c == '"' { x(); } "#
-        );
-        // Lifetimes are not char literals.
-        assert_eq!(
-            strip_comments("fn f<'a>(x: &'a str) {} // c", &mut blk),
-            "fn f<'a>(x: &'a str) {} "
-        );
+    fn findings_carry_file_line_rule_function_and_region() {
+        let rules = default_rules();
+        let content =
+            "fn f(v: &mut Vec<f64>) {\n    v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n}\n";
+        let f = check_content("util/x.rs", content, &rules, &Allowlist::default());
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].line, 2);
+        assert_eq!(f[0].rule, "float-sort-unwrap");
+        assert_eq!(f[0].function, "f");
+        assert_eq!(f[0].region, "fn");
+        assert!(f[0].to_string().starts_with("util/x.rs:2: [float-sort-unwrap]"));
     }
 
     #[test]
-    fn test_region_is_detected() {
-        let lines = vec!["fn a() {}", "#[cfg(test)]", "mod tests {", "}"];
-        assert_eq!(test_region_start(&lines), 1);
-        let gated = vec!["fn a() {}", "#[cfg(all(test, not(loom)))]", "mod tests {"];
-        assert_eq!(test_region_start(&gated), 1);
-        let none = vec!["fn a() {}"];
-        assert_eq!(test_region_start(&none), 1);
+    fn inline_marker_suppresses_and_is_tracked() {
+        let rules = default_rules();
+        let content =
+            "let g = m.lock().unwrap(); // lint:allow(bare-lock-unwrap) poisoning on purpose\n";
+        let allow = Allowlist::default();
+        let mut track = SuppressionUse::for_allowlist(&allow);
+        assert!(check_content_tracked("a.rs", content, &rules, &allow, &mut track).is_empty());
+        assert_eq!(track.markers.len(), 1);
+        assert!(track.markers[0].used);
+        // The marker only covers its own rule.
+        let wrong = "let g = m.lock().unwrap(); // lint:allow(float-sort-unwrap)\n";
+        let mut track2 = SuppressionUse::for_allowlist(&allow);
+        assert_eq!(check_content_tracked("a.rs", wrong, &rules, &allow, &mut track2).len(), 1);
+        assert!(!track2.markers[0].used, "marker for the wrong rule is unused (stale)");
     }
 
     #[test]
-    fn allowlist_parses_and_matches() {
+    fn allowlist_parses_matches_and_tracks_usage() {
         let a = Allowlist::parse(
             "# comment\n\nrelaxed-ordering coordinator/service.rs :: basis_hint\n",
         )
         .unwrap();
         assert_eq!(a.entries.len(), 1);
+        assert_eq!(a.entries[0].line, 3);
         assert!(a.allows(
             "relaxed-ordering",
             "coordinator/service.rs",
@@ -426,33 +793,10 @@ mod tests {
     }
 
     #[test]
-    fn findings_carry_file_line_and_rule() {
-        let rules = default_rules();
-        let content =
-            "fn f(v: &mut Vec<f64>) {\n    v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n}\n";
-        let f = check_content("util/x.rs", content, &rules, &Allowlist::default());
-        assert_eq!(f.len(), 1);
-        assert_eq!(f[0].line, 2);
-        assert_eq!(f[0].rule, "float-sort-unwrap");
-        assert!(f[0].to_string().starts_with("util/x.rs:2: [float-sort-unwrap]"));
-    }
-
-    #[test]
-    fn inline_marker_suppresses() {
-        let rules = default_rules();
-        let content =
-            "let g = m.lock().unwrap(); // lint:allow(bare-lock-unwrap) poisoning on purpose\n";
-        assert!(check_content("a.rs", content, &rules, &Allowlist::default()).is_empty());
-        // The marker only covers its own rule.
-        let wrong = "let g = m.lock().unwrap(); // lint:allow(float-sort-unwrap)\n";
-        assert_eq!(check_content("a.rs", wrong, &rules, &Allowlist::default()).len(), 1);
-    }
-
-    #[test]
     fn scoped_rules_ignore_other_files() {
         let rules = default_rules();
-        let relaxed = "x.load(Ordering::Relaxed);\n";
-        assert!(check_content("solvers/cg.rs", relaxed, &rules, &Allowlist::default()).is_empty());
+        let relaxed = "fn f() { x.load(Ordering::Relaxed); }\n";
+        assert!(check_content("runtime/ops.rs", relaxed, &rules, &Allowlist::default()).is_empty());
         assert_eq!(
             check_content("coordinator/service.rs", relaxed, &rules, &Allowlist::default()).len(),
             1
@@ -460,7 +804,7 @@ mod tests {
     }
 
     #[test]
-    fn skip_tests_rules_ignore_trailing_test_mod() {
+    fn skip_tests_rules_ignore_test_regions() {
         let rules = default_rules();
         let content = "use x;\n#[cfg(test)]\nmod tests {\n    use std::thread;\n}\n";
         assert!(
@@ -472,5 +816,142 @@ mod tests {
             check_content("solvers/control.rs", bad, &rules, &Allowlist::default()).len(),
             1
         );
+    }
+
+    #[test]
+    fn panic_in_dispatch_fires_only_outside_tests() {
+        let rules = default_rules();
+        let bad = "fn dispatch(&self) {\n    let x = self.q.pop().unwrap();\n}\n";
+        let f = check_content("coordinator/scheduler.rs", bad, &rules, &Allowlist::default());
+        assert_eq!(f.iter().filter(|f| f.rule == "panic-in-dispatch").count(), 1);
+        let test_only =
+            "#[cfg(test)]\nmod tests {\n    fn t() {\n        x.pop().unwrap();\n    }\n}\n";
+        let f = check_content("coordinator/scheduler.rs", test_only, &rules, &Allowlist::default());
+        assert!(f.is_empty(), "{f:#?}");
+        // Same tokens in a solver file: not a dispatch path.
+        let f = check_content("solvers/strategy.rs", bad, &rules, &Allowlist::default());
+        assert!(f.iter().all(|f| f.rule != "panic-in-dispatch"));
+    }
+
+    #[test]
+    fn bare_index_detection() {
+        assert!(bare_index("let x = q[i];"));
+        assert!(bare_index("out.push(claimed[0].clone());"));
+        assert!(bare_index("f(a)[0]"));
+        assert!(bare_index("m[0][1]"));
+        assert!(!bare_index("#[derive(Debug)]"));
+        assert!(!bare_index("let [a, b] = pair;"));
+        assert!(!bare_index("let buf = [0u8; 8];"));
+        assert!(!bare_index("let v: Vec<[f64; 4]> = vec![];"));
+        assert!(!bare_index("return [a, b];"));
+        assert!(!bare_index("vec![0.0; n]"));
+    }
+
+    #[test]
+    fn hot_loop_rules_fire_only_inside_loops() {
+        let rules = default_rules();
+        let src = "\
+fn solve(n: usize) {
+    let pre = Vec::new();
+    for i in 0..n {
+        let per_iter: Vec<f64> = xs.iter().map(|x| x * 2.0).collect();
+        let last = residuals.last().unwrap();
+    }
+}
+";
+        let f = check_content("solvers/cg.rs", src, &rules, &Allowlist::default());
+        assert_eq!(f.iter().filter(|f| f.rule == "alloc-in-hot-loop").count(), 1, "{f:#?}");
+        assert_eq!(f.iter().filter(|f| f.rule == "panic-in-hot-loop").count(), 1);
+        assert!(f.iter().all(|x| x.line >= 4), "pre-loop Vec::new must not flag: {f:#?}");
+        // Same content in a non-solver file: out of scope.
+        let f = check_content("coordinator/recycle_math.rs", src, &rules, &Allowlist::default());
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn matvec_billing_audit() {
+        let rules = default_rules();
+        let unbilled = "\
+fn refresh(&mut self, a: &dyn Op) {
+    a.apply_block(&self.w, &mut self.aw);
+}
+";
+        let f = check_content("solvers/defcg.rs", unbilled, &rules, &Allowlist::default());
+        assert_eq!(f.iter().filter(|f| f.rule == "matvec-billing").count(), 1);
+        assert_eq!(f[0].function, "refresh");
+
+        let billed = "\
+fn step(&mut self, a: &dyn Op) {
+    a.apply(&self.p, &mut self.ap);
+    self.matvecs += 1;
+}
+";
+        let f = check_content("solvers/defcg.rs", billed, &rules, &Allowlist::default());
+        assert!(f.is_empty(), "{f:#?}");
+
+        // Delegation wrappers named apply/apply_block are exempt.
+        let delegate = "\
+fn apply_block(&self, xs: &Mat, ys: &mut Mat) {
+    self.inner.apply_block(xs, ys);
+}
+";
+        let f = check_content("solvers/algebra.rs", delegate, &rules, &Allowlist::default());
+        assert!(f.is_empty(), "{f:#?}");
+    }
+
+    #[test]
+    fn lossy_cast_rule_scopes_and_fires() {
+        let rules = default_rules();
+        let bad = "fn f(n: usize) -> f64 { n as f64 }\n";
+        for path in ["solvers/strategy.rs", "linalg/mat.rs", "benches/b.rs", "examples/e.rs"] {
+            let f = check_content(path, bad, &rules, &Allowlist::default());
+            assert_eq!(f.iter().filter(|f| f.rule == "lossy-cast").count(), 1, "{path}");
+        }
+        // util/ (home of the sanctioned precision module) is out of scope.
+        let f = check_content("util/precision.rs", bad, &rules, &Allowlist::default());
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn stale_suppressions_are_reported() {
+        let allow = Allowlist::parse(
+            "relaxed-ordering coordinator/service.rs :: basis_hint\n\
+             instant-in-solver solvers/never.rs :: Instant::now\n",
+        )
+        .unwrap();
+        let mut outcome = ScanOutcome::new(&allow);
+        let content = "fn f() {\n    h.basis_hint.store(1, Ordering::Relaxed);\n}\n";
+        let f = check_content_tracked(
+            "coordinator/service.rs",
+            content,
+            &default_rules(),
+            &allow,
+            &mut outcome.suppressions,
+        );
+        assert!(f.is_empty());
+        let stale = stale_suppressions(&outcome, &allow);
+        assert_eq!(stale.len(), 1, "{stale:#?}");
+        assert_eq!(stale[0].rule, "stale-suppression");
+        assert_eq!(stale[0].line, 2);
+        assert!(stale[0].text.contains("solvers/never.rs"));
+    }
+
+    #[test]
+    fn json_output_is_escaped_and_structured() {
+        let f = vec![Finding {
+            path: "a.rs".into(),
+            line: 3,
+            rule: "panic-in-dispatch",
+            message: r#"say "no" to panics"#,
+            text: "q.pop().unwrap(); // \"why\"".into(),
+            function: "dispatch".into(),
+            region: "fn",
+        }];
+        let j = findings_to_json(&f);
+        assert!(j.starts_with("{\"count\":1,"));
+        assert!(j.contains("\"rule\":\"panic-in-dispatch\""));
+        assert!(j.contains("\"function\":\"dispatch\""));
+        assert!(j.contains(r#"say \"no\" to panics"#));
+        assert!(findings_to_json(&[]).contains("\"count\":0"));
     }
 }

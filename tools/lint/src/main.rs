@@ -1,20 +1,47 @@
-//! `cargo run -p lint` — walk `rust/src`, enforce the repo invariants in
-//! `lint::default_rules`, exit non-zero with `file:line` diagnostics on
-//! any violation. Sanctioned exceptions live in `tools/lint/allow.list`.
+//! `cargo run -p lint` — walk `rust/src`, `benches` and `examples`,
+//! enforce the repo invariants in `lint::default_rules`, exit non-zero
+//! with `file:line` diagnostics on any violation, and flag stale
+//! suppressions. Sanctioned exceptions live in `tools/lint/allow.list`.
+//!
+//! Flags:
+//!   --json         machine-readable diagnostics on stdout
+//!   --allow-stale  tolerate suppressions that matched nothing
+//!                  (for branches mid-refactor)
+//!   <root>         lint a single explicit tree instead of the repo
 
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
 fn main() -> ExitCode {
     let manifest_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
-    // tools/lint → repo root → rust/src. An explicit argument overrides,
-    // so the binary can also lint fixture trees or out-of-repo checkouts.
-    let root = std::env::args()
-        .nth(1)
-        .map(PathBuf::from)
-        .unwrap_or_else(|| manifest_dir.join("../../rust/src"));
-    let allow_path = manifest_dir.join("allow.list");
+    let mut json = false;
+    let mut allow_stale = false;
+    let mut explicit_root: Option<PathBuf> = None;
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "--json" => json = true,
+            "--allow-stale" => allow_stale = true,
+            flag if flag.starts_with("--") => {
+                eprintln!("lint: unknown flag {flag} (expected --json / --allow-stale)");
+                return ExitCode::FAILURE;
+            }
+            root => explicit_root = Some(PathBuf::from(root)),
+        }
+    }
 
+    // tools/lint → repo root → scan roots. Paths are reported
+    // repo-relative (`rust/src/...`) so rule scopes distinguish roots.
+    // An explicit argument overrides, so the binary can also lint
+    // fixture trees or out-of-repo checkouts.
+    let roots: Vec<(PathBuf, &str)> = match &explicit_root {
+        Some(r) => vec![(r.clone(), "")],
+        None => vec![
+            (manifest_dir.join("../../rust/src"), "rust/src/"),
+            (manifest_dir.join("../../benches"), "benches/"),
+            (manifest_dir.join("../../examples"), "examples/"),
+        ],
+    };
+    let allow_path = manifest_dir.join("allow.list");
     let allow = match load_allowlist(&allow_path) {
         Ok(a) => a,
         Err(e) => {
@@ -23,15 +50,26 @@ fn main() -> ExitCode {
         }
     };
     let rules = lint::default_rules();
-    let findings = match lint::run(&root, &rules, &allow) {
-        Ok(f) => f,
-        Err(e) => {
+    let mut outcome = lint::ScanOutcome::new(&allow);
+    for (root, prefix) in &roots {
+        if let Err(e) = lint::scan_root(root, prefix, &rules, &allow, &mut outcome) {
             eprintln!("lint: cannot walk {}: {e}", root.display());
             return ExitCode::FAILURE;
         }
-    };
+    }
+    let mut findings = outcome.findings.clone();
+    if !allow_stale {
+        findings.extend(lint::stale_suppressions(&outcome, &allow));
+    }
+
+    if json {
+        println!("{}", lint::findings_to_json(&findings));
+        return if findings.is_empty() { ExitCode::SUCCESS } else { ExitCode::FAILURE };
+    }
     if findings.is_empty() {
-        println!("lint: {} clean ({} rules)", root.display(), rules.len());
+        let scanned =
+            roots.iter().map(|(r, _)| r.display().to_string()).collect::<Vec<_>>().join(", ");
+        println!("lint: {scanned} clean ({} rules)", rules.len());
         return ExitCode::SUCCESS;
     }
     for f in &findings {

@@ -1,0 +1,408 @@
+//! Brace-tracking region model over the token stream: which function a
+//! line belongs to, whether it sits inside a `for`/`while`/`loop` body,
+//! and whether it is test-only (`#[test]`, `#[cfg(test)]`,
+//! `#[cfg(all(test, …))]` items at any nesting depth).
+//!
+//! This is a heuristic scope tracker, not a parser: each `{` pushes a
+//! scope derived from the markers seen since the last statement
+//! boundary (`fn name`, a loop keyword, a test attribute) plus the
+//! enclosing scope's flags, and each `}` pops. Closures deliberately do
+//! NOT open a function boundary — a panic or allocation inside a
+//! closure that runs per iteration bills to the enclosing named fn and
+//! loop, which is exactly the attribution the rules want. Known
+//! over-approximations (a brace inside a loop-header expression consumes
+//! the pending loop marker early) err toward *flagging*, and the escape
+//! hatches absorb the rare false positive.
+
+use crate::lexer::{lex, Tok, TokKind};
+
+/// Per-line region facts, 0-indexed by line (line 1 is `lines[0]`).
+#[derive(Debug, Clone, Default)]
+pub struct LineInfo {
+    /// Innermost enclosing named function, if any.
+    pub function: Option<String>,
+    /// Inside the body of a `for`/`while`/`loop` (any nesting).
+    pub in_loop: bool,
+    /// Inside a `#[test]` fn or `#[cfg(test)]`-gated item.
+    pub in_test: bool,
+}
+
+/// One named function's extent (both bounds 1-based, inclusive).
+#[derive(Debug, Clone)]
+pub struct FnSpan {
+    pub name: String,
+    pub start_line: usize,
+    pub end_line: usize,
+    /// The whole fn (signature line through closing brace) was inside a
+    /// test region.
+    pub in_test: bool,
+}
+
+/// Region analysis of one file.
+#[derive(Debug, Default)]
+pub struct FileRegions {
+    pub lines: Vec<LineInfo>,
+    pub fns: Vec<FnSpan>,
+}
+
+impl FileRegions {
+    /// Facts for a 1-based line (out-of-range lines report defaults).
+    pub fn line(&self, line_1based: usize) -> LineInfo {
+        self.lines.get(line_1based.wrapping_sub(1)).cloned().unwrap_or_default()
+    }
+}
+
+#[derive(Clone, Default)]
+struct Scope {
+    fn_idx: Option<usize>,
+    in_loop: bool,
+    in_test: bool,
+}
+
+/// Keywords that may legitimately precede `[` without it being an index
+/// expression (array literals/types/patterns): used by the index rule.
+pub const NONINDEX_KEYWORDS: &[&str] = &[
+    "mut", "dyn", "let", "ref", "in", "return", "break", "else", "move", "box", "impl", "as",
+    "const", "static", "become", "yield",
+];
+
+pub fn analyze(src: &str) -> FileRegions {
+    let toks = lex(src);
+    let n_lines = src.lines().count().max(1);
+    let mut lines = vec![LineInfo::default(); n_lines];
+    let mut fns: Vec<FnSpan> = Vec::new();
+
+    let mut stack: Vec<Scope> = vec![Scope::default()];
+    // Markers pending until the `{` (or `;`) that consumes them.
+    let mut pending_fn: Option<String> = None;
+    let mut pending_loop = false;
+    let mut pending_test = false;
+    // `for` waits for an `in` before it marks a loop, so `impl T for U`
+    // and HRTB `for<'a>` never do.
+    let mut for_await_in = false;
+    let mut after_fn_kw = false;
+
+    let mark = |lines: &mut [LineInfo], fns: &[FnSpan], scope: &Scope, line: usize| {
+        if let Some(info) = lines.get_mut(line - 1) {
+            if info.function.is_none() {
+                if let Some(idx) = scope.fn_idx {
+                    info.function = Some(fns[idx].name.clone());
+                }
+            }
+            info.in_loop |= scope.in_loop;
+            info.in_test |= scope.in_test;
+        }
+    };
+
+    let toks_sig: Vec<&Tok<'_>> = toks
+        .iter()
+        .filter(|t| !matches!(t.kind, TokKind::Whitespace | TokKind::Comment))
+        .collect();
+
+    let mut k = 0usize;
+    while k < toks_sig.len() {
+        let t = toks_sig[k];
+        let top = stack.last().cloned().unwrap_or_default();
+        match (t.kind, t.text) {
+            (TokKind::Ident, "fn") => {
+                after_fn_kw = true;
+                mark(&mut lines, &fns, &top, t.line);
+            }
+            (TokKind::Ident, name) if after_fn_kw => {
+                after_fn_kw = false;
+                pending_fn = Some(name.strip_prefix("r#").unwrap_or(name).to_string());
+                mark(&mut lines, &fns, &top, t.line);
+            }
+            (TokKind::Ident, "for") => {
+                // HRTB `for<'a>` is not a loop; `impl T for U` has no
+                // `in`, so simply waiting for `in` excludes it too.
+                if !toks_sig.get(k + 1).is_some_and(|n| n.text == "<") {
+                    for_await_in = true;
+                }
+                mark(&mut lines, &fns, &top, t.line);
+            }
+            (TokKind::Ident, "in") if for_await_in => {
+                for_await_in = false;
+                pending_loop = true;
+                mark(&mut lines, &fns, &top, t.line);
+            }
+            (TokKind::Ident, "while") | (TokKind::Ident, "loop") => {
+                pending_loop = true;
+                mark(&mut lines, &fns, &top, t.line);
+            }
+            (TokKind::Punct, "#") => {
+                // Attribute: if it is a test gate, everything the
+                // attribute covers (through its item's braces) is test.
+                if toks_sig.get(k + 1).is_some_and(|n| n.text == "[") {
+                    let (is_test, consumed) = scan_attribute(&toks_sig, k);
+                    pending_test |= is_test;
+                    mark(&mut lines, &fns, &top, t.line);
+                    k = consumed;
+                    continue;
+                }
+                mark(&mut lines, &fns, &top, t.line);
+            }
+            (TokKind::Punct, ";") => {
+                // Statement boundary: a semicolon discharges markers
+                // that never found a body (trait fn signatures,
+                // attributes on use/static items, `for` in errors).
+                pending_fn = None;
+                pending_loop = false;
+                pending_test = false;
+                for_await_in = false;
+                after_fn_kw = false;
+                mark(&mut lines, &fns, &top, t.line);
+            }
+            (TokKind::Punct, "{") => {
+                let scope = if let Some(name) = pending_fn.take() {
+                    let idx = fns.len();
+                    fns.push(FnSpan {
+                        name,
+                        start_line: t.line,
+                        end_line: t.line,
+                        in_test: top.in_test || pending_test,
+                    });
+                    Scope {
+                        fn_idx: Some(idx),
+                        in_loop: false,
+                        in_test: top.in_test || pending_test,
+                    }
+                } else {
+                    Scope {
+                        fn_idx: top.fn_idx,
+                        in_loop: top.in_loop || pending_loop,
+                        in_test: top.in_test || pending_test,
+                    }
+                };
+                pending_loop = false;
+                pending_test = false;
+                for_await_in = false;
+                mark(&mut lines, &fns, &scope, t.line);
+                stack.push(scope);
+            }
+            (TokKind::Punct, "}") => {
+                mark(&mut lines, &fns, &top, t.line);
+                if stack.len() > 1 {
+                    let popped = stack.pop().unwrap_or_default();
+                    if let Some(idx) = popped.fn_idx {
+                        // Only the fn's own closing brace finalizes it.
+                        let parent_fn = stack.last().and_then(|s| s.fn_idx);
+                        if parent_fn != Some(idx) {
+                            if let Some(f) = fns.get_mut(idx) {
+                                f.end_line = f.end_line.max(t.line);
+                            }
+                        }
+                    }
+                }
+            }
+            _ => {
+                after_fn_kw = false;
+                mark(&mut lines, &fns, &top, t.line);
+            }
+        }
+        k += 1;
+    }
+
+    // Extend each fn's end line monotonically: any line marked with the
+    // fn via `mark` is within its span.
+    for (i, info) in lines.iter().enumerate() {
+        if let Some(name) = &info.function {
+            for f in fns.iter_mut().rev() {
+                if &f.name == name && f.start_line <= i + 1 {
+                    f.end_line = f.end_line.max(i + 1);
+                    break;
+                }
+            }
+        }
+    }
+
+    FileRegions { lines, fns }
+}
+
+/// Scan the attribute starting at `#` (index `k` into the significant
+/// token stream). Returns (is-test-gate, index of the closing `]`).
+fn scan_attribute(toks: &[&Tok<'_>], k: usize) -> (bool, usize) {
+    // Reconstruct the attribute's significant text to classify it the
+    // same way the legacy line heuristic did — `#[test]`,
+    // `#[cfg(test…)]`, `#[cfg(all(test…)]`, `#[cfg(any(test…)]` are test
+    // gates; `#[cfg(not(test))]` is NOT.
+    let mut depth = 0usize;
+    let mut text = String::new();
+    let mut j = k;
+    while j < toks.len() {
+        let t = toks[j];
+        text.push_str(t.text);
+        match t.text {
+            "[" => depth += 1,
+            "]" => {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    let is_test = text == "#[test]"
+        || text.starts_with("#[cfg(test")
+        || text.starts_with("#[cfg(all(test")
+        || text.starts_with("#[cfg(any(test");
+    (is_test, j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn analyze_lines(src: &str) -> FileRegions {
+        analyze(src)
+    }
+
+    #[test]
+    fn function_attribution_and_loops() {
+        let src = "\
+fn solve(n: usize) -> f64 {
+    let mut acc = 0.0;
+    for i in 0..n {
+        acc += i as f64;
+        while acc > 10.0 {
+            acc /= 2.0;
+        }
+    }
+    acc
+}
+fn other() {}
+";
+        let r = analyze_lines(src);
+        assert_eq!(r.line(2).function.as_deref(), Some("solve"));
+        assert!(!r.line(2).in_loop);
+        assert!(r.line(4).in_loop);
+        assert!(r.line(6).in_loop);
+        assert_eq!(r.line(9).function.as_deref(), Some("solve"));
+        assert!(!r.line(9).in_loop);
+        assert_eq!(r.fns.len(), 2);
+        assert_eq!(r.fns[0].name, "solve");
+        assert!(r.fns[0].start_line <= 1 && r.fns[0].end_line >= 9);
+    }
+
+    #[test]
+    fn impl_for_and_hrtb_are_not_loops() {
+        let src = "\
+impl Clone for Thing {
+    fn clone(&self) -> Thing {
+        Thing
+    }
+}
+fn hof<F>(f: F) where for<'a> F: Fn(&'a u8) {
+    f(&1);
+}
+";
+        let r = analyze_lines(src);
+        assert!(!r.line(2).in_loop);
+        assert!(!r.line(3).in_loop);
+        assert!(!r.line(7).in_loop);
+        assert_eq!(r.line(3).function.as_deref(), Some("clone"));
+        assert_eq!(r.line(7).function.as_deref(), Some("hof"));
+    }
+
+    #[test]
+    fn closures_do_not_open_function_boundaries() {
+        let src = "\
+fn outer() {
+    let f = |x: u8| {
+        x + 1
+    };
+    loop {
+        let g = move || {
+            f(1)
+        };
+        g();
+    }
+}
+";
+        let r = analyze_lines(src);
+        assert_eq!(r.line(3).function.as_deref(), Some("outer"));
+        assert!(r.line(7).in_loop, "closure body inside loop stays in-loop");
+        assert_eq!(r.line(7).function.as_deref(), Some("outer"));
+    }
+
+    #[test]
+    fn test_regions_at_any_depth() {
+        let src = "\
+fn shipped() {}
+#[cfg(test)]
+mod tests {
+    fn helper() {}
+    #[test]
+    fn case() {
+        helper();
+    }
+}
+fn also_shipped() {}
+";
+        let r = analyze_lines(src);
+        assert!(!r.line(1).in_test);
+        assert!(r.line(4).in_test);
+        assert!(r.line(7).in_test);
+        assert!(!r.line(10).in_test, "test flag must not leak past the mod");
+        let case = r.fns.iter().find(|f| f.name == "case").unwrap();
+        assert!(case.in_test);
+        let shipped = r.fns.iter().find(|f| f.name == "shipped").unwrap();
+        assert!(!shipped.in_test);
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_a_test_region() {
+        let src = "\
+#[cfg(not(test))]
+fn shipped_only() {
+    x();
+}
+#[cfg(all(test, not(loom)))]
+mod gated {
+    fn t() {}
+}
+";
+        let r = analyze_lines(src);
+        assert!(!r.line(3).in_test);
+        assert!(r.line(7).in_test);
+    }
+
+    #[test]
+    fn trait_method_signatures_do_not_leak_fn_markers() {
+        let src = "\
+trait T {
+    fn sig_only(&self);
+    fn with_default(&self) {
+        x();
+    }
+}
+";
+        let r = analyze_lines(src);
+        assert_eq!(r.line(4).function.as_deref(), Some("with_default"));
+        // The semicolon discharged `sig_only`; the trait body brace did
+        // not become its function.
+        assert!(r.fns.iter().all(|f| f.name != "sig_only"));
+    }
+
+    #[test]
+    fn labeled_loops_and_match_inherit() {
+        let src = "\
+fn f(xs: &[u8]) -> u8 {
+    'outer: for x in xs {
+        match x {
+            0 => {
+                continue 'outer;
+            }
+            _ => return *x,
+        }
+    }
+    0
+}
+";
+        let r = analyze_lines(src);
+        assert!(r.line(5).in_loop, "match arm body inherits loop region");
+        assert_eq!(r.line(5).function.as_deref(), Some("f"));
+    }
+}

@@ -14,9 +14,25 @@ pub fn basis_hint(hint: &AtomicU64) -> u64 {
     hint.load(Ordering::Relaxed) // advisory basis_hint, not snapshot state
 }
 
-// 3. Inline marker on the raw line.
+// 3. Inline marker on the raw line. Two rules match the lock line —
+//    the poison rule and the dispatch panic audit — so it carries one
+//    marker per rule.
 pub fn poisoned_probe(m: &std::sync::Mutex<u64>) -> u64 { // lint:allow(std-sync-in-shimmed)
-    *m.lock().unwrap() // lint:allow(bare-lock-unwrap) fixture marker
+    *m.lock().unwrap() // lint:allow(bare-lock-unwrap) lint:allow(panic-in-dispatch) fixture
+}
+
+// 3b. Dispatch-region rules honour the same markers: panic and bare
+//     indexing in a coordinator fn are fine when the invariant is
+//     documented at the site.
+pub fn first_token(q: &[u64]) -> u64 {
+    *q.first().unwrap() // lint:allow(panic-in-dispatch) caller guarantees non-empty
+}
+
+pub fn pop_slot(q: &mut Vec<u64>, idx: usize) -> u64 {
+    debug_assert!(idx < q.len());
+    let v = q[idx]; // lint:allow(index-in-dispatch) bounds asserted above
+    q.swap_remove(idx);
+    v
 }
 
 // 4. A string literal containing a forbidden token is not code.

@@ -1,13 +1,30 @@
 // Fixture: clean solver file — timing happens once at entry and is
 // allowlisted by the self-test, mirroring the real repo policy.
+use crate::util::precision::to_f64;
 use std::time::Instant;
 
 pub fn solve(n: usize) -> f64 {
     let start = Instant::now();
     let mut acc = 0.0;
     for i in 0..n {
-        acc += (i as f64).sqrt();
+        acc += to_f64(i).sqrt();
     }
     let _elapsed = start.elapsed();
     acc
+}
+
+// Billing-compliant: the operator application and the counter touch
+// live in the same fn, so the matvec audit is satisfied.
+pub fn billed_apply(a: &Operator, x: &[f64], y: &mut [f64], stats: &mut Stats) {
+    a.apply(x, y);
+    stats.matvecs += 1;
+}
+
+// A bounded per-iteration snapshot: the clone in the loop is sanctioned
+// by an allow entry the self-test supplies (the real repo's `stored.p`
+// history stores follow the same pattern).
+pub fn checkpoint(cols: &[Vec<f64>], snaps: &mut Vec<Vec<f64>>) {
+    for c in cols {
+        snaps.push(c.clone());
+    }
 }

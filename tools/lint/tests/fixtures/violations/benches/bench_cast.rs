@@ -1,0 +1,5 @@
+// Fixture: must trip `lossy-cast` under a bench root — the sweep covers
+// benches/ and examples/, not just the library tree.
+fn throughput(items: usize, secs: f64) -> f64 {
+    items as f64 / secs
+}

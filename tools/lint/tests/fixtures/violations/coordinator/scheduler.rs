@@ -1,6 +1,16 @@
-// Fixture: must trip `std-sync-in-shimmed` (bypasses the loom shim).
+// Fixture: must trip `std-sync-in-shimmed` (bypasses the loom shim),
+// `panic-in-dispatch` (unwrap in a dispatch fn) and `index-in-dispatch`
+// (bare slice index in a dispatch fn).
 use std::sync::Mutex;
 
 pub fn queue() -> Mutex<Vec<u64>> {
     Mutex::new(Vec::new())
+}
+
+pub fn pop_front(q: &mut Vec<u64>) -> u64 {
+    q.get(0).copied().unwrap()
+}
+
+pub fn peek(q: &[u64]) -> u64 {
+    q[0]
 }

@@ -1,0 +1,6 @@
+// Fixture: must trip `lossy-cast` — a raw usize → f64 cast silently
+// loses precision past 2^53; util::precision makes the conversion
+// explicit and debug-checked.
+pub fn mean(v: &[f64]) -> f64 {
+    v.iter().sum::<f64>() / v.len() as f64
+}

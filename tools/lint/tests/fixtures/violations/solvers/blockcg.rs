@@ -1,0 +1,10 @@
+// Fixture: must trip `alloc-in-hot-loop` — but only for the clone
+// inside the loop; the pre-loop Vec::new() is the sanctioned
+// preallocation pattern and stays silent.
+pub fn iterate(cols: &[Vec<f64>]) -> Vec<Vec<f64>> {
+    let mut out: Vec<Vec<f64>> = Vec::new();
+    for c in cols {
+        out.push(c.clone());
+    }
+    out
+}

@@ -1,0 +1,6 @@
+// Fixture: must trip `matvec-billing` — the fn applies the operator but
+// never touches matvecs/col_matvecs/CounterBaseline, so the work would
+// vanish from the paper's cost model.
+pub fn probe(a: &Operator, x: &[f64], y: &mut [f64]) {
+    a.apply(x, y);
+}

@@ -1,0 +1,10 @@
+// Fixture: must trip `panic-in-hot-loop` — the unwrap sits inside the
+// iteration loop, so one empty-history edge case aborts the solve.
+pub fn iterate(n: usize, residuals: &mut Vec<f64>) -> f64 {
+    let mut rel = 1.0;
+    for _ in 0..n {
+        residuals.push(rel * 0.5);
+        rel = *residuals.last().unwrap();
+    }
+    rel
+}

@@ -1,13 +1,21 @@
 //! Self-test: the lint must (a) flag every deliberately-violating
-//! fixture, (b) stay silent on the clean fixture tree, and (c) pass on
-//! the real `rust/src` with the checked-in allowlist — so `cargo test -p
-//! lint` alone proves the tool both fires and is currently satisfied.
+//! fixture, (b) stay silent on the clean fixture tree, (c) report
+//! suppressions that excuse nothing as stale, and (d) pass on the real
+//! swept tree (`rust/src`, `benches`, `examples`) with the checked-in
+//! allowlist — so `cargo test -p lint` alone proves the tool both fires
+//! and is currently satisfied.
 
 use std::path::PathBuf;
 
 fn fixtures(sub: &str) -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(sub)
 }
+
+/// The allow entries the clean fixture tree relies on (the fixture
+/// files document which line each one excuses).
+const CLEAN_ALLOW: &str = "relaxed-ordering coordinator/service.rs :: basis_hint\n\
+                           instant-in-solver solvers/cg.rs :: let start = Instant::now();\n\
+                           alloc-in-hot-loop solvers/cg.rs :: snaps.push(c.clone());\n";
 
 #[test]
 fn every_rule_fires_on_the_violations_tree() {
@@ -23,14 +31,21 @@ fn every_rule_fires_on_the_violations_tree() {
         );
     }
 
-    // Each fixture file trips exactly the rule it documents.
+    // Each fixture file trips exactly the rule(s) it documents.
     let expected = [
+        ("benches/bench_cast.rs", "lossy-cast"),
+        ("coordinator/scheduler.rs", "std-sync-in-shimmed"),
+        ("coordinator/scheduler.rs", "panic-in-dispatch"),
+        ("coordinator/scheduler.rs", "index-in-dispatch"),
+        ("coordinator/service.rs", "relaxed-ordering"),
+        ("linalg/mat.rs", "lossy-cast"),
+        ("solvers/blockcg.rs", "alloc-in-hot-loop"),
+        ("solvers/cg.rs", "instant-in-solver"),
+        ("solvers/control.rs", "std-sync-in-shimmed"),
+        ("solvers/defcg.rs", "matvec-billing"),
+        ("solvers/pcg.rs", "panic-in-hot-loop"),
         ("util/floats.rs", "float-sort-unwrap"),
         ("util/locks.rs", "bare-lock-unwrap"),
-        ("coordinator/service.rs", "relaxed-ordering"),
-        ("coordinator/scheduler.rs", "std-sync-in-shimmed"),
-        ("solvers/control.rs", "std-sync-in-shimmed"),
-        ("solvers/cg.rs", "instant-in-solver"),
     ];
     for (path, rule) in expected {
         assert!(
@@ -40,47 +55,173 @@ fn every_rule_fires_on_the_violations_tree() {
     }
     assert_eq!(findings.len(), expected.len(), "unexpected extra findings: {findings:#?}");
 
-    // Findings point at real lines.
+    // Findings point at real lines and carry region context.
     for f in &findings {
         assert!(f.line >= 1);
         assert!(f.to_string().contains(&format!("{}:{}: [{}]", f.path, f.line, f.rule)));
     }
+    let by = |rule: &str| findings.iter().find(|f| f.rule == rule).unwrap();
+    assert_eq!(by("panic-in-hot-loop").region, "loop");
+    assert_eq!(by("alloc-in-hot-loop").region, "loop");
+    assert_eq!(by("panic-in-dispatch").function, "pop_front");
+    assert_eq!(by("index-in-dispatch").function, "peek");
+    assert_eq!(by("matvec-billing").function, "probe");
+    // The blockcg fixture's pre-loop Vec::new() must NOT be flagged:
+    // only the in-loop clone is a hot-loop allocation.
+    assert_eq!(findings.iter().filter(|f| f.rule == "alloc-in-hot-loop").count(), 1);
 }
 
 #[test]
 fn clean_tree_is_silent_given_its_allow_entries() {
     let rules = lint::default_rules();
-    let allow = lint::Allowlist::parse(
-        "relaxed-ordering coordinator/service.rs :: basis_hint\n\
-         instant-in-solver solvers/cg.rs :: let start = Instant::now();\n",
-    )
-    .unwrap();
-    let findings = lint::run(&fixtures("clean"), &rules, &allow).unwrap();
-    assert!(findings.is_empty(), "clean fixtures flagged: {findings:#?}");
+    let allow = lint::Allowlist::parse(CLEAN_ALLOW).unwrap();
+    let mut outcome = lint::ScanOutcome::new(&allow);
+    lint::scan_root(&fixtures("clean"), "", &rules, &allow, &mut outcome).unwrap();
+    assert!(outcome.findings.is_empty(), "clean fixtures flagged: {:#?}", outcome.findings);
+    // Every suppression — the three entries above AND every inline
+    // marker in the clean tree — earned its keep: nothing is stale.
+    let stale = lint::stale_suppressions(&outcome, &allow);
+    assert!(stale.is_empty(), "stale suppressions on the clean tree: {stale:#?}");
 }
 
 #[test]
 fn clean_tree_suppressions_are_load_bearing() {
-    // Without the allow entries, the clean tree's two allowlisted sites
+    // Without the allow entries, the clean tree's allowlisted sites
     // resurface — proving the suppression mechanism (not rule scoping)
     // is what keeps them quiet.
     let rules = lint::default_rules();
     let findings = lint::run(&fixtures("clean"), &rules, &lint::Allowlist::default()).unwrap();
     let mut ids: Vec<&str> = findings.iter().map(|f| f.rule).collect();
     ids.sort_unstable();
-    assert_eq!(ids, vec!["instant-in-solver", "relaxed-ordering"], "{findings:#?}");
+    assert_eq!(
+        ids,
+        vec!["alloc-in-hot-loop", "instant-in-solver", "relaxed-ordering"],
+        "{findings:#?}"
+    );
+}
+
+#[test]
+fn stale_allow_entry_is_reported() {
+    let rules = lint::default_rules();
+    // Same entries as the silent-tree test plus one that matches nothing.
+    let text = format!("{CLEAN_ALLOW}lossy-cast solvers/cg.rs :: nothing matches this\n");
+    let allow = lint::Allowlist::parse(&text).unwrap();
+    let mut outcome = lint::ScanOutcome::new(&allow);
+    lint::scan_root(&fixtures("clean"), "", &rules, &allow, &mut outcome).unwrap();
+    assert!(outcome.findings.is_empty(), "{:#?}", outcome.findings);
+    let stale = lint::stale_suppressions(&outcome, &allow);
+    assert_eq!(stale.len(), 1, "{stale:#?}");
+    assert_eq!(stale[0].rule, "stale-suppression");
+    assert_eq!(stale[0].path, "allow.list");
+    assert_eq!(stale[0].line, 4, "stale finding points at the allow.list line");
+    assert!(stale[0].text.contains("lossy-cast"));
+}
+
+#[test]
+fn stale_inline_marker_is_reported() {
+    let rules = lint::default_rules();
+    let allow = lint::Allowlist::default();
+    let mut outcome = lint::ScanOutcome::new(&allow);
+    let content =
+        "pub fn f() -> usize {\n    1 // lint:allow(panic-in-dispatch) excuses nothing\n}\n";
+    let findings = lint::check_content_tracked(
+        "coordinator/service.rs",
+        content,
+        &rules,
+        &allow,
+        &mut outcome.suppressions,
+    );
+    assert!(findings.is_empty(), "{findings:#?}");
+    let stale = lint::stale_suppressions(&outcome, &allow);
+    assert_eq!(stale.len(), 1, "{stale:#?}");
+    assert_eq!(stale[0].rule, "stale-suppression");
+    assert_eq!(stale[0].path, "coordinator/service.rs");
+    assert_eq!(stale[0].line, 2);
+    assert_eq!(stale[0].text, "lint:allow(panic-in-dispatch)");
+}
+
+#[test]
+fn json_output_carries_rule_location_function_and_region() {
+    let rules = lint::default_rules();
+    let content = "pub fn mean(v: &[f64]) -> f64 {\n    v.len() as f64\n}\n";
+    let f = lint::check_content("linalg/mat.rs", content, &rules, &lint::Allowlist::default());
+    assert_eq!(f.len(), 1, "{f:#?}");
+    let json = lint::findings_to_json(&f);
+    assert!(json.starts_with("{\"count\":1,\"findings\":["), "{json}");
+    for needle in [
+        "\"rule\":\"lossy-cast\"",
+        "\"path\":\"linalg/mat.rs\"",
+        "\"line\":2",
+        "\"function\":\"mean\"",
+        "\"region\":\"fn\"",
+    ] {
+        assert!(json.contains(needle), "missing {needle} in {json}");
+    }
+    // Quotes and backslashes in the offending text are escaped.
+    let mut esc = f[0].clone();
+    esc.text = "say \"hi\" \\ done".to_string();
+    let json = lint::findings_to_json(&[esc]);
+    assert!(json.contains("say \\\"hi\\\" \\\\ done"), "{json}");
+    // Empty input is still a valid document.
+    assert_eq!(lint::findings_to_json(&[]), "{\"count\":0,\"findings\":[]}");
 }
 
 #[test]
 fn real_tree_passes_with_checked_in_allowlist() {
     let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
-    let root = manifest.join("../../rust/src");
     let allow_text = std::fs::read_to_string(manifest.join("allow.list")).unwrap();
     let allow = lint::Allowlist::parse(&allow_text).unwrap();
-    let findings = lint::run(&root, &lint::default_rules(), &allow).unwrap();
+    let rules = lint::default_rules();
+    let mut outcome = lint::ScanOutcome::new(&allow);
+    for (dir, prefix) in [
+        ("../../rust/src", "rust/src/"),
+        ("../../benches", "benches/"),
+        ("../../examples", "examples/"),
+    ] {
+        lint::scan_root(&manifest.join(dir), prefix, &rules, &allow, &mut outcome).unwrap();
+    }
     assert!(
-        findings.is_empty(),
-        "rust/src violates repo invariants:\n{}",
-        findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+        outcome.findings.is_empty(),
+        "swept tree violates repo invariants:\n{}",
+        outcome.findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
     );
+    // The checked-in allowlist and every inline marker must still earn
+    // their keep — a stale suppression is an error, same as in CI.
+    let stale = lint::stale_suppressions(&outcome, &allow);
+    assert!(
+        stale.is_empty(),
+        "stale suppressions:\n{}",
+        stale.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+    );
+}
+
+#[test]
+fn lexer_round_trips_every_swept_file() {
+    // Property: lexing is lossless — concatenating token texts rebuilds
+    // every file byte-for-byte, and the stripped view keeps line counts,
+    // so findings always point at real lines. Checked over the real
+    // swept tree, the fixtures, and the lint's own sources.
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let mut checked = 0usize;
+    for root in [
+        manifest.join("../../rust/src"),
+        manifest.join("../../benches"),
+        manifest.join("../../examples"),
+        manifest.join("src"),
+        fixtures("clean"),
+        fixtures("violations"),
+    ] {
+        for (path, rel) in lint::walk(&root).unwrap() {
+            let src = std::fs::read_to_string(&path).unwrap();
+            let rebuilt: String = lint::lexer::lex(&src).iter().map(|t| t.text).collect();
+            assert_eq!(rebuilt, src, "lexer round-trip mismatch in {rel}");
+            assert_eq!(
+                lint::stripped_lines(&src).len(),
+                src.lines().count(),
+                "stripped view changed the line count of {rel}"
+            );
+            checked += 1;
+        }
+    }
+    assert!(checked > 40, "expected to sweep a real tree, checked only {checked} files");
 }
